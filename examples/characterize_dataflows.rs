@@ -1,0 +1,66 @@
+//! §3 characterization walk-through: Eqs. (2)–(8) for arbitrary
+//! precision settings, the Fig. 4(b) DAC sweep, and the Fig. 4(c)
+//! breakdown — all analytical, no artifacts needed.
+//!
+//! Run: `cargo run --release --example characterize_dataflows`
+//!      [--pi 8 --pw 8 --pr 1 --n 7]
+
+use neural_pim::config::Precision;
+use neural_pim::dataflow::{self, Strategy};
+use neural_pim::report;
+use neural_pim::util::cli::Args;
+use neural_pim::util::table::{eng, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 7) as u32;
+    let base = Precision {
+        p_i: args.get_usize("pi", 8) as u32,
+        p_w: args.get_usize("pw", 8) as u32,
+        p_o: args.get_usize("po", 8) as u32,
+        p_r: args.get_usize("pr", 1) as u32,
+        p_d: 1,
+    };
+
+    let mut t = Table::new(
+        &format!("Eqs. 2-8 at N={n}, P_I={}, P_W={}, P_R={}",
+                 base.p_i, base.p_w, base.p_r),
+        &["P_D", "P_A^A", "P_B^A", "P_C^A", "conv A", "conv B", "conv C",
+          "cycles", "B feasible"],
+    );
+    for pd in [1u32, 2, 4, 8] {
+        if pd > base.p_i {
+            continue;
+        }
+        let p = Precision { p_d: pd, ..base };
+        t.row(&[
+            pd.to_string(),
+            dataflow::adc_resolution_a(&p, n).to_string(),
+            dataflow::adc_resolution_b(&p, n).to_string(),
+            dataflow::adc_resolution_c(&p).to_string(),
+            dataflow::conversions_a(&p).to_string(),
+            dataflow::conversions_b(&p).to_string(),
+            dataflow::conversions_c().to_string(),
+            dataflow::latency_cycles(&p).to_string(),
+            dataflow::strategy_b_feasible(&p, n).to_string(),
+        ]);
+    }
+    t.print();
+
+    report::fig4b_table().print();
+    report::fig4c_table().print();
+
+    // per-strategy scaling with array size: the N-dependence of Eq. 2
+    let mut t = Table::new("ADC energy per group vs array size (P_D = 1)",
+                           &["N (2^N rows)", "A", "B", "C"]);
+    for nn in [5u32, 6, 7, 8] {
+        let p = Precision { p_d: 1, ..base };
+        t.row(&[
+            format!("{nn} ({})", 1u64 << nn),
+            eng(dataflow::group_energy(Strategy::A, &p, nn).adc),
+            eng(dataflow::group_energy(Strategy::B, &p, nn).adc),
+            eng(dataflow::group_energy(Strategy::C, &p, nn).adc),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,57 @@
+//! §7.1 design-space exploration (Fig. 11): sweep (N, M, A, S, D), print
+//! the efficiency frontier, and compare the found optimum against the
+//! paper's N128-D4-A4-S64 M64 configuration.
+//!
+//! Run: `cargo run --release --example design_space_exploration [--top 20]`
+
+use neural_pim::config::AcceleratorConfig;
+use neural_pim::dse;
+use neural_pim::report;
+use neural_pim::util::cli::Args;
+use neural_pim::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let top = args.get_usize("top", 15);
+
+    report::fig11_table(top).print();
+
+    let pts = dse::sweep();
+    println!("feasible design points: {}", pts.len());
+
+    // the efficiency frontier per crossbar size (Fig. 11's grouping)
+    let mut t = Table::new(
+        "best point per crossbar size",
+        &["xbar", "config", "GOPS/s/mm²", "GOPS/s/W"],
+    );
+    for size in [32u32, 64, 128, 256] {
+        if let Some(best) = pts
+            .iter()
+            .filter(|p| p.cfg.xbar_size == size)
+            .max_by(|a, b| {
+                a.compute_efficiency.partial_cmp(&b.compute_efficiency).unwrap()
+            })
+        {
+            t.row(&[
+                size.to_string(),
+                best.label.clone(),
+                format!("{:.1}", best.compute_efficiency),
+                format!("{:.1}", best.energy_efficiency),
+            ]);
+        }
+    }
+    t.print();
+
+    let paper = dse::evaluate(&AcceleratorConfig::neural_pim()).unwrap();
+    let best = dse::best();
+    println!(
+        "paper's Table-2 config: {} -> {:.1} GOPS/s/mm² (paper reports 1904.0)",
+        paper.label, paper.compute_efficiency
+    );
+    println!(
+        "sweep optimum: {} -> {:.1} GOPS/s/mm² ({:+.1}% vs paper's choice)",
+        best.label,
+        best.compute_efficiency,
+        100.0 * (best.compute_efficiency / paper.compute_efficiency - 1.0)
+    );
+}

@@ -1,0 +1,162 @@
+//! End-to-end driver (the DESIGN.md "end-to-end validation" example):
+//! exercises every layer of the system on the real workload —
+//!
+//!  1. loads the AOT artifacts (trained CNN + trained NeuralPeriph);
+//!  2. serves the full 512-image test set through the coordinator
+//!     (dynamic batching, PJRT execution), reporting latency/throughput;
+//!  3. sweeps the Fig. 4(a) accuracy-vs-ADC-resolution experiment for all
+//!     three accumulation strategies via the bit-exact dataflow models;
+//!  4. sweeps the Fig. 10 SINAD-vs-accuracy curve and marks each
+//!     dataflow's measured SINAD (Fig. 9 MC for Neural-PIM, native
+//!     behavioural models for the baselines);
+//!  5. runs the architecture simulator for the headline Fig. 12 ratios.
+//!
+//! Run: `cargo run --release --example end_to_end_inference`
+//! (add `--quick` to shrink the sweeps). Results land in EXPERIMENTS.md.
+
+use neural_pim::config::Architecture;
+use neural_pim::coordinator::{Coordinator, CoordinatorConfig, ExtraInput};
+use neural_pim::runtime::{self, Runtime};
+use neural_pim::util::cli::Args;
+use neural_pim::util::stats;
+use neural_pim::util::table::Table;
+use neural_pim::{noise, report, sim, workloads};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let dir = neural_pim::artifact_dir();
+    let ts = runtime::TestSet::load(std::path::Path::new(&dir))?;
+    let (h, w, c) = ts.dims;
+
+    // ---------------------------------------------------------------- 2.
+    println!("== serving the test set through the coordinator ==");
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            artifact_dir: dir.clone(),
+            ..Default::default()
+        },
+        h * w * c,
+    )?;
+    let t0 = std::time::Instant::now();
+    let stride = h * w * c;
+    let mut pending = Vec::new();
+    for i in 0..ts.n {
+        pending.push((
+            coord.submit(ts.images[i * stride..(i + 1) * stride].to_vec())?,
+            ts.labels[i],
+        ));
+    }
+    let mut correct = 0usize;
+    let mut lat = Vec::new();
+    for (rx, label) in pending {
+        let r = rx.recv()?;
+        lat.push((r.queue_us + r.exec_us) as f64 / 1000.0);
+        let pred = r.logits.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32;
+        correct += (pred == label) as usize;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests in {:.2}s = {:.0} req/s, accuracy {:.4}, p50 {:.1} ms, \
+         p99 {:.1} ms\n{}",
+        ts.n, dt, ts.n as f64 / dt,
+        correct as f64 / ts.n as f64,
+        stats::percentile(&lat, 50.0), stats::percentile(&lat, 99.0),
+        coord.metrics.summary()
+    );
+    coord.shutdown();
+
+    // ---------------------------------------------------------------- 3.
+    println!("\n== Fig 4a: accuracy vs A/D resolution (bit-exact dataflows) ==");
+    let rt = Runtime::new(&dir)?;
+    let bits_list: &[usize] =
+        if quick { &[4, 8] } else { &[2, 3, 4, 5, 6, 7, 8, 10] };
+    let mut t = Table::new("accuracy (512 images; strategy C uses 4-bit DACs)",
+                           &["ADC bits", "Strategy A", "Strategy B",
+                             "Strategy C"]);
+    for &bits in bits_list {
+        let mut row = vec![bits.to_string()];
+        for s in ["A", "B", "C"] {
+            let exe = rt.load(&format!("cnn_strat{s}"))?;
+            let levels = (1u64 << bits) as f32 - 1.0;
+            let mut correct = 0usize;
+            let batches = if quick { 1 } else { ts.n / 128 };
+            for b in 0..batches.max(1) {
+                let mut inputs = vec![
+                    ts.batch_literal(b * 128, 128)?,
+                    runtime::lit_scalar_f32(levels),
+                ];
+                if s != "A" {
+                    inputs.push(runtime::lit_key(42 + b as u64)?);
+                }
+                let out = exe.run(&inputs)?;
+                let logits = runtime::to_f32_vec(&out[0])?;
+                let acc = runtime::accuracy(&logits,
+                                            &ts.batch_labels(b * 128, 128), 10);
+                correct += (acc * 128.0).round() as usize;
+            }
+            row.push(format!("{:.3}",
+                             correct as f64 / (128 * batches.max(1)) as f64));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // ---------------------------------------------------------------- 4.
+    println!("== Fig 9/10: measured dataflow SINADs + accuracy vs SINAD ==");
+    let exe = rt.load("mc_opt")?;
+    let mut hw = Vec::new();
+    let mut sw = Vec::new();
+    for t in 0..2u64 {
+        let out = exe.run(&[runtime::lit_key(42 + t)?])?;
+        hw.extend(runtime::to_f32_vec(&out[0])?.iter().map(|&v| v as f64));
+        sw.extend(runtime::to_f32_vec(&out[1])?.iter().map(|&v| v as f64));
+    }
+    let np_sinad = stats::sinad_db(&hw, &sw);
+    let a_sinad = noise::strategy_sinad('A', 512, 1);
+    let b_sinad = noise::strategy_sinad('B', 512, 1);
+    println!("measured dataflow SINADs: Neural-PIM {:.1} dB, ISAAC-style \
+              {:.1} dB, CASCADE-style {:.1} dB", np_sinad, a_sinad, b_sinad);
+
+    let noisy = rt.load("cnn_noisy")?;
+    let sweep: &[f64] = if quick { &[20.0, 40.0] } else {
+        &[10.0, 15.0, 20.0, 25.0, 30.0, 35.0, 40.0, 50.0, 60.0]
+    };
+    let mut t = Table::new("Fig 10: accuracy under Eq.-(13) noise injection",
+                           &["SINAD (dB)", "accuracy"]);
+    for &s in sweep {
+        let out = noisy.run(&[
+            ts.batch_literal(0, 128)?,
+            runtime::lit_key(7)?,
+            runtime::lit_scalar_f32(s as f32),
+        ])?;
+        let logits = runtime::to_f32_vec(&out[0])?;
+        let acc = runtime::accuracy(&logits, &ts.batch_labels(0, 128), 10);
+        t.row(&[format!("{s:.0}"), format!("{acc:.3}")]);
+    }
+    t.print();
+
+    // ---------------------------------------------------------------- 5.
+    println!("== Fig 12 headline (architecture simulator) ==");
+    let nets = if quick {
+        vec![workloads::alexnet()]
+    } else {
+        workloads::all_benchmarks()
+    };
+    let r = report::system_report(&nets);
+    println!("{}", r.headline);
+    let cmp = sim::run_system_comparison(&nets);
+    println!(
+        "iso-area reference: {:.1} mm²; Neural-PIM peak {:.0} GOPS on {}",
+        cmp.reference_area,
+        cmp.results
+            .iter()
+            .filter(|x| x.arch == Architecture::NeuralPim)
+            .map(|x| x.throughput_gops)
+            .fold(0.0, f64::max),
+        nets.last().unwrap().name
+    );
+    println!("\nend_to_end_inference OK");
+    Ok(())
+}

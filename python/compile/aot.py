@@ -1,0 +1,285 @@
+"""AOT compile path: train everything once, lower every inference variant
+to HLO text, and dump the weights/datasets the Rust coordinator needs.
+
+Python runs ONLY here (``make artifacts``). The Rust binary loads
+``artifacts/*.hlo.txt`` via PJRT and never imports Python again.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts
+---------
+  periph.json          trained NeuralPeriph weights + Table-1 metrics
+  cnn.json             quantized CNN (weights, scales, d_max, accuracy)
+  testset.bin/json     512 test images (u8) + labels for the Rust side
+  cnn_ideal.hlo.txt    f(images)                       -> logits
+  cnn_noisy.hlo.txt    f(images, key, sinad_db)        -> logits   (Fig 10)
+  cnn_strat{A,B,C}.hlo.txt f(images, adc_levels, key)  -> logits   (Fig 4a)
+  mc_opt.hlo.txt       f(key) -> (d_hw, d_sw)                      (Fig 9a)
+  mc_naive.hlo.txt     f(key) -> (d_hw, d_sw)                      (Fig 9b)
+  nns_a.hlo.txt        f(v[B,9]) -> v_o[B]        (periph microbench)
+  nnadc.hlo.txt        f(v[B]) -> codes[B]        (periph microbench)
+  crossbar.hlo.txt     f(x, w+, w-) -> analog acc (pallas quickstart)
+  manifest.json        shapes + dtypes of every artifact entry point
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import common, data, model, train_cnn, train_periph
+from compile.kernels import crossbar, nnadc as nnadc_kernel, nns_a as nns_a_kernel
+
+BATCH = 128  # fixed inference batch of every lowered CNN variant
+MC_N = 1024  # Monte-Carlo trials per mc_* execution
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: the default printer elides big weight tensors as '{...}',
+    # which the HLO text parser silently reads back as zeros — print with
+    # large constants included so the artifacts carry the trained weights.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates the source_end_* metadata
+    # attributes jax now emits — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def _np_json(obj):
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    raise TypeError(type(obj))
+
+
+def train_all_periph(quick: bool = False):
+    """Train the four NeuralPeriph models + Table-1 metrics."""
+    steps_sa = 1500 if quick else 6000
+    steps_adc = 300 if quick else 1500
+    t0 = time.time()
+    sa_opt, sa_opt_info = train_periph.train_nns_a(4, steps=steps_sa)
+    sa_msb, sa_msb_info = train_periph.train_nns_a(
+        4, steps=steps_sa, hardware_aware=False, carry_w=1.0, seed=2)
+    adc_opt, adc_opt_info = train_periph.train_nnadc(steps=steps_adc)
+    adc_nv, adc_nv_info = train_periph.train_nnadc(
+        steps=steps_adc, hardware_aware=False, seed=3)
+
+    v, codes = train_periph.adc_transfer(adc_opt)
+    dnl, inl, missing = train_periph.dnl_inl(v, codes, 8)
+    enob, sinad = train_periph.enob(adc_opt)
+    metrics = {
+        "nns_a": sa_opt_info,
+        "nns_a_msb": sa_msb_info,
+        "nnadc": {
+            **adc_opt_info,
+            "dnl_min": float(dnl.min()), "dnl_max": float(dnl.max()),
+            "inl_min": float(inl.min()), "inl_max": float(inl.max()),
+            "missing_codes": missing, "enob": float(enob),
+            "sinad_db": float(sinad),
+        },
+        "nnadc_naive": adc_nv_info,
+        "train_seconds": time.time() - t0,
+    }
+    periph = {"nns_a_opt": sa_opt, "nns_a_msb": sa_msb,
+              "nnadc_opt": adc_opt, "nnadc_naive": adc_nv}
+    return periph, metrics
+
+
+def write_testset(outdir: str, xte: np.ndarray, yte: np.ndarray):
+    """Raw little-endian binary + JSON header (Rust has no npz reader)."""
+    imgs = np.round(xte * 255.0).astype(np.uint8)
+    with open(os.path.join(outdir, "testset.bin"), "wb") as f:
+        f.write(imgs.tobytes())
+        f.write(yte.astype(np.int32).tobytes())
+    with open(os.path.join(outdir, "testset.json"), "w") as f:
+        json.dump({"n": int(imgs.shape[0]), "height": data.IMG,
+                   "width": data.IMG, "channels": data.CH,
+                   "label_dtype": "i32", "image_dtype": "u8",
+                   "layout": "images then labels, C-order"}, f, indent=1)
+    return imgs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced training budgets (CI smoke)")
+    args = ap.parse_args()
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"batch": BATCH, "mc_n": MC_N, "entries": {}}
+
+    # ------------------------------------------------------------------ 1.
+    print("[aot] training NeuralPeriph circuits ...", flush=True)
+    periph, periph_metrics = train_all_periph(quick=args.quick)
+    pj = {k: {n: v.tolist() for n, v in p.items()} for k, p in periph.items()}
+    pj["metrics"] = periph_metrics
+    pj["constants"] = {
+        "vdd": common.VDD, "v_range": common.V_RANGE,
+        "vtc_gain_tt": common.VTC_GAIN_TT,
+        "vtc_gain_adc": common.VTC_GAIN_ADC,
+        "vtc_gain_latch": common.VTC_GAIN_LATCH,
+        "ar_bits": common.AR_BITS, "rram_sigma": common.RRAM_SIGMA,
+    }
+    with open(os.path.join(outdir, "periph.json"), "w") as f:
+        json.dump(pj, f)
+
+    # ------------------------------------------------------------------ 2.
+    print("[aot] training + quantizing the CNN ...", flush=True)
+    cnn_steps = 300 if args.quick else 1500
+    params, float_acc = train_cnn.train(steps=cnn_steps)
+    (xtr, _), (xte, yte) = data.make_splits()
+    qmodel = train_cnn.quantize(params, xtr[:512])
+    x_cal = jnp.asarray(np.round(xtr[:BATCH] * 255.0), jnp.float32)
+    d_max = model.calibrate_d_max(qmodel, x_cal)
+
+    xte_u8 = write_testset(outdir, xte, yte)
+    x_eval = jnp.asarray(xte_u8[:BATCH], jnp.float32)
+    logits = jax.jit(lambda x: model.ideal_forward(qmodel, x))(x_eval)
+    q_acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte[:BATCH])))
+    print(f"[aot] float acc {float_acc:.4f}, int8 acc (first batch) {q_acc:.4f}")
+
+    cj = {"layers": [], "d_max": d_max, "float_acc": float_acc,
+          "int8_acc_first_batch": q_acc, "batch": BATCH}
+    for layer in qmodel["layers"]:
+        cj["layers"].append({k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                             for k, v in layer.items()})
+    with open(os.path.join(outdir, "cnn.json"), "w") as f:
+        json.dump(cj, f)
+
+    # ------------------------------------------------------------------ 3.
+    print("[aot] lowering HLO artifacts ...", flush=True)
+    img_spec = jax.ShapeDtypeStruct((BATCH, data.IMG, data.IMG, data.CH),
+                                    jnp.float32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def wrap_key(key_data):
+        return jax.random.wrap_key_data(key_data, impl="threefry2x32")
+
+    def f_ideal(images):
+        return (model.ideal_forward(qmodel, images),)
+
+    def f_noisy(images, key_data, sinad_db):
+        return (model.noisy_forward(qmodel, images, wrap_key(key_data),
+                                    sinad_db),)
+
+    def f_strat(strategy):
+        # Strategy A is deterministic: giving it a PRNG parameter would be
+        # dead-code-eliminated from the lowered HLO (changing the
+        # executable's arity), so A takes (images, adc_levels) only.
+        if strategy == "A":
+            def f(images, adc_levels):
+                return (model.strategy_forward(qmodel, images, "A",
+                                               adc_levels, d_max=d_max),)
+        else:
+            def f(images, adc_levels, key_data):
+                return (model.strategy_forward(qmodel, images, strategy,
+                                               adc_levels,
+                                               key=wrap_key(key_data),
+                                               d_max=d_max),)
+        return f
+
+    def f_mc(lsb_first, range_aware):
+        def f(key_data):
+            return model.mc_dot_products(wrap_key(key_data), periph, n=MC_N,
+                                         lsb_first=lsb_first,
+                                         range_aware=range_aware)
+        return f
+
+    sa = periph["nns_a_opt"]
+    adc = periph["nnadc_opt"]
+
+    def f_nns_a(v):
+        return (ref_mlp(v),)
+
+    def ref_mlp(v):
+        from compile.kernels import ref
+        return ref.mlp_vtc_ref(v, jnp.asarray(sa["w1"]), jnp.asarray(sa["b1"]),
+                               jnp.asarray(sa["w2"]), jnp.asarray(sa["b2"]),
+                               common.VDD / 2, common.VTC_GAIN_TT)[:, 0]
+
+    def f_nnadc(v):
+        codes, _ = nnadc_kernel.nnadc_convert(
+            v, jnp.asarray(adc["w1"]), jnp.asarray(adc["b1"]),
+            jnp.asarray(adc["w2"]), vm=jnp.asarray(adc["vm"]),
+            gain=common.VTC_GAIN_LATCH)
+        return (codes,)
+
+    def f_crossbar(x, wp, wn):
+        return (crossbar.strategy_c_dot(x, wp, wn, pd=4),)
+
+    xb_spec = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    wb_spec = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+
+    entries = {
+        "cnn_ideal": (f_ideal, (img_spec,),
+                      {"params": ["images[B,12,12,3]f32(u8-valued)"],
+                       "returns": "logits[B,10]f32"}),
+        "cnn_noisy": (f_noisy, (img_spec, key_spec, scalar),
+                      {"params": ["images", "key[2]u32", "sinad_db f32"],
+                       "returns": "logits[B,10]f32"}),
+        "cnn_stratA": (f_strat("A"), (img_spec, scalar),
+                       {"params": ["images", "adc_levels f32"],
+                        "returns": "logits[B,10]f32"}),
+        "cnn_stratB": (f_strat("B"), (img_spec, scalar, key_spec),
+                       {"params": ["images", "adc_levels f32", "key[2]u32"],
+                        "returns": "logits[B,10]f32"}),
+        "cnn_stratC": (f_strat("C"), (img_spec, scalar, key_spec),
+                       {"params": ["images", "adc_levels f32", "key[2]u32"],
+                        "returns": "logits[B,10]f32"}),
+        "mc_opt": (f_mc(True, True), (key_spec,),
+                   {"params": ["key[2]u32"], "returns": "(d_hw[N], d_sw[N])"}),
+        "mc_naive": (f_mc(False, False), (key_spec,),
+                     {"params": ["key[2]u32"], "returns": "(d_hw[N], d_sw[N])"}),
+        "nns_a": (f_nns_a, (jax.ShapeDtypeStruct((1024, 9), jnp.float32),),
+                  {"params": ["v[1024,9]f32"], "returns": "v_o[1024]f32"}),
+        "nnadc": (f_nnadc, (jax.ShapeDtypeStruct((1024,), jnp.float32),),
+                  {"params": ["v[1024]f32 in [0,1]"],
+                   "returns": "codes[1024]f32"}),
+        "crossbar": (f_crossbar, (xb_spec, wb_spec, wb_spec),
+                     {"params": ["x[64,256]", "w+[256,32]", "w-[256,32]"],
+                      "returns": "acc[64,32]f32 (analog units)"}),
+    }
+
+    for name, (fn, specs, meta) in entries.items():
+        t0 = time.time()
+        text = lower(fn, *specs)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {**meta, "chars": len(text)}
+        print(f"[aot]   {name}: {len(text) / 1e6:.2f} MB HLO "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # stamp: Makefile freshness marker
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print("[aot] done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Shared numeric models for the Neural-PIM compile path.
+
+Everything here is *build-time* Python: it defines the voltage-domain
+behavioural models (inverter VTC, quantizers, bit slicing) that both the
+training scripts and the AOT-lowered inference graphs share.
+
+Conventions
+-----------
+- Voltages are normalized to VDD = 1.0 (the paper's 1.2 V rail). The analog
+  signal range used by the NeuralPeriph circuits is [0, V_RANGE] with
+  V_RANGE = 0.5 (paper Table 1: input range [0, 0.5] V of a 1.2 V rail,
+  i.e. ~0.417*VDD; we keep the paper's 0.5 figure in volts and normalize
+  the rail to 1.2 so the numbers below read like the paper's).
+- Digital values: inputs are PI-bit unsigned, weights PW-bit signed
+  (stored as W+ / W- unsigned pairs), outputs PO-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Global hardware constants (paper §3.3, §6.2, Table 1)
+# ---------------------------------------------------------------------------
+
+VDD = 1.2  # volts
+V_RANGE = 0.5  # analog full-scale of NeuralPeriph inputs/outputs, volts
+PI = 8  # input (activation) precision, bits
+PW = 8  # weight precision, bits
+PO = 8  # output precision, bits
+PR = 1  # RRAM cell precision in VMM computing arrays, bits
+N_ROWS = 128  # crossbar rows (2^N with N = 7)
+AR_BITS = 3  # RRAM precision available to NeuralPeriph weights (Table 1)
+RRAM_SIGMA = 0.025  # lognormal conductance variation (Table 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowConfig:
+    """Array-level dataflow parameters (paper §3.2)."""
+
+    pi: int = PI  # input precision
+    pw: int = PW  # weight precision
+    po: int = PO  # output precision
+    pr: int = PR  # RRAM cell precision
+    pd: int = 1  # DAC resolution
+    rows: int = N_ROWS  # crossbar rows used by one dot-product group
+
+    @property
+    def n_slices(self) -> int:
+        """Input cycles: ceil(PI / PD) (Eq. 8)."""
+        return -(-self.pi // self.pd)
+
+    @property
+    def n_weight_cols(self) -> int:
+        """RRAM columns per (unsigned) weight: ceil(PW / PR)."""
+        return -(-self.pw // self.pr)
+
+
+# ---------------------------------------------------------------------------
+# Inverter VTC (the CMOS analog neuron, §4.1.1 footnote 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VtcParams:
+    """A CMOS inverter voltage-transfer curve under one PVT corner.
+
+    Modelled as a falling logistic: out = VDD / (1 + exp(gain * (v - vm))).
+    ``vm`` is the switching threshold, ``gain`` the small-signal gain at vm
+    (in 1/V). PVT variation moves both.
+    """
+
+    vm: float
+    gain: float
+
+    def __call__(self, v):
+        return vtc_apply(v, self.vm, self.gain)
+
+
+VTC_GAIN_TT = 25.0  # single-inverter small-signal gain at Vm, 1/V
+VTC_GAIN_ADC = 120.0  # cascaded-inverter (2-stage) neuron used by the NNADC
+# The NNADC threshold columns end in a regenerative latch (a 3-inverter
+# chain) that snaps the comparator decision to the rails before the summing
+# column — modelled as a very steep VTC. Training uses VTC_GAIN_ADC (the
+# pre-latch analog gain, so gradients flow); the instantiated converter is
+# evaluated at the latch gain.
+VTC_GAIN_LATCH = 2400.0
+
+
+def vtc_corner_bank(n_vtc: int, seed: int = 7, gain_tt: float = VTC_GAIN_TT) -> np.ndarray:
+    """A_VTC: a bank of inverter VTCs across PVT corners (§4.1.2 step 4).
+
+    Returns an (n_vtc, 2) array of (vm, gain). The tt corner sits at
+    vm = VDD/2; corners move vm by +-2% VDD (~+-24 mV threshold mismatch,
+    the 130 nm-class spread) and gain by +-10%.
+    """
+    rng = np.random.default_rng(seed)
+    vm = VDD / 2 + rng.uniform(-0.02, 0.02, size=n_vtc) * VDD
+    gain = gain_tt * (1.0 + rng.uniform(-0.1, 0.1, size=n_vtc))
+    out = np.stack([vm, gain], axis=1)
+    out[0] = (VDD / 2, gain_tt)  # index 0 is always the typical-typical corner
+    return out
+
+
+def vtc_apply(v, vm, gain):
+    """Vectorized VTC evaluation (works per-neuron with broadcast params).
+
+    Uses the numerically-stable sigmoid: the naive 1/(1+exp(x)) form
+    produces NaN gradients once gain*(v-vm) overflows f32.
+    """
+    return VDD * jax.nn.sigmoid(-gain * (v - vm))
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+
+def quantize_uniform(v, levels, full_scale):
+    """Ideal uniform quantizer: round v in [0, full_scale] to ``levels``
+    steps and return the *dequantized* value (same units as v).
+
+    ``levels`` = 2^bits - 1 may be a traced scalar so one lowered module
+    serves every A/D resolution in a sweep (Fig. 4a).
+    """
+    v = jnp.clip(v, 0.0, full_scale)
+    code = jnp.round(v / full_scale * levels)
+    return code / levels * full_scale
+
+
+def quantize_signed(v, levels, full_scale):
+    """Uniform quantizer for signed values in [-full_scale, full_scale]."""
+    v = jnp.clip(v, -full_scale, full_scale)
+    code = jnp.round(v / full_scale * levels)
+    return code / levels * full_scale
+
+
+def adc_code(v, bits, v_max):
+    """Eq. (12): range-aware digital code of an analog value."""
+    levels = 2**bits - 1
+    return jnp.clip(jnp.round(v / v_max * levels), 0, levels)
+
+
+# ---------------------------------------------------------------------------
+# Bit slicing (wordline side) and weight decomposition (array side)
+# ---------------------------------------------------------------------------
+
+
+def input_bit_slices(x_u8, pd: int, pi: int = PI):
+    """Split PI-bit unsigned ints into ceil(PI/PD) PD-bit slices, LSB first.
+
+    x_u8: integer array with values in [0, 2^PI). Returns float32 array of
+    shape (n_slices,) + x.shape with each slice in [0, 2^PD).
+    LSB-first ordering is the paper's streaming order (§4.1.2 step 3).
+    """
+    n = -(-pi // pd)
+    x = x_u8.astype(jnp.int32)
+    slices = []
+    for i in range(n):
+        slices.append(((x >> (pd * i)) & ((1 << pd) - 1)).astype(jnp.float32))
+    return jnp.stack(slices, axis=0)
+
+
+def weight_bit_planes(w_u8, pr: int = PR, pw: int = PW):
+    """Split PW-bit unsigned weights into ceil(PW/PR) PR-bit planes, LSB first.
+
+    w_u8: integer array in [0, 2^PW). Returns float32 (n_planes,) + w.shape.
+    """
+    n = -(-pw // pr)
+    w = w_u8.astype(jnp.int32)
+    planes = []
+    for j in range(n):
+        planes.append(((w >> (pr * j)) & ((1 << pr) - 1)).astype(jnp.float32))
+    return jnp.stack(planes, axis=0)
+
+
+def split_signed_weight(w_int, pw: int = PW):
+    """W = W+ - W- decomposition (§5.2.1). w_int in [-(2^(PW-1)), 2^(PW-1))."""
+    w = w_int.astype(jnp.int32)
+    return jnp.maximum(w, 0), jnp.maximum(-w, 0)
+
+
+# ---------------------------------------------------------------------------
+# Ideal NNS+A ground truth (§4.1.2 step 3)
+#
+# The paper writes the per-cycle ground truth as
+#     V_o,GT = (2^-N_DAC * V_o,i-1 + sum_j 2^j V_in,j) / alpha,
+#     alpha = 2^-N_DAC + sum_j 2^j,
+# but applying the alpha division to the *carried* term every cycle breaks
+# the radix relationship between input cycles (cycle i+1 would end up
+# weighted alpha*2^N_DAC relative to cycle i instead of 2^N_DAC), i.e. the
+# unrolled accumulator would no longer be a scaled version of the digital
+# dot product. A physical S+A must preserve the radix, so we use the
+# exactness-preserving reading of the same equation:
+#     V_o,i = 2^-N_DAC * V_o,i-1 + (sum_j 2^j V_in,j) / alpha
+# with alpha chosen so the accumulator never exceeds the input full-scale:
+#     alpha = 2^N_DAC * (2^8 - 1) / (2^N_DAC - 1).
+# Then V_o,S = D / (alpha * 2^(N_DAC*(S-1))) exactly, where D is the
+# integer dot product with BL voltages in unit encoding. The trained NNS+A
+# approximates this function; the distinction from the paper's literal
+# formula is only which linear map the network is asked to learn, and this
+# one makes Strategy C compute a true dot product (see DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+
+def sa_alpha(n_dac: int, n_bl: int = PW) -> float:
+    """Input-sum normalization keeping the cyclic accumulator in range."""
+    return 2.0**n_dac * float(2**n_bl - 1) / (2.0**n_dac - 1.0)
+
+
+def sa_ground_truth(v_in, v_prev, n_dac: int, carry_w: float | None = None):
+    """One NNS+A cycle: V_o = carry_w * V_prev + (sum_j 2^j V_in[j]) / alpha.
+
+    v_in: (..., 8) BL voltages; v_prev: (...,) carried intermediate sum.
+    carry_w defaults to 2^-N_DAC (the LSB-first radix carry); the MSB-first
+    schedule uses carry_w = 1 with DAC-side input attenuation instead.
+    """
+    if carry_w is None:
+        carry_w = 2.0 ** (-n_dac)
+    n_bl = v_in.shape[-1]
+    weights = 2.0 ** jnp.arange(n_bl, dtype=jnp.float32)
+    s = jnp.sum(v_in * weights, axis=-1) / sa_alpha(n_dac, n_bl)
+    return carry_w * v_prev + s
+
+
+def sa_unroll_ground_truth(v_slices, n_dac: int):
+    """Ideal Strategy-C analog accumulation over all input cycles.
+
+    v_slices: (n_slices, ..., 8) per-cycle BL voltages, LSB-first.
+    Returns the final normalized analog sum (...,).
+    """
+    acc = jnp.zeros(v_slices.shape[1:-1], dtype=jnp.float32)
+    for i in range(v_slices.shape[0]):
+        acc = sa_ground_truth(v_slices[i], acc, n_dac)
+    return acc
+
+
+def sa_unrolled_scale(n_slices: int, n_dac: int, n_bl: int = PW) -> float:
+    """K such that the final accumulator V_o,S = D / K, with D the digital
+    dot product sum_{i,j} 2^(N_DAC*i + j) p_ij and BL voltages encoding
+    p_ij in unit steps. K = alpha * 2^(N_DAC*(S-1))."""
+    return sa_alpha(n_dac, n_bl) * 2.0 ** (n_dac * (n_slices - 1))

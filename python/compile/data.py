@@ -1,0 +1,77 @@
+"""Synthetic image-classification dataset (build-time).
+
+The paper's accuracy experiments (Fig. 4a, Fig. 10) run ImageNet-trained
+8-bit DNNs. ImageNet and its trained checkpoints are not available in this
+environment, so we substitute a compact structured dataset whose *accuracy
+degradation mechanism* under the analog dataflows is identical: quantized
+activations/weights flow through the same bit-sliced crossbar pipeline, and
+noise enters in the same places (per-BL quantization, buffer-cell writes,
+lumped analog noise). See DESIGN.md §1 for the substitution argument.
+
+Ten classes, each defined by a smooth random template; samples are drawn by
+randomly shifting, scaling, and corrupting the template. The task is easy
+enough for a ~15k-parameter CNN to exceed 95% accuracy but hard enough that
+dataflow-induced noise measurably degrades it — the regime Fig. 4(a) and
+Fig. 10 live in.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 12  # image side
+CH = 3  # channels
+N_CLASSES = 10
+
+
+def _smooth_noise(rng: np.random.Generator, size: int, ch: int) -> np.ndarray:
+    """Low-frequency random field: upsampled coarse noise."""
+    coarse = rng.normal(0.0, 1.0, size=(4, 4, ch))
+    # bilinear upsample 4x4 -> size x size
+    xi = np.linspace(0, 3, size)
+    x0 = np.floor(xi).astype(int)
+    x1 = np.minimum(x0 + 1, 3)
+    fx = xi - x0
+    rows = (1 - fx)[:, None, None] * coarse[x0] + fx[:, None, None] * coarse[x1]
+    cols = (1 - fx)[None, :, None] * rows[:, x0] + fx[None, :, None] * rows[:, x1]
+    return cols
+
+
+def class_templates(seed: int = 3) -> np.ndarray:
+    """(N_CLASSES, IMG, IMG, CH) smooth templates, unit-normalized."""
+    rng = np.random.default_rng(seed)
+    t = np.stack([_smooth_noise(rng, IMG, CH) for _ in range(N_CLASSES)])
+    t -= t.mean(axis=(1, 2, 3), keepdims=True)
+    t /= t.std(axis=(1, 2, 3), keepdims=True) + 1e-9
+    return t
+
+
+def sample_batch(templates: np.ndarray, n: int, rng: np.random.Generator,
+                 noise: float = 0.55):
+    """Draw n labelled samples: shifted/scaled template + distractor + noise.
+
+    Returns (images float32 in [0, 1], labels int32).
+    """
+    labels = rng.integers(0, N_CLASSES, size=n)
+    distract = (labels + rng.integers(1, N_CLASSES, size=n)) % N_CLASSES
+    imgs = np.empty((n, IMG, IMG, CH), dtype=np.float32)
+    for i in range(n):
+        base = templates[labels[i]]
+        dx, dy = rng.integers(-2, 3, size=2)
+        base = np.roll(np.roll(base, dx, axis=0), dy, axis=1)
+        amp = rng.uniform(0.8, 1.2)
+        img = amp * base + 0.35 * templates[distract[i]] + rng.normal(0, noise, base.shape)
+        imgs[i] = img
+    # map to [0, 1] with a fixed affine so quantization scales are stable
+    imgs = np.clip(imgs / 8.0 + 0.5, 0.0, 1.0)
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+def make_splits(seed: int = 3, n_train: int = 8192, n_test: int = 512):
+    """Deterministic train/test splits."""
+    templates = class_templates(seed)
+    rng_tr = np.random.default_rng(seed + 1)
+    rng_te = np.random.default_rng(seed + 2)
+    xtr, ytr = sample_batch(templates, n_train, rng_tr)
+    xte, yte = sample_batch(templates, n_test, rng_te)
+    return (xtr, ytr), (xte, yte)

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: the Strategy-C crossbar dot-product hot path.
+
+This kernel *is* the paper's analog dataflow (Fig. 3c) expressed as a TPU
+schedule (DESIGN.md §Hardware-Adaptation):
+
+- the grid's outer dimension is the input bit-slice cycle ``s`` (the analog
+  input cycle driven by the N_DAC-bit DACs, LSB first);
+- the grid's inner dimension ``t`` walks 128-row K-tiles — the physical
+  crossbar row limit becomes the BlockSpec K-tile;
+- the output block is revisited on every grid step and carries the NNS+A
+  analog accumulator: at the start of each input cycle the carried value is
+  scaled by 2^-N_DAC (the S/H + NNS+A recursion), then the per-tile partial
+  sums are accumulated in place — the VMEM-resident software analogue of the
+  sample-and-hold capacitor.
+
+Run under ``interpret=True`` on CPU; on a real TPU the inner matmul maps to
+the MXU with the accumulator resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import common
+
+K_TILE = 128  # physical crossbar rows (2^N, N = 7)
+
+
+def _kernel(x_ref, w_ref, o_ref, *, pd: int, alpha: float):
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when((s == 0) & (t == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when((s > 0) & (t == 0))
+    def _carry():
+        # NNS+A recursion: the carried intermediate sum from input cycle
+        # s-1 is attenuated by 2^-N_DAC before this cycle's partial sums
+        # are accumulated (LSB-first streaming, §4.1.2 step 3).
+        o_ref[...] = o_ref[...] * (2.0 ** (-pd))
+
+    x = x_ref[0]  # (B, K_TILE) this cycle's bit-slice, this K-tile
+    w = w_ref[...]  # (K_TILE, C) radix-weighted differential conductances
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32) / alpha
+
+
+def radix_weights(w_pos_u8, w_neg_u8, pw: int = 8):
+    """Fold the 8 one-bit W+/W- column pairs into their radix-combined
+    differential value sum_j 2^j (w+_j - w-_j) = W+ - W-. The per-BL analog
+    partial sums recombine linearly through the ideal NNS+A, so the fused
+    kernel carries the combined value; the per-BL (non-ideal) path lives in
+    dataflow.py / nns_a.py."""
+    del pw
+    return (w_pos_u8.astype(jnp.int32) - w_neg_u8.astype(jnp.int32)).astype(jnp.float32)
+
+
+def strategy_c_dot(x_u8, w_pos_u8, w_neg_u8, pd: int, pi: int = 8, pw: int = 8,
+                   interpret: bool = True):
+    """Ideal Strategy-C dot product via the Pallas schedule.
+
+    x_u8: (B, K) unsigned ints; w_*_u8: (K, C). Returns (B, C) f32 analog
+    accumulator in unit encoding — equal to ref.strategy_c_dot_ref and to
+    dot_product_int_ref / sa_unrolled_scale(S, pd).
+    """
+    n_slices = -(-pi // pd)
+    b, k = x_u8.shape
+    c = w_pos_u8.shape[1]
+    k_pad = -(-k // K_TILE) * K_TILE
+
+    xs = common.input_bit_slices(x_u8, pd, pi)  # (S, B, K) f32
+    xs = jnp.pad(xs, ((0, 0), (0, 0), (0, k_pad - k)))
+    w = radix_weights(w_pos_u8, w_neg_u8, pw)
+    w = jnp.pad(w, ((0, k_pad - k), (0, 0)))
+
+    n_tiles = k_pad // K_TILE
+    alpha = common.sa_alpha(pd, pw)
+    kernel = functools.partial(_kernel, pd=pd, alpha=alpha)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_slices, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, b, K_TILE), lambda s, t: (s, 0, t)),
+            pl.BlockSpec((K_TILE, c), lambda s, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, c), lambda s, t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(xs, w)
+
+
+def strategy_c_dot_decoded(x_u8, w_pos_u8, w_neg_u8, pd: int, pi: int = 8,
+                           pw: int = 8, interpret: bool = True):
+    """Strategy-C dot product decoded back to the integer domain: the analog
+    accumulator times K = sa_unrolled_scale. Equals X . (W+ - W-) exactly
+    (up to f32 rounding)."""
+    n_slices = -(-pi // pd)
+    acc = strategy_c_dot(x_u8, w_pos_u8, w_neg_u8, pd, pi, pw, interpret)
+    return acc * common.sa_unrolled_scale(n_slices, pd, pw)

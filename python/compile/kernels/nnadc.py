@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: the flash-style NNADC forward.
+
+A bank of H threshold inverters evaluated against a batch of analog
+inputs; the unit-budget output column sums the fired thermometer steps and
+the output latch regenerates the digital code. The grid tiles the batch;
+each step holds the full (small) threshold bank in VMEM. Per-comparator
+switching points (the chip instance's PVT corners) ride along as an input.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import common
+
+B_TILE = 256
+
+
+def _kernel(v_ref, w1_ref, b1_ref, w2_ref, vm_ref, soft_ref, *, gain: float):
+    v = v_ref[...]  # (B_TILE, 1)
+    pre = v * w1_ref[...][None, :] + b1_ref[...][None, :]  # (B_TILE, H)
+    u = 1.0 - common.vtc_apply(pre, vm_ref[...][None, :], gain) / common.VDD
+    soft_ref[...] = jnp.dot(u, w2_ref[...][:, None],
+                            preferred_element_type=jnp.float32)
+
+
+def nnadc_convert(v, w1, b1, w2, vm=None, gain: float = common.VTC_GAIN_LATCH,
+                  n_bits: int = 8, interpret: bool = True):
+    """Convert analog values in [0, 1] to digital codes.
+
+    v: (B,); w1/b1/w2: (H,); vm: scalar or (H,) comparator switching points.
+    Returns (codes (B,), soft (B,)).
+    """
+    b = v.shape[0]
+    h = w1.shape[0]
+    if vm is None:
+        vm = common.VDD / 2
+    vm = jnp.broadcast_to(jnp.asarray(vm, jnp.float32), (h,))
+    b_pad = -(-b // B_TILE) * B_TILE
+    vp = jnp.pad(v, (0, b_pad - b))[:, None]
+    kernel = functools.partial(_kernel, gain=float(gain))
+    soft = pl.pallas_call(
+        kernel,
+        grid=(b_pad // B_TILE,),
+        in_specs=[
+            pl.BlockSpec((B_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(vp, w1, b1, w2, vm)[:b, 0]
+    levels = 2**n_bits - 1
+    codes = jnp.clip(jnp.round(soft * levels), 0, levels)
+    return codes, soft

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: the trained NNS+A applied cyclically.
+
+The grid dimension is the input bit-slice cycle; the output block is
+revisited every step and carries the intermediate analog sum — exactly the
+S/H feedback loop of Fig. 5(a). The 3-layer MLP (crossbar-VMM -> inverter
+VTC -> crossbar-VMM) runs entirely inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import common
+
+
+def _kernel(v_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, vm: float, gain: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    v = v_ref[0]  # (B, 8) this cycle's BL voltages
+    vin = jnp.concatenate([v, o_ref[...]], axis=-1)  # (B, 9): 9th = carried sum
+    pre = jnp.dot(vin, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    h = common.vtc_apply(pre, vm, gain)
+    o_ref[...] = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+
+
+def nns_a_cyclic(v_slices, w1, b1, w2, b2, vm: float = common.VDD / 2,
+                 gain: float = 25.0, interpret: bool = True):
+    """Apply the trained NNS+A over all input cycles.
+
+    v_slices: (S, B, 8) per-cycle BL voltages (LSB first).
+    w1: (9, H); b1: (H,); w2: (H, 1); b2: (1,). Returns (B,) final output.
+    """
+    n_slices, b, n_bl = v_slices.shape
+    assert n_bl == 8 and w1.shape[0] == 9
+    h = w1.shape[1]
+    kernel = functools.partial(_kernel, vm=vm, gain=gain)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_slices,),
+        in_specs=[
+            pl.BlockSpec((1, b, n_bl), lambda s: (s, 0, 0)),
+            pl.BlockSpec((9, h), lambda s: (0, 0)),
+            pl.BlockSpec((h,), lambda s: (0,)),
+            pl.BlockSpec((h, 1), lambda s: (0, 0)),
+            pl.BlockSpec((1,), lambda s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, 1), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(v_slices, w1, b1, w2, b2)
+    return out[:, 0]

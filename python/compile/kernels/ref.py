@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: slow, obvious implementations with
+no tiling, no scratch, no grid. pytest (python/tests/) asserts the Pallas
+kernels match these to float tolerance across hypothesis-driven shape and
+bit-width sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import common
+
+
+def crossbar_partial_sums_ref(x_u8, w_pos_u8, w_neg_u8, pd: int, pi: int = 8, pw: int = 8):
+    """Bit-sliced crossbar partial sums, the analog quantities on the BLs.
+
+    x_u8:      (B, K) unsigned inputs in [0, 2^pi).
+    w_pos_u8:  (K, C) unsigned W+ in [0, 2^pw).
+    w_neg_u8:  (K, C) unsigned W-.
+    Returns (n_slices, n_planes, B, C) float32 *differential* partial sums
+    p+ - p-, i.e. what the W+/W- pseudo-differential BL pairs feed the
+    NNS+A (Fig. 7c). Values are integers in [-K*(2^pd-1), K*(2^pd-1)].
+    """
+    xs = common.input_bit_slices(x_u8, pd, pi)  # (S, B, K)
+    wp = common.weight_bit_planes(w_pos_u8, 1, pw)  # (J, K, C)
+    wn = common.weight_bit_planes(w_neg_u8, 1, pw)
+    wdiff = wp - wn
+    # p[s, j, b, c] = sum_k xs[s, b, k] * wdiff[j, k, c]
+    return jnp.einsum("sbk,jkc->sjbc", xs, wdiff)
+
+
+def dot_product_int_ref(x_u8, w_pos_u8, w_neg_u8):
+    """The exact integer dot product X . (W+ - W-) the dataflows must equal."""
+    x = x_u8.astype(jnp.int32)
+    w = w_pos_u8.astype(jnp.int32) - w_neg_u8.astype(jnp.int32)
+    return (x @ w).astype(jnp.float32)
+
+
+def strategy_c_accumulate_ref(partial, pd: int):
+    """Ideal Strategy-C analog accumulation of differential partial sums.
+
+    partial: (S, J, B, C) from crossbar_partial_sums_ref (J = 8 bit planes).
+    Returns (B, C) final analog value in *unit BL encoding* (i.e. the same
+    units as the partial sums), normalized by the cyclic NNS+A schedule:
+        out = D / K,   K = sa_unrolled_scale(S, pd),
+    where D is the exact integer dot product. The identity out * K == D is
+    asserted by tests (the whole point of the Strategy-C dataflow).
+    """
+    s_cycles, n_planes = partial.shape[0], partial.shape[1]
+    weights = 2.0 ** jnp.arange(n_planes, dtype=jnp.float32)
+    alpha = common.sa_alpha(pd, n_planes)
+    acc = jnp.zeros(partial.shape[2:], dtype=jnp.float32)
+    for i in range(s_cycles):
+        s = jnp.einsum("jbc,j->bc", partial[i], weights) / alpha
+        acc = 2.0 ** (-pd) * acc + s
+    return acc
+
+
+def strategy_c_dot_ref(x_u8, w_pos_u8, w_neg_u8, pd: int, pi: int = 8, pw: int = 8):
+    """End-to-end ideal Strategy-C dot product (analog value, unit encoding)."""
+    partial = crossbar_partial_sums_ref(x_u8, w_pos_u8, w_neg_u8, pd, pi, pw)
+    return strategy_c_accumulate_ref(partial, pd)
+
+
+def mlp_vtc_ref(v_in, w1, b1, w2, b2, vm, gain):
+    """NeuralPeriph 3-layer forward: v_out = W2 . VTC(W1 . v_in + b1) + b2.
+
+    v_in: (B, I); w1: (I, H); b1: (H,); w2: (H, O); b2: (O,).
+    vm/gain: scalar or (H,) inverter VTC parameters.
+    """
+    pre = v_in @ w1 + b1
+    h = common.vtc_apply(pre, vm, gain)
+    return h @ w2 + b2
+
+
+def nns_a_cyclic_ref(v_slices, w1, b1, w2, b2, vm, gain):
+    """Trained NNS+A applied cyclically (the S/H feedback loop, Fig. 5a).
+
+    v_slices: (S, B, 8) per-cycle BL voltages. Returns (B,) final output.
+    The 9th input is the carried intermediate sum, initialized to 0.
+    """
+    batch = v_slices.shape[1]
+    acc = jnp.zeros((batch,), dtype=jnp.float32)
+    for i in range(v_slices.shape[0]):
+        vin = jnp.concatenate([v_slices[i], acc[:, None]], axis=-1)  # (B, 9)
+        acc = mlp_vtc_ref(vin, w1, b1, w2, b2, vm, gain)[:, 0]
+    return acc
+
+
+def nnadc_flash_ref(v, w1, b1, w2, vm, gain, n_bits: int = 8):
+    """Flash-style NNADC forward (the architecture of ref [34]): a bank of
+    H threshold inverters, each firing when w1_i * v + b1_i crosses Vm,
+    summed by a unit-budget output column; the summed analog level is
+    regenerated (rounded) into the final code by the output latch stage.
+
+    v: (B,) analog inputs in [0, 1] (already normalized by the selected
+    V_max range). w1: (H,); b1: (H,); w2: (H,).
+    Returns (codes (B,), soft (B,)) with codes in [0, 2^n_bits - 1] and
+    soft the pre-regeneration analog sum in [0, 1].
+    """
+    from compile import common as _c
+
+    pre = v[:, None] * w1[None, :] + b1[None, :]  # (B, H)
+    u = 1.0 - _c.vtc_apply(pre, vm, gain) / _c.VDD  # rising unit steps
+    soft = u @ w2  # (B,)
+    levels = 2**n_bits - 1
+    codes = jnp.clip(jnp.round(soft * levels), 0, levels)
+    return codes, soft

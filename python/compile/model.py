@@ -1,0 +1,409 @@
+"""L2: the quantized CNN lowered through the three accumulation dataflows.
+
+This module is the heart of the accuracy experiments:
+
+- ``strategy_{a,b,c}_matmul`` are drop-in integer-matmul replacements that
+  route every layer's dot products through the bit-sliced crossbar pipeline
+  of Fig. 3 (a/b/c), with the quantization/noise happening exactly where
+  each accumulation strategy puts it:
+    A: per-(input-cycle, bit-line) A/D conversion, digital S+A (ISAAC);
+    B: analog partial sums written to buffer-array cells (write
+       quantization + device noise), analog accumulation along the
+       radix-aligned buffer BLs, one conversion per BL, digital S+A
+       across BLs (CASCADE);
+    C: fully-analog accumulation (the proposed dataflow), one range-aware
+       conversion of the final analog sum (+ lumped analog noise).
+- ``noisy_forward`` is the Eq.-(13) lumped-noise model used by Fig. 10.
+- ``mc_dot_products`` is the Fig. 9 Monte-Carlo experiment: a batch of
+  random kernels/inputs pushed through the *trained* NNS+A and NNADC
+  (the L1 Pallas kernels), returning (D_hw, D_sw).
+
+Everything is a pure jax function of traced parameters (ADC levels, PRNG
+key, SINAD), so each variant lowers to one HLO artifact the Rust runtime
+sweeps at request time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import common, train_cnn
+from compile.kernels import nnadc as nnadc_kernel
+from compile.kernels import nns_a as nns_a_kernel
+from compile.kernels import ref
+
+K_CHUNK = 128  # physical crossbar rows
+
+
+def _chunks(k: int):
+    return [(i, min(i + K_CHUNK, k)) for i in range(0, k, K_CHUNK)]
+
+
+# ---------------------------------------------------------------------------
+# Strategy A (ISAAC-style): quantize every BL partial sum, digital S+A
+# ---------------------------------------------------------------------------
+
+
+def strategy_a_matmul(x_u8, w_int, adc_levels, pd: int = 1):
+    """x_u8: (M, K) uint8-valued; w_int: (K, C) int8-valued. adc_levels is a
+    traced scalar (2^bits - 1). Returns the reconstructed integer product.
+
+    The ADC full scale is fixed by the array: 2^N rows x (2^PD - 1) DAC
+    levels x (2^PR - 1) cell level (Eq. 2).
+
+    Implementation note (§Perf L2): all (cycle, bit-plane) partial sums
+    are produced by ONE batched einsum and quantized in one fused
+    elementwise pass — the per-(s, j) matmul-chain formulation emitted
+    ~256 tiny dots per layer that XLA:CPU executed serially (65 s compile,
+    minutes per batch); the batched form compiles in seconds and runs
+    ~20x faster with identical numerics (pytest asserts equality)."""
+    k = x_u8.shape[1]
+    fs = float(K_CHUNK * (2**pd - 1))
+    xs = common.input_bit_slices(x_u8, pd)  # (S, M, K)
+    wp, wn = jnp.maximum(w_int, 0.0), jnp.maximum(-w_int, 0.0)
+    bp = common.weight_bit_planes(wp.astype(jnp.int32))  # (J, K, C)
+    bn = common.weight_bit_planes(wn.astype(jnp.int32))
+    s_cycles, j_planes = xs.shape[0], bp.shape[0]
+    radix = (2.0 ** (pd * jnp.arange(s_cycles)))[:, None, None, None] \
+        * (2.0 ** jnp.arange(j_planes))[None, :, None, None]
+    total = 0.0
+    for lo, hi in _chunks(k):
+        pp = jnp.einsum("smk,jkc->sjmc", xs[:, :, lo:hi], bp[:, lo:hi])
+        pn = jnp.einsum("smk,jkc->sjmc", xs[:, :, lo:hi], bn[:, lo:hi])
+        qp = common.quantize_uniform(pp, adc_levels, fs)
+        qn = common.quantize_uniform(pn, adc_levels, fs)
+        total = total + jnp.sum(radix * (qp - qn), axis=(0, 1))
+    return jnp.round(total)
+
+
+# ---------------------------------------------------------------------------
+# Strategy B (CASCADE-style): buffer-array accumulation, then quantize
+# ---------------------------------------------------------------------------
+
+
+def strategy_b_matmul(x_u8, w_int, adc_levels, key, pd: int = 1,
+                      buffer_bits: int = 6, buffer_sigma: float = 0.025):
+    """CASCADE dataflow: per-cycle BL partial sums are written into RRAM
+    buffer cells (``buffer_bits`` precision + lognormal write variation),
+    radix-aligned by column so each buffer BL analog-accumulates the
+    entries sharing one exponent, then one A/D conversion per buffer BL
+    and digital S+A across BLs (Eq. 3/6)."""
+    k = x_u8.shape[1]
+    fs = float(K_CHUNK * (2**pd - 1))
+    buf_levels = float(2**buffer_bits - 1)
+    xs = common.input_bit_slices(x_u8, pd)
+    wp, wn = jnp.maximum(w_int, 0.0), jnp.maximum(-w_int, 0.0)
+    bp = common.weight_bit_planes(wp.astype(jnp.int32))
+    bn = common.weight_bit_planes(wn.astype(jnp.int32))
+    s_cycles, j_planes = xs.shape[0], bp.shape[0]
+    n_exp = pd * (s_cycles - 1) + j_planes  # radix diagonals
+    # radix-diagonal membership: one-hot (S, J, E) selector so the whole
+    # buffer-array accumulation is a single einsum (see strategy_a note)
+    e_idx = pd * np.arange(s_cycles)[:, None] + np.arange(j_planes)[None, :]
+    onehot = jnp.asarray(
+        (e_idx[:, :, None] == np.arange(n_exp)[None, None, :]).astype(np.float32))
+    counts = onehot.sum(axis=(0, 1))  # (E,) entries per diagonal
+    total = 0.0
+    for lo, hi in _chunks(k):
+        pp = jnp.einsum("smk,jkc->sjmc", xs[:, :, lo:hi], bp[:, lo:hi])
+        pn = jnp.einsum("smk,jkc->sjmc", xs[:, :, lo:hi], bn[:, lo:hi])
+        key, k1, k2 = jax.random.split(key, 3)
+        # buffer write: cell precision + device variation
+        sp = common.quantize_uniform(pp, buf_levels, fs) \
+            * jnp.exp(buffer_sigma * jax.random.normal(k1, pp.shape))
+        sn = common.quantize_uniform(pn, buf_levels, fs) \
+            * jnp.exp(buffer_sigma * jax.random.normal(k2, pn.shape))
+        accp = jnp.einsum("sjmc,sje->emc", sp, onehot)
+        accn = jnp.einsum("sjmc,sje->emc", sn, onehot)
+        fs_bl = (fs * counts)[:, None, None]  # BL range grows (Eq. 3)
+        qp = jnp.clip(accp, 0.0, fs_bl)
+        qp = jnp.round(qp / fs_bl * adc_levels) / adc_levels * fs_bl
+        qn = jnp.clip(accn, 0.0, fs_bl)
+        qn = jnp.round(qn / fs_bl * adc_levels) / adc_levels * fs_bl
+        radix_e = (2.0 ** jnp.arange(n_exp))[:, None, None]
+        total = total + jnp.sum(radix_e * (qp - qn), axis=0)
+    return jnp.round(total)
+
+
+# ---------------------------------------------------------------------------
+# Strategy C (Neural-PIM): fully-analog accumulation, one conversion
+# ---------------------------------------------------------------------------
+
+
+def strategy_c_matmul(x_u8, w_int, adc_levels, key, d_max, pd: int = 4,
+                      analog_sigma_v: float = 0.0055):
+    """The proposed dataflow at the behavioural level: ideal analog
+    accumulation (the NNS+A recursion; the trained-circuit non-ideality is
+    the lumped ``analog_sigma_v``, measured from the Fig. 9 MC experiment),
+    then ONE range-aware conversion of the final sum per output.
+
+    d_max: per-layer calibrated |D| maximum — the NNADC range selection
+    (§4.2, V_max in {0.5, 0.25, 0.125} VDD). adc_levels traced.
+    """
+    k = x_u8.shape[1]
+    wp, wn = jnp.maximum(w_int, 0.0), jnp.maximum(-w_int, 0.0)
+    total = 0.0
+    n_slices = -(-8 // pd)
+    kdec = common.sa_unrolled_scale(n_slices, pd)
+    for lo, hi in _chunks(k):
+        acc = ref.strategy_c_dot_ref(x_u8[:, lo:hi], wp[lo:hi], wn[lo:hi], pd)
+        # lumped analog dataflow noise, in volts referred to the NNS+A
+        # output, mapped into D units via the layer's analog full scale.
+        key, kn = jax.random.split(key)
+        sigma_d = analog_sigma_v / common.V_RANGE * d_max / kdec
+        acc = acc + sigma_d * jax.random.normal(kn, acc.shape)
+        # one signed range-aware conversion over [-d_max, d_max]
+        q = common.quantize_signed(acc * kdec, adc_levels, d_max)
+        total = total + q
+    return jnp.round(total)
+
+
+# ---------------------------------------------------------------------------
+# Model-level forwards
+# ---------------------------------------------------------------------------
+
+
+def calibrate_d_max(qmodel, calib_x_u8):
+    """Per-layer max |integer accumulator| over a calibration batch — the
+    range-aware NNADC scale selection (Fig. 6). Returns list of floats."""
+    d_max = []
+
+    def spy(x, w, i):
+        acc = x @ w
+        d_max.append(float(jnp.max(jnp.abs(acc))))
+        return acc
+
+    train_cnn.quantized_forward(qmodel, calib_x_u8, matmul_fn=spy)
+    return d_max
+
+
+def ideal_forward(qmodel, x_u8):
+    return train_cnn.quantized_forward(qmodel, x_u8)
+
+
+def strategy_forward(qmodel, x_u8, strategy: str, adc_levels, key=None,
+                     d_max=None, pd=None):
+    """Run the quantized CNN with every layer's matmul routed through one
+    accumulation strategy. adc_levels is traced; strategy/pd are static."""
+    if strategy == "A":
+        pd = 1 if pd is None else pd
+        fn = lambda x, w, i: strategy_a_matmul(x, w, adc_levels, pd)
+    elif strategy == "B":
+        pd = 1 if pd is None else pd
+        keys = jax.random.split(key, len(qmodel["layers"]))
+        fn = lambda x, w, i: strategy_b_matmul(x, w, adc_levels, keys[i], pd)
+    elif strategy == "C":
+        pd = 4 if pd is None else pd
+        keys = jax.random.split(key, len(qmodel["layers"]))
+        fn = lambda x, w, i: strategy_c_matmul(x, w, adc_levels, keys[i],
+                                               d_max[i], pd)
+    else:
+        raise ValueError(strategy)
+    return train_cnn.quantized_forward(qmodel, x_u8, matmul_fn=fn)
+
+
+def noisy_forward(qmodel, x_u8, key, sinad_db):
+    """Eq. (13): additive Gaussian activation noise at a given SINAD.
+
+    sigma_i = max|x_i| / 10^(SINAD/20), injected into every layer's
+    pre-requantization accumulator (the hardware's analog output)."""
+    keys = jax.random.split(key, len(qmodel["layers"]))
+
+    def fn(x, w, i):
+        acc = x @ w
+        sigma = jnp.max(jnp.abs(acc)) / 10.0 ** (sinad_db / 20.0)
+        return acc + sigma * jax.random.normal(keys[i], acc.shape)
+
+    return train_cnn.quantized_forward(qmodel, x_u8, matmul_fn=fn)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 Monte-Carlo: the trained NeuralPeriph dataflow, end to end
+# ---------------------------------------------------------------------------
+
+
+def mc_dot_products(key, periph, n: int = 1024, pd: int = 4, rows: int = 128,
+                    lsb_first: bool = True, range_aware: bool = True,
+                    read_sigma: float = 0.002, sh_sigma_v: float = 5e-4,
+                    sh_loss: float = 0.003, interpret: bool = True,
+                    x=None, w=None):
+    """Random-kernel MC through the *trained* NNS+A + NNADC (Fig. 9).
+
+    periph: dict with "nns_a_opt"/"nns_a_msb" {w1,b1,w2,b2} and
+    "nnadc_opt"/"nnadc_naive" {w1,b1,w2,vm} numpy params.
+    Returns (d_hw, d_sw) in integer dot-product units.
+
+    Two realizable schedules (both decode with K = sa_unrolled_scale):
+
+    - LSB-first (the paper's optimization): radix carried by the 2^-N_DAC
+      NNS+A carry weight; the MSB slice is fed last and suffers zero S/H
+      charge-transfer losses.
+    - MSB-first (the Fig. 9b ablation): carry weight 1, radix carried by
+      DAC-side attenuation 2^(-N_DAC*i) of later slices; the MSB slice is
+      fed first and is attenuated by (1 - sh_loss)^(S-1).
+
+    ``sh_loss`` is the fractional charge lost per sample-and-hold transfer
+    (incomplete charge transfer, §5.3.1); ``sh_sigma_v`` its thermal noise;
+    ``read_sigma`` the RRAM read fluctuation applied to the NeuralPeriph
+    conductances per trial.
+
+    x (n, rows) / w (rows, 1): the workload. When omitted, a *correlated*
+    draw is used (inputs biased along the kernel's sign pattern) so the dot
+    products exercise the converter's dynamic range the way real post-ReLU
+    activations against a trained kernel do — fully random signs cancel to
+    a few LSBs of signal, which no accumulation scheme could distinguish.
+    """
+    kx, kw, kr, ks, kc, kcal = jax.random.split(key, 6)
+    if w is None:
+        w = jax.random.randint(kw, (rows, 1), -128, 128).astype(jnp.float32)
+    if x is None:
+        base = jax.random.randint(kx, (n, rows), 0, 128).astype(jnp.float32)
+        corr = jax.random.uniform(kc, (n, 1), minval=-1.0, maxval=1.0)
+        x = jnp.clip(jnp.round(base + corr * 127.0 * jnp.sign(w)[None, :, 0]),
+                     0, 255)
+    wp, wn = jnp.maximum(w, 0.0), jnp.maximum(-w, 0.0)
+
+    d_sw = ref.dot_product_int_ref(x, wp, wn)[:, 0]  # (n,)
+
+    partial = ref.crossbar_partial_sums_ref(x, wp, wn, pd)[:, :, :, 0]  # (S,J,n)
+    s_cycles = partial.shape[0]
+
+    # differential voltage encoding: the W+/W- BL pair rejects the common
+    # mode, so the NNS+A sees a signed value within +-V_RANGE/2 (Fig. 7c)
+    fs = float(rows * (2**pd - 1))
+    diffscale = (common.V_RANGE / 2.0) / fs
+
+    if lsb_first:
+        feed = list(range(s_cycles))  # radix order, carry does the shifting
+        dac_scale = [1.0] * s_cycles
+        sa = periph["nns_a_opt"]
+    else:
+        feed = list(range(s_cycles - 1, -1, -1))  # MSB slice first
+        dac_scale = [2.0 ** (-pd * i) for i in range(s_cycles)]
+        sa = periph["nns_a_msb"]
+
+    w1 = jnp.asarray(sa["w1"])
+    b1 = jnp.asarray(sa["b1"])
+    w2 = jnp.asarray(sa["w2"])
+    b2 = jnp.asarray(sa["b2"])
+    kr1, kr2 = jax.random.split(kr)
+    w1 = w1 * jnp.exp(read_sigma * jax.random.normal(kr1, w1.shape))
+    w2 = w2 * jnp.exp(read_sigma * jax.random.normal(kr2, w2.shape))
+
+    acc = jnp.zeros((n,), dtype=jnp.float32)
+    sh_keys = jax.random.split(ks, s_cycles)
+    for i, m in enumerate(feed):
+        v_bl = partial[m].T * (diffscale * dac_scale[i])
+        vin = jnp.concatenate([v_bl, acc[:, None]], axis=-1)
+        acc = ref.mlp_vtc_ref(vin, w1, b1, w2, b2,
+                              common.VDD / 2, common.VTC_GAIN_TT)[:, 0]
+        if i < s_cycles - 1:  # held for the next cycle
+            acc = acc * (1.0 - sh_loss)
+            acc = acc + sh_sigma_v * jax.random.normal(sh_keys[i], acc.shape)
+
+    # decode: for both schedules the ideal circuit satisfies
+    #   acc = diffscale * D / K,  K = alpha * 2^(pd*(S-1))
+    # (no offset: the differential encoding is zero-centered).
+    alpha = common.sa_alpha(pd)
+    kdec = alpha * 2.0 ** (pd * (s_cycles - 1))
+
+    # NNADC conversion of the signed accumulator: range-aware picks the
+    # smallest 2^-k * VDD bank covering the observed swing (§4.2); the
+    # naive variant burns codes on the full rail. The selection is traced
+    # (a runtime mux over the three pre-trained banks).
+    if range_aware:
+        swing = jnp.max(jnp.abs(acc))
+        v_max = jnp.where(
+            swing <= 0.125 * common.VDD, 0.125 * common.VDD,
+            jnp.where(swing <= 0.25 * common.VDD, 0.25 * common.VDD,
+                      jnp.where(swing <= 0.5 * common.VDD, 0.5 * common.VDD,
+                                common.VDD)))
+        adc = periph["nnadc_opt"]
+    else:
+        v_max = common.VDD
+        adc = periph["nnadc_naive"]
+    codes, _ = nnadc_kernel.nnadc_convert(
+        jnp.clip((acc / v_max + 1.0) / 2.0, 0.0, 1.0),
+        jnp.asarray(adc["w1"]), jnp.asarray(adc["b1"]), jnp.asarray(adc["w2"]),
+        vm=jnp.asarray(adc.get("vm", common.VDD / 2)),
+        gain=common.VTC_GAIN_LATCH, interpret=interpret)
+    acc_q = (codes / 255.0 * 2.0 - 1.0) * v_max
+
+    d_hw = acc_q / diffscale * kdec
+
+    if range_aware:
+        # §4.2 compensation: the range-aware NNADC is trained on *actual*
+        # (noisy) NNS+A outputs with ideal Eq.-(12) labels, i.e. it learns
+        # to invert the systematic NNS+A transfer error. Behaviourally this
+        # is an affine recalibration of the decode, fitted at programming
+        # time on an independent calibration draw.
+        xc = jax.random.randint(kcal, (256, rows), 0, 256)
+        kc2 = jax.random.fold_in(kcal, 1)
+        corr_c = jax.random.uniform(kc2, (256, 1), minval=-1.0, maxval=1.0)
+        xc = jnp.clip(jnp.round(xc * 0.5 + corr_c * 127.0 *
+                                jnp.sign(w)[None, :, 0]), 0, 255)
+        dc_hw, dc_sw = _mc_raw(xc, w, periph, pd, rows, lsb_first, False,
+                               read_sigma, sh_sigma_v, sh_loss,
+                               jax.random.fold_in(kcal, 2), v_max, adc,
+                               diffscale, kdec, interpret)
+        cov = jnp.mean((dc_hw - jnp.mean(dc_hw)) * (dc_sw - jnp.mean(dc_sw)))
+        var = jnp.mean((dc_hw - jnp.mean(dc_hw)) ** 2) + 1e-9
+        gain_cal = cov / var
+        off_cal = jnp.mean(dc_sw) - gain_cal * jnp.mean(dc_hw)
+        d_hw = gain_cal * d_hw + off_cal
+    return d_hw, d_sw
+
+
+def _mc_raw(x, w, periph, pd, rows, lsb_first, range_aware, read_sigma,
+            sh_sigma_v, sh_loss, key, v_max, adc, diffscale, kdec, interpret):
+    """Single raw pass of the trained dataflow (no recalibration): used by
+    mc_dot_products to fit the programming-time compensation."""
+    wp, wn = jnp.maximum(w, 0.0), jnp.maximum(-w, 0.0)
+    d_sw = ref.dot_product_int_ref(x, wp, wn)[:, 0]
+    partial = ref.crossbar_partial_sums_ref(x, wp, wn, pd)[:, :, :, 0]
+    s_cycles = partial.shape[0]
+    if lsb_first:
+        feed = list(range(s_cycles))
+        dac_scale = [1.0] * s_cycles
+        sa = periph["nns_a_opt"]
+    else:
+        feed = list(range(s_cycles - 1, -1, -1))
+        dac_scale = [2.0 ** (-pd * i) for i in range(s_cycles)]
+        sa = periph["nns_a_msb"]
+    kr, ks = jax.random.split(key)
+    kr1, kr2 = jax.random.split(kr)
+    w1 = jnp.asarray(sa["w1"]) * jnp.exp(
+        read_sigma * jax.random.normal(kr1, np.shape(sa["w1"])))
+    b1 = jnp.asarray(sa["b1"])
+    w2 = jnp.asarray(sa["w2"]) * jnp.exp(
+        read_sigma * jax.random.normal(kr2, np.shape(sa["w2"])))
+    b2 = jnp.asarray(sa["b2"])
+    acc = jnp.zeros((x.shape[0],), dtype=jnp.float32)
+    sh_keys = jax.random.split(ks, s_cycles)
+    for i, m in enumerate(feed):
+        v_bl = partial[m].T * (diffscale * dac_scale[i])
+        vin = jnp.concatenate([v_bl, acc[:, None]], axis=-1)
+        acc = ref.mlp_vtc_ref(vin, w1, b1, w2, b2,
+                              common.VDD / 2, common.VTC_GAIN_TT)[:, 0]
+        if i < s_cycles - 1:
+            acc = acc * (1.0 - sh_loss)
+            acc = acc + sh_sigma_v * jax.random.normal(sh_keys[i], acc.shape)
+    codes, _ = nnadc_kernel.nnadc_convert(
+        jnp.clip((acc / v_max + 1.0) / 2.0, 0.0, 1.0),
+        jnp.asarray(adc["w1"]), jnp.asarray(adc["b1"]), jnp.asarray(adc["w2"]),
+        vm=jnp.asarray(adc.get("vm", common.VDD / 2)),
+        gain=common.VTC_GAIN_LATCH, interpret=interpret)
+    acc_q = (codes / 255.0 * 2.0 - 1.0) * v_max
+    return acc_q / diffscale * kdec, d_sw
+
+
+def sinad_db(d_hw, d_sw):
+    """§5.3.1: SINAD = 10 log10((P_sig + P_noise) / P_noise)."""
+    err = d_hw - d_sw
+    p_noise = jnp.mean(err**2)
+    p_sig = jnp.mean((d_sw - jnp.mean(d_sw)) ** 2)
+    return 10.0 * jnp.log10((p_sig + p_noise) / p_noise)

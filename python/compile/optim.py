@@ -1,0 +1,29 @@
+"""Minimal Adam optimizer (optax is not available in this environment).
+
+Matches the paper's training setup (§6.2: SGD with Adam optimizer).
+Operates on pytrees of jnp arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1**tf)
+    vhat_scale = 1.0 / (1 - b2**tf)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}

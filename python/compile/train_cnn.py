@@ -1,0 +1,210 @@
+"""Build-time training + post-training quantization of the benchmark CNN.
+
+The CNN is the workload for the accuracy experiments (Fig. 4a, Fig. 10):
+a compact conv net on the synthetic dataset (see data.py for the
+substitution argument). Training is plain float32; afterwards the model is
+post-training-quantized to the paper's 8-bit format:
+
+  - weights:  per-tensor symmetric int8 (stored as W+/W- like §5.2.1),
+  - activations: uint8 with per-layer calibrated scales (inputs included),
+  - biases: int32 in the accumulator domain.
+
+The quantized forward is *integer-exact* in f32 arithmetic (all
+accumulators < 2^24), so the Rust side and the bit-sliced dataflow models
+reproduce it bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data, optim
+
+LAYERS = (
+    # (kind, kh, kw, cin, cout, stride, pad)
+    ("conv", 3, 3, data.CH, 16, 1, "SAME"),
+    ("conv", 3, 3, 16, 24, 2, "SAME"),
+    ("conv", 3, 3, 24, 32, 1, "SAME"),
+    ("fc", 1, 1, 32, data.N_CLASSES, 1, "VALID"),  # after global avg pool
+)
+
+
+def init_params(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for (kind, kh, kw, cin, cout, _s, _p) in LAYERS:
+        key, kw_key = jax.random.split(key)
+        fan_in = kh * kw * cin
+        w = jax.random.normal(kw_key, (kh, kw, cin, cout)) * np.sqrt(2.0 / fan_in)
+        b = jnp.zeros((cout,))
+        params.append({"w": w, "b": b})
+    return params
+
+
+def float_forward(params, x):
+    """Float reference forward. x: (B, H, W, C) in [0, 1]."""
+    h = x
+    for i, (kind, _kh, _kw, _cin, _cout, stride, pad) in enumerate(LAYERS):
+        w, b = params[i]["w"], params[i]["b"]
+        if kind == "conv":
+            h = jax.lax.conv_general_dilated(
+                h, w, (stride, stride), pad,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu(h + b)
+        else:  # fc after global average pool
+            h = jnp.mean(h, axis=(1, 2))  # (B, C)
+            h = h @ w[0, 0] + b
+    return h  # logits
+
+
+def train(seed: int = 0, steps: int = 1200, batch: int = 128, lr: float = 2e-3,
+          n_train: int = 8192, verbose: bool = False):
+    """Train the float model; returns (params, test_accuracy)."""
+    (xtr, ytr), (xte, yte) = data.make_splits(seed=3, n_train=n_train)
+    params = init_params(seed)
+    opt = optim.adam_init(params)
+
+    def loss_fn(p, xb, yb):
+        logits = float_forward(p, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(xb.shape[0]), yb])
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        params, opt = optim.adam_update(grads, opt, params, lr=lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed + 5)
+    for i in range(steps):
+        idx = rng.integers(0, xtr.shape[0], batch)
+        params, opt, loss = step(params, opt, jnp.asarray(xtr[idx]),
+                                 jnp.asarray(ytr[idx]))
+        if verbose and i % 200 == 0:
+            print(f"step {i}: loss {float(loss):.4f}")
+
+    logits = jax.jit(float_forward)(params, jnp.asarray(xte))
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte)))
+    return params, acc
+
+
+# ---------------------------------------------------------------------------
+# Post-training quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize(params, calib_x):
+    """PTQ to the paper's 8-bit format. Returns a qmodel dict:
+
+    per layer: w_int (int8 values, stored as float), b_int (int32-valued),
+    m (the requant multiplier s_x*s_w/s_y), s_x/s_w/s_y scales.
+    Activations (and the input) are uint8 with scale s: real = q * s.
+    """
+    # calibrate activation scales on the float model
+    acts = [jnp.asarray(calib_x)]
+    h = acts[0]
+    for i, (kind, _kh, _kw, _cin, _cout, stride, pad) in enumerate(LAYERS):
+        w, b = params[i]["w"], params[i]["b"]
+        if kind == "conv":
+            h = jax.lax.conv_general_dilated(
+                h, w, (stride, stride), pad,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu(h + b)
+        else:
+            h = jnp.mean(h, axis=(1, 2))
+            h = h @ w[0, 0] + b
+        acts.append(h)
+
+    qmodel = {"layers": []}
+    s_in = 1.0 / 255.0  # inputs are [0,1] -> uint8
+    s_x = s_in
+    for i, (kind, kh, kw_, cin, cout, stride, pad) in enumerate(LAYERS):
+        w = np.asarray(params[i]["w"])
+        b = np.asarray(params[i]["b"])
+        s_w = float(np.max(np.abs(w)) / 127.0 + 1e-12)
+        w_int = np.clip(np.round(w / s_w), -127, 127).astype(np.float32)
+        # output scale: calibrated 99.9th percentile of the float activation
+        a = np.asarray(acts[i + 1])
+        a_hi = float(np.percentile(np.maximum(a, 0.0), 99.9)) + 1e-9
+        if kind == "fc":
+            # logits keep a symmetric signed range
+            a_hi = float(np.percentile(np.abs(a), 100.0)) + 1e-9
+            s_y = a_hi / 127.0
+        else:
+            s_y = a_hi / 255.0
+        b_int = np.round(b / (s_x * s_w)).astype(np.float32)
+        qmodel["layers"].append({
+            "kind": kind, "kh": kh, "kw": kw_, "cin": cin, "cout": cout,
+            "stride": stride, "pad": pad,
+            "w_int": w_int, "b_int": b_int,
+            "s_x": float(s_x), "s_w": s_w, "s_y": float(s_y),
+            "m": float(s_x * s_w / s_y),
+        })
+        s_x = s_y
+    return qmodel
+
+
+def quantized_forward(qmodel, x_u8, matmul_fn=None):
+    """Integer-exact quantized forward.
+
+    x_u8: (B, H, W, C) uint8-valued float array. ``matmul_fn(x_u8, w_int,
+    layer_idx)``, when given, replaces the exact integer matmul — this is
+    the hook the strategy-A/B/C dataflow models plug into (model.py).
+    Returns logits (B, 10) in the *real* domain.
+    """
+    h = x_u8
+    for i, layer in enumerate(qmodel["layers"]):
+        if layer["kind"] == "conv":
+            patches, out_hw = im2col(h, layer["kh"], layer["kw"], layer["stride"],
+                                     layer["pad"])
+            wmat = layer["w_int"].reshape(-1, layer["cout"])  # (K, Co)
+            if matmul_fn is None:
+                acc = patches @ wmat
+            else:
+                acc = matmul_fn(patches, wmat, i)
+            acc = acc + layer["b_int"]
+            acc = jnp.maximum(acc, 0.0)
+            y = jnp.clip(jnp.round(acc * layer["m"]), 0, 255)
+            b = h.shape[0]
+            h = y.reshape(b, out_hw[0], out_hw[1], layer["cout"])
+        else:
+            # global average pool in the integer domain: mean then round
+            hp = jnp.round(jnp.mean(h, axis=(1, 2)))  # (B, C) still uint8-ish
+            wmat = layer["w_int"][0, 0]
+            if matmul_fn is None:
+                acc = hp @ wmat
+            else:
+                acc = matmul_fn(hp, wmat, i)
+            acc = acc + layer["b_int"]
+            # logits: dequantize, no relu/requant
+            h = acc * (layer["s_x"] * layer["s_w"])
+    return h
+
+
+def im2col(x, kh, kw, stride, pad):
+    """(B, H, W, C) -> (B*OH*OW, kh*kw*C) patches + (OH, OW)."""
+    b, hh, ww, c = x.shape
+    if pad == "SAME":
+        oh = -(-hh // stride)
+        ow = -(-ww // stride)
+        ph = max((oh - 1) * stride + kh - hh, 0)
+        pw = max((ow - 1) * stride + kw - ww, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2),
+                        (0, 0)))
+    else:
+        oh = (hh - kh) // stride + 1
+        ow = (ww - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(x[:, di:di + stride * oh:stride, dj:dj + stride * ow:stride, :])
+    patches = jnp.stack(cols, axis=3)  # (B, OH, OW, kh*kw, C)
+    patches = patches.reshape(b, oh, ow, kh * kw * c)
+    return patches.reshape(b * oh * ow, kh * kw * c), (oh, ow)
+
+
+def split_pos_neg(w_int):
+    """W = W+ - W- (§5.2.1), both uint8-valued."""
+    return np.maximum(w_int, 0.0).astype(np.float32), np.maximum(-w_int, 0.0).astype(np.float32)

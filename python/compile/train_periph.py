@@ -1,0 +1,431 @@
+"""Offline hardware-aware training of the NeuralPeriph circuits (§4).
+
+Two circuits are trained, exactly following the paper's four-step framework
+(§4.1.2) and the input-range-aware NNADC technique (§4.2):
+
+NNS+A  — a 10-input (8 BL pairs + carried sum + bias) x H x 1 MLP with
+         inverter-VTC activations approximating the cyclic shift-and-add
+         ground truth of common.sa_ground_truth.
+NNADC  — an 8-stage pipelined quantizer; each stage is a tiny MLP with VTC
+         activations approximating the 1-bit MDAC function
+         (bit = v > 1/2, residue = 2v - bit), trained per-stage with
+         teacher forcing. Three range-aware variants (V_max = 0.5, 0.25,
+         0.125 of VDD) plus one naively-trained variant for the Fig. 9(b)
+         ablation.
+
+Hardware-aware ingredients (§4.1.2 step 4), all implemented:
+  - per-neuron VTC corners sampled from the A_VTC bank every minibatch
+    (PVT variation of the CMOS inverters);
+  - A_R = 3-bit weight quantization via straight-through estimator;
+  - lognormal conductance perturbation W <- W * e^theta, theta~N(0, 0.025);
+  - weight clipping to the passive-crossbar constraint (Eq. 11): entries
+    within +-2/fan_in (the pseudo-differential pair gives 2x the
+    single-device headroom) and column L1 norms <= 1;
+  - Gaussian input noise modelling S/H thermal noise.
+
+The "naive" variants skip all of the above — they are the paper's
+"without circuit-level optimization" ablation (Fig. 9b).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import common, optim
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Hardware-aware parameter transforms
+# ---------------------------------------------------------------------------
+
+
+def _clip_columns(w, entry_max):
+    """Eq. (11): per-entry clip and per-column (output neuron) L1 <= 1."""
+    w = jnp.clip(w, -entry_max, entry_max)
+    col = jnp.sum(jnp.abs(w), axis=0, keepdims=True)
+    return w * jnp.minimum(1.0, 1.0 / (col + 1e-9))
+
+
+def _quantize_ste(w, bits):
+    """A_R-bit symmetric weight quantization, straight-through gradient."""
+    scale = jnp.max(jnp.abs(w)) + 1e-9
+    levels = 2 ** (bits - 1) - 1
+    q = jnp.round(w / scale * levels) / levels * scale
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def hardware_view(params, key, ar_bits, sigma, hardware_aware: bool):
+    """The parameters the circuit actually realizes for one minibatch:
+    quantized to RRAM precision and perturbed by device variation."""
+    if not hardware_aware:
+        return params, key
+    out = {}
+    for name, w in params.items():
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            wq = _quantize_ste(w, ar_bits)
+            noise = jnp.exp(sigma * jax.random.normal(sub, w.shape))
+            out[name] = wq * noise
+        else:
+            out[name] = w
+    return out, key
+
+
+# ---------------------------------------------------------------------------
+# NNS+A training (§4.1.2)
+# ---------------------------------------------------------------------------
+
+
+def init_sa_params(key, hidden: int, n_dac: int, carry_w=None):
+    """Analytic-linear initialization: every hidden neuron points along the
+    target linear map t = [2^0..2^7, alpha*2^-N_DAC] / alpha, with biases
+    spread around Vm so the inverter bank covers the operating range
+    piecewise-linearly; w2 starts at the least-squares slope of the tt VTC.
+    Training then only has to absorb the hardware constraints."""
+    k1, k2 = jax.random.split(key)
+    cw = 2.0 ** (-n_dac) if carry_w is None else carry_w
+    t = np.concatenate([2.0 ** np.arange(8), [common.sa_alpha(n_dac) * cw]])
+    t = t / common.sa_alpha(n_dac)  # effective weights of the ground truth
+    # choose the crossbar attenuation c so the output layer only needs
+    # sum|w2| ~ 0.8 < 1 (Eq. 11 headroom) given the tt VTC slope.
+    slope_mag = common.VDD * common.VTC_GAIN_TT / 4.0
+    c = 1.0 / (slope_mag * 0.8)
+    w1 = np.tile((c * t)[:, None], (1, hidden))
+    w1 = w1 * (1.0 + 0.05 * np.asarray(jax.random.normal(k1, w1.shape)))
+    # differential inputs are zero-centered, so the neurons sit at Vm with
+    # a spread that linearizes the VTC over the whole input range.
+    b1 = common.VDD / 2 + np.linspace(-0.03, 0.03, hidden)
+    slope = -slope_mag  # VTC derivative at Vm (falling inverter curve)
+    w2 = np.full((hidden, 1), 1.0 / (slope * c * hidden))
+    w2 = w2 * (1.0 + 0.05 * np.asarray(jax.random.normal(k2, w2.shape)))
+    # output bias compensates the VTC midpoint VDD/2 through w2
+    b2 = -float(np.sum(w2) * common.VDD / 2)
+    return {
+        "w1": jnp.asarray(w1, jnp.float32),
+        "b1": jnp.asarray(b1, jnp.float32),
+        "w2": jnp.asarray(w2, jnp.float32),
+        "b2": jnp.asarray([b2], jnp.float32),
+    }
+
+
+def _project_sa(params, hidden: int):
+    params["w1"] = _clip_columns(params["w1"], 2.0 / 10.0)
+    params["w2"] = _clip_columns(params["w2"], 2.0 / hidden)
+    params["b1"] = jnp.clip(params["b1"], 0.0, common.VDD)
+    params["b2"] = jnp.clip(params["b2"], -common.VDD, common.VDD)
+    return params
+
+
+def sa_batch(key, batch: int, n_dac: int, carry_w=None):
+    """Ground-truth pairs for one NNS+A cycle (§4.1.2 step 3).
+
+    BL voltages are drawn uniformly over the analog range; the carried sum
+    over its own (bounded) range. Returns (v_in (B, 9), v_gt (B,))."""
+    k1, k2 = jax.random.split(key)
+    # BL voltages are *differential* (the W+/W- pseudo-differential pairs of
+    # Fig. 7c reject the common mode), so they are signed and span half the
+    # analog range on each side of zero; same for the carried sum.
+    half = common.V_RANGE / 2
+    v_bl = jax.random.uniform(k1, (batch, 8), minval=-half, maxval=half)
+    v_prev = jax.random.uniform(k2, (batch,), minval=-half, maxval=half)
+    v_gt = common.sa_ground_truth(v_bl, v_prev, n_dac, carry_w)
+    return jnp.concatenate([v_bl, v_prev[:, None]], axis=-1), v_gt
+
+
+def train_nns_a(n_dac: int, hidden: int = 12, steps: int = 4000, batch: int = 512,
+                lr: float = 3e-3, seed: int = 0, hardware_aware: bool = True,
+                n_vtc: int = 16, input_noise: float = 5e-4,
+                ar_bits: int = common.AR_BITS, sigma: float = common.RRAM_SIGMA,
+                carry_w=None):
+    """Train one NNS+A model. Returns (params, info dict).
+
+    carry_w = None trains the LSB-first radix carry (2^-N_DAC); the
+    MSB-first ablation trains carry_w = 1.0 (DAC-side attenuation carries
+    the radix instead; see model.mc_dot_products)."""
+    vtc_bank = jnp.asarray(vtc_bank_np := common.vtc_corner_bank(n_vtc))
+    key = jax.random.PRNGKey(seed)
+    key, kp = jax.random.split(key)
+    params = _project_sa(init_sa_params(kp, hidden, n_dac, carry_w), hidden)
+    opt = optim.adam_init(params)
+
+    def loss_fn(p, key):
+        p_hw, key = hardware_view(p, key, ar_bits, sigma, hardware_aware)
+        key, kb, kn, kv = jax.random.split(key, 4)
+        v_in, v_gt = sa_batch(kb, batch, n_dac, carry_w)
+        if hardware_aware:
+            v_in = v_in + input_noise * jax.random.normal(kn, v_in.shape)
+            idx = jax.random.randint(kv, (hidden,), 0, n_vtc)
+            vm, gain = vtc_bank[idx, 0], vtc_bank[idx, 1]
+        else:
+            vm, gain = vtc_bank[0, 0], vtc_bank[0, 1]
+        pred = ref.mlp_vtc_ref(v_in, p_hw["w1"], p_hw["b1"], p_hw["w2"], p_hw["b2"],
+                               vm, gain)[:, 0]
+        return jnp.mean((pred - v_gt) ** 2)
+
+    @jax.jit
+    def step(params, opt, key, lr_t):
+        key, kl = jax.random.split(key)
+        loss, grads = jax.value_and_grad(loss_fn)(params, kl)
+        params, opt = optim.adam_update(grads, opt, params, lr=lr_t)
+        params = _project_sa(params, hidden)
+        return params, opt, key, loss
+
+    loss = jnp.inf
+    for i in range(steps):
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * i / steps))  # cosine decay
+        params, opt, key, loss = step(params, opt, key, lr_t)
+
+    # Final hardware instantiation: quantize once (the one-time programming
+    # of the RRAM conductances, §5.1 footnote 4).
+    final = dict(params)
+    if hardware_aware:
+        final["w1"] = _quantize_ste(final["w1"], ar_bits)
+        final["w2"] = _quantize_ste(final["w2"], ar_bits)
+
+    # Evaluate approximation error at the tt corner (Table 1 row).
+    v_in, v_gt = sa_batch(jax.random.PRNGKey(seed + 99), 8192, n_dac, carry_w)
+    pred = ref.mlp_vtc_ref(v_in, final["w1"], final["b1"], final["w2"], final["b2"],
+                           vtc_bank_np[0, 0], vtc_bank_np[0, 1])[:, 0]
+    err = np.asarray(pred - v_gt)
+    info = {
+        "mse": float(np.mean(err**2)),
+        "max_error_v": float(np.max(err)),
+        "min_error_v": float(np.min(err)),
+        "final_train_loss": float(loss),
+        "n_dac": n_dac,
+        "hidden": hidden,
+        "hardware_aware": hardware_aware,
+    }
+    return {k: np.asarray(v) for k, v in final.items()}, info
+
+
+# ---------------------------------------------------------------------------
+# NNADC training (§4.2): flash-style threshold bank (architecture of [34])
+#
+# The NNADC of ref [34] achieves multi-bit quantization with a single
+# hidden layer of threshold inverters: neuron i fires when w1_i*v + b1_i
+# crosses the inverter switching point, and a unit-budget passive output
+# column sums the fired thermometer steps, so the analog sum *is* the code
+# (regenerated by the output latch). An MDAC-style 1-bit/stage pipeline is
+# NOT realizable with passive output crossbars (the x2 residue slope
+# violates Eq. 11), which is precisely why [34] uses the flash structure.
+#
+# Training per §4.2: noisy inputs (the real NNS+A output distribution) with
+# ideal Eq.-(12) labels; per-neuron VTC corners; lognormal threshold
+# variation; 3-bit STE quantization of w1/w2 (thresholds realize
+# super-resolution through the trained w1/b1 ratio, the point of [34]).
+# Three range-aware variants (V_max/VDD = 0.5, 0.25, 0.125) plus a naive
+# full-range variant for the Fig. 9(b) ablation.
+# ---------------------------------------------------------------------------
+
+
+def init_adc_params(n_bits: int, hidden: int = 0, seed: int = 0):
+    """One threshold inverter per code transition: neuron k fires when v
+    crosses the Eq.-(12) rounding boundary (k - 0.5)/(2^n - 1); the summing
+    column adds exactly one LSB per fired neuron (unit budget: L1 = 1)."""
+    del seed
+    levels = 2**n_bits - 1
+    hidden = hidden or levels
+    assert hidden == levels, "flash bank is one neuron per code transition"
+    t = (np.arange(1, levels + 1) - 0.5) / levels
+    w1 = np.full((hidden,), 0.9)
+    b1 = common.VDD / 2 - w1 * t
+    w2 = np.full((hidden,), 1.0 / levels)  # each fired step adds one LSB
+    return {
+        "w1": jnp.asarray(w1, jnp.float32),
+        "b1": jnp.asarray(b1, jnp.float32),
+        "w2": jnp.asarray(w2, jnp.float32),
+    }
+
+
+def _project_adc(params):
+    params["w1"] = jnp.clip(params["w1"], -1.0, 1.0)
+    # output column is passive: entries bounded, L1 <= 1 (Eq. 11)
+    w2 = jnp.clip(params["w2"], -0.1, 0.1)
+    tot = jnp.sum(jnp.abs(w2))
+    params["w2"] = w2 * jnp.minimum(1.0, 1.0 / (tot + 1e-9))
+    params["b1"] = jnp.clip(params["b1"], -common.VDD, 2 * common.VDD)
+    return params
+
+
+def train_nnadc(n_bits: int = 8, hidden: int = 0, steps: int = 1500,
+                batch: int = 2048, lr: float = 3e-5, seed: int = 1,
+                hardware_aware: bool = True, input_noise: float = 1e-3,
+                n_vtc: int = 16, ar_bits: int = common.AR_BITS,
+                sigma: float = 0.002):
+    """Train/calibrate one flash NNADC. Returns (params, info).
+
+    Two-phase procedure mirroring how [34]/[38] program a real die:
+
+    1. *Analytic calibration*: the per-comparator PVT corners (vm_i) are
+       measured at programming time, and the threshold biases are
+       write-verify-programmed ([38]) to the closed-form optimum
+       b1_i = vm_i - w1_i * t_i of the Eq.-(12) learning objective.
+    2. *Noise-aware fine-tune*: a short keep-best SGD pass with noisy
+       inputs (the NNS+A output distribution, §4.2), RRAM *read*
+       fluctuation (sigma = 0.2%; programming variation is already
+       compensated by write-verify) and 3-bit STE weight quantization.
+       Hard-forward/soft-backward: the latched transfer is optimized with
+       the pre-latch analog curve as surrogate gradient. The best-so-far
+       parameters on a clean validation ramp are kept, so fine-tuning can
+       only improve on the calibrated starting point.
+
+    ``input_noise`` is in normalized-range units: a range-aware variant for
+    V_max = 0.125*VDD sees the same absolute NNS+A noise scaled by 1/V_max,
+    which the caller folds in.
+    """
+    vtc_bank_np = common.vtc_corner_bank(n_vtc, seed=11,
+                                         gain_tt=common.VTC_GAIN_ADC)
+    levels = 2**n_bits - 1
+    hidden = hidden or levels
+    key = jax.random.PRNGKey(seed)
+    params = init_adc_params(n_bits, hidden, seed)
+
+    # chip instance: one fixed PVT corner per comparator
+    if hardware_aware:
+        inst_rng = np.random.default_rng(seed + 77)
+        idx = inst_rng.integers(0, n_vtc, size=hidden)
+        vm_inst = jnp.asarray(vtc_bank_np[idx, 0], jnp.float32)
+        gain_inst = jnp.asarray(vtc_bank_np[idx, 1], jnp.float32)
+    else:
+        vm_inst = jnp.full((hidden,), common.VDD / 2, jnp.float32)
+        gain_inst = jnp.full((hidden,), common.VTC_GAIN_ADC, jnp.float32)
+
+    # phase 1: analytic write-verify calibration of the threshold biases
+    t = (np.arange(1, hidden + 1) - 0.5) / levels
+    params["b1"] = vm_inst - params["w1"] * jnp.asarray(t, jnp.float32)
+    params = _project_adc(params)
+    opt = optim.adam_init(params)
+
+    def latched_codes(p, vm):
+        vval = jnp.linspace(0.0, 1.0, 4096)
+        pre = vval[:, None] * p["w1"][None, :] + p["b1"][None, :]
+        u = 1.0 - common.vtc_apply(pre, vm, common.VTC_GAIN_LATCH) / common.VDD
+        return jnp.mean((u @ p["w2"] - jnp.round(vval * levels) / levels) ** 2)
+
+    val_loss = jax.jit(functools.partial(latched_codes, vm=vm_inst))
+
+    def loss_fn(p, key):
+        p_hw, key = hardware_view(p, key, ar_bits, sigma, hardware_aware)
+        key, kb, kn = jax.random.split(key, 3)
+        v = jax.random.uniform(kb, (batch,))
+        code_gt = jnp.round(v * levels) / levels  # Eq. (12) label, normalized
+        v_obs = v + (input_noise * jax.random.normal(kn, v.shape)
+                     if hardware_aware else 0.0)
+        pre = v_obs[:, None] * p_hw["w1"][None, :] + p_hw["b1"][None, :]
+        u_soft = 1.0 - common.vtc_apply(pre, vm_inst, gain_inst) / common.VDD
+        u_hard = 1.0 - common.vtc_apply(pre, vm_inst,
+                                        common.VTC_GAIN_LATCH) / common.VDD
+        u = u_soft + jax.lax.stop_gradient(u_hard - u_soft)
+        soft = u @ p_hw["w2"]
+        return jnp.mean((soft - code_gt) ** 2)
+
+    @jax.jit
+    def step(params, opt, key, lr_t):
+        key, kl = jax.random.split(key)
+        loss, grads = jax.value_and_grad(loss_fn)(params, kl)
+        params, opt = optim.adam_update(grads, opt, params, lr=lr_t)
+        params = _project_adc(params)
+        return params, opt, key, loss
+
+    best = {k: np.asarray(v) for k, v in params.items()}
+    best_val = float(val_loss(params))
+    loss = best_val
+    for i in range(steps):
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * i / steps))
+        params, opt, key, loss = step(params, opt, key, lr_t)
+        if (i + 1) % 250 == 0:
+            vl = float(val_loss(params))
+            if vl < best_val:
+                best_val = vl
+                best = {k: np.asarray(v) for k, v in params.items()}
+
+    final = {k: jnp.asarray(v) for k, v in best.items()}
+    if hardware_aware:
+        # w1 is programmed at RRAM precision; the summing column w2 uses one
+        # repeated device value (one LSB per fired step) so A_R covers it.
+        # b1 keeps its write-verified value up to the residual tuning error
+        # of the write-verify loop ([38] reports sub-percent precision) —
+        # modelled as a 0.2-LSB threshold placement jitter.
+        final["w1"] = _quantize_ste(final["w1"], ar_bits)
+        final["w2"] = _quantize_ste(final["w2"], ar_bits)
+        jit_rng = np.random.default_rng(seed + 177)
+        write_jitter = 0.2 / levels  # input-referred, normalized units
+        final["b1"] = final["b1"] + jnp.asarray(
+            jit_rng.normal(0.0, write_jitter, hidden) * np.asarray(final["w1"]),
+            jnp.float32)
+    out = {k: np.asarray(v) for k, v in final.items()}
+    out["vm"] = np.asarray(vm_inst)
+    out["gain"] = np.asarray(gain_inst)
+    info = {"final_train_loss": float(loss), "val_loss": best_val,
+            "n_bits": n_bits, "hidden": hidden,
+            "hardware_aware": hardware_aware}
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# NNADC linearity metrics (Table 1): DNL / INL / ENOB
+# ---------------------------------------------------------------------------
+
+
+def adc_transfer(params, n_points: int = 1 << 13, vm=None, gain=None,
+                 n_bits: int = 8):
+    """Evaluate the NNADC over a fine input ramp. Returns (v, codes).
+
+    Comparator offsets (per-neuron vm) come from the chip instance stored
+    with the params; the latch makes every decision full-swing, so the
+    effective gain is VTC_GAIN_LATCH regardless of the analog pre-gain."""
+    vm = params.get("vm", common.VDD / 2) if vm is None else vm
+    gain = common.VTC_GAIN_LATCH if gain is None else gain
+    v = jnp.linspace(0.0, 1.0, n_points)
+    codes, _ = ref.nnadc_flash_ref(v, jnp.asarray(params["w1"]),
+                                   jnp.asarray(params["b1"]),
+                                   jnp.asarray(params["w2"]),
+                                   jnp.asarray(vm), gain, n_bits)
+    return np.asarray(v), np.asarray(codes)
+
+
+def dnl_inl(v, codes, n_bits: int = 8):
+    """Code-transition DNL/INL in LSB from a ramp sweep."""
+    n_codes = 2**n_bits
+    lsb = 1.0 / (n_codes - 1)
+    transitions = np.full(n_codes - 1, np.nan)
+    for i in range(1, len(codes)):
+        if codes[i] > codes[i - 1]:
+            lo = int(codes[i - 1])
+            hi = int(codes[i])
+            for c in range(max(lo, 0), min(hi, n_codes - 1)):
+                if np.isnan(transitions[c]):
+                    transitions[c] = v[i]
+    valid = ~np.isnan(transitions)
+    # Eq.-(12) rounding transitions sit at (k - 0.5) * lsb
+    ideal = (np.arange(1, n_codes) - 0.5) * lsb
+    dnl = np.diff(transitions) / lsb - 1.0
+    dnl = dnl[valid[1:] & valid[:-1]]
+    inl = (transitions[valid] - ideal[valid]) / lsb
+    missing = int(np.sum(~valid))
+    return dnl, inl, missing
+
+
+def enob(params, n_samples: int = 1 << 13, n_bits: int = 8):
+    """Sine-test ENOB: quantize a full-scale sine, reconstruct, measure
+    SINAD, ENOB = (SINAD - 1.76) / 6.02."""
+    t = np.arange(n_samples, dtype=np.float64)
+    vsig = 0.5 + 0.4999 * np.sin(2 * np.pi * 127 * t / n_samples)
+    codes, _ = ref.nnadc_flash_ref(jnp.asarray(vsig, jnp.float32),
+                                   jnp.asarray(params["w1"]),
+                                   jnp.asarray(params["b1"]),
+                                   jnp.asarray(params["w2"]),
+                                   jnp.asarray(params.get("vm", common.VDD / 2)),
+                                   common.VTC_GAIN_LATCH, n_bits)
+    recon = np.asarray(codes, np.float64) / (2**n_bits - 1)
+    err = recon - vsig
+    p_sig = np.mean((vsig - vsig.mean()) ** 2)
+    p_noise = np.mean((err - err.mean()) ** 2)
+    sinad = 10 * np.log10(p_sig / p_noise)
+    return (sinad - 1.76) / 6.02, sinad

@@ -1,0 +1,152 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes and bit-widths with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import common
+from compile.kernels import crossbar, nnadc, nns_a, ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=12, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rand_case(seed, b, k, c):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, (b, k)))
+    wp = jnp.asarray(rng.integers(0, 128, (k, c)))
+    wn = jnp.asarray(rng.integers(0, 128, (k, c)))
+    return x, wp, wn
+
+
+class TestCrossbarKernel:
+    @hypothesis.given(seed=st.integers(0, 2**31), b=st.integers(1, 16),
+                      k=st.integers(1, 300), c=st.integers(1, 24),
+                      pd=st.sampled_from([1, 2, 4, 8]))
+    def test_matches_oracle(self, seed, b, k, c, pd):
+        x, wp, wn = rand_case(seed, b, k, c)
+        got = crossbar.strategy_c_dot(x, wp, wn, pd)
+        want = ref.strategy_c_dot_ref(x, wp, wn, pd)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(seed=st.integers(0, 2**31), pd=st.sampled_from([1, 2, 4]))
+    def test_decodes_to_integer_dot_product(self, seed, pd):
+        x, wp, wn = rand_case(seed, 8, 200, 12)
+        dec = crossbar.strategy_c_dot_decoded(x, wp, wn, pd)
+        want = ref.dot_product_int_ref(x, wp, wn)
+        assert_allclose(np.asarray(dec), np.asarray(want),
+                        rtol=1e-4, atol=0.5)
+
+    def test_k_tiling_boundary(self):
+        # exactly one tile, one tile + 1 row, two tiles
+        for k in (128, 129, 256):
+            x, wp, wn = rand_case(k, 4, k, 8)
+            got = crossbar.strategy_c_dot(x, wp, wn, 4)
+            want = ref.strategy_c_dot_ref(x, wp, wn, 4)
+            assert_allclose(np.asarray(got), np.asarray(want),
+                            rtol=1e-5, atol=1e-5)
+
+    def test_zero_inputs_give_zero(self):
+        x = jnp.zeros((4, 64), jnp.int32)
+        w = jnp.asarray(np.random.default_rng(0).integers(0, 128, (64, 4)))
+        got = crossbar.strategy_c_dot(x, w, w, 1)
+        assert_allclose(np.asarray(got), 0.0, atol=1e-6)
+
+
+class TestNnsAKernel:
+    @hypothesis.given(seed=st.integers(0, 2**31), s=st.integers(1, 8),
+                      b=st.integers(1, 32), h=st.integers(4, 24))
+    def test_matches_oracle(self, seed, s, b, h):
+        rng = np.random.default_rng(seed)
+        w1 = jnp.asarray(rng.normal(0, 0.05, (9, h)), jnp.float32)
+        b1 = jnp.asarray(rng.normal(0.6, 0.05, (h,)), jnp.float32)
+        w2 = jnp.asarray(rng.normal(0, 0.05, (h, 1)), jnp.float32)
+        b2 = jnp.asarray(rng.normal(0, 0.01, (1,)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(-0.25, 0.25, (s, b, 8)), jnp.float32)
+        got = nns_a.nns_a_cyclic(vs, w1, b1, w2, b2)
+        want = ref.nns_a_cyclic_ref(vs, w1, b1, w2, b2,
+                                    common.VDD / 2, 25.0)
+        assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_single_cycle_is_plain_mlp(self):
+        rng = np.random.default_rng(7)
+        h = 12
+        w1 = jnp.asarray(rng.normal(0, 0.05, (9, h)), jnp.float32)
+        b1 = jnp.asarray(rng.normal(0.6, 0.05, (h,)), jnp.float32)
+        w2 = jnp.asarray(rng.normal(0, 0.05, (h, 1)), jnp.float32)
+        b2 = jnp.zeros((1,), jnp.float32)
+        vs = jnp.asarray(rng.uniform(-0.2, 0.2, (1, 5, 8)), jnp.float32)
+        got = nns_a.nns_a_cyclic(vs, w1, b1, w2, b2)
+        vin = jnp.concatenate([vs[0], jnp.zeros((5, 1))], axis=-1)
+        want = ref.mlp_vtc_ref(vin, w1, b1, w2, b2, common.VDD / 2, 25.0)[:, 0]
+        assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+class TestNnadcKernel:
+    @hypothesis.given(seed=st.integers(0, 2**31), b=st.integers(1, 600),
+                      h=st.integers(8, 255))
+    def test_matches_oracle(self, seed, b, h):
+        rng = np.random.default_rng(seed)
+        w1 = jnp.asarray(rng.uniform(0.5, 1.0, (h,)), jnp.float32)
+        b1 = jnp.asarray(rng.uniform(-0.4, 0.6, (h,)), jnp.float32)
+        w2 = jnp.asarray(np.full(h, 1.0 / h), jnp.float32)
+        v = jnp.asarray(rng.uniform(0, 1, (b,)), jnp.float32)
+        got_codes, got_soft = nnadc.nnadc_convert(v, w1, b1, w2)
+        want_codes, want_soft = ref.nnadc_flash_ref(
+            v, w1, b1, w2, common.VDD / 2, common.VTC_GAIN_LATCH)
+        assert_allclose(np.asarray(got_soft), np.asarray(want_soft), atol=1e-5)
+        # codes may differ where soft sits exactly on a rounding edge, but
+        # never by more than one code
+        diff = np.abs(np.asarray(got_codes) - np.asarray(want_codes))
+        assert diff.max() <= 1.0, diff.max()
+
+    def test_monotone_on_ideal_bank(self):
+        levels = 255
+        t = (np.arange(1, levels + 1) - 0.5) / levels
+        w1 = jnp.asarray(np.full(levels, 0.9), jnp.float32)
+        b1 = jnp.asarray(common.VDD / 2 - 0.9 * t, jnp.float32)
+        w2 = jnp.asarray(np.full(levels, 1.0 / levels), jnp.float32)
+        v = jnp.linspace(0, 1, 2048)
+        codes, _ = nnadc.nnadc_convert(v, w1, b1, w2)
+        codes = np.asarray(codes)
+        assert np.all(np.diff(codes) >= 0)
+        assert codes[0] == 0 and codes[-1] == 255
+
+
+class TestVoltageHelpers:
+    @hypothesis.given(seed=st.integers(0, 2**31),
+                      pd=st.sampled_from([1, 2, 4, 8]))
+    def test_bit_slices_reassemble(self, seed, pd):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(0, 256, (3, 17)))
+        xs = common.input_bit_slices(x, pd)
+        back = sum(2.0 ** (pd * i) * xs[i] for i in range(xs.shape[0]))
+        assert_allclose(np.asarray(back), np.asarray(x).astype(np.float32))
+
+    @hypothesis.given(seed=st.integers(0, 2**31))
+    def test_weight_planes_reassemble(self, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.integers(0, 256, (9, 5)))
+        planes = common.weight_bit_planes(w)
+        back = sum(2.0**j * planes[j] for j in range(planes.shape[0]))
+        assert_allclose(np.asarray(back), np.asarray(w).astype(np.float32))
+
+    @hypothesis.given(s=st.integers(1, 8), pd=st.sampled_from([1, 2, 4]))
+    def test_unrolled_scale_identity(self, s, pd):
+        # the exactness property the whole Strategy-C design rests on:
+        # unrolled recursion == D / K for any partial-sum pattern
+        rng = np.random.default_rng(s * 10 + pd)
+        partial = jnp.asarray(rng.integers(-100, 100, (s, 8, 2, 3)),
+                              jnp.float32)
+        acc = ref.strategy_c_accumulate_ref(partial, pd)
+        d = sum(2.0 ** (pd * i + j) * np.asarray(partial)[i, j]
+                for i in range(s) for j in range(8))
+        k = common.sa_alpha(pd) * 2.0 ** (pd * (s - 1))
+        assert_allclose(np.asarray(acc) * k, d, rtol=1e-4, atol=1e-3)

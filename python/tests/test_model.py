@@ -1,0 +1,174 @@
+"""L2 model tests: quantized CNN, strategy dataflows, noise model."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import common, data, model, train_cnn
+
+hypothesis.settings.register_profile(
+    "model", max_examples=8, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("model")
+
+
+@pytest.fixture(scope="module")
+def tiny_qmodel():
+    params, acc = train_cnn.train(steps=250, n_train=2048)
+    (xtr, _), (xte, yte) = data.make_splits(n_train=2048)
+    qm = train_cnn.quantize(params, xtr[:256])
+    x_u8 = jnp.asarray(np.round(xte[:64] * 255.0), jnp.float32)
+    return qm, x_u8, yte[:64], acc
+
+
+def rand_mat(seed, m, k, c):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, (m, k)), jnp.float32)
+    w = jnp.asarray(rng.integers(-127, 128, (k, c)), jnp.float32)
+    return x, w
+
+
+class TestStrategyMatmuls:
+    @hypothesis.given(seed=st.integers(0, 2**31), m=st.integers(1, 32),
+                      k=st.integers(1, 300), c=st.integers(1, 16))
+    def test_strategy_a_near_exact_at_fine_resolution(self, seed, m, k, c):
+        x, w = rand_mat(seed, m, k, c)
+        d = np.array(x) @ np.array(w)
+        # levels == full scale -> unit-step quantizer -> exact
+        fs_levels = float(model.K_CHUNK * 1)
+        got = np.array(model.strategy_a_matmul(x, w, fs_levels, 1))
+        assert_allclose(got, d, atol=0.5)
+
+    @hypothesis.given(seed=st.integers(0, 2**31))
+    def test_strategy_a_error_monotone_in_resolution(self, seed):
+        x, w = rand_mat(seed, 16, 256, 8)
+        d = np.array(x) @ np.array(w)
+        errs = []
+        for bits in (3, 5, 7):
+            got = np.array(model.strategy_a_matmul(x, w, float(2**bits - 1), 1))
+            errs.append(np.abs(got - d).mean())
+        assert errs[0] >= errs[1] >= errs[2], errs
+
+    @hypothesis.given(seed=st.integers(0, 2**31))
+    def test_strategy_b_clean_buffer_recovers_dot(self, seed):
+        x, w = rand_mat(seed, 8, 128, 4)
+        d = np.array(x) @ np.array(w)
+        got = np.array(model.strategy_b_matmul(
+            x, w, float(2**14 - 1), jax.random.PRNGKey(0), 1,
+            buffer_bits=16, buffer_sigma=0.0))
+        # only fine quantizers left: absolute error bounded by the summed
+        # per-diagonal quantization steps (~2 * FS * 2^15 / 2^14)
+        assert np.abs(got - d).max() < 300.0, np.abs(got - d).max()
+
+    @hypothesis.given(seed=st.integers(0, 2**31),
+                      pd=st.sampled_from([1, 2, 4]))
+    def test_strategy_c_noiseless_tracks_dot(self, seed, pd):
+        x, w = rand_mat(seed, 8, 200, 4)
+        d = np.array(x) @ np.array(w)
+        # the converter range must cover the *per-chunk* partial sums
+        # (chunks can exceed the cancelled total) — which is exactly what
+        # calibrate_d_max measures on the real model
+        chunk_max = max(
+            float(np.abs(np.array(x[:, lo:hi]) @ np.array(w[lo:hi])).max())
+            for lo, hi in model._chunks(x.shape[1]))
+        d_max = max(float(np.abs(d).max()), chunk_max) + 1.0
+        got = np.array(model.strategy_c_matmul(
+            x, w, float(2**16 - 1), jax.random.PRNGKey(0), d_max, pd,
+            analog_sigma_v=0.0))
+        # error bounded by the 16-bit conversion step per K-chunk (full
+        # scale d_max), plus f32 accumulation noise
+        tol = 4.0 * d_max / 2**15 + 2.0
+        assert np.abs(got - d).max() < tol, (np.abs(got - d).max(), tol)
+
+    def test_strategy_c_8bit_quantization_bounds_error(self):
+        x, w = rand_mat(5, 16, 256, 8)
+        d = np.array(x) @ np.array(w)
+        d_max = float(np.abs(d).max())
+        got = np.array(model.strategy_c_matmul(
+            x, w, 255.0, jax.random.PRNGKey(0), d_max, 4,
+            analog_sigma_v=0.0))
+        # one 8-bit conversion per chunk: error <= chunks * d_max/255
+        assert np.abs(got - d).max() <= 2 * d_max / 255.0 + 1.0
+
+
+class TestModelLevel:
+    def test_quantized_close_to_float(self, tiny_qmodel):
+        qm, x_u8, y, float_acc = tiny_qmodel
+        logits = train_cnn.quantized_forward(qm, x_u8)
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
+        assert acc > float_acc - 0.08, (acc, float_acc)
+
+    def test_noisy_forward_high_sinad_matches_ideal(self, tiny_qmodel):
+        qm, x_u8, _, _ = tiny_qmodel
+        ideal = train_cnn.quantized_forward(qm, x_u8)
+        noisy = model.noisy_forward(qm, x_u8, jax.random.PRNGKey(1), 80.0)
+        assert np.mean(np.argmax(np.array(ideal), 1)
+                       == np.argmax(np.array(noisy), 1)) > 0.95
+
+    def test_noisy_forward_low_sinad_degrades(self, tiny_qmodel):
+        qm, x_u8, y, _ = tiny_qmodel
+        noisy = model.noisy_forward(qm, x_u8, jax.random.PRNGKey(1), 3.0)
+        acc = float(jnp.mean(jnp.argmax(noisy, -1) == jnp.asarray(y)))
+        assert acc < 0.7
+
+    def test_calibrate_d_max_positive_per_layer(self, tiny_qmodel):
+        qm, x_u8, _, _ = tiny_qmodel
+        d_max = model.calibrate_d_max(qm, x_u8)
+        assert len(d_max) == len(qm["layers"])
+        assert all(v > 0 for v in d_max)
+
+    def test_strategy_forward_c_matches_ideal_at_8bit(self, tiny_qmodel):
+        qm, x_u8, _, _ = tiny_qmodel
+        d_max = model.calibrate_d_max(qm, x_u8)
+        ideal = train_cnn.quantized_forward(qm, x_u8)
+        c = model.strategy_forward(qm, x_u8, "C", 255.0,
+                                   key=jax.random.PRNGKey(0), d_max=d_max)
+        agree = np.mean(np.argmax(np.array(ideal), 1)
+                        == np.argmax(np.array(c), 1))
+        assert agree > 0.9, agree
+
+
+class TestMcDataflow:
+    @pytest.fixture(scope="class")
+    def periph(self):
+        from compile import train_periph
+        sa_opt, _ = train_periph.train_nns_a(4, steps=800)
+        sa_msb, _ = train_periph.train_nns_a(4, steps=800,
+                                             hardware_aware=False,
+                                             carry_w=1.0, seed=2)
+        adc_opt, _ = train_periph.train_nnadc(steps=100)
+        adc_nv, _ = train_periph.train_nnadc(steps=100, hardware_aware=False,
+                                             seed=3)
+        return {"nns_a_opt": sa_opt, "nns_a_msb": sa_msb,
+                "nnadc_opt": adc_opt, "nnadc_naive": adc_nv}
+
+    def test_optimized_beats_naive(self, periph):
+        key = jax.random.PRNGKey(0)
+        d_hw, d_sw = model.mc_dot_products(key, periph, n=256)
+        s_opt = float(model.sinad_db(d_hw, d_sw))
+        d_hw, d_sw = model.mc_dot_products(key, periph, n=256,
+                                           lsb_first=False, range_aware=False)
+        s_naive = float(model.sinad_db(d_hw, d_sw))
+        assert s_opt > s_naive + 5.0, (s_opt, s_naive)
+
+    def test_dot_products_span_range(self, periph):
+        key = jax.random.PRNGKey(1)
+        _, d_sw = model.mc_dot_products(key, periph, n=256)
+        # the correlated draw must exercise the converter's range
+        assert float(jnp.std(d_sw)) > 1e5
+
+
+class TestDataset:
+    def test_splits_deterministic(self):
+        (a, ya), _ = data.make_splits(n_train=64, n_test=16)
+        (b, yb), _ = data.make_splits(n_train=64, n_test=16)
+        assert np.array_equal(a, b) and np.array_equal(ya, yb)
+
+    def test_images_in_unit_range(self):
+        (x, y), _ = data.make_splits(n_train=64, n_test=16)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        assert set(np.unique(y)) <= set(range(10))

@@ -1,0 +1,148 @@
+"""NeuralPeriph training framework: convergence, constraints, metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, train_periph
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def quick_sa():
+    params, info = train_periph.train_nns_a(4, steps=1200, seed=0)
+    return params, info
+
+
+@pytest.fixture(scope="module")
+def quick_adc():
+    params, info = train_periph.train_nnadc(steps=200, seed=1)
+    return params, info
+
+
+class TestNnsATraining:
+    def test_converges(self, quick_sa):
+        _, info = quick_sa
+        assert info["mse"] < 5e-4, info
+
+    def test_respects_crossbar_constraints(self, quick_sa):
+        params, _ = quick_sa
+        # Eq. (11): per-column L1 <= 1 on both crossbar layers
+        assert np.all(np.sum(np.abs(params["w1"]), axis=0) <= 1.0 + 1e-5)
+        assert np.all(np.sum(np.abs(params["w2"]), axis=0) <= 1.0 + 1e-5)
+        # pseudo-differential entry headroom
+        assert np.max(np.abs(params["w1"])) <= 0.2 + 1e-6
+
+    def test_weights_are_ar_bit_quantized(self, quick_sa):
+        params, _ = quick_sa
+        for name in ("w1", "w2"):
+            w = params[name]
+            scale = np.max(np.abs(w))
+            levels = 2 ** (common.AR_BITS - 1) - 1
+            grid = np.round(w / scale * levels)
+            assert np.allclose(w, grid / levels * scale, atol=1e-6)
+
+    def test_cyclic_accumulation_tracks_ground_truth(self, quick_sa):
+        params, _ = quick_sa
+        rng = np.random.default_rng(3)
+        vs = jnp.asarray(rng.uniform(-0.2, 0.2, (2, 64, 8)), jnp.float32)
+        got = ref.nns_a_cyclic_ref(vs, jnp.asarray(params["w1"]),
+                                   jnp.asarray(params["b1"]),
+                                   jnp.asarray(params["w2"]),
+                                   jnp.asarray(params["b2"]),
+                                   common.VDD / 2, common.VTC_GAIN_TT)
+        want = common.sa_unroll_ground_truth(jnp.transpose(vs, (0, 1, 2)), 4)
+        err = np.asarray(got) - np.asarray(want)
+        assert np.max(np.abs(err)) < 0.08  # two chained cycles, volts
+
+    def test_msb_variant_uses_unity_carry(self):
+        params, info = train_periph.train_nns_a(
+            4, steps=800, hardware_aware=False, carry_w=1.0, seed=2)
+        assert info["mse"] < 5e-4
+        # carry weight 1: output responds ~1:1 to the 9th input
+        v0 = jnp.zeros((1, 9), jnp.float32)
+        v1 = v0.at[0, 8].set(0.1)
+        f = lambda v: ref.mlp_vtc_ref(v, *(jnp.asarray(params[k]) for k in
+                                           ("w1", "b1", "w2", "b2")),
+                                      common.VDD / 2, common.VTC_GAIN_TT)[0, 0]
+        gain = (float(f(v1)) - float(f(v0))) / 0.1
+        assert 0.8 < gain < 1.2
+
+
+class TestNnadcTraining:
+    def test_transfer_is_monotone_and_complete(self, quick_adc):
+        params, _ = quick_adc
+        v, codes = train_periph.adc_transfer(params)
+        assert np.all(np.diff(codes) >= 0)
+        dnl, inl, missing = train_periph.dnl_inl(v, codes, 8)
+        assert missing <= 3
+        assert np.max(np.abs(inl)) < 2.0
+
+    def test_enob_near_8_bits(self, quick_adc):
+        params, _ = quick_adc
+        enob, sinad = train_periph.enob(params)
+        assert enob > 7.0, (enob, sinad)
+
+    def test_instance_corners_shipped(self, quick_adc):
+        params, _ = quick_adc
+        assert params["vm"].shape == params["b1"].shape
+        assert np.all(np.abs(params["vm"] - common.VDD / 2)
+                      <= 0.02 * common.VDD + 1e-6)
+
+    def test_unit_summing_column(self, quick_adc):
+        params, _ = quick_adc
+        assert np.sum(np.abs(params["w2"])) <= 1.0 + 1e-4
+
+    def test_naive_variant_trains(self):
+        params, info = train_periph.train_nnadc(steps=100, seed=3,
+                                                hardware_aware=False)
+        v, codes = train_periph.adc_transfer(params)
+        assert np.all(np.diff(codes) >= 0)
+
+
+class TestLinearityMetrics:
+    def test_dnl_inl_of_ideal_staircase(self):
+        # perfect Eq.-(12) quantizer -> DNL = INL = 0
+        v = np.linspace(0, 1, 1 << 14)
+        codes = np.clip(np.round(v * 255), 0, 255)
+        dnl, inl, missing = train_periph.dnl_inl(v, codes, 8)
+        assert missing == 0
+        assert np.max(np.abs(dnl)) < 0.02
+        assert np.max(np.abs(inl)) < 0.02
+
+    def test_dnl_detects_wide_code(self):
+        v = np.linspace(0, 1, 1 << 14)
+        # stretch code 100 by one LSB
+        edges = (np.arange(1, 256) - 0.5) / 255.0
+        edges[100:] += 1.0 / 255.0
+        codes = np.searchsorted(edges, v)
+        dnl, inl, missing = train_periph.dnl_inl(v, codes, 8)
+        assert dnl.max() > 0.8
+
+    def test_enob_of_ideal_quantizer(self):
+        ideal = {
+            "w1": np.full(255, 0.9, np.float32),
+            "b1": (common.VDD / 2 -
+                   0.9 * (np.arange(1, 256) - 0.5) / 255).astype(np.float32),
+            "w2": np.full(255, 1 / 255, np.float32),
+        }
+        enob, sinad = train_periph.enob(ideal)
+        assert 7.7 < enob < 8.3
+
+
+class TestHardwareView:
+    def test_quantize_ste_levels(self):
+        w = jnp.asarray(np.linspace(-1, 1, 41), jnp.float32)
+        q = np.asarray(train_periph._quantize_ste(w, 3))
+        assert len(np.unique(np.round(q, 6))) <= 7  # 2*(2^2-1)+1
+
+    def test_noise_is_multiplicative_lognormal(self):
+        key = jax.random.PRNGKey(0)
+        params = {"w1": jnp.ones((64, 64)), "b1": jnp.zeros((64,))}
+        out, _ = train_periph.hardware_view(params, key, 8, 0.05, True)
+        w = np.asarray(out["w1"])
+        assert np.all(w > 0)
+        assert abs(np.std(np.log(w)) - 0.05) < 0.01
+        # biases untouched
+        assert np.all(np.asarray(out["b1"]) == 0)

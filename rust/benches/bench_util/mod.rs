@@ -1,0 +1,30 @@
+//! Shared timing harness for the `harness = false` benches (criterion is
+//! unavailable offline). Warmup + N timed iterations + robust stats.
+
+use neural_pim::util::stats::Samples;
+use std::time::Instant;
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!("[bench] {name}: {}", s.summary("ms"));
+}
+
+/// Time a fallible setup once, reporting failures without panicking the
+/// whole bench binary (artifacts may be missing in some environments).
+pub fn try_or_skip<T>(what: &str, r: anyhow::Result<T>) -> Option<T> {
+    match r {
+        Ok(v) => Some(v),
+        Err(e) => {
+            println!("[bench] SKIP {what}: {e:#}");
+            None
+        }
+    }
+}

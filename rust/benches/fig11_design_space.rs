@@ -1,0 +1,29 @@
+//! Bench: Fig. 11 — the (N, M, A, S, D) design-space sweep and the
+//! optimum it selects, with timing of the sweep itself.
+
+mod bench_util;
+
+use bench_util::bench;
+use neural_pim::config::AcceleratorConfig;
+use neural_pim::dse;
+use neural_pim::report;
+
+fn main() {
+    println!("### Fig 11 — design-space exploration\n");
+    report::fig11_table(15).print();
+
+    let pts = dse::sweep();
+    println!("feasible points: {}", pts.len());
+    let best = dse::best();
+    let paper = dse::evaluate(&AcceleratorConfig::neural_pim()).unwrap();
+    println!(
+        "optimum: {} at {:.1} GOPS/s/mm²; paper's choice {} at {:.1} \
+         (paper reports 1904.0)",
+        best.label, best.compute_efficiency,
+        paper.label, paper.compute_efficiency
+    );
+
+    bench("full DSE sweep", 1, 10, || {
+        let _ = dse::sweep();
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 12 (energy + throughput, 9 benchmarks x 3 architectures at
+//! iso-area) and Fig. 13 (system energy breakdown) — the headline
+//! 5.36x / 1.73x / 3.43x / 1.59x experiment.
+
+mod bench_util;
+
+use bench_util::bench;
+use neural_pim::report;
+use neural_pim::workloads;
+
+fn main() {
+    println!("### Fig 12 / Fig 13 — full-system evaluation\n");
+    let nets = workloads::all_benchmarks();
+    let r = report::system_report(&nets);
+    r.table_energy.print();
+    r.table_throughput.print();
+    r.table_breakdown.print();
+    println!("{}\n", r.headline);
+
+    bench("full 9-benchmark x 3-architecture simulation", 1, 10, || {
+        let _ = neural_pim::sim::run_system_comparison(&nets);
+    });
+}

@@ -1,0 +1,69 @@
+//! Bench: regenerates Fig. 3(d)/Fig. 4 — the §3 dataflow characterization
+//! (analytical) plus the Fig. 4(a) accuracy-vs-ADC-resolution sweep
+//! through the AOT dataflow artifacts when present.
+
+mod bench_util;
+
+use bench_util::{bench, try_or_skip};
+use neural_pim::report;
+use neural_pim::runtime::{self, Runtime};
+use neural_pim::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("### Fig 3d / Fig 4 — dataflow characterization\n");
+    report::characterization_table().print();
+    report::fig4b_table().print();
+    report::fig4c_table().print();
+
+    bench("analytical framework (full Fig4b+4c recompute)", 3, 50, || {
+        let _ = report::fig4b_table();
+        let _ = report::fig4c_table();
+    });
+
+    // Fig 4a through PJRT (needs artifacts)
+    let Some(rt) = try_or_skip("runtime", Runtime::new(&neural_pim::artifact_dir()))
+    else {
+        return Ok(());
+    };
+    let ts = runtime::TestSet::load(rt.dir())?;
+    let mut t = Table::new(
+        "Fig 4a: inference accuracy vs A/D resolution (128 images/point)",
+        &["ADC bits", "Strategy A", "Strategy B", "Strategy C"],
+    );
+    for bits in [2u32, 4, 6, 8, 10] {
+        let mut row = vec![bits.to_string()];
+        for s in ["A", "B", "C"] {
+            let exe = rt.load(&format!("cnn_strat{s}"))?;
+            let mut inputs = vec![
+                ts.batch_literal(0, 128)?,
+                runtime::lit_scalar_f32((1u64 << bits) as f32 - 1.0),
+            ];
+            if s != "A" {
+                inputs.push(runtime::lit_key(42)?);
+            }
+            let out = exe.run(&inputs)?;
+            let logits = runtime::to_f32_vec(&out[0])?;
+            let acc =
+                runtime::accuracy(&logits, &ts.batch_labels(0, 128), 10);
+            row.push(format!("{acc:.3}"));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // end-to-end execute latency of each strategy artifact at 8 bits
+    for s in ["A", "B", "C"] {
+        let exe = rt.load(&format!("cnn_strat{s}"))?;
+        let images = ts.batch_literal(0, 128)?;
+        let levels = runtime::lit_scalar_f32(255.0);
+        let key = runtime::lit_key(1)?;
+        let mut inputs = vec![&images, &levels];
+        if s != "A" {
+            inputs.push(&key);
+        }
+        bench(&format!("cnn_strat{s} execute (batch 128)"), 1, 3, || {
+            let _ = exe.run_refs(&inputs).expect("execute failed");
+        });
+    }
+    Ok(())
+}

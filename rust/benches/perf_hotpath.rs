@@ -1,0 +1,83 @@
+//! Bench: the §Perf hot paths — the numbers EXPERIMENTS.md §Perf tracks
+//! before/after each optimization iteration.
+//!
+//! L3 hot paths: simulator sweep, mapping allocator, behavioural
+//! strategy models, NNS+A/NNADC native forwards, coordinator round-trip.
+//! PJRT path: executable compile + execute latency per artifact.
+
+mod bench_util;
+
+use bench_util::{bench, try_or_skip};
+use neural_pim::arch::crossbar::Group;
+use neural_pim::config::AcceleratorConfig;
+use neural_pim::coordinator::{Coordinator, CoordinatorConfig};
+use neural_pim::runtime::{self, Runtime};
+use neural_pim::util::rng::Pcg;
+use neural_pim::{mapping, sim, workloads};
+
+fn main() -> anyhow::Result<()> {
+    println!("### §Perf hot paths\n");
+
+    // L3: simulator
+    let nets = workloads::all_benchmarks();
+    bench("simulate all 9 benchmarks x 3 archs (iso-area)", 1, 10, || {
+        let _ = sim::run_system_comparison(&nets);
+    });
+    let vgg = workloads::vgg16();
+    let cfg = AcceleratorConfig::neural_pim();
+    bench("map_network(VGG-16)", 2, 20, || {
+        let _ = mapping::map_network(&vgg, &cfg);
+    });
+
+    // L3: behavioural dataflow models (the MC inner loop)
+    let mut rng = Pcg::new(1);
+    let w: Vec<i32> = (0..128).map(|_| rng.below(255) as i32 - 127).collect();
+    let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+    let g = Group { w };
+    bench("strategy_a dot (native, pd=1)", 5, 200, || {
+        std::hint::black_box(g.strategy_a(&x, 1, 255.0, 128));
+    });
+    bench("strategy_c dot (native, pd=4)", 5, 200, || {
+        std::hint::black_box(g.strategy_c(&x, 4, 255.0, 4.15e6));
+    });
+
+    // PJRT: compile + execute
+    let Some(rt) = try_or_skip("runtime", Runtime::new(&neural_pim::artifact_dir()))
+    else {
+        return Ok(());
+    };
+    let exe = rt.load("cnn_ideal")?;
+    println!("[compile] cnn_ideal: {:.2}s", exe.compile_seconds);
+    let ts = runtime::TestSet::load(rt.dir())?;
+    let images = ts.batch_literal(0, 128)?;
+    bench("cnn_ideal execute (batch 128)", 2, 20, || {
+        let _ = exe.run_refs(&[&images]).unwrap();
+    });
+
+    // coordinator round-trip (queue + batch + execute + demux)
+    let (h, w_, c) = ts.dims;
+    let coord = Coordinator::start(
+        CoordinatorConfig { artifact_dir: neural_pim::artifact_dir(),
+                            max_wait: std::time::Duration::from_millis(1),
+                            ..Default::default() },
+        h * w_ * c,
+    )?;
+    let stride = h * w_ * c;
+    bench("coordinator round-trip (128 requests)", 1, 10, || {
+        let mut pending = Vec::new();
+        for i in 0..128 {
+            let idx = i % ts.n;
+            pending.push(
+                coord
+                    .submit(ts.images[idx * stride..(idx + 1) * stride].to_vec())
+                    .unwrap(),
+            );
+        }
+        for rx in pending {
+            let _ = rx.recv().unwrap();
+        }
+    });
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Bench: Table 1 — the trained NeuralPeriph circuits, measured natively
+//! (Rust forward) and through the PJRT artifacts, plus conversion-rate
+//! microbenchmarks.
+
+mod bench_util;
+
+use bench_util::{bench, try_or_skip};
+use neural_pim::periph::{self, Periph};
+use neural_pim::runtime::{self, Runtime};
+use neural_pim::util::rng::Pcg;
+use neural_pim::util::stats;
+use neural_pim::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("### Table 1 — NeuralPeriph circuits\n");
+    let dir = neural_pim::artifact_dir();
+    let Some(p) = try_or_skip("periph.json",
+                              Periph::load(&format!("{dir}/periph.json")))
+    else {
+        return Ok(());
+    };
+
+    let (mse, emax, emin) = p.nns_a_error_stats(16384, 42);
+    let tr = p.nnadc.transfer(1 << 13);
+    let (dnl, inl, missing) = periph::dnl_inl(&tr, 8);
+    let (enob, sinad) = periph::enob(&p.nnadc, 1 << 13);
+    let tr_nv = p.nnadc_naive.transfer(1 << 13);
+    let (dnl_nv, inl_nv, _) = periph::dnl_inl(&tr_nv, 8);
+
+    let mut t = Table::new(
+        "Table 1 (measured vs paper)",
+        &["metric", "measured", "paper"],
+    );
+    t.row(&["NNS+A MSE (V²)".into(), format!("{mse:.2e}"), "< 1e-5".into()]);
+    t.row(&["NNS+A max err (mV)".into(), format!("{:.1}", emax * 1e3),
+            "4-5".into()]);
+    t.row(&["NNS+A min err (mV)".into(), format!("{:.1}", emin * 1e3),
+            "-3..-4".into()]);
+    t.row(&["NNADC DNL (LSB)".into(),
+            format!("{:.2}/{:.2}", stats::min(&dnl), stats::max(&dnl)),
+            "-0.25/0.55".into()]);
+    t.row(&["NNADC INL (LSB)".into(),
+            format!("{:.2}/{:.2}", stats::min(&inl), stats::max(&inl)),
+            "-0.56/0.62".into()]);
+    t.row(&["NNADC missing codes".into(), missing.to_string(), "0".into()]);
+    t.row(&["NNADC ENOB (bits)".into(), format!("{enob:.2}"), "7.88".into()]);
+    t.row(&["NNADC SINAD (dB)".into(), format!("{sinad:.1}"), "~49".into()]);
+    t.row(&["naive NNADC DNL".into(),
+            format!("{:.2}/{:.2}", stats::min(&dnl_nv), stats::max(&dnl_nv)),
+            "(ablation)".into()]);
+    t.row(&["naive NNADC INL".into(),
+            format!("{:.2}/{:.2}", stats::min(&inl_nv), stats::max(&inl_nv)),
+            "(ablation)".into()]);
+    t.print();
+
+    // native forward microbenchmarks (the simulator's hot inner loops)
+    let mut rng = Pcg::new(0);
+    let mut vin = [0.0f64; 9];
+    bench("NNS+A native forward x1024", 3, 50, || {
+        let mut acc = 0.0;
+        for _ in 0..1024 {
+            for v in vin.iter_mut() {
+                *v = rng.range(-0.25, 0.25);
+            }
+            acc += p.nns_a.forward(&vin, 0.6);
+        }
+        std::hint::black_box(acc);
+    });
+    bench("NNADC native convert x1024", 3, 50, || {
+        let mut acc = 0u32;
+        for i in 0..1024 {
+            acc = acc.wrapping_add(p.nnadc.convert(i as f64 / 1024.0));
+        }
+        std::hint::black_box(acc);
+    });
+
+    // PJRT artifact path
+    if let Some(rt) = try_or_skip("runtime", Runtime::new(&dir)) {
+        let exe = rt.load("nns_a")?;
+        let v: Vec<f32> = (0..1024 * 9).map(|i| (i % 97) as f32 * 0.002).collect();
+        let lit = runtime::lit_f32(&v, &[1024, 9])?;
+        bench("NNS+A PJRT execute (batch 1024)", 2, 20, || {
+            let _ = exe.run_refs(&[&lit]).unwrap();
+        });
+        // cross-check PJRT vs native on the first row
+        let out = exe.run_refs(&[&lit])?;
+        let got = runtime::to_f32_vec(&out[0])?[0] as f64;
+        let mut row = [0.0f64; 9];
+        for (k, r) in row.iter_mut().enumerate() {
+            *r = v[k] as f64;
+        }
+        let want = p.nns_a.forward(&row, 0.6);
+        println!("[check] PJRT vs native NNS+A: {got:.6} vs {want:.6} \
+                  (diff {:.2e})", (got - want).abs());
+        assert!((got - want).abs() < 1e-4);
+
+        let adc_exe = rt.load("nnadc")?;
+        let v: Vec<f32> = (0..1024).map(|i| i as f32 / 1023.0).collect();
+        let lit = runtime::lit_f32(&v, &[1024])?;
+        bench("NNADC PJRT execute (batch 1024)", 2, 20, || {
+            let _ = adc_exe.run_refs(&[&lit]).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Bench: Table 2 (Neural-PIM tile parameters) and Table 3 (PE-level
+//! architecture comparison incl. density).
+
+mod bench_util;
+
+use bench_util::bench;
+use neural_pim::report;
+
+fn main() {
+    println!("### Table 2 / Table 3 — area & power budgets\n");
+    report::table2().print();
+    report::table3().print();
+
+    bench("tile+chip budget assembly (all 3 architectures)", 3, 100, || {
+        let _ = report::table2();
+        let _ = report::table3();
+    });
+}

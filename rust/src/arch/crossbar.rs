@@ -1,0 +1,173 @@
+//! Bit-exact behavioural crossbar model: the Rust golden reference for
+//! the Strategy-C dataflow (mirrors kernels/ref.py) and the native
+//! implementation of the three accumulation strategies at the
+//! dot-product level. Integration tests compare the PJRT-executed HLO
+//! artifacts against this.
+
+use super::{bit_slices, quantize_signed, quantize_uniform, sa_unrolled_scale};
+
+/// One dot-product group: a signed 8-bit weight vector down <=128 rows.
+#[derive(Debug, Clone)]
+pub struct Group {
+    /// signed weights, length = rows
+    pub w: Vec<i32>,
+}
+
+impl Group {
+    /// Exact integer dot product.
+    pub fn dot(&self, x: &[u32]) -> i64 {
+        assert_eq!(x.len(), self.w.len());
+        x.iter()
+            .zip(&self.w)
+            .map(|(xi, wi)| *xi as i64 * *wi as i64)
+            .sum()
+    }
+
+    /// Per-(cycle, plane) differential partial sums, LSB-first.
+    /// Returns `slices x 8` integers.
+    pub fn partial_sums(&self, x: &[u32], pd: u32) -> Vec<[i64; 8]> {
+        let slices: Vec<Vec<u32>> =
+            x.iter().map(|&xi| bit_slices(xi, 8, pd)).collect();
+        let n_slices = 8u32.div_ceil(pd) as usize;
+        let mut out = vec![[0i64; 8]; n_slices];
+        for (row, wi) in self.w.iter().enumerate() {
+            let (wp, wn) = (wi.max(&0).unsigned_abs(), (-wi).max(0) as u32);
+            for s in 0..n_slices {
+                let xs = slices[row][s] as i64;
+                for (j, o) in out[s].iter_mut().enumerate() {
+                    let bit_p = ((wp >> j) & 1) as i64;
+                    let bit_n = ((wn >> j) & 1) as i64;
+                    *o += xs * (bit_p - bit_n);
+                }
+            }
+        }
+        out
+    }
+
+    /// Strategy A: quantize every per-(cycle, BL) partial sum at
+    /// `adc_levels`, digitally shift-and-add. Full scale is the array
+    /// maximum (Eq. 2's premise). Mirrors model.strategy_a_matmul.
+    pub fn strategy_a(&self, x: &[u32], pd: u32, adc_levels: f64,
+                      array_rows: u32) -> f64 {
+        let fs = array_rows as f64 * (2f64.powi(pd as i32) - 1.0);
+        let slices: Vec<Vec<u32>> =
+            x.iter().map(|&xi| bit_slices(xi, 8, pd)).collect();
+        let n_slices = 8u32.div_ceil(pd) as usize;
+        let mut total = 0.0;
+        for s in 0..n_slices {
+            for j in 0..8 {
+                let mut pp = 0.0;
+                let mut pn = 0.0;
+                for (row, wi) in self.w.iter().enumerate() {
+                    let xs = slices[row][s] as f64;
+                    let wp = wi.max(&0).unsigned_abs();
+                    let wn = (-wi).max(0) as u32;
+                    pp += xs * ((wp >> j) & 1) as f64;
+                    pn += xs * ((wn >> j) & 1) as f64;
+                }
+                let qp = quantize_uniform(pp, adc_levels, fs);
+                let qn = quantize_uniform(pn, adc_levels, fs);
+                total += 2f64.powi((pd as usize * s + j) as i32) * (qp - qn);
+            }
+        }
+        total.round()
+    }
+
+    /// Strategy C (ideal): analog accumulation then one signed range-aware
+    /// conversion over [-d_max, d_max]. Mirrors model.strategy_c_matmul
+    /// without the lumped noise.
+    pub fn strategy_c(&self, x: &[u32], pd: u32, adc_levels: f64,
+                      d_max: f64) -> f64 {
+        let partial = self.partial_sums(x, pd);
+        let n_slices = partial.len() as u32;
+        let alpha = super::sa_alpha(pd);
+        let mut acc = 0.0;
+        for p in &partial {
+            let s: f64 = p
+                .iter()
+                .enumerate()
+                .map(|(j, v)| 2f64.powi(j as i32) * *v as f64)
+                .sum();
+            acc = 2f64.powi(-(pd as i32)) * acc + s / alpha;
+        }
+        let d = acc * sa_unrolled_scale(n_slices, pd);
+        quantize_signed(d, adc_levels, d_max).round()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn rand_group(g: &mut crate::util::prop::Gen, rows: usize) -> (Group, Vec<u32>) {
+        let w: Vec<i32> = (0..rows)
+            .map(|_| g.rng().below(255) as i32 - 127)
+            .collect();
+        let x: Vec<u32> = (0..rows).map(|_| g.rng().below(256) as u32).collect();
+        (Group { w }, x)
+    }
+
+    #[test]
+    fn partial_sums_reassemble_to_dot() {
+        prop::check("partials radix-reassemble to the dot product", 100, |g| {
+            let rows = g.usize_in(1, 128);
+            let pd = *g.pick(&[1u32, 2, 4, 8]);
+            let (grp, x) = rand_group(g, rows);
+            let d = grp.dot(&x);
+            let partial = grp.partial_sums(&x, pd);
+            let mut back = 0i64;
+            for (s, p) in partial.iter().enumerate() {
+                for (j, v) in p.iter().enumerate() {
+                    back += (1i64 << (pd as usize * s + j)) * v;
+                }
+            }
+            crate::prop_assert!(back == d, "{} != {}", back, d);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strategy_c_exact_at_full_resolution() {
+        prop::check("strategy C with generous ADC is exact", 60, |g| {
+            let rows = g.usize_in(1, 128);
+            let pd = *g.pick(&[1u32, 2, 4]);
+            let (grp, x) = rand_group(g, rows);
+            let d = grp.dot(&x) as f64;
+            // 20-bit converter: quantization error < 0.5 in D units
+            let d_max = 128.0 * 255.0 * 127.0;
+            let got = grp.strategy_c(&x, pd, (1u64 << 22) as f64 - 1.0, d_max);
+            crate::prop_assert!(
+                (got - d).abs() <= (d.abs() * 1e-5).max(8.0),
+                "{} vs {}", got, d
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strategy_a_exact_at_eq2_resolution() {
+        // Eq. 2: at full BL resolution, per-conversion quantization is
+        // lossless, so strategy A reproduces the exact dot product
+        prop::check("strategy A at Eq.2 bound is exact", 60, |g| {
+            let rows = g.usize_in(1, 128);
+            let pd = *g.pick(&[1u32, 2]);
+            let (grp, x) = rand_group(g, rows);
+            let d = grp.dot(&x) as f64;
+            let fs_levels = 128.0 * (2f64.powi(pd as i32) - 1.0);
+            let got = grp.strategy_a(&x, pd, fs_levels, 128);
+            crate::prop_assert!((got - d).abs() < 0.5, "{} vs {}", got, d);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strategy_a_degrades_at_low_resolution() {
+        let mut g = crate::util::prop::Gen::new(5);
+        let (grp, x) = rand_group(&mut g, 128);
+        let d = grp.dot(&x) as f64;
+        let err_hi = (grp.strategy_a(&x, 1, 255.0, 128) - d).abs();
+        let err_lo = (grp.strategy_a(&x, 1, 15.0, 128) - d).abs();
+        assert!(err_lo > err_hi, "lo {err_lo} hi {err_hi}");
+    }
+}

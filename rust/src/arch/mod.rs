@@ -1,0 +1,145 @@
+//! Behavioural circuit component models.
+//!
+//! These are the Rust twins of the Python voltage-domain models: bit-exact
+//! integer crossbar VMM, bit slicing, DAC/ADC behaviour, the NNS+A
+//! recursion and the S/H loop. The simulator uses the *counting* models in
+//! `energy/`; these behavioural models back the Rust-side unit tests,
+//! property tests and the native (non-PJRT) golden reference the
+//! integration tests compare PJRT outputs against.
+
+pub mod crossbar;
+pub mod noc;
+
+use crate::util::rng::Pcg;
+
+/// Voltage rail and analog range (matching python/compile/common.py).
+pub const VDD: f64 = 1.2;
+pub const V_RANGE: f64 = 0.5;
+
+/// Split an unsigned value into LSB-first bit-slices of `pd` bits.
+pub fn bit_slices(x: u32, pi: u32, pd: u32) -> Vec<u32> {
+    let n = pi.div_ceil(pd);
+    (0..n).map(|i| (x >> (pd * i)) & ((1 << pd) - 1)).collect()
+}
+
+/// Ideal uniform quantizer over [0, full_scale] with `levels` steps,
+/// returning the dequantized value.
+pub fn quantize_uniform(v: f64, levels: f64, full_scale: f64) -> f64 {
+    let v = v.clamp(0.0, full_scale);
+    (v / full_scale * levels).round() / levels * full_scale
+}
+
+/// Signed uniform quantizer over [-fs, fs].
+pub fn quantize_signed(v: f64, levels: f64, fs: f64) -> f64 {
+    let v = v.clamp(-fs, fs);
+    (v / fs * levels).round() / levels * fs
+}
+
+/// The NNS+A cyclic recursion constants (see common.py's derivation):
+/// alpha = 2^pd (2^8 - 1) / (2^pd - 1).
+pub fn sa_alpha(pd: u32) -> f64 {
+    2f64.powi(pd as i32) * 255.0 / (2f64.powi(pd as i32) - 1.0)
+}
+
+/// K such that the final accumulator equals D / K.
+pub fn sa_unrolled_scale(n_slices: u32, pd: u32) -> f64 {
+    sa_alpha(pd) * 2f64.powi((pd * (n_slices - 1)) as i32)
+}
+
+/// An ideal DAC: code -> voltage in [0, V_RANGE].
+#[derive(Debug, Clone, Copy)]
+pub struct Dac {
+    pub bits: u32,
+}
+
+impl Dac {
+    pub fn convert(&self, code: u32) -> f64 {
+        let max = (1u32 << self.bits) - 1;
+        code.min(max) as f64 / max as f64 * V_RANGE
+    }
+}
+
+/// A behavioural SAR ADC with optional input-referred noise.
+#[derive(Debug, Clone, Copy)]
+pub struct Adc {
+    pub bits: u32,
+    pub full_scale: f64,
+    pub noise_sigma: f64,
+}
+
+impl Adc {
+    pub fn convert(&self, v: f64, rng: &mut Pcg) -> u32 {
+        let v = v + self.noise_sigma * rng.normal();
+        let levels = (1u64 << self.bits) as f64 - 1.0;
+        (v.clamp(0.0, self.full_scale) / self.full_scale * levels).round()
+            as u32
+    }
+}
+
+/// Sample-and-hold with incomplete charge transfer + thermal noise
+/// (§5.3.1's non-idealities).
+#[derive(Debug, Clone, Copy)]
+pub struct SampleHold {
+    /// fractional charge lost per transfer
+    pub loss: f64,
+    /// thermal noise, volts rms
+    pub sigma_v: f64,
+}
+
+impl SampleHold {
+    pub fn transfer(&self, v: f64, rng: &mut Pcg) -> f64 {
+        v * (1.0 - self.loss) + self.sigma_v * rng.normal()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_slices_reassemble() {
+        for pd in [1u32, 2, 4, 8] {
+            for x in [0u32, 1, 37, 200, 255] {
+                let s = bit_slices(x, 8, pd);
+                let back: u32 = s
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| v << (pd * i as u32))
+                    .sum();
+                assert_eq!(back, x, "pd={pd} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantizer_idempotent() {
+        let q = quantize_uniform(0.3337, 255.0, 1.0);
+        assert_eq!(quantize_uniform(q, 255.0, 1.0), q);
+    }
+
+    #[test]
+    fn sa_scale_matches_python() {
+        // spot values mirrored from the python tests
+        assert!((sa_alpha(4) - 272.0).abs() < 1e-9);
+        assert!((sa_alpha(1) - 510.0).abs() < 1e-9);
+        assert!((sa_unrolled_scale(2, 4) - 272.0 * 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adc_dac_round_trip() {
+        let dac = Dac { bits: 8 };
+        let adc = Adc { bits: 8, full_scale: V_RANGE, noise_sigma: 0.0 };
+        let mut rng = Pcg::new(0);
+        for code in [0u32, 1, 100, 254, 255] {
+            let v = dac.convert(code);
+            assert_eq!(adc.convert(v, &mut rng), code);
+        }
+    }
+
+    #[test]
+    fn sample_hold_loss() {
+        let sh = SampleHold { loss: 0.01, sigma_v: 0.0 };
+        let mut rng = Pcg::new(1);
+        assert!((sh.transfer(1.0, &mut rng) - 0.99).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,129 @@
+//! Concentrated-mesh NoC model (§5.2.4): routers shared by
+//! `concentration` adjacent tiles, XY routing, per-hop energy/latency.
+//!
+//! The simulator charges average-hop energy; this module provides the
+//! exact router grid, XY routes, and a contention-free latency model the
+//! property tests exercise (routing reachability / determinism), plus
+//! the per-flit energy used by `sim/`.
+
+use crate::energy::constants as k;
+
+#[derive(Debug, Clone)]
+pub struct CMesh {
+    pub tiles: u32,
+    pub concentration: u32,
+    /// routers per side of the (square-ish) mesh
+    pub side: u32,
+}
+
+impl CMesh {
+    pub fn new(tiles: u32, concentration: u32) -> CMesh {
+        let routers = tiles.div_ceil(concentration).max(1);
+        let side = (routers as f64).sqrt().ceil() as u32;
+        CMesh { tiles, concentration, side }
+    }
+
+    pub fn router_of(&self, tile: u32) -> (u32, u32) {
+        let r = tile / self.concentration;
+        (r % self.side, r / self.side)
+    }
+
+    /// Manhattan hop count of the XY route between two tiles.
+    pub fn hops(&self, from: u32, to: u32) -> u32 {
+        let (x0, y0) = self.router_of(from);
+        let (x1, y1) = self.router_of(to);
+        x0.abs_diff(x1) + y0.abs_diff(y1)
+    }
+
+    /// The XY route as a list of routers (inclusive of both endpoints).
+    pub fn route(&self, from: u32, to: u32) -> Vec<(u32, u32)> {
+        let (mut x, mut y) = self.router_of(from);
+        let (x1, y1) = self.router_of(to);
+        let mut path = vec![(x, y)];
+        while x != x1 {
+            x = if x < x1 { x + 1 } else { x - 1 };
+            path.push((x, y));
+        }
+        while y != y1 {
+            y = if y < y1 { y + 1 } else { y - 1 };
+            path.push((x, y));
+        }
+        path
+    }
+
+    /// Average hop count over uniform-random tile pairs (closed form for
+    /// a side-`s` mesh: 2 * (s^2 - 1) / (3 s) per dimension pair).
+    pub fn average_hops(&self) -> f64 {
+        let s = self.side as f64;
+        2.0 * (s * s - 1.0) / (3.0 * s)
+    }
+
+    /// Energy to move `bytes` across `hops` routers.
+    pub fn transfer_energy(&self, bytes: u64, hops: u32) -> f64 {
+        bytes as f64 * k::NOC_E_BYTE * (hops.max(1)) as f64
+    }
+
+    /// Contention-free transfer latency in ns (1 cycle/hop at 1 GHz +
+    /// serialization at 32 B/cycle).
+    pub fn transfer_latency_ns(&self, bytes: u64, hops: u32) -> f64 {
+        hops as f64 + bytes.div_ceil(32) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn routes_reach_destination() {
+        prop::check("xy route ends at the destination router", 100, |g| {
+            let tiles = g.usize_in(1, 512) as u32;
+            let conc = *g.pick(&[1u32, 2, 4, 8]);
+            let mesh = CMesh::new(tiles, conc);
+            let a = g.usize_in(0, tiles as usize - 1) as u32;
+            let b = g.usize_in(0, tiles as usize - 1) as u32;
+            let path = mesh.route(a, b);
+            crate::prop_assert!(*path.first().unwrap() == mesh.router_of(a),
+                                "bad start");
+            crate::prop_assert!(*path.last().unwrap() == mesh.router_of(b),
+                                "bad end");
+            crate::prop_assert!(
+                path.len() as u32 == mesh.hops(a, b) + 1,
+                "path len {} vs hops {}", path.len(), mesh.hops(a, b)
+            );
+            // adjacent routers differ by exactly one coordinate step
+            for w in path.windows(2) {
+                let d = w[0].0.abs_diff(w[1].0) + w[0].1.abs_diff(w[1].1);
+                crate::prop_assert!(d == 1, "non-adjacent step");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_symmetric_in_hops() {
+        prop::check("hops symmetric", 100, |g| {
+            let mesh = CMesh::new(280, 4);
+            let a = g.usize_in(0, 279) as u32;
+            let b = g.usize_in(0, 279) as u32;
+            crate::prop_assert!(mesh.hops(a, b) == mesh.hops(b, a), "asym");
+            crate::prop_assert!(mesh.route(a, b) == mesh.route(a, b), "nondet");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_router_zero_hops() {
+        let mesh = CMesh::new(280, 4);
+        assert_eq!(mesh.hops(0, 3), 0); // concentrated: 4 tiles share r0
+        assert!(mesh.hops(0, 4) >= 1);
+    }
+
+    #[test]
+    fn average_hops_reasonable() {
+        let mesh = CMesh::new(280, 4); // 70 routers -> side 9
+        let avg = mesh.average_hops();
+        assert!(avg > 2.0 && avg < 9.0, "avg {avg}");
+    }
+}

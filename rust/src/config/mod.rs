@@ -1,0 +1,322 @@
+//! Typed accelerator configuration.
+//!
+//! One [`AcceleratorConfig`] instance fully describes a chip: the §7.1
+//! design-space hyper-parameters (N, M, A, S, D), the precision settings
+//! of §3.2, and the physical organization (PEs/tile, tiles/chip). The DSE
+//! engine (`dse/`) sweeps these; the simulator (`sim/`) consumes them.
+//!
+//! Configs load from JSON (`--config file.json`) or from CLI overrides,
+//! and always pass [`AcceleratorConfig::validate`] before use.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Which accumulation strategy the chip implements (Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    /// Strategy A: per-conversion digital accumulation (ISAAC-style).
+    IsaacLike,
+    /// Strategy B: RRAM buffer arrays + shared ADCs (CASCADE-style).
+    CascadeLike,
+    /// Strategy C: fully-analog accumulation with NeuralPeriph circuits.
+    NeuralPim,
+}
+
+impl Architecture {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Architecture::IsaacLike => "ISAAC-like",
+            Architecture::CascadeLike => "CASCADE-like",
+            Architecture::NeuralPim => "Neural-PIM",
+        }
+    }
+
+    pub fn all() -> [Architecture; 3] {
+        [Architecture::IsaacLike, Architecture::CascadeLike,
+         Architecture::NeuralPim]
+    }
+
+    pub fn parse(s: &str) -> Result<Architecture> {
+        match s.to_ascii_lowercase().as_str() {
+            "isaac" | "isaac-like" | "a" => Ok(Architecture::IsaacLike),
+            "cascade" | "cascade-like" | "b" => Ok(Architecture::CascadeLike),
+            "neural-pim" | "neuralpim" | "pim" | "c" => Ok(Architecture::NeuralPim),
+            other => bail!("unknown architecture '{other}'"),
+        }
+    }
+}
+
+/// Precision configuration (§3.2 symbols).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precision {
+    pub p_i: u32, // input bits
+    pub p_w: u32, // weight bits
+    pub p_o: u32, // output bits
+    pub p_r: u32, // RRAM cell bits in VMM arrays
+    pub p_d: u32, // DAC resolution
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision { p_i: 8, p_w: 8, p_o: 8, p_r: 1, p_d: 1 }
+    }
+}
+
+impl Precision {
+    /// Input cycles per full-precision input: ceil(P_I / P_D) (Eq. 8).
+    pub fn input_cycles(&self) -> u32 {
+        self.p_i.div_ceil(self.p_d)
+    }
+
+    /// RRAM columns per unsigned weight: ceil(P_W / P_R).
+    pub fn weight_cols(&self) -> u32 {
+        self.p_w.div_ceil(self.p_r)
+    }
+}
+
+/// Full accelerator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorConfig {
+    pub arch: Architecture,
+    pub precision: Precision,
+    /// crossbar side (rows == cols == `xbar_size`); §7.1's N is log2 of this
+    pub xbar_size: u32,
+    /// crossbar arrays per PE (§7.1's M)
+    pub arrays_per_pe: u32,
+    /// ADCs (or NNADCs) shared by one PE (§7.1's A)
+    pub adcs_per_pe: u32,
+    /// NNS+A circuits per crossbar array (§7.1's S); ignored by baselines
+    pub sa_per_array: u32,
+    pub pes_per_tile: u32,
+    pub tiles: u32,
+    /// input cycle time, ns (paper: 100 ns, §5.2.4)
+    pub cycle_ns: f64,
+    /// eDRAM buffer per tile, bytes
+    pub edram_bytes: u64,
+    /// c-mesh concentration (tiles per router)
+    pub noc_concentration: u32,
+}
+
+impl AcceleratorConfig {
+    /// The paper's optimal Neural-PIM configuration (§7.1, Table 2):
+    /// 64 128x128 arrays/PE, 4 NNADCs, 64 NNS+As, 4-bit DACs, 280 tiles.
+    pub fn neural_pim() -> Self {
+        AcceleratorConfig {
+            arch: Architecture::NeuralPim,
+            precision: Precision { p_d: 4, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 4,
+            sa_per_array: 1,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    /// ISAAC-style baseline scaled to 8-bit inference (§6.1, Table 3):
+    /// one 8-bit ADC per array, 1-bit DACs, digital S+A.
+    pub fn isaac_like() -> Self {
+        AcceleratorConfig {
+            arch: Architecture::IsaacLike,
+            precision: Precision { p_d: 1, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 64,
+            sa_per_array: 0,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    /// CASCADE-style baseline (§6.1, Table 3): buffer arrays, TIAs,
+    /// 3 shared 10-bit ADCs per 64 arrays, 1-bit DACs.
+    pub fn cascade_like() -> Self {
+        AcceleratorConfig {
+            arch: Architecture::CascadeLike,
+            precision: Precision { p_d: 1, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 3,
+            sa_per_array: 0,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    pub fn for_arch(arch: Architecture) -> Self {
+        match arch {
+            Architecture::IsaacLike => Self::isaac_like(),
+            Architecture::CascadeLike => Self::cascade_like(),
+            Architecture::NeuralPim => Self::neural_pim(),
+        }
+    }
+
+    /// §3.2's N (log2 of crossbar side).
+    pub fn n_log2(&self) -> u32 {
+        self.xbar_size.trailing_zeros()
+    }
+
+    /// 8-bit signed weights per crossbar array (W+/W- pairs, §5.2.1).
+    pub fn weights_per_array(&self) -> u64 {
+        let cols_per_weight = 2 * self.precision.weight_cols() as u64;
+        (self.xbar_size as u64 / cols_per_weight) * self.xbar_size as u64
+    }
+
+    /// dot-product groups per array (columns / columns-per-weight).
+    pub fn groups_per_array(&self) -> u64 {
+        self.xbar_size as u64 / (2 * self.precision.weight_cols() as u64)
+    }
+
+    pub fn total_arrays(&self) -> u64 {
+        self.tiles as u64 * self.pes_per_tile as u64 * self.arrays_per_pe as u64
+    }
+
+    /// Peak MAC ops per second: every array row x group, both multiply and
+    /// add counted (the paper's GOPS convention), per full-input period.
+    pub fn peak_gops(&self) -> f64 {
+        let macs_per_array =
+            self.xbar_size as f64 * self.groups_per_array() as f64;
+        let input_period_s =
+            self.precision.input_cycles() as f64 * self.cycle_ns * 1e-9;
+        2.0 * macs_per_array * self.total_arrays() as f64 / input_period_s / 1e9
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.xbar_size.is_power_of_two() {
+            bail!("xbar_size must be a power of two (got {})", self.xbar_size);
+        }
+        if self.xbar_size < 32 || self.xbar_size > 512 {
+            bail!("xbar_size out of the fabricable range [32, 512] (§2.2)");
+        }
+        if self.precision.p_d == 0 || self.precision.p_d > self.precision.p_i {
+            bail!("DAC resolution must be in [1, P_I]");
+        }
+        if self.precision.p_r == 0 || self.precision.p_r > 6 {
+            bail!("RRAM cell precision must be in [1, 6] bits (§2.2)");
+        }
+        if self.xbar_size < 2 * self.precision.weight_cols() {
+            bail!("array narrower than one signed weight");
+        }
+        if self.arrays_per_pe == 0 || self.pes_per_tile == 0 || self.tiles == 0 {
+            bail!("counts must be positive");
+        }
+        if self.arch == Architecture::NeuralPim && self.sa_per_array == 0 {
+            bail!("Neural-PIM needs at least one NNS+A per array");
+        }
+        if self.adcs_per_pe == 0 {
+            bail!("need at least one ADC per PE");
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- JSON --
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let arch = Architecture::parse(
+            j.get("arch").and_then(Json::as_str).unwrap_or("neural-pim"))?;
+        let mut c = AcceleratorConfig::for_arch(arch);
+        let num = |key: &str, tgt: &mut u32| {
+            if let Some(v) = j.get(key).and_then(Json::as_f64) {
+                *tgt = v as u32;
+            }
+        };
+        num("xbar_size", &mut c.xbar_size);
+        num("arrays_per_pe", &mut c.arrays_per_pe);
+        num("adcs_per_pe", &mut c.adcs_per_pe);
+        num("sa_per_array", &mut c.sa_per_array);
+        num("pes_per_tile", &mut c.pes_per_tile);
+        num("tiles", &mut c.tiles);
+        num("dac_bits", &mut c.precision.p_d);
+        num("rram_bits", &mut c.precision.p_r);
+        if let Some(v) = j.get("cycle_ns").and_then(Json::as_f64) {
+            c.cycle_ns = v;
+        }
+        c.validate().context("invalid accelerator config")?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj(vec![
+            ("arch", Json::Str(self.arch.name().into())),
+            ("xbar_size", Json::Num(self.xbar_size as f64)),
+            ("arrays_per_pe", Json::Num(self.arrays_per_pe as f64)),
+            ("adcs_per_pe", Json::Num(self.adcs_per_pe as f64)),
+            ("sa_per_array", Json::Num(self.sa_per_array as f64)),
+            ("pes_per_tile", Json::Num(self.pes_per_tile as f64)),
+            ("tiles", Json::Num(self.tiles as f64)),
+            ("dac_bits", Json::Num(self.precision.p_d as f64)),
+            ("rram_bits", Json::Num(self.precision.p_r as f64)),
+            ("cycle_ns", Json::Num(self.cycle_ns)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        for arch in Architecture::all() {
+            AcceleratorConfig::for_arch(arch).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_table2_shape() {
+        let c = AcceleratorConfig::neural_pim();
+        assert_eq!(c.n_log2(), 7);
+        assert_eq!(c.precision.input_cycles(), 2); // 4-bit DAC, 8-bit input
+        assert_eq!(c.groups_per_array(), 8); // 128 / (2*8)
+        assert_eq!(c.weights_per_array(), 1024); // §5.2.1
+        assert_eq!(c.total_arrays(), 280 * 4 * 64);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = AcceleratorConfig::neural_pim();
+        c.xbar_size = 100;
+        assert!(c.validate().is_err());
+        let mut c = AcceleratorConfig::neural_pim();
+        c.precision.p_d = 0;
+        assert!(c.validate().is_err());
+        let mut c = AcceleratorConfig::neural_pim();
+        c.sa_per_array = 0;
+        assert!(c.validate().is_err());
+        let mut c = AcceleratorConfig::neural_pim();
+        c.xbar_size = 1024;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = AcceleratorConfig::cascade_like();
+        let j = c.to_json();
+        let c2 = AcceleratorConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn peak_gops_scales_with_dac_resolution() {
+        let np = AcceleratorConfig::neural_pim(); // 2 input cycles
+        let mut slow = np.clone();
+        slow.precision.p_d = 1; // 8 input cycles
+        assert!((np.peak_gops() / slow.peak_gops() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! Dynamic batcher: collect up to `max_batch` requests, waiting at most
+//! `max_wait` after the first arrival — the standard serving trade-off
+//! between batch efficiency and tail latency.
+
+use super::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+pub struct Batcher {
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy }
+    }
+
+    /// Collect one batch. Returns None when the channel is closed and
+    /// fully drained (shutdown).
+    pub fn collect(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return None,
+        };
+        let mut out = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while out.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => out.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            image: vec![0.0; 4],
+            respond: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batch_respects_capacity() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        let got = b.collect(&rx).unwrap();
+        assert_eq!(got.len(), 4);
+        // FIFO order preserved
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        assert_eq!(b.collect(&rx).unwrap().len(), 3);
+        assert!(b.collect(&rx).is_none());
+    }
+
+    #[test]
+    fn property_never_exceeds_capacity_and_fifo() {
+        prop::check("batcher capacity + FIFO", 50, |g| {
+            let cap = g.usize_in(1, 16);
+            let n = g.usize_in(1, 64);
+            let (tx, rx) = mpsc::channel();
+            for i in 0..n {
+                tx.send(req(i as u64)).unwrap();
+            }
+            drop(tx);
+            let b = Batcher::new(BatchPolicy {
+                max_batch: cap,
+                max_wait: Duration::from_millis(0),
+            });
+            let mut seen = Vec::new();
+            while let Some(batch) = b.collect(&rx) {
+                crate::prop_assert!(batch.len() <= cap, "over capacity");
+                crate::prop_assert!(!batch.is_empty(), "empty batch");
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            crate::prop_assert!(
+                seen == (0..n as u64).collect::<Vec<_>>(),
+                "lost or reordered requests: {:?}", seen
+            );
+            Ok(())
+        });
+    }
+}

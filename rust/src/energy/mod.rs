@@ -1,0 +1,355 @@
+//! Area / power budgeting per PE, tile, and chip (Tables 2 and 3).
+//!
+//! The budget is assembled bottom-up from `constants.rs`, per
+//! architecture: each [`ComponentBudget`] row lists a component, its
+//! count, per-unit power (at full activity) and area. The same rows feed
+//! Table 2 (Neural-PIM tile parameters), Table 3 (PE-level comparison +
+//! density), and the iso-area normalization of the Fig. 12 system
+//! comparison.
+
+pub mod constants;
+
+use crate::config::{AcceleratorConfig, Architecture};
+use constants as k;
+
+#[derive(Debug, Clone)]
+pub struct ComponentBudget {
+    pub name: &'static str,
+    pub count: u64,
+    /// W per unit at full activity
+    pub unit_power: f64,
+    /// mm² per unit
+    pub unit_area: f64,
+}
+
+impl ComponentBudget {
+    pub fn power(&self) -> f64 {
+        self.count as f64 * self.unit_power
+    }
+
+    pub fn area(&self) -> f64 {
+        self.count as f64 * self.unit_area
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PeBudget {
+    pub arch: Architecture,
+    pub components: Vec<ComponentBudget>,
+}
+
+impl PeBudget {
+    pub fn power(&self) -> f64 {
+        self.components.iter().map(|c| c.power()).sum()
+    }
+
+    pub fn area(&self) -> f64 {
+        self.components.iter().map(|c| c.area()).sum()
+    }
+
+    /// Table 3's density proxy: VMM-array area / total PE area.
+    pub fn compute_density(&self) -> f64 {
+        let xbar: f64 = self
+            .components
+            .iter()
+            .filter(|c| c.name == "crossbar")
+            .map(|c| c.area())
+            .sum();
+        xbar / self.area()
+    }
+
+    /// RRAM cells per mm² (the parenthesized Table 3 metric).
+    pub fn cells_per_mm2(&self, cfg: &AcceleratorConfig) -> f64 {
+        let cells = cfg.arrays_per_pe as f64
+            * (cfg.xbar_size as f64) * (cfg.xbar_size as f64);
+        cells / self.area()
+    }
+}
+
+/// Build the PE-level budget for a configuration.
+pub fn pe_budget(cfg: &AcceleratorConfig) -> PeBudget {
+    let p = &cfg.precision;
+    let cyc = cycle_seconds(cfg);
+    let m = cfg.arrays_per_pe as u64;
+    let size = cfg.xbar_size;
+    let wl = size as u64; // wordlines per array
+    let mut comps = Vec::new();
+
+    // crossbars + their WL DACs are common to all three architectures
+    comps.push(ComponentBudget {
+        name: "crossbar",
+        count: m,
+        unit_power: k::xbar_e_cycle(size, p.p_d) / cyc,
+        unit_area: k::xbar_area(size),
+    });
+    comps.push(ComponentBudget {
+        name: "dac",
+        count: m * wl,
+        unit_power: k::dac_e_cycle(p.p_d) / cyc,
+        unit_area: k::dac_area(p.p_d),
+    });
+
+    match cfg.arch {
+        Architecture::IsaacLike => {
+            let adc_bits = crate::dataflow::adc_resolution_a(p, cfg.n_log2());
+            comps.push(ComponentBudget {
+                name: "adc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::adc_e_conv(adc_bits) * (size as f64) / cyc,
+                unit_area: k::adc_area(adc_bits),
+            });
+            comps.push(ComponentBudget {
+                name: "s+a",
+                count: m,
+                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc,
+                unit_area: k::SA_DIGITAL_AREA,
+            });
+            comps.push(ComponentBudget {
+                name: "ir",
+                count: 1,
+                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
+                unit_area: k::IR_AREA * m as f64 / 8.0,
+            });
+        }
+        Architecture::CascadeLike => {
+            let adc_bits = crate::dataflow::adc_resolution_b(p, cfg.n_log2());
+            comps.push(ComponentBudget {
+                name: "adc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::adc_e_conv(adc_bits) * (size as f64) / cyc,
+                unit_area: k::adc_area(adc_bits),
+            });
+            comps.push(ComponentBudget {
+                name: "buffer-array",
+                count: m * k::BUFFER_ARRAYS_PER_XBAR as u64,
+                unit_power: k::BUFFER_WRITE_E * (size as f64) / cyc / 4.0,
+                unit_area: k::xbar_area(size),
+            });
+            comps.push(ComponentBudget {
+                name: "tia",
+                count: m,
+                unit_power: k::TIA_E_CYCLE / cyc,
+                unit_area: k::TIA_AREA,
+            });
+            comps.push(ComponentBudget {
+                name: "sum-amp",
+                count: m * k::BUFFER_ARRAYS_PER_XBAR as u64,
+                unit_power: k::SUMAMP_E_CYCLE / cyc,
+                unit_area: k::SUMAMP_AREA,
+            });
+            comps.push(ComponentBudget {
+                name: "s+a",
+                count: m,
+                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc / 8.0,
+                unit_area: k::SA_DIGITAL_AREA,
+            });
+            comps.push(ComponentBudget {
+                name: "ir",
+                count: 1,
+                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
+                unit_area: k::IR_AREA * m as f64 / 8.0,
+            });
+        }
+        Architecture::NeuralPim => {
+            comps.push(ComponentBudget {
+                name: "nnadc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::NNADC_E_CONV * 1.2e9 / 8.0, // [T2] duty cycle
+                unit_area: k::NNADC_AREA,
+            });
+            let sa_count = (m * cfg.sa_per_array as u64).max(1);
+            comps.push(ComponentBudget {
+                name: "nns+a",
+                count: sa_count,
+                unit_power: k::NNSA_E_OP * 80e6, // 80 MHz [T2]
+                unit_area: k::NNSA_AREA,
+            });
+            comps.push(ComponentBudget {
+                name: "s/h",
+                count: sa_count * 144 / 64, // [T2]: 144 S/H per 64 NNS+A
+                unit_power: k::SH_E_OP * 80e6,
+                unit_area: k::SH_AREA,
+            });
+            comps.push(ComponentBudget {
+                name: "ir",
+                count: 1,
+                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
+                unit_area: k::NP_IR_AREA * (m as f64 / 64.0),
+            });
+        }
+    }
+    PeBudget { arch: cfg.arch, components: comps }
+}
+
+/// Tile = PEs + eDRAM + post-processing + control.
+#[derive(Debug, Clone)]
+pub struct TileBudget {
+    pub pe: PeBudget,
+    pub pes: u32,
+    pub extra: Vec<ComponentBudget>,
+}
+
+impl TileBudget {
+    pub fn power(&self) -> f64 {
+        self.pe.power() * self.pes as f64
+            + self.extra.iter().map(|c| c.power()).sum::<f64>()
+    }
+
+    pub fn area(&self) -> f64 {
+        self.pe.area() * self.pes as f64
+            + self.extra.iter().map(|c| c.area()).sum::<f64>()
+    }
+}
+
+pub fn tile_budget(cfg: &AcceleratorConfig) -> TileBudget {
+    let cyc = cycle_seconds(cfg);
+    let extra = vec![
+        ComponentBudget {
+            name: "edram",
+            count: 1,
+            unit_power: k::EDRAM_E_BYTE
+                * (cfg.xbar_size as u64 * cfg.arrays_per_pe as u64
+                    * cfg.pes_per_tile as u64) as f64
+                / cyc
+                / 8.0,
+            unit_area: k::EDRAM_AREA_64KB
+                * (cfg.edram_bytes as f64 / (64.0 * 1024.0)),
+        },
+        ComponentBudget {
+            name: "post-proc",
+            count: 1,
+            unit_power: k::ACT_E_OP
+                * (cfg.arrays_per_pe * cfg.pes_per_tile) as f64
+                / cyc
+                / 8.0,
+            unit_area: k::ACT_AREA * cfg.pes_per_tile as f64,
+        },
+        ComponentBudget {
+            name: "control",
+            count: 1,
+            unit_power: k::TILE_CTRL_POWER,
+            unit_area: k::TILE_CTRL_AREA,
+        },
+        ComponentBudget {
+            name: "router(1/4)",
+            count: 1,
+            unit_power: k::NOC_E_BYTE * 3.2e9 / cfg.noc_concentration as f64
+                / 8.0,
+            unit_area: k::ROUTER_AREA / cfg.noc_concentration as f64,
+        },
+    ];
+    TileBudget { pe: pe_budget(cfg), pes: cfg.pes_per_tile, extra }
+}
+
+/// Whole chip: tiles + HyperTransport (Table 2's bottom rows).
+#[derive(Debug, Clone)]
+pub struct ChipBudget {
+    pub tile: TileBudget,
+    pub tiles: u32,
+}
+
+impl ChipBudget {
+    pub fn power(&self) -> f64 {
+        self.tile.power() * self.tiles as f64 + k::HT_POWER
+    }
+
+    pub fn area(&self) -> f64 {
+        self.tile.area() * self.tiles as f64 + k::HT_AREA
+    }
+}
+
+pub fn chip_budget(cfg: &AcceleratorConfig) -> ChipBudget {
+    ChipBudget { tile: tile_budget(cfg), tiles: cfg.tiles }
+}
+
+/// Architecture-specific input-cycle time in seconds (see constants.rs).
+pub fn cycle_seconds(cfg: &AcceleratorConfig) -> f64 {
+    let ns = match cfg.arch {
+        Architecture::IsaacLike => k::ISAAC_CYCLE_NS,
+        Architecture::CascadeLike => k::CASCADE_CYCLE_NS,
+        Architecture::NeuralPim => k::NEURAL_PIM_CYCLE_NS,
+    };
+    ns * 1e-9
+}
+
+/// Iso-area tile count: scale an architecture's tile count so its chip
+/// area matches the reference chip area (the Fig. 12 fairness rule:
+/// "all three architectures have the same area").
+pub fn iso_area_tiles(cfg: &AcceleratorConfig, target_area: f64) -> u32 {
+    let tile_area = tile_budget(cfg).area();
+    (((target_area - k::HT_AREA) / tile_area).floor() as u32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neural_pim_pe_budget_matches_table2_scale() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let pe = pe_budget(&cfg);
+        // Table 2: 1 PE ~ 0.18 W, 0.084 mm² (the paper's own component rows
+        // sum to 0.26 W; we accept [0.1, 0.4] W and [0.05, 0.2] mm²)
+        let p = pe.power();
+        let a = pe.area();
+        assert!(p > 0.05 && p < 0.4, "PE power {p}");
+        assert!(a > 0.05 && a < 0.2, "PE area {a}");
+    }
+
+    #[test]
+    fn isaac_pe_is_adc_dominated() {
+        let cfg = AcceleratorConfig::isaac_like();
+        let pe = pe_budget(&cfg);
+        let adc_area: f64 = pe.components.iter()
+            .filter(|c| c.name == "adc").map(|c| c.area()).sum();
+        // 64 8-bit ADCs dwarf everything else in ISAAC's PE (§1: 98% of a
+        // scientific accelerator's area; here a large majority of PE area)
+        assert!(adc_area / pe.area() > 0.4, "{}", adc_area / pe.area());
+    }
+
+    #[test]
+    fn density_ordering() {
+        // ISAAC's per-array ADCs must make it the least dense (Table 3's
+        // qualitative point); our component-level area model exaggerates
+        // CASCADE's buffer-array overhead relative to the paper's layout
+        // numbers, so we assert ISAAC-lowest plus a same-order band (see
+        // EXPERIMENTS.md Table 3 notes).
+        let d_isaac = {
+            let c = AcceleratorConfig::isaac_like();
+            pe_budget(&c).cells_per_mm2(&c)
+        };
+        let d_cascade = {
+            let c = AcceleratorConfig::cascade_like();
+            pe_budget(&c).cells_per_mm2(&c)
+        };
+        let d_np = {
+            let c = AcceleratorConfig::neural_pim();
+            pe_budget(&c).cells_per_mm2(&c)
+        };
+        assert!(d_np > d_isaac, "np {d_np} isaac {d_isaac}");
+        assert!(d_cascade > d_isaac, "cascade {d_cascade} isaac {d_isaac}");
+        assert!(d_cascade / d_np < 10.0 && d_np / d_cascade < 10.0);
+    }
+
+    #[test]
+    fn chip_budget_total_scale() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let chip = chip_budget(&cfg);
+        // Table 2 reports 67.7 W / 86.4 mm² — but its own component rows
+        // sum to ~0.26 W/PE (= 290 W/chip), so the paper's total is not
+        // self-consistent. Our bottom-up sum must land between the two.
+        assert!(chip.power() > 30.0 && chip.power() < 320.0,
+                "chip power {}", chip.power());
+        assert!(chip.area() > 40.0 && chip.area() < 240.0,
+                "chip area {}", chip.area());
+    }
+
+    #[test]
+    fn iso_area_roundtrip() {
+        let np = AcceleratorConfig::neural_pim();
+        let area = chip_budget(&np).area();
+        let tiles = iso_area_tiles(&np, area);
+        assert!((tiles as i64 - np.tiles as i64).abs() <= 1,
+                "tiles {tiles} vs {}", np.tiles);
+    }
+}

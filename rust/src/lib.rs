@@ -1,0 +1,51 @@
+//! # neural-pim
+//!
+//! Full-system reproduction of *Neural-PIM: Efficient Processing-In-Memory
+//! with Neural Approximation of Peripherals* (IEEE TC 2022).
+//!
+//! Three layers:
+//! - **L1** (build-time Python/Pallas): bit-sliced crossbar VMM, NNS+A and
+//!   NNADC kernels — `python/compile/kernels/`.
+//! - **L2** (build-time Python/JAX): quantized CNN under the three
+//!   accumulation dataflows + NeuralPeriph training — lowered by
+//!   `python/compile/aot.py` into `artifacts/*.hlo.txt`.
+//! - **L3** (this crate): the architecture simulator, the §3 analytical
+//!   framework, the DSE engine, the PJRT runtime that executes the AOT
+//!   artifacts, and the inference coordinator. Python never runs at
+//!   request time.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod energy;
+pub mod mapping;
+pub mod noise;
+pub mod periph;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifact directory: `$NEURAL_PIM_ARTIFACTS` or `artifacts/`
+/// relative to the crate root (falls back to CWD).
+pub fn artifact_dir() -> String {
+    if let Ok(d) = std::env::var("NEURAL_PIM_ARTIFACTS") {
+        return d;
+    }
+    let manifest = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(manifest).join("manifest.json").exists() {
+        return manifest.to_string();
+    }
+    "artifacts".to_string()
+}

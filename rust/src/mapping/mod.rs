@@ -1,0 +1,213 @@
+//! Layer → crossbar mapping and the §5.2.4 weight-replication allocator.
+//!
+//! Mapping rules (§5.2.1): an 8-bit signed weight occupies 16 adjacent
+//! 1-bit columns (8 W+ + 8 W-) of the same array; kernels taller than the
+//! array split across K-chunks of `xbar_size` rows; a 128x128 array holds
+//! 8 output channels (groups) per K-chunk.
+//!
+//! Replication (§5.2.4): early layers with many sliding-window positions
+//! are replicated so every pipeline stage produces at the rate its
+//! consumer needs; the allocator spends the remaining on-chip arrays
+//! greedily on the current bottleneck, exactly the "weights replication
+//! strategy proposed in [1]" the paper adopts.
+
+use crate::config::AcceleratorConfig;
+use crate::workloads::{Layer, Network};
+
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    pub layer: Layer,
+    /// K-dimension chunks (rows)
+    pub k_chunks: u64,
+    /// output-channel chunks (groups of `groups_per_array` columns)
+    pub c_chunks: u64,
+    /// crossbar arrays for ONE copy of the weights
+    pub arrays_per_copy: u64,
+    /// replication factor r_i
+    pub replication: u64,
+}
+
+impl LayerMapping {
+    pub fn total_arrays(&self) -> u64 {
+        self.arrays_per_copy * self.replication
+    }
+
+    /// Input cycles this layer needs per inference (its pipeline-stage
+    /// occupancy): positions / replication, each costing `input_cycles`.
+    pub fn stage_cycles(&self, input_cycles: u64) -> u64 {
+        self.layer.positions().div_ceil(self.replication) * input_cycles
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NetworkMapping {
+    pub layers: Vec<LayerMapping>,
+    /// chips needed to hold one copy of all weights
+    pub chips: u64,
+}
+
+impl NetworkMapping {
+    pub fn total_arrays(&self) -> u64 {
+        self.layers.iter().map(LayerMapping::total_arrays).sum()
+    }
+
+    /// The pipeline bottleneck stage's cycle count.
+    pub fn bottleneck_cycles(&self, input_cycles: u64) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.stage_cycles(input_cycles))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Map one layer (single copy).
+pub fn map_layer(layer: &Layer, cfg: &AcceleratorConfig) -> LayerMapping {
+    let rows = cfg.xbar_size as u64;
+    let groups = cfg.groups_per_array(); // output channels per array chunk
+    let k_chunks = layer.k_dim().div_ceil(rows);
+    let c_chunks = (layer.cout as u64).div_ceil(groups);
+    LayerMapping {
+        layer: layer.clone(),
+        k_chunks,
+        c_chunks,
+        arrays_per_copy: k_chunks * c_chunks,
+        replication: 1,
+    }
+}
+
+/// Map a network with replication under the chip's array budget.
+pub fn map_network(net: &Network, cfg: &AcceleratorConfig) -> NetworkMapping {
+    let mut layers: Vec<LayerMapping> =
+        net.layers.iter().map(|l| map_layer(l, cfg)).collect();
+    let per_chip = cfg.total_arrays();
+    let base: u64 = layers.iter().map(|l| l.arrays_per_copy).sum();
+    let chips = base.div_ceil(per_chip).max(1);
+    let budget = chips * per_chip;
+    let mut used = base;
+
+    // greedy: always replicate the current bottleneck stage (most cycles)
+    let input_cycles = cfg.precision.input_cycles() as u64;
+    loop {
+        let (idx, _) = match layers
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.stage_cycles(input_cycles))
+        {
+            Some(x) => x,
+            None => break,
+        };
+        let cost = layers[idx].arrays_per_copy;
+        if layers[idx].stage_cycles(input_cycles) <= input_cycles {
+            break; // bottleneck already at one position per stage slot
+        }
+        if used + cost > budget {
+            break;
+        }
+        layers[idx].replication += 1;
+        used += cost;
+    }
+    NetworkMapping { layers, chips }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::util::prop;
+    use crate::workloads::{alexnet, Layer};
+
+    #[test]
+    fn single_layer_shapes() {
+        let cfg = AcceleratorConfig::neural_pim();
+        // 3x3x128 kernel, 64 outputs: K = 1152 -> 9 chunks; 64/8 = 8
+        let l = Layer::conv("t", 3, 128, 64, 14, 1);
+        let m = map_layer(&l, &cfg);
+        assert_eq!(m.k_chunks, 9);
+        assert_eq!(m.c_chunks, 8);
+        assert_eq!(m.arrays_per_copy, 72);
+    }
+
+    #[test]
+    fn small_kernel_uses_one_array() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let l = Layer::conv("t", 3, 3, 8, 12, 1); // K = 27, cout 8
+        let m = map_layer(&l, &cfg);
+        assert_eq!(m.arrays_per_copy, 1);
+    }
+
+    #[test]
+    fn replication_reduces_bottleneck() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let net = alexnet();
+        let m = map_network(&net, &cfg);
+        let ic = cfg.precision.input_cycles() as u64;
+        // with the budget of a 280-tile chip the bottleneck must improve
+        // over the unreplicated mapping
+        let unrep: u64 = net
+            .layers
+            .iter()
+            .map(|l| map_layer(l, &cfg).stage_cycles(ic))
+            .max()
+            .unwrap();
+        assert!(m.bottleneck_cycles(ic) < unrep);
+        // conv1 (3025 positions) must be replicated more than fc8
+        let r_conv1 = m.layers[0].replication;
+        let r_fc8 = m.layers.last().unwrap().replication;
+        assert!(r_conv1 > r_fc8, "conv1 r={r_conv1}, fc8 r={r_fc8}");
+    }
+
+    #[test]
+    fn budget_never_exceeded() {
+        prop::check("mapping stays within array budget", 60, |g| {
+            let mut cfg = AcceleratorConfig::neural_pim();
+            cfg.tiles = g.usize_in(1, 64) as u32;
+            let n_layers = g.usize_in(1, 8);
+            let mut layers = Vec::new();
+            for i in 0..n_layers {
+                let cin = g.usize_in(1, 512) as u32;
+                let cout = g.usize_in(1, 512) as u32;
+                let out = g.usize_in(1, 56) as u32;
+                layers.push(Layer::conv(&format!("l{i}"), 3, cin, cout, out, 1));
+            }
+            let net = crate::workloads::Network { name: "prop", layers };
+            let m = map_network(&net, &cfg);
+            let budget = m.chips * cfg.total_arrays();
+            crate::prop_assert!(
+                m.total_arrays() <= budget,
+                "used {} > budget {}", m.total_arrays(), budget
+            );
+            // every layer keeps at least one copy
+            crate::prop_assert!(
+                m.layers.iter().all(|l| l.replication >= 1),
+                "lost a layer copy"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conservation_no_weights_lost() {
+        prop::check("mapping conserves weight capacity", 60, |g| {
+            let cfg = AcceleratorConfig::neural_pim();
+            let cin = g.usize_in(1, 1024) as u32;
+            let cout = g.usize_in(1, 1024) as u32;
+            let l = Layer::conv("c", 3, cin, cout, 7, 1);
+            let m = map_layer(&l, &cfg);
+            // capacity of the allocated arrays covers the layer's weights
+            let cap = m.arrays_per_copy
+                * cfg.xbar_size as u64
+                * cfg.groups_per_array();
+            crate::prop_assert!(
+                cap >= l.weights(),
+                "capacity {} < weights {}", cap, l.weights()
+            );
+            // and not absurdly over-allocated (< 1 full chunk of waste in
+            // each dimension)
+            let min_arrays = (l.k_dim().div_ceil(cfg.xbar_size as u64))
+                * (l.cout as u64).div_ceil(cfg.groups_per_array());
+            crate::prop_assert!(m.arrays_per_copy == min_arrays, "over-alloc");
+            Ok(())
+        });
+    }
+}

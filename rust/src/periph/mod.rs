@@ -1,0 +1,326 @@
+//! Rust-side NeuralPeriph evaluation: loads the trained weights from
+//! `artifacts/periph.json`, runs the f32 MLP/flash forwards natively, and
+//! measures the Table-1 metrics (approximation error, DNL/INL, ENOB)
+//! without any Python in the loop.
+
+use crate::arch::{V_RANGE, VDD};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// A trained NNS+A: 9-input 3-layer MLP with inverter-VTC activations.
+#[derive(Debug, Clone)]
+pub struct NnsA {
+    pub w1: Vec<f32>, // 9 x h, row-major
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>, // h x 1
+    pub b2: f32,
+    pub hidden: usize,
+    pub vtc_gain: f64,
+}
+
+/// A trained flash NNADC: per-comparator thresholds + unit summing column.
+#[derive(Debug, Clone)]
+pub struct Nnadc {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub vm: Vec<f32>,
+    pub latch_gain: f64,
+    pub n_bits: u32,
+}
+
+/// Everything in periph.json.
+#[derive(Debug, Clone)]
+pub struct Periph {
+    pub nns_a: NnsA,
+    pub nns_a_msb: NnsA,
+    pub nnadc: Nnadc,
+    pub nnadc_naive: Nnadc,
+    pub metrics: Json,
+}
+
+fn vtc(v: f64, vm: f64, gain: f64) -> f64 {
+    // numerically-stable falling sigmoid
+    let x = -gain * (v - vm);
+    VDD / (1.0 + (-x).exp())
+}
+
+impl NnsA {
+    fn from_json(j: &Json, gain: f64) -> Result<NnsA> {
+        let (s1, w1) = j
+            .get("w1")
+            .and_then(Json::to_f32_tensor_opt)
+            .ok_or_else(|| anyhow!("missing w1"))?;
+        let (_, b1) = j
+            .get("b1")
+            .and_then(Json::to_f32_tensor_opt)
+            .ok_or_else(|| anyhow!("missing b1"))?;
+        let (_, w2) = j
+            .get("w2")
+            .and_then(Json::to_f32_tensor_opt)
+            .ok_or_else(|| anyhow!("missing w2"))?;
+        let (_, b2) = j
+            .get("b2")
+            .and_then(Json::to_f32_tensor_opt)
+            .ok_or_else(|| anyhow!("missing b2"))?;
+        anyhow::ensure!(s1[0] == 9, "NNS+A must have 9 inputs");
+        Ok(NnsA { hidden: s1[1], w1, b1, w2, b2: b2[0], vtc_gain: gain })
+    }
+
+    /// Single forward: v_in has 9 entries (8 BL pairs + carried sum).
+    pub fn forward(&self, v_in: &[f64; 9], vm: f64) -> f64 {
+        let h = self.hidden;
+        let mut out = self.b2 as f64;
+        for j in 0..h {
+            let mut pre = self.b1[j] as f64;
+            for (k, v) in v_in.iter().enumerate() {
+                pre += self.w1[k * h + j] as f64 * v;
+            }
+            out += self.w2[j] as f64 * vtc(pre, vm, self.vtc_gain);
+        }
+        out
+    }
+
+    /// Cyclic application over LSB-first slices (the S/H loop).
+    pub fn accumulate(&self, slices: &[[f64; 8]], vm: f64) -> f64 {
+        let mut acc = 0.0;
+        for s in slices {
+            let mut vin = [0.0f64; 9];
+            vin[..8].copy_from_slice(s);
+            vin[8] = acc;
+            acc = self.forward(&vin, vm);
+        }
+        acc
+    }
+}
+
+impl Nnadc {
+    fn from_json(j: &Json, latch_gain: f64) -> Result<Nnadc> {
+        let grab = |key: &str| -> Result<Vec<f32>> {
+            Ok(j.get(key)
+                .and_then(Json::to_f32_tensor_opt)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .1)
+        };
+        let w1 = grab("w1")?;
+        let b1 = grab("b1")?;
+        let w2 = grab("w2")?;
+        let vm = grab("vm").unwrap_or_else(|_| vec![(VDD / 2.0) as f32; w1.len()]);
+        anyhow::ensure!(w1.len() == b1.len() && w1.len() == w2.len());
+        Ok(Nnadc { w1, b1, w2, vm, latch_gain, n_bits: 8 })
+    }
+
+    /// Convert a normalized input in [0, 1] to a code in [0, 2^n - 1].
+    pub fn convert(&self, v: f64) -> u32 {
+        let mut soft = 0.0f64;
+        for i in 0..self.w1.len() {
+            let pre = self.w1[i] as f64 * v + self.b1[i] as f64;
+            let u = 1.0 - vtc(pre, self.vm[i] as f64, self.latch_gain) / VDD;
+            soft += self.w2[i] as f64 * u;
+        }
+        let levels = (1u32 << self.n_bits) - 1;
+        ((soft * levels as f64).round().clamp(0.0, levels as f64)) as u32
+    }
+
+    /// Ramp transfer curve.
+    pub fn transfer(&self, n_points: usize) -> Vec<(f64, u32)> {
+        (0..n_points)
+            .map(|i| {
+                let v = i as f64 / (n_points - 1) as f64;
+                (v, self.convert(v))
+            })
+            .collect()
+    }
+}
+
+/// DNL/INL in LSB from a ramp sweep (mirrors train_periph.dnl_inl).
+pub fn dnl_inl(transfer: &[(f64, u32)], n_bits: u32)
+               -> (Vec<f64>, Vec<f64>, usize) {
+    let n_codes = 1usize << n_bits;
+    let lsb = 1.0 / (n_codes as f64 - 1.0);
+    let mut transitions = vec![f64::NAN; n_codes - 1];
+    for w in transfer.windows(2) {
+        let (v1, c1) = w[1];
+        let (_, c0) = w[0];
+        if c1 > c0 {
+            for c in (c0 as usize)..(c1 as usize).min(n_codes - 1) {
+                if transitions[c].is_nan() {
+                    transitions[c] = v1;
+                }
+            }
+        }
+    }
+    let mut dnl = Vec::new();
+    let mut inl = Vec::new();
+    let mut missing = 0;
+    for (i, t) in transitions.iter().enumerate() {
+        if t.is_nan() {
+            missing += 1;
+            continue;
+        }
+        let ideal = (i as f64 + 0.5) * lsb;
+        inl.push((t - ideal) / lsb);
+        if i > 0 && !transitions[i - 1].is_nan() {
+            dnl.push((t - transitions[i - 1]) / lsb - 1.0);
+        }
+    }
+    (dnl, inl, missing)
+}
+
+/// Sine-test ENOB: (SINAD - 1.76) / 6.02.
+pub fn enob(adc: &Nnadc, n_samples: usize) -> (f64, f64) {
+    let n_bits = adc.n_bits;
+    let mut sig = Vec::with_capacity(n_samples);
+    let mut rec = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let v = 0.5
+            + 0.4999
+                * (2.0 * std::f64::consts::PI * 127.0 * i as f64
+                    / n_samples as f64)
+                    .sin();
+        sig.push(v);
+        rec.push(adc.convert(v) as f64 / ((1u32 << n_bits) - 1) as f64);
+    }
+    let err: Vec<f64> = rec.iter().zip(&sig).map(|(r, s)| r - s).collect();
+    let me = crate::util::stats::mean(&err);
+    let p_noise = err.iter().map(|e| (e - me) * (e - me)).sum::<f64>()
+        / err.len() as f64;
+    let ms = crate::util::stats::mean(&sig);
+    let p_sig =
+        sig.iter().map(|s| (s - ms) * (s - ms)).sum::<f64>() / sig.len() as f64;
+    let sinad = 10.0 * (p_sig / p_noise).log10();
+    ((sinad - 1.76) / 6.02, sinad)
+}
+
+impl Periph {
+    pub fn load(path: &str) -> Result<Periph> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let consts = j.get("constants").ok_or_else(|| anyhow!("no constants"))?;
+        let g_tt = consts.get("vtc_gain_tt").and_then(Json::as_f64).unwrap_or(25.0);
+        let g_latch = consts
+            .get("vtc_gain_latch")
+            .and_then(Json::as_f64)
+            .unwrap_or(2400.0);
+        Ok(Periph {
+            nns_a: NnsA::from_json(
+                j.get("nns_a_opt").ok_or_else(|| anyhow!("no nns_a_opt"))?, g_tt)?,
+            nns_a_msb: NnsA::from_json(
+                j.get("nns_a_msb").ok_or_else(|| anyhow!("no nns_a_msb"))?, g_tt)?,
+            nnadc: Nnadc::from_json(
+                j.get("nnadc_opt").ok_or_else(|| anyhow!("no nnadc_opt"))?,
+                g_latch)?,
+            nnadc_naive: Nnadc::from_json(
+                j.get("nnadc_naive").ok_or_else(|| anyhow!("no nnadc_naive"))?,
+                g_latch)?,
+            metrics: j.get("metrics").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// NNS+A approximation error vs the ideal recursion over random
+    /// (differential) BL voltages — the Table 1 max/min error row.
+    pub fn nns_a_error_stats(&self, n: usize, seed: u64) -> (f64, f64, f64) {
+        let mut rng = crate::util::rng::Pcg::new(seed);
+        let alpha = crate::arch::sa_alpha(4);
+        let mut errs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut vin = [0.0f64; 9];
+            for v in vin.iter_mut().take(8) {
+                *v = rng.range(-V_RANGE / 2.0, V_RANGE / 2.0);
+            }
+            vin[8] = rng.range(-V_RANGE / 2.0, V_RANGE / 2.0);
+            let got = self.nns_a.forward(&vin, VDD / 2.0);
+            let sum: f64 = (0..8usize)
+                .map(|j| 2f64.powi(j as i32) * vin[j])
+                .sum();
+            let want = 2f64.powi(-4) * vin[8] + sum / alpha;
+            errs.push(got - want);
+        }
+        let mse = errs.iter().map(|e| e * e).sum::<f64>() / n as f64;
+        (mse, crate::util::stats::max(&errs), crate::util::stats::min(&errs))
+    }
+}
+
+// small helper so Option-chaining reads well above
+trait TensorOpt {
+    fn to_f32_tensor_opt(&self) -> Option<(Vec<usize>, Vec<f32>)>;
+}
+
+impl TensorOpt for Json {
+    fn to_f32_tensor_opt(&self) -> Option<(Vec<usize>, Vec<f32>)> {
+        self.to_f32_tensor()
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ideal_adc() -> Nnadc {
+        let levels = 255usize;
+        let t: Vec<f64> =
+            (1..=levels).map(|k| (k as f64 - 0.5) / levels as f64).collect();
+        Nnadc {
+            w1: vec![0.9; levels],
+            b1: t.iter().map(|ti| (VDD / 2.0 - 0.9 * ti) as f32).collect(),
+            w2: vec![(1.0 / levels as f64) as f32; levels],
+            vm: vec![(VDD / 2.0) as f32; levels],
+            latch_gain: 2400.0,
+            n_bits: 8,
+        }
+    }
+
+    #[test]
+    fn ideal_flash_bank_is_8_bit_clean() {
+        let adc = ideal_adc();
+        let tr = adc.transfer(1 << 13);
+        let (dnl, inl, missing) = dnl_inl(&tr, 8);
+        assert_eq!(missing, 0);
+        assert!(dnl.iter().all(|d| d.abs() < 0.1), "DNL {:?}",
+                dnl.iter().cloned().fold(0.0f64, f64::max));
+        assert!(inl.iter().all(|d| d.abs() < 0.1));
+        let (e, _) = enob(&adc, 1 << 13);
+        assert!(e > 7.7 && e < 8.3, "enob {e}");
+    }
+
+    #[test]
+    fn transfer_monotone() {
+        let adc = ideal_adc();
+        let tr = adc.transfer(4096);
+        assert!(tr.windows(2).all(|w| w[1].1 >= w[0].1));
+        assert_eq!(tr[0].1, 0);
+        assert_eq!(tr.last().unwrap().1, 255);
+    }
+
+    #[test]
+    fn dnl_detects_missing_code() {
+        // collapse two thresholds onto each other -> a missing code
+        let mut adc = ideal_adc();
+        adc.b1[100] = adc.b1[101];
+        let tr = adc.transfer(1 << 13);
+        let (_, _, missing) = dnl_inl(&tr, 8);
+        // transitions 100/101 now coincide: code 101 skipped over
+        assert!(missing <= 1); // both map to same v: first-wins fills one
+        let (dnl, _, _) = dnl_inl(&tr, 8);
+        assert!(dnl.iter().cloned().fold(f64::MIN, f64::max) > 0.8);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/periph.json");
+        if !std::path::Path::new(path).exists() {
+            return; // artifacts not built in this environment
+        }
+        let p = Periph::load(path).unwrap();
+        assert_eq!(p.nns_a.w1.len(), 9 * p.nns_a.hidden);
+        let (mse, emax, emin) = p.nns_a_error_stats(4096, 7);
+        assert!(mse < 1e-3, "mse {mse}");
+        assert!(emax < 0.1 && emin > -0.1);
+        let tr = p.nnadc.transfer(1 << 12);
+        let (_, inl, missing) = dnl_inl(&tr, 8);
+        assert!(missing < 8, "missing {missing}");
+        assert!(inl.iter().all(|d| d.abs() < 3.0));
+    }
+}

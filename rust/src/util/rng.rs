@@ -1,0 +1,200 @@
+//! PCG64-based PRNG + distributions (the offline registry has no `rand`).
+//!
+//! PCG-XSH-RR 64/32 with two independent streams combined for 64-bit
+//! output. Deterministic per seed — every simulation result in
+//! EXPERIMENTS.md is reproducible from its seed.
+
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// cached second gaussian from Box-Muller
+    spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (seed << 1) | 1, spare: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed ^ 0x9e3779b97f4a7c15);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (for per-component noise).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        Pcg::new(self.next_u64() ^ tag.wrapping_mul(0xda942042e4dd58b5))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection for unbiased sampling
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul128(x, n);
+            if lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    pub fn normal_scaled(&mut self, mean: f64, sigma: f64) -> f64 {
+        mean + sigma * self.normal()
+    }
+
+    /// Lognormal multiplicative factor e^(sigma * z) — RRAM conductance
+    /// variation model (§4.1.2 step 4).
+    pub fn lognormal_factor(&mut self, sigma: f64) -> f64 {
+        (sigma * self.normal()).exp()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+#[inline]
+fn mul128(a: u64, b: u64) -> (u64, u64) {
+    let r = (a as u128) * (b as u128);
+    ((r >> 64) as u64, r as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg::new(43);
+        assert_ne!(Pcg::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Pcg::new(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut sum2 = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+            sum2 += u * u;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "mean {}", mean);
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var {}", var);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::new(2);
+        let n = 100_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+            s3 += z * z * z;
+        }
+        assert!((s / n as f64).abs() < 0.02);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.03);
+        assert!((s3 / n as f64).abs() < 0.05); // symmetry
+    }
+
+    #[test]
+    fn below_is_unbiased() {
+        let mut rng = Pcg::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{:?}", counts);
+        }
+    }
+
+    #[test]
+    fn lognormal_is_positive_unit_median() {
+        let mut rng = Pcg::new(4);
+        let mut logs = 0.0;
+        for _ in 0..10_000 {
+            let f = rng.lognormal_factor(0.025);
+            assert!(f > 0.0);
+            logs += f.ln();
+        }
+        assert!((logs / 10_000.0).abs() < 0.002);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut a = Pcg::new(7);
+        let mut f1 = a.fork(1);
+        let mut f2 = a.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,169 @@
+//! Descriptive statistics + the paper's SINAD metric (§5.3.1).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let m = mean(v);
+    (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+}
+
+/// Geometric mean (used for the headline cross-benchmark speedups).
+pub fn geomean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = v.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn min(v: &[f64]) -> f64 {
+    v.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(v: &[f64]) -> f64 {
+    v.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// SINAD in dB per §5.3.1: 10 log10((P_sig + P_noise) / P_noise) with
+/// P_noise = mean((hw - sw)^2) and P_sig the variance of the ideal signal.
+pub fn sinad_db(d_hw: &[f64], d_sw: &[f64]) -> f64 {
+    assert_eq!(d_hw.len(), d_sw.len());
+    let err: Vec<f64> = d_hw.iter().zip(d_sw).map(|(h, s)| h - s).collect();
+    let p_noise = err.iter().map(|e| e * e).sum::<f64>() / err.len() as f64;
+    let m = mean(d_sw);
+    let p_sig = d_sw.iter().map(|s| (s - m) * (s - m)).sum::<f64>()
+        / d_sw.len() as f64;
+    10.0 * ((p_sig + p_noise) / p_noise.max(1e-30)).log10()
+}
+
+/// Ordinary least squares y = a*x + b. Returns (a, b).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    let a = if den == 0.0 { 0.0 } else { num / den };
+    (a, my - a * mx)
+}
+
+/// Online timing accumulator for the bench harness.
+#[derive(Default, Clone, Debug)]
+pub struct Samples {
+    pub values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+
+    pub fn std(&self) -> f64 {
+        std(&self.values)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.values, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.values, 99.0)
+    }
+
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "mean {:.3}{u} ± {:.3}{u} (p50 {:.3}{u}, p99 {:.3}{u}, n={})",
+            self.mean(),
+            self.std(),
+            self.p50(),
+            self.p99(),
+            self.values.len(),
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&v) - 2.5).abs() < 1e-12);
+        assert!((std(&v) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile(&v, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile(&v, 100.0) - 40.0).abs() < 1e-12);
+        assert!((percentile(&v, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sinad_of_clean_signal_is_large() {
+        let sw: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 100.0).collect();
+        let hw = sw.clone();
+        assert!(sinad_db(&hw, &sw) > 100.0);
+    }
+
+    #[test]
+    fn sinad_known_ratio() {
+        // noise with power 1, signal with power 100 -> ~20 dB
+        let sw: Vec<f64> = (0..20000)
+            .map(|i| 10.0 * f64::sqrt(2.0) * (i as f64 * 0.01).sin())
+            .collect();
+        let hw: Vec<f64> = sw
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s + if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let s = sinad_db(&hw, &sw);
+        assert!((s - 10.0 * (101.0f64).log10()).abs() < 0.3, "{}", s);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v - 7.0).collect();
+        let (a, b) = linreg(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9 && (b + 7.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! The paper's 9 DNN benchmarks (§6.1) as layer-shape descriptors, plus
+//! the synthetic CNN the accuracy artifacts were trained on.
+//!
+//! The simulator only needs layer shapes (the authors' simulator is the
+//! same kind of tool), so these are complete, faithful descriptions of
+//! the public architectures: AlexNet, VGG-16/19, ResNet-50/101,
+//! Inception-v3, GoogLeNet, MobileNet-V2 (all ImageNet-shaped) and the
+//! NeuralTalk LSTM.
+
+mod networks;
+
+pub use networks::*;
+
+/// One VMM-bearing layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// kernel height/width (1 for FC / LSTM gates)
+    pub kh: u32,
+    pub kw: u32,
+    pub cin: u32,
+    pub cout: u32,
+    /// output spatial positions (sliding-window count); 1 for FC
+    pub out_h: u32,
+    pub out_w: u32,
+    pub stride: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    /// LSTM gate block: 4 gates x (W·x + U·h); modelled as FC with
+    /// cin = input + hidden, cout = 4 * hidden, repeated per time step.
+    Lstm,
+}
+
+impl Layer {
+    pub fn conv(name: &str, kh: u32, cin: u32, cout: u32, out: u32,
+                stride: u32) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            kh,
+            kw: kh,
+            cin,
+            cout,
+            out_h: out,
+            out_w: out,
+            stride,
+        }
+    }
+
+    pub fn fc(name: &str, cin: u32, cout: u32) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            kh: 1,
+            kw: 1,
+            cin,
+            cout,
+            out_h: 1,
+            out_w: 1,
+            stride: 1,
+        }
+    }
+
+    pub fn lstm(name: &str, input: u32, hidden: u32, steps: u32) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Lstm,
+            kh: 1,
+            kw: 1,
+            cin: input + hidden,
+            cout: 4 * hidden,
+            // time steps take the role of sliding-window positions
+            out_h: steps,
+            out_w: 1,
+            stride: 1,
+        }
+    }
+
+    /// Rows a kernel needs in a crossbar: K = kh*kw*cin.
+    pub fn k_dim(&self) -> u64 {
+        self.kh as u64 * self.kw as u64 * self.cin as u64
+    }
+
+    /// Signed weights in this layer.
+    pub fn weights(&self) -> u64 {
+        self.k_dim() * self.cout as u64
+    }
+
+    /// Sliding-window positions to evaluate (per inference).
+    pub fn positions(&self) -> u64 {
+        self.out_h as u64 * self.out_w as u64
+    }
+
+    /// MAC operations per inference (x2 for the GOPS convention).
+    pub fn macs(&self) -> u64 {
+        self.weights() * self.positions()
+    }
+
+    /// Input activations consumed per position (bytes at 8-bit).
+    pub fn input_bytes_per_position(&self) -> u64 {
+        self.k_dim()
+    }
+
+    /// Output activations produced per position (bytes at 8-bit).
+    pub fn output_bytes_per_position(&self) -> u64 {
+        self.cout as u64
+    }
+}
+
+/// A whole benchmark network.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(Layer::weights).sum()
+    }
+
+    /// GOPs per inference (2 ops per MAC).
+    pub fn gops(&self) -> f64 {
+        2.0 * self.total_macs() as f64 / 1e9
+    }
+}
+
+/// All nine §6.1 benchmarks in the paper's Fig. 12 order.
+pub fn all_benchmarks() -> Vec<Network> {
+    vec![
+        alexnet(),
+        vgg16(),
+        vgg19(),
+        resnet50(),
+        resnet101(),
+        googlenet(),
+        inception_v3(),
+        mobilenet_v2(),
+        neuraltalk(),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Network> {
+    let want = name.to_ascii_lowercase().replace(['-', '_'], "");
+    all_benchmarks()
+        .into_iter()
+        .chain(std::iter::once(synthetic_cnn()))
+        .find(|n| n.name.to_ascii_lowercase().replace(['-', '_'], "") == want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_benchmarks_exist() {
+        let b = all_benchmarks();
+        assert_eq!(b.len(), 9);
+        for n in &b {
+            assert!(!n.layers.is_empty(), "{} has no layers", n.name);
+            assert!(n.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn alexnet_known_shape() {
+        // AlexNet (ImageNet): ~61M weights, ~0.7G MACs
+        let a = alexnet();
+        let w = a.total_weights();
+        assert!(w > 55_000_000 && w < 65_000_000, "weights {w}");
+        let m = a.total_macs();
+        assert!(m > 600_000_000 && m < 800_000_000, "macs {m}");
+    }
+
+    #[test]
+    fn vgg16_known_shape() {
+        // VGG-16: ~138M weights, ~15.5G MACs
+        let v = vgg16();
+        assert!((v.total_weights() as f64 - 138e6).abs() < 6e6,
+                "weights {}", v.total_weights());
+        assert!((v.total_macs() as f64 - 15.5e9).abs() < 1.0e9,
+                "macs {}", v.total_macs());
+    }
+
+    #[test]
+    fn resnet50_known_shape() {
+        // ResNet-50: ~25.5M weights, ~3.9G MACs (conv+fc only ~25M/3.8G)
+        let r = resnet50();
+        let w = r.total_weights() as f64;
+        assert!(w > 22e6 && w < 28e6, "weights {w}");
+        let m = r.total_macs() as f64;
+        assert!(m > 3.3e9 && m < 4.5e9, "macs {m}");
+    }
+
+    #[test]
+    fn mobilenet_is_small() {
+        let m = mobilenet_v2();
+        assert!(m.total_macs() < resnet50().total_macs() / 5);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("AlexNet").is_some());
+        assert!(by_name("resnet-50").is_some());
+        assert!(by_name("neuraltalk").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

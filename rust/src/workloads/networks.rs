@@ -1,0 +1,291 @@
+//! Layer tables for the nine §6.1 benchmarks. Shapes follow the original
+//! publications (ImageNet input 224x224 / 227x227 / 299x299).
+
+use super::{Layer, Network};
+
+/// AlexNet (Krizhevsky et al., 2012), 227x227 input.
+pub fn alexnet() -> Network {
+    Network {
+        name: "AlexNet",
+        layers: vec![
+            Layer { name: "conv1".into(), kind: super::LayerKind::Conv,
+                    kh: 11, kw: 11, cin: 3, cout: 96, out_h: 55, out_w: 55,
+                    stride: 4 },
+            // conv2/4/5 are 2-group convolutions in the original AlexNet:
+            // each kernel sees half the input channels
+            Layer { name: "conv2".into(), kind: super::LayerKind::Conv,
+                    kh: 5, kw: 5, cin: 48, cout: 256, out_h: 27, out_w: 27,
+                    stride: 1 },
+            Layer::conv("conv3", 3, 256, 384, 13, 1),
+            Layer::conv("conv4", 3, 192, 384, 13, 1),
+            Layer::conv("conv5", 3, 192, 256, 13, 1),
+            Layer::fc("fc6", 256 * 6 * 6, 4096),
+            Layer::fc("fc7", 4096, 4096),
+            Layer::fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+fn vgg_block(layers: &mut Vec<Layer>, tag: &str, n: u32, cin: u32, cout: u32,
+             out: u32) {
+    for i in 0..n {
+        let name = format!("conv{}_{}", tag, i + 1);
+        let ci = if i == 0 { cin } else { cout };
+        layers.push(Layer::conv(&name, 3, ci, cout, out, 1));
+    }
+}
+
+/// VGG-16 (Simonyan & Zisserman), 224x224.
+pub fn vgg16() -> Network {
+    let mut l = Vec::new();
+    vgg_block(&mut l, "1", 2, 3, 64, 224);
+    vgg_block(&mut l, "2", 2, 64, 128, 112);
+    vgg_block(&mut l, "3", 3, 128, 256, 56);
+    vgg_block(&mut l, "4", 3, 256, 512, 28);
+    vgg_block(&mut l, "5", 3, 512, 512, 14);
+    l.push(Layer::fc("fc6", 512 * 7 * 7, 4096));
+    l.push(Layer::fc("fc7", 4096, 4096));
+    l.push(Layer::fc("fc8", 4096, 1000));
+    Network { name: "VGG-16", layers: l }
+}
+
+/// VGG-19: the 4-conv variant of blocks 3-5.
+pub fn vgg19() -> Network {
+    let mut l = Vec::new();
+    vgg_block(&mut l, "1", 2, 3, 64, 224);
+    vgg_block(&mut l, "2", 2, 64, 128, 112);
+    vgg_block(&mut l, "3", 4, 128, 256, 56);
+    vgg_block(&mut l, "4", 4, 256, 512, 28);
+    vgg_block(&mut l, "5", 4, 512, 512, 14);
+    l.push(Layer::fc("fc6", 512 * 7 * 7, 4096));
+    l.push(Layer::fc("fc7", 4096, 4096));
+    l.push(Layer::fc("fc8", 4096, 1000));
+    Network { name: "VGG-19", layers: l }
+}
+
+/// ResNet bottleneck stage: `blocks` x [1x1 c, 3x3 c, 1x1 4c].
+fn resnet_stage(l: &mut Vec<Layer>, tag: &str, blocks: u32, cin: u32, c: u32,
+                out: u32, first_stride: u32) {
+    let cout = 4 * c;
+    for b in 0..blocks {
+        let ci = if b == 0 { cin } else { cout };
+        let s = if b == 0 { first_stride } else { 1 };
+        l.push(Layer::conv(&format!("{}_{}a", tag, b), 1, ci, c, out, s));
+        l.push(Layer::conv(&format!("{}_{}b", tag, b), 3, c, c, out, 1));
+        l.push(Layer::conv(&format!("{}_{}c", tag, b), 1, c, cout, out, 1));
+        if b == 0 {
+            // projection shortcut
+            l.push(Layer::conv(&format!("{}_{}p", tag, b), 1, ci, cout, out, s));
+        }
+    }
+}
+
+pub fn resnet50() -> Network {
+    let mut l = vec![Layer { name: "conv1".into(),
+                             kind: super::LayerKind::Conv, kh: 7, kw: 7,
+                             cin: 3, cout: 64, out_h: 112, out_w: 112,
+                             stride: 2 }];
+    resnet_stage(&mut l, "res2", 3, 64, 64, 56, 1);
+    resnet_stage(&mut l, "res3", 4, 256, 128, 28, 2);
+    resnet_stage(&mut l, "res4", 6, 512, 256, 14, 2);
+    resnet_stage(&mut l, "res5", 3, 1024, 512, 7, 2);
+    l.push(Layer::fc("fc", 2048, 1000));
+    Network { name: "ResNet-50", layers: l }
+}
+
+pub fn resnet101() -> Network {
+    let mut l = vec![Layer { name: "conv1".into(),
+                             kind: super::LayerKind::Conv, kh: 7, kw: 7,
+                             cin: 3, cout: 64, out_h: 112, out_w: 112,
+                             stride: 2 }];
+    resnet_stage(&mut l, "res2", 3, 64, 64, 56, 1);
+    resnet_stage(&mut l, "res3", 4, 256, 128, 28, 2);
+    resnet_stage(&mut l, "res4", 23, 512, 256, 14, 2);
+    resnet_stage(&mut l, "res5", 3, 1024, 512, 7, 2);
+    l.push(Layer::fc("fc", 2048, 1000));
+    Network { name: "ResNet-101", layers: l }
+}
+
+/// GoogLeNet (Inception-v1) inception module.
+fn inception_v1(l: &mut Vec<Layer>, tag: &str, cin: u32, out: u32,
+                c1: u32, c3r: u32, c3: u32, c5r: u32, c5: u32, pp: u32) {
+    l.push(Layer::conv(&format!("{}_1x1", tag), 1, cin, c1, out, 1));
+    l.push(Layer::conv(&format!("{}_3x3r", tag), 1, cin, c3r, out, 1));
+    l.push(Layer::conv(&format!("{}_3x3", tag), 3, c3r, c3, out, 1));
+    l.push(Layer::conv(&format!("{}_5x5r", tag), 1, cin, c5r, out, 1));
+    l.push(Layer { name: format!("{}_5x5", tag),
+                   kind: super::LayerKind::Conv, kh: 5, kw: 5, cin: c5r,
+                   cout: c5, out_h: out, out_w: out, stride: 1 });
+    l.push(Layer::conv(&format!("{}_pool", tag), 1, cin, pp, out, 1));
+}
+
+pub fn googlenet() -> Network {
+    let mut l = vec![
+        Layer { name: "conv1".into(), kind: super::LayerKind::Conv,
+                kh: 7, kw: 7, cin: 3, cout: 64, out_h: 112, out_w: 112,
+                stride: 2 },
+        Layer::conv("conv2r", 1, 64, 64, 56, 1),
+        Layer::conv("conv2", 3, 64, 192, 56, 1),
+    ];
+    inception_v1(&mut l, "3a", 192, 28, 64, 96, 128, 16, 32, 32);
+    inception_v1(&mut l, "3b", 256, 28, 128, 128, 192, 32, 96, 64);
+    inception_v1(&mut l, "4a", 480, 14, 192, 96, 208, 16, 48, 64);
+    inception_v1(&mut l, "4b", 512, 14, 160, 112, 224, 24, 64, 64);
+    inception_v1(&mut l, "4c", 512, 14, 128, 128, 256, 24, 64, 64);
+    inception_v1(&mut l, "4d", 512, 14, 112, 144, 288, 32, 64, 64);
+    inception_v1(&mut l, "4e", 528, 14, 256, 160, 320, 32, 128, 128);
+    inception_v1(&mut l, "5a", 832, 7, 256, 160, 320, 32, 128, 128);
+    inception_v1(&mut l, "5b", 832, 7, 384, 192, 384, 48, 128, 128);
+    l.push(Layer::fc("fc", 1024, 1000));
+    Network { name: "GoogLeNet", layers: l }
+}
+
+/// Inception-v3 (Szegedy et al. 2016), 299x299 — condensed but
+/// MAC-faithful description of the stem + 11 inception blocks.
+pub fn inception_v3() -> Network {
+    let mut l = vec![
+        Layer::conv("stem1", 3, 3, 32, 149, 2),
+        Layer::conv("stem2", 3, 32, 32, 147, 1),
+        Layer::conv("stem3", 3, 32, 64, 147, 1),
+        Layer::conv("stem4", 1, 64, 80, 73, 1),
+        Layer::conv("stem5", 3, 80, 192, 71, 1),
+    ];
+    // 3x block A at 35x35 (cin 192/256/288)
+    for (i, cin) in [192u32, 256, 288].iter().enumerate() {
+        let t = format!("a{}", i);
+        l.push(Layer::conv(&format!("{t}_1x1"), 1, *cin, 64, 35, 1));
+        l.push(Layer::conv(&format!("{t}_5x5r"), 1, *cin, 48, 35, 1));
+        l.push(Layer { name: format!("{t}_5x5"),
+                       kind: super::LayerKind::Conv, kh: 5, kw: 5, cin: 48,
+                       cout: 64, out_h: 35, out_w: 35, stride: 1 });
+        l.push(Layer::conv(&format!("{t}_3x3r"), 1, *cin, 64, 35, 1));
+        l.push(Layer::conv(&format!("{t}_3x3a"), 3, 64, 96, 35, 1));
+        l.push(Layer::conv(&format!("{t}_3x3b"), 3, 96, 96, 35, 1));
+        l.push(Layer::conv(&format!("{t}_pool"), 1, *cin, if i == 0 { 32 } else { 64 }, 35, 1));
+    }
+    // reduction A
+    l.push(Layer::conv("ra_3x3", 3, 288, 384, 17, 2));
+    l.push(Layer::conv("ra_dbl_r", 1, 288, 64, 35, 1));
+    l.push(Layer::conv("ra_dbl_a", 3, 64, 96, 35, 1));
+    l.push(Layer::conv("ra_dbl_b", 3, 96, 96, 17, 2));
+    // 4x block B at 17x17 (7x1/1x7 factorized convs), cin 768
+    for (i, c7) in [128u32, 160, 160, 192].iter().enumerate() {
+        let t = format!("b{}", i);
+        l.push(Layer::conv(&format!("{t}_1x1"), 1, 768, 192, 17, 1));
+        l.push(Layer::conv(&format!("{t}_7r"), 1, 768, *c7, 17, 1));
+        l.push(Layer { name: format!("{t}_1x7"),
+                       kind: super::LayerKind::Conv, kh: 1, kw: 7, cin: *c7,
+                       cout: *c7, out_h: 17, out_w: 17, stride: 1 });
+        l.push(Layer { name: format!("{t}_7x1"),
+                       kind: super::LayerKind::Conv, kh: 7, kw: 1, cin: *c7,
+                       cout: 192, out_h: 17, out_w: 17, stride: 1 });
+        l.push(Layer::conv(&format!("{t}_dblr"), 1, 768, *c7, 17, 1));
+        l.push(Layer { name: format!("{t}_dbl1"),
+                       kind: super::LayerKind::Conv, kh: 7, kw: 1, cin: *c7,
+                       cout: *c7, out_h: 17, out_w: 17, stride: 1 });
+        l.push(Layer { name: format!("{t}_dbl2"),
+                       kind: super::LayerKind::Conv, kh: 1, kw: 7, cin: *c7,
+                       cout: *c7, out_h: 17, out_w: 17, stride: 1 });
+        l.push(Layer { name: format!("{t}_dbl3"),
+                       kind: super::LayerKind::Conv, kh: 7, kw: 1, cin: *c7,
+                       cout: *c7, out_h: 17, out_w: 17, stride: 1 });
+        l.push(Layer { name: format!("{t}_dbl4"),
+                       kind: super::LayerKind::Conv, kh: 1, kw: 7, cin: *c7,
+                       cout: 192, out_h: 17, out_w: 17, stride: 1 });
+        l.push(Layer::conv(&format!("{t}_pool"), 1, 768, 192, 17, 1));
+    }
+    // reduction B + 2x block C at 8x8 (cin 1280/2048)
+    l.push(Layer::conv("rb_r", 1, 768, 192, 17, 1));
+    l.push(Layer::conv("rb_3x3", 3, 192, 320, 8, 2));
+    for (i, cin) in [1280u32, 2048].iter().enumerate() {
+        let t = format!("c{}", i);
+        l.push(Layer::conv(&format!("{t}_1x1"), 1, *cin, 320, 8, 1));
+        l.push(Layer::conv(&format!("{t}_3r"), 1, *cin, 384, 8, 1));
+        l.push(Layer { name: format!("{t}_1x3"),
+                       kind: super::LayerKind::Conv, kh: 1, kw: 3, cin: 384,
+                       cout: 384, out_h: 8, out_w: 8, stride: 1 });
+        l.push(Layer { name: format!("{t}_3x1"),
+                       kind: super::LayerKind::Conv, kh: 3, kw: 1, cin: 384,
+                       cout: 384, out_h: 8, out_w: 8, stride: 1 });
+        l.push(Layer::conv(&format!("{t}_dr"), 1, *cin, 448, 8, 1));
+        l.push(Layer::conv(&format!("{t}_d3"), 3, 448, 384, 8, 1));
+        l.push(Layer { name: format!("{t}_d1x3"),
+                       kind: super::LayerKind::Conv, kh: 1, kw: 3, cin: 384,
+                       cout: 384, out_h: 8, out_w: 8, stride: 1 });
+        l.push(Layer { name: format!("{t}_d3x1"),
+                       kind: super::LayerKind::Conv, kh: 3, kw: 1, cin: 384,
+                       cout: 384, out_h: 8, out_w: 8, stride: 1 });
+        l.push(Layer::conv(&format!("{t}_pool"), 1, *cin, 192, 8, 1));
+    }
+    l.push(Layer::fc("fc", 2048, 1000));
+    Network { name: "Inception-v3", layers: l }
+}
+
+/// MobileNet-V2 (Sandler et al. 2018), 224x224. Depthwise convolutions
+/// map to crossbars one channel per column group; modelled as grouped
+/// layers with cin = kh*kw per output channel.
+pub fn mobilenet_v2() -> Network {
+    let mut l = vec![Layer::conv("conv0", 3, 3, 32, 112, 2)];
+    // (expansion t, cout, n blocks, out size, stride of first)
+    let cfg: [(u32, u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 112, 1),
+        (6, 24, 2, 56, 2),
+        (6, 32, 3, 28, 2),
+        (6, 64, 4, 14, 2),
+        (6, 96, 3, 14, 1),
+        (6, 160, 3, 7, 2),
+        (6, 320, 1, 7, 1),
+    ];
+    let mut cin = 32;
+    for (bi, (t, cout, n, out, s)) in cfg.iter().enumerate() {
+        for b in 0..*n {
+            let stride = if b == 0 { *s } else { 1 };
+            let hidden = cin * t;
+            let tag = format!("ir{}_{}", bi, b);
+            if *t != 1 {
+                l.push(Layer::conv(&format!("{tag}_exp"), 1, cin, hidden, *out, 1));
+            }
+            // depthwise 3x3: per-channel kernels -> K = 9 rows per group
+            l.push(Layer {
+                name: format!("{tag}_dw"),
+                kind: super::LayerKind::Conv,
+                kh: 3, kw: 3,
+                cin: 1, // per-group input depth
+                cout: hidden,
+                out_h: *out, out_w: *out,
+                stride,
+            });
+            l.push(Layer::conv(&format!("{tag}_proj"), 1, hidden, *cout, *out, 1));
+            cin = *cout;
+        }
+    }
+    l.push(Layer::conv("conv_last", 1, 320, 1280, 7, 1));
+    l.push(Layer::fc("fc", 1280, 1000));
+    Network { name: "MobileNet-V2", layers: l }
+}
+
+/// NeuralTalk-style image-captioning LSTM: VGG feature + LSTM-512
+/// decoder over 20 tokens (the RNN benchmark of Fig. 12).
+pub fn neuraltalk() -> Network {
+    Network {
+        name: "NeuralTalk",
+        layers: vec![
+            Layer::fc("img_embed", 4096, 512),
+            Layer::lstm("lstm1", 512, 512, 20),
+            Layer::fc("word_out", 512, 8791),
+        ],
+    }
+}
+
+/// The synthetic-dataset CNN the accuracy artifacts run (train_cnn.py).
+pub fn synthetic_cnn() -> Network {
+    Network {
+        name: "SyntheticCNN",
+        layers: vec![
+            Layer::conv("conv1", 3, 3, 16, 12, 1),
+            Layer::conv("conv2", 3, 16, 24, 6, 2),
+            Layer::conv("conv3", 3, 24, 32, 6, 1),
+            Layer::fc("fc", 32, 10),
+        ],
+    }
+}
