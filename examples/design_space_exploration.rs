@@ -12,6 +12,7 @@ use neural_pim::util::table::Table;
 
 fn main() {
     let args = Args::from_env();
+    neural_pim::util::pool::set_threads(args.threads());
     let top = args.get_usize("top", 15);
 
     report::fig11_table(top).print();

@@ -24,6 +24,7 @@ use neural_pim::{noise, report, sim, workloads};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    neural_pim::util::pool::set_threads(args.threads());
     let quick = args.flag("quick");
     let dir = neural_pim::artifact_dir();
     let ts = runtime::TestSet::load(std::path::Path::new(&dir))?;
@@ -51,6 +52,9 @@ fn main() -> anyhow::Result<()> {
     let mut lat = Vec::new();
     for (rx, label) in pending {
         let r = rx.recv()?;
+        if let Some(e) = &r.error {
+            anyhow::bail!("request {} failed in its batch: {e}", r.id);
+        }
         lat.push((r.queue_us + r.exec_us) as f64 / 1000.0);
         let pred = r.logits.iter().enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32;

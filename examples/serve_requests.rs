@@ -60,6 +60,9 @@ fn main() -> anyhow::Result<()> {
     let mut fills = Vec::new();
     for (rx, label) in pending {
         let r = rx.recv()?;
+        if let Some(e) = &r.error {
+            anyhow::bail!("request {} failed in its batch: {e}", r.id);
+        }
         lat.push((r.queue_us + r.exec_us) as f64 / 1000.0);
         fills.push(r.batch_size as f64);
         let pred = r.logits.iter().enumerate()

@@ -1,9 +1,15 @@
 //! Dynamic batcher: collect up to `max_batch` requests, waiting at most
 //! `max_wait` after the first arrival — the standard serving trade-off
 //! between batch efficiency and tail latency.
+//!
+//! Collection runs against the multi-consumer [`SharedQueue`], so N
+//! workers can each be inside `collect` at once: the first-request wait
+//! and the fill window both release the queue lock while blocked (the old
+//! `Mutex<mpsc::Receiver>` design held the lock across both, serializing
+//! every worker on one batch collection).
 
+use super::queue::{FillPop, SharedQueue};
 use super::Request;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -21,25 +27,16 @@ impl Batcher {
         Batcher { policy }
     }
 
-    /// Collect one batch. Returns None when the channel is closed and
-    /// fully drained (shutdown).
-    pub fn collect(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return None,
-        };
+    /// Collect one batch. Returns None when the queue is closed and fully
+    /// drained (shutdown).
+    pub fn collect(&self, q: &SharedQueue<Request>) -> Option<Vec<Request>> {
+        let first = q.pop_wait()?;
         let mut out = vec![first];
         let deadline = Instant::now() + self.policy.max_wait;
         while out.len() < self.policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => out.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            match q.pop_surplus_until(deadline) {
+                FillPop::Item(r) => out.push(r),
+                FillPop::TimedOut | FillPop::Closed => break,
             }
         }
         Some(out)
@@ -50,7 +47,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::util::prop;
-    use std::sync::mpsc;
+    use std::sync::{mpsc, Arc, Mutex};
 
     fn req(id: u64) -> Request {
         let (tx, _rx) = mpsc::channel();
@@ -64,15 +61,15 @@ mod tests {
 
     #[test]
     fn batch_respects_capacity() {
-        let (tx, rx) = mpsc::channel();
+        let q = SharedQueue::new();
         for i in 0..10 {
-            tx.send(req(i)).unwrap();
+            assert!(q.push(req(i)).is_ok());
         }
         let b = Batcher::new(BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
         });
-        let got = b.collect(&rx).unwrap();
+        let got = b.collect(&q).unwrap();
         assert_eq!(got.len(), 4);
         // FIFO order preserved
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
@@ -80,17 +77,17 @@ mod tests {
 
     #[test]
     fn drains_remaining_after_close() {
-        let (tx, rx) = mpsc::channel();
+        let q = SharedQueue::new();
         for i in 0..3 {
-            tx.send(req(i)).unwrap();
+            assert!(q.push(req(i)).is_ok());
         }
-        drop(tx);
+        q.close();
         let b = Batcher::new(BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
         });
-        assert_eq!(b.collect(&rx).unwrap().len(), 3);
-        assert!(b.collect(&rx).is_none());
+        assert_eq!(b.collect(&q).unwrap().len(), 3);
+        assert!(b.collect(&q).is_none());
     }
 
     #[test]
@@ -98,17 +95,17 @@ mod tests {
         prop::check("batcher capacity + FIFO", 50, |g| {
             let cap = g.usize_in(1, 16);
             let n = g.usize_in(1, 64);
-            let (tx, rx) = mpsc::channel();
+            let q = SharedQueue::new();
             for i in 0..n {
-                tx.send(req(i as u64)).unwrap();
+                crate::prop_assert!(q.push(req(i as u64)).is_ok(), "closed");
             }
-            drop(tx);
+            q.close();
             let b = Batcher::new(BatchPolicy {
                 max_batch: cap,
                 max_wait: Duration::from_millis(0),
             });
             let mut seen = Vec::new();
-            while let Some(batch) = b.collect(&rx) {
+            while let Some(batch) = b.collect(&q) {
                 crate::prop_assert!(batch.len() <= cap, "over capacity");
                 crate::prop_assert!(!batch.is_empty(), "empty batch");
                 seen.extend(batch.iter().map(|r| r.id));
@@ -119,5 +116,51 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// Regression for the multi-worker scaling bug: with the old
+    /// `Mutex<Receiver>` hand-off, worker A held the lock for its whole
+    /// `max_wait` fill window, absorbed every arrival, and worker B never
+    /// collected a batch. With the shared queue + idle-waiter priority,
+    /// a request arriving during A's fill window starts a batch on B.
+    #[test]
+    fn two_workers_collect_concurrently_under_light_load() {
+        let q = Arc::new(SharedQueue::new());
+        let per_worker: Arc<Mutex<Vec<Vec<u64>>>> =
+            Arc::new(Mutex::new(vec![Vec::new(), Vec::new()]));
+        let mut handles = Vec::new();
+        for w in 0..2usize {
+            let q = q.clone();
+            let per_worker = per_worker.clone();
+            handles.push(std::thread::spawn(move || {
+                let b = Batcher::new(BatchPolicy {
+                    max_batch: 8,
+                    // long window: if collection serialized, the second
+                    // request would be absorbed into the first batch
+                    max_wait: Duration::from_secs(10),
+                });
+                while let Some(batch) = b.collect(&q) {
+                    per_worker.lock().unwrap()[w]
+                        .extend(batch.iter().map(|r| r.id));
+                }
+            }));
+        }
+        let wait_for_idle = |n: usize| {
+            while q.idle_waiters() != n {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        };
+        wait_for_idle(2); // both workers waiting for a first request
+        assert!(q.push(req(0)).is_ok());
+        wait_for_idle(1); // one worker took it and is now filling
+        assert!(q.push(req(1)).is_ok()); // must go to the *idle* worker
+        wait_for_idle(0);
+        q.close(); // flush both partial batches
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = per_worker.lock().unwrap();
+        assert_eq!(got[0].len(), 1, "worker 0 got {:?}", got);
+        assert_eq!(got[1].len(), 1, "worker 1 got {:?}", got);
     }
 }

@@ -1,23 +1,29 @@
 //! L3 inference coordinator: the deployable serving layer.
 //!
-//! Requests (single images) arrive on a queue; a dynamic batcher groups
-//! them up to the artifact's fixed batch (padding the tail), worker
-//! threads execute the compiled PJRT executable, and responses fan back
-//! out to the callers. std::thread + mpsc based (the offline registry has
-//! no tokio); the architecture mirrors a vLLM-style router: admission
-//! queue -> batcher -> execution engine -> response demux.
+//! Requests (single images) arrive on a shared multi-consumer queue; a
+//! dynamic batcher groups them up to the artifact's fixed batch (padding
+//! the tail), worker threads execute the compiled PJRT executable, and
+//! responses fan back out to the callers. std::thread based (the offline
+//! registry has no tokio); the architecture mirrors a vLLM-style router:
+//! admission queue -> batcher -> execution engine -> response demux.
+//!
+//! N workers collect and execute batches concurrently: the queue releases
+//! its lock while a worker waits (see `queue.rs`), so one worker's fill
+//! window never blocks the others.
 //!
 //! PJRT objects are thread-local (`Rc` + raw pointers inside the xla
 //! crate), so every worker owns its *own* client + executable, built
 //! inside the worker thread; only plain `Vec<f32>` data crosses threads.
 
 pub mod batcher;
+pub mod queue;
 
 use crate::runtime::{self, Runtime};
 use anyhow::{anyhow, Result};
 use batcher::{BatchPolicy, Batcher};
+use queue::SharedQueue;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// One inference request: a single image (u8-valued f32 HWC).
@@ -35,6 +41,10 @@ pub struct Response {
     pub queue_us: u64,
     pub exec_us: u64,
     pub batch_size: usize,
+    /// `Some(cause)` when the batch this request rode in failed; `logits`
+    /// is empty then. Lets callers distinguish batch failure (an error
+    /// response arrives) from shutdown (the response channel disconnects).
+    pub error: Option<String>,
 }
 
 /// Thread-safe description of a non-image executable input; each worker
@@ -57,6 +67,8 @@ impl ExtraInput {
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
+    /// requests whose batch execution failed (error responses sent)
+    pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
     pub exec_us_total: AtomicU64,
@@ -65,16 +77,20 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn summary(&self) -> String {
-        let reqs = self.requests.load(Ordering::Relaxed).max(1);
+        let reqs_raw = self.requests.load(Ordering::Relaxed);
+        let pad = self.padded_slots.load(Ordering::Relaxed);
+        let slots = reqs_raw + pad;
+        let pad_frac = if slots == 0 { 0.0 } else { pad as f64 / slots as f64 };
+        let reqs = reqs_raw.max(1);
         let batches = self.batches.load(Ordering::Relaxed).max(1);
         format!(
-            "requests={} batches={} avg_batch={:.1} pad_frac={:.3} \
+            "requests={} failed={} batches={} avg_batch={:.1} pad_frac={:.3} \
              avg_exec={:.2}ms avg_queue={:.2}ms",
-            self.requests.load(Ordering::Relaxed),
+            reqs_raw,
+            self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
-            reqs as f64 / batches as f64,
-            self.padded_slots.load(Ordering::Relaxed) as f64
-                / (reqs + self.padded_slots.load(Ordering::Relaxed)) as f64,
+            reqs_raw as f64 / batches as f64,
+            pad_frac,
             self.exec_us_total.load(Ordering::Relaxed) as f64 / batches as f64
                 / 1000.0,
             self.queue_us_total.load(Ordering::Relaxed) as f64 / reqs as f64
@@ -114,7 +130,7 @@ impl Default for CoordinatorConfig {
 
 /// Handle the caller keeps: submit images, await logits.
 pub struct Coordinator {
-    tx: mpsc::Sender<Request>,
+    queue: Arc<SharedQueue<Request>>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -124,15 +140,14 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig, image_len: usize) -> Result<Coordinator> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(SharedQueue::new());
         let metrics = Arc::new(Metrics::default());
         let policy = BatchPolicy { max_batch: cfg.batch, max_wait: cfg.max_wait };
         // ready-barrier: surface artifact/compile errors to the caller
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
-            let rx = rx.clone();
+            let queue = queue.clone();
             let metrics = metrics.clone();
             let policy = policy.clone();
             let cfg = cfg.clone();
@@ -161,11 +176,7 @@ impl Coordinator {
                 };
                 let batcher = Batcher::new(policy);
                 loop {
-                    let reqs = {
-                        let rx = rx.lock().unwrap();
-                        batcher.collect(&rx)
-                    };
-                    let Some(reqs) = reqs else { break };
+                    let Some(reqs) = batcher.collect(&queue) else { break };
                     if reqs.is_empty() {
                         continue;
                     }
@@ -179,12 +190,18 @@ impl Coordinator {
         }
         drop(ready_tx);
         for _ in 0..cfg.workers.max(1) {
-            ready_rx
+            let ready = ready_rx
                 .recv()
-                .map_err(|_| anyhow!("worker died during setup"))??;
+                .map_err(|_| anyhow!("worker died during setup"))
+                .and_then(|r| r);
+            if let Err(e) = ready {
+                // let the workers that did come up exit cleanly
+                queue.close();
+                return Err(e);
+            }
         }
         Ok(Coordinator {
-            tx,
+            queue,
             next_id: AtomicU64::new(0),
             metrics,
             workers,
@@ -198,8 +215,8 @@ impl Coordinator {
         anyhow::ensure!(image.len() == self.image_len, "bad image size");
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Request { id, image, respond: rtx, enqueued: Instant::now() })
+        self.queue
+            .push(Request { id, image, respond: rtx, enqueued: Instant::now() })
             .map_err(|_| anyhow!("coordinator stopped"))?;
         Ok(rrx)
     }
@@ -209,28 +226,108 @@ impl Coordinator {
     }
 
     /// Stop workers and drain.
-    pub fn shutdown(self) {
-        drop(self.tx);
-        for w in self.workers {
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
     }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // close the queue so workers exit even without an explicit
+        // shutdown() (e.g. a panicking test); threads are not joined here
+        self.queue.close();
+    }
+}
+
+/// Exact integer side length of a square HWC image with 3 channels.
+/// Float sqrt alone can truncate (e.g. yield 223 for a 224x224 image), so
+/// round then verify, and reject non-square inputs with a clear error.
+fn image_side(image_len: usize) -> Result<i64> {
+    anyhow::ensure!(
+        image_len > 0 && image_len % 3 == 0,
+        "image length {image_len} is not HWC with 3 channels"
+    );
+    let pixels = (image_len / 3) as u64;
+    let mut s = (pixels as f64).sqrt().round() as u64;
+    while s > 0 && s * s > pixels {
+        s -= 1;
+    }
+    while (s + 1) * (s + 1) <= pixels {
+        s += 1;
+    }
+    anyhow::ensure!(
+        s * s == pixels,
+        "non-square image: {image_len} values = {pixels} pixels/channel"
+    );
+    Ok(s as i64)
 }
 
 fn run_batch(exe: &crate::runtime::Executable, extra: &[xla::Literal],
              reqs: Vec<Request>, batch: usize, classes: usize,
              image_first: bool, metrics: &Metrics) -> Result<()> {
     let n = reqs.len();
+    match exec_batch(exe, extra, &reqs, batch, classes, image_first) {
+        Ok((logits, exec_us)) => {
+            metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .padded_slots
+                .fetch_add((batch - n) as u64, Ordering::Relaxed);
+            metrics.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+            for (i, r) in reqs.into_iter().enumerate() {
+                let total_us = r.enqueued.elapsed().as_micros() as u64;
+                let queue_us = total_us.saturating_sub(exec_us);
+                metrics.queue_us_total.fetch_add(queue_us, Ordering::Relaxed);
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    queue_us,
+                    exec_us,
+                    batch_size: n,
+                    error: None,
+                });
+            }
+            Ok(())
+        }
+        Err(e) => {
+            // don't drop the requests: answer every caller with the cause
+            // and count the failures
+            metrics.failed.fetch_add(n as u64, Ordering::Relaxed);
+            let msg = format!("{e:#}");
+            for r in reqs {
+                let queue_us = r.enqueued.elapsed().as_micros() as u64;
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    logits: Vec::new(),
+                    queue_us,
+                    exec_us: 0,
+                    batch_size: n,
+                    error: Some(msg.clone()),
+                });
+            }
+            Err(e)
+        }
+    }
+}
+
+/// The fallible half of a batch: assemble, execute, validate.
+fn exec_batch(exe: &crate::runtime::Executable, extra: &[xla::Literal],
+              reqs: &[Request], batch: usize, classes: usize,
+              image_first: bool) -> Result<(Vec<f32>, u64)> {
+    let n = reqs.len();
     let image_len = reqs[0].image.len();
     let mut data = Vec::with_capacity(batch * image_len);
-    for r in &reqs {
+    for r in reqs {
         data.extend_from_slice(&r.image);
     }
     // pad the tail by repeating the last image (results discarded)
     for _ in n..batch {
         data.extend_from_slice(&reqs[n - 1].image);
     }
-    let side = ((image_len / 3) as f64).sqrt() as i64;
+    let side = image_side(image_len)?;
     let images = runtime::lit_f32(&data, &[batch as i64, side, side, 3])?;
     let mut inputs: Vec<&xla::Literal> = Vec::new();
     if image_first {
@@ -245,26 +342,7 @@ fn run_batch(exe: &crate::runtime::Executable, extra: &[xla::Literal],
     let exec_us = t0.elapsed().as_micros() as u64;
     let logits = runtime::to_f32_vec(&out[0])?;
     anyhow::ensure!(logits.len() == batch * classes, "bad logits size");
-
-    metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .padded_slots
-        .fetch_add((batch - n) as u64, Ordering::Relaxed);
-    metrics.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
-    for (i, r) in reqs.into_iter().enumerate() {
-        let total_us = r.enqueued.elapsed().as_micros() as u64;
-        let queue_us = total_us.saturating_sub(exec_us);
-        metrics.queue_us_total.fetch_add(queue_us, Ordering::Relaxed);
-        let _ = r.respond.send(Response {
-            id: r.id,
-            logits: logits[i * classes..(i + 1) * classes].to_vec(),
-            queue_us,
-            exec_us,
-            batch_size: n,
-        });
-    }
-    Ok(())
+    Ok((logits, exec_us))
 }
 
 #[cfg(test)]
@@ -279,6 +357,35 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=10"));
         assert!(s.contains("avg_batch=5.0"));
+        assert!(s.contains("failed=0"));
+    }
+
+    #[test]
+    fn metrics_pad_frac_zero_when_unserved() {
+        // regression: the old max(1) clamp reported a bogus fraction for
+        // an idle coordinator
+        let m = Metrics::default();
+        assert!(m.summary().contains("pad_frac=0.000"), "{}", m.summary());
+        m.padded_slots.store(3, Ordering::Relaxed);
+        m.requests.store(1, Ordering::Relaxed);
+        assert!(m.summary().contains("pad_frac=0.750"), "{}", m.summary());
+    }
+
+    #[test]
+    fn image_side_is_exact() {
+        // the float-truncation regression: 224*224*3 must give 224
+        for side in [1u64, 3, 28, 32, 223, 224, 225, 1024] {
+            let len = (side * side * 3) as usize;
+            assert_eq!(image_side(len).unwrap(), side as i64, "side {side}");
+        }
+    }
+
+    #[test]
+    fn image_side_rejects_bad_shapes() {
+        assert!(image_side(0).is_err());
+        assert!(image_side(4).is_err()); // not divisible by 3
+        assert!(image_side(3 * 5).is_err()); // 5 pixels: not square
+        assert!(image_side((224 * 224 - 1) * 3).is_err());
     }
 
     #[test]

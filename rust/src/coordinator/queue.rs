@@ -1,0 +1,197 @@
+//! Multi-consumer request queue: `Mutex<VecDeque>` + `Condvar`, the
+//! replacement for the old `Mutex<mpsc::Receiver>` hand-off that
+//! serialized every worker on one batch collection (the lock used to be
+//! held across a blocking `recv()` *and* the whole `max_wait` fill
+//! window; here the lock is released whenever a consumer waits).
+//!
+//! Fairness rule: consumers waiting for their *first* item (idle workers)
+//! have priority over consumers filling a partial batch — a filling
+//! worker only absorbs *surplus* items beyond what the idle waiters will
+//! take. Under load batches fill instantly; under light load arrivals
+//! start new batches on idle workers instead of queueing behind one
+//! worker's fill window, which is what lets N workers collect and execute
+//! concurrently.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+pub struct SharedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    /// consumers currently blocked in [`SharedQueue::pop_wait`]
+    idle_waiters: usize,
+}
+
+/// Outcome of a fill-window pop.
+pub enum FillPop<T> {
+    Item(T),
+    TimedOut,
+    Closed,
+}
+
+impl<T> Default for SharedQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> SharedQueue<T> {
+    pub fn new() -> Self {
+        SharedQueue {
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+                idle_waiters: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item; `Err(item)` once the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        drop(g);
+        // notify_all: a notify_one could land on a filling worker that the
+        // fairness rule forbids from taking the item
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Close the queue: producers fail, consumers drain what is left.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Consumers currently blocked waiting for a first item (exposed for
+    /// the multi-worker progress tests and metrics).
+    pub fn idle_waiters(&self) -> usize {
+        self.inner.lock().unwrap().idle_waiters
+    }
+
+    /// Block until an item is available (a batch's first request) or the
+    /// queue is closed and drained (`None` = shutdown).
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g.idle_waiters += 1;
+            g = self.cv.wait(g).unwrap();
+            g.idle_waiters -= 1;
+        }
+    }
+
+    /// Pop an item for a partial batch, waiting until `deadline`. Only
+    /// takes *surplus* items (beyond the idle waiters' claim — see the
+    /// module fairness rule). `Closed` means the batch should be flushed
+    /// as-is.
+    pub fn pop_surplus_until(&self, deadline: Instant) -> FillPop<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.q.len() > g.idle_waiters {
+                return FillPop::Item(g.q.pop_front().unwrap());
+            }
+            if g.closed {
+                return FillPop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return FillPop::TimedOut;
+            }
+            let (g2, _timeout) =
+                self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = SharedQueue::new();
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop_wait(), Some(i));
+        }
+    }
+
+    #[test]
+    fn close_rejects_push_and_drains() {
+        let q = SharedQueue::new();
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2), Err(2));
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn pop_wait_unblocks_on_close() {
+        let q = Arc::new(SharedQueue::<u32>::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_wait());
+        while q.idle_waiters() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn surplus_pop_respects_idle_waiters() {
+        let q = Arc::new(SharedQueue::<u32>::new());
+        let q2 = q.clone();
+        // one idle consumer waiting for its first item
+        let h = std::thread::spawn(move || q2.pop_wait());
+        while q.idle_waiters() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // a single queued item is reserved for the idle waiter
+        q.push(7).unwrap();
+        // the idle waiter must get it (a filler would see no surplus);
+        // wait for the hand-off to complete
+        assert_eq!(h.join().unwrap(), Some(7));
+        // with no idle waiters, a filler takes items immediately
+        q.push(8).unwrap();
+        match q.pop_surplus_until(Instant::now()) {
+            FillPop::Item(v) => assert_eq!(v, 8),
+            _ => panic!("expected surplus item"),
+        }
+        // empty queue + passed deadline -> timeout
+        match q.pop_surplus_until(Instant::now()) {
+            FillPop::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+    }
+}

@@ -4,6 +4,7 @@
 
 use crate::config::{AcceleratorConfig, Precision};
 use crate::energy;
+use crate::util::pool;
 
 #[derive(Debug, Clone)]
 pub struct DsePoint {
@@ -76,7 +77,10 @@ pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
 /// The Fig. 11 sweep: N in {32..256}, D in {1,2,4}, M in {16..128},
 /// A in {1..8}, S derived (1 NNS+A per array or shared).
 pub fn sweep() -> Vec<DsePoint> {
-    let mut points = Vec::new();
+    // materialize the ~600-point grid in sequential order, then partition
+    // the evaluations across the worker pool; pool::map preserves index
+    // order, so the feasible-point list is identical at any thread count
+    let mut grid = Vec::new();
     for &xbar in &[32u32, 64, 128, 256] {
         for &pd in &[1u32, 2, 4] {
             for &m in &[16u32, 32, 64, 96, 128] {
@@ -88,15 +92,13 @@ pub fn sweep() -> Vec<DsePoint> {
                         cfg.arrays_per_pe = m;
                         cfg.adcs_per_pe = a;
                         cfg.sa_per_array = s;
-                        if let Some(pt) = evaluate(&cfg) {
-                            points.push(pt);
-                        }
+                        grid.push(cfg);
                     }
                 }
             }
         }
     }
-    points
+    pool::map(&grid, evaluate).into_iter().flatten().collect()
 }
 
 /// Best point of the sweep (the paper's N128-D4-A4-S64 M64 at

@@ -14,8 +14,8 @@
 //!   artifacts, and the inference coordinator. Python never runs at
 //!   request time.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See DESIGN.md for the experiment index (which bench regenerates which
+//! paper figure/table) and the module map.
 
 pub mod arch;
 pub mod baselines;

@@ -35,10 +35,13 @@ COMMANDS (need `make artifacts`):
 OPTIONS:
   --artifacts DIR           artifact directory (default: ./artifacts)
   --seed S                  PRNG seed (default 42)
+  --threads N               worker threads for the parallel sweeps
+                            (simulate/dse/mc; default: all cores)
 ";
 
 fn main() {
     let args = Args::from_env();
+    neural_pim::util::pool::set_threads(args.threads());
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -286,6 +289,9 @@ fn serve(args: &Args) -> Result<()> {
     let mut lat_ms = Vec::new();
     for (rx, label) in pending {
         let resp = rx.recv()?;
+        if let Some(err) = &resp.error {
+            bail!("request {} failed in its batch: {err}", resp.id);
+        }
         lat_ms.push((resp.queue_us + resp.exec_us) as f64 / 1000.0);
         let pred = resp
             .logits

@@ -8,29 +8,31 @@
 //! of Fig. 10), and (b) the Eq.-(13) noise-to-accuracy machinery.
 
 use crate::arch::crossbar::Group;
+use crate::util::pool;
 use crate::util::rng::Pcg;
 use crate::util::stats;
 
-/// Draw a correlated (realistic) input batch for a random kernel: inputs
+/// Draw one correlated (realistic) input vector for a kernel: inputs
 /// biased along the kernel's sign pattern, like post-ReLU activations
 /// against a trained filter (see model.py's rationale).
+pub fn correlated_sample(rng: &mut Pcg, w: &[i32]) -> Vec<u32> {
+    let corr = rng.range(-1.0, 1.0);
+    w.iter()
+        .map(|wi| {
+            let base = rng.below(128) as f64;
+            let v = base + corr * 127.0 * (wi.signum() as f64);
+            v.round().clamp(0.0, 255.0) as u32
+        })
+        .collect()
+}
+
+/// A random kernel plus `n` correlated input vectors drawn from one
+/// sequential stream (see [`correlated_sample`]).
 pub fn correlated_batch(rng: &mut Pcg, n: usize, rows: usize)
                         -> (Group, Vec<Vec<u32>>) {
     let w: Vec<i32> = (0..rows).map(|_| rng.below(255) as i32 - 127).collect();
-    let group = Group { w: w.clone() };
-    let mut xs = Vec::with_capacity(n);
-    for _ in 0..n {
-        let corr = rng.range(-1.0, 1.0);
-        let x: Vec<u32> = w
-            .iter()
-            .map(|wi| {
-                let base = rng.below(128) as f64;
-                let v = base + corr * 127.0 * (wi.signum() as f64);
-                v.round().clamp(0.0, 255.0) as u32
-            })
-            .collect();
-        xs.push(x);
-    }
+    let group = Group { w };
+    let xs = (0..n).map(|_| correlated_sample(rng, &group.w)).collect();
     (group, xs)
 }
 
@@ -39,22 +41,38 @@ pub fn correlated_batch(rng: &mut Pcg, n: usize, rows: usize)
 /// Strategy A: ISAAC's multiplicative quantization noise (8-bit ADC per
 /// conversion); Strategy B: CASCADE's 6-bit buffer cells + write
 /// variation. The Neural-PIM marker comes from the PJRT MC experiment.
+///
+/// Each Monte-Carlo trial runs on its own [`Pcg::fork`]ed stream (forked
+/// sequentially from the master seed up front), so the trials parallelize
+/// across the worker pool while the result stays bit-identical to a
+/// sequential run at any `--threads` count.
 pub fn strategy_sinad(strategy: char, n: usize, seed: u64) -> f64 {
-    let mut rng = Pcg::new(seed);
-    let (group, xs) = correlated_batch(&mut rng, n, 128);
-    let mut d_sw = Vec::with_capacity(n);
-    let mut d_hw = Vec::with_capacity(n);
-    for x in &xs {
-        let d = group.dot(x) as f64;
-        d_sw.push(d);
+    strategy_sinad_with(pool::threads(), strategy, n, seed)
+}
+
+/// [`strategy_sinad`] at an explicit worker count (the determinism tests
+/// compare 1/2/8 without touching the process-global pool size).
+fn strategy_sinad_with(n_threads: usize, strategy: char, n: usize,
+                       seed: u64) -> f64 {
+    let mut master = Pcg::new(seed);
+    let w: Vec<i32> =
+        (0..128).map(|_| master.below(255) as i32 - 127).collect();
+    let group = Group { w };
+    let streams: Vec<Pcg> = (0..n).map(|t| master.fork(t as u64)).collect();
+    let pairs: Vec<(f64, f64)> = pool::map_with(n_threads, &streams, |stream| {
+        let mut rng = stream.clone();
+        let x = correlated_sample(&mut rng, &group.w);
+        let d = group.dot(&x) as f64;
         let hw = match strategy {
-            'A' => group.strategy_a(x, 1, 255.0, 128),
-            'B' => strategy_b_once(&group, x, &mut rng),
-            'C' => group.strategy_c(x, 4, 255.0, 128.0 * 255.0 * 127.0),
+            'A' => group.strategy_a(&x, 1, 255.0, 128),
+            'B' => strategy_b_once(&group, &x, &mut rng),
+            'C' => group.strategy_c(&x, 4, 255.0, 128.0 * 255.0 * 127.0),
             _ => panic!("unknown strategy"),
         };
-        d_hw.push(hw);
-    }
+        (hw, d)
+    });
+    let d_hw: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let d_sw: Vec<f64> = pairs.iter().map(|p| p.1).collect();
     stats::sinad_db(&d_hw, &d_sw)
 }
 
@@ -149,6 +167,17 @@ mod tests {
         let b = strategy_sinad('B', 400, 2);
         let c = strategy_sinad('C', 400, 2);
         assert!(c > b, "C {c} vs B {b}");
+    }
+
+    #[test]
+    fn strategy_sinad_thread_count_invariant() {
+        // same seed => bit-identical SINAD at 1, 2, and 8 threads (the
+        // per-trial forked streams make the MC order-independent)
+        let base = strategy_sinad_with(1, 'B', 96, 11).to_bits();
+        for t in [2usize, 8] {
+            let got = strategy_sinad_with(t, 'B', 96, 11).to_bits();
+            assert_eq!(got, base, "threads = {t}");
+        }
     }
 
     #[test]

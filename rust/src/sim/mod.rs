@@ -14,6 +14,7 @@ use crate::config::{AcceleratorConfig, Architecture};
 use crate::dataflow;
 use crate::energy::{self, constants as k};
 use crate::mapping::{self, NetworkMapping};
+use crate::util::pool;
 use crate::workloads::Network;
 
 /// Energy per inference, by component class (Fig. 13's categories).
@@ -229,12 +230,17 @@ pub struct SystemComparison {
 pub fn run_system_comparison(nets: &[Network]) -> SystemComparison {
     let np = AcceleratorConfig::neural_pim();
     let reference_area = energy::chip_budget(&np).area();
-    let mut results = Vec::new();
-    for net in nets {
-        for arch in Architecture::all() {
-            results.push(simulate_iso_area(net, arch, reference_area));
-        }
-    }
+    // every (network, architecture) pair is independent: evaluate them
+    // across the worker pool, in the same order the sequential loop used
+    // (pool::map reassembles by index, so results are identical at any
+    // thread count)
+    let pairs: Vec<(&Network, Architecture)> = nets
+        .iter()
+        .flat_map(|net| Architecture::all().into_iter().map(move |a| (net, a)))
+        .collect();
+    let results = pool::map(&pairs, |&(net, arch)| {
+        simulate_iso_area(net, arch, reference_area)
+    });
     SystemComparison { results, reference_area }
 }
 

@@ -68,6 +68,13 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer")))
             .unwrap_or(default)
     }
+
+    /// Worker-pool size requested via `--threads N`; 0 (the default when
+    /// the flag is absent) means "auto" — feed it straight to
+    /// [`crate::util::pool::set_threads`].
+    pub fn threads(&self) -> usize {
+        self.get_usize("threads", 0)
+    }
 }
 
 #[cfg(test)]
@@ -100,5 +107,12 @@ mod tests {
         let a = Args::parse(&argv(&[]));
         assert_eq!(a.get_or("x", "y"), "y");
         assert_eq!(a.get_f64("z", 1.5), 1.5);
+    }
+
+    #[test]
+    fn threads_flag() {
+        assert_eq!(Args::parse(&argv(&[])).threads(), 0);
+        assert_eq!(Args::parse(&argv(&["--threads", "8"])).threads(), 8);
+        assert_eq!(Args::parse(&argv(&["--threads=2"])).threads(), 2);
     }
 }

@@ -1,0 +1,175 @@
+//! Dependency-free scoped worker pool (the offline registry has no
+//! `rayon`/`tokio`): `std::thread::scope` workers pulling indices from a
+//! shared atomic counter (work stealing at item granularity).
+//!
+//! The contract every caller relies on: **results are bit-identical to a
+//! sequential run regardless of thread count**. `map` reassembles results
+//! by input index, so any per-item computation that is itself
+//! deterministic (e.g. a Monte-Carlo trial on a pre-forked `Pcg` stream)
+//! yields the same output at `--threads 1` and `--threads 8`.
+//!
+//! The pool size is process-global, defaulting to the machine's available
+//! parallelism, and is wired to the `--threads` CLI flag by `main.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Configured thread count; 0 means "auto" (available parallelism).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the pool size for subsequent `map`/`for_each_indexed` calls.
+/// `0` restores the default (all available cores).
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The pool size `map` will use: the `set_threads` override, or the
+/// machine's available parallelism (at least 1).
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Parallel map preserving input order: `out[i] == f(&items[i])`.
+pub fn map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    map_with(threads(), items, f)
+}
+
+/// [`map`] with an explicit worker count (used by the determinism tests
+/// and the sequential-vs-parallel benches; does not touch the global).
+pub fn map_with<T, R, F>(n_threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n_threads = n_threads.max(1).min(items.len());
+    if n_threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(n_threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("pool worker panicked"));
+        }
+    });
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in parts.into_iter().flatten() {
+        debug_assert!(out[i].is_none(), "index {i} produced twice");
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|r| r.expect("pool lost a result"))
+        .collect()
+}
+
+/// Run `f(i, &items[i])` for every index across the pool. No result
+/// collection; use for side-effecting sweeps (e.g. filling a pre-sized
+/// output buffer through interior mutability or per-index files).
+pub fn for_each_indexed<T, F>(items: &[T], f: F)
+where
+    T: Sync,
+    F: Fn(usize, &T) + Sync,
+{
+    let n_threads = threads().max(1).min(items.len());
+    if n_threads <= 1 {
+        for (i, t) in items.iter().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                f(i, &items[i]);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn map_matches_sequential_at_any_thread_count() {
+        let items: Vec<u64> = (0..257).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for t in [1usize, 2, 3, 8, 64] {
+            let par = map_with(t, &items, |x| x * x + 1);
+            assert_eq!(par, seq, "threads = {t}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(map_with(8, &empty, |x| *x).is_empty());
+        assert_eq!(map_with(8, &[41u32], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn map_is_bitwise_thread_count_invariant_for_floats() {
+        // per-item float work must reassemble identically: the pool only
+        // changes *where* an item runs, never its inputs or order
+        let items: Vec<f64> = (0..100).map(|i| i as f64 * 0.7).collect();
+        let f = |x: &f64| (x.sin() * 1e6).ln_1p() / (x + 1.0);
+        let bits = |v: Vec<f64>| -> Vec<u64> {
+            v.into_iter().map(f64::to_bits).collect()
+        };
+        let one = bits(map_with(1, &items, f));
+        for t in [2usize, 5, 8] {
+            assert_eq!(bits(map_with(t, &items, f)), one, "threads = {t}");
+        }
+    }
+
+    #[test]
+    fn for_each_indexed_visits_every_index_once() {
+        let items: Vec<usize> = (0..301).collect();
+        let seen = Mutex::new(vec![0u32; items.len()]);
+        for_each_indexed(&items, |i, &v| {
+            assert_eq!(i, v);
+            seen.lock().unwrap()[i] += 1;
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn thread_count_configuration() {
+        assert!(threads() >= 1);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+    }
+}

@@ -157,6 +157,14 @@ mod tests {
     }
 
     #[test]
+    fn below_one_is_always_zero() {
+        let mut rng = Pcg::new(12);
+        for _ in 0..100 {
+            assert_eq!(rng.below(1), 0);
+        }
+    }
+
+    #[test]
     fn below_is_unbiased() {
         let mut rng = Pcg::new(3);
         let mut counts = [0usize; 7];

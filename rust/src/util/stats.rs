@@ -130,6 +130,30 @@ mod tests {
     }
 
     #[test]
+    fn empty_input_edge_cases() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // min/max of nothing are the fold identities — callers guard
+        assert_eq!(min(&[]), f64::INFINITY);
+        assert_eq!(max(&[]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn single_element_edge_cases() {
+        let v = [7.5];
+        assert_eq!(mean(&v), 7.5);
+        assert_eq!(std(&v), 0.0);
+        assert!((geomean(&v) - 7.5).abs() < 1e-12);
+        for p in [0.0, 37.0, 50.0, 100.0] {
+            assert_eq!(percentile(&v, p), 7.5, "p = {p}");
+        }
+        assert_eq!(min(&v), 7.5);
+        assert_eq!(max(&v), 7.5);
+    }
+
+    #[test]
     fn percentile_interpolates() {
         let v = [10.0, 20.0, 30.0, 40.0];
         assert!((percentile(&v, 0.0) - 10.0).abs() < 1e-12);

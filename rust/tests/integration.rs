@@ -10,9 +10,10 @@ use neural_pim::config::{AcceleratorConfig, Architecture, Precision};
 use neural_pim::coordinator::{Coordinator, CoordinatorConfig, ExtraInput};
 use neural_pim::periph::Periph;
 use neural_pim::runtime::{self, Runtime};
+use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
 use neural_pim::util::stats;
-use neural_pim::{dataflow, mapping, noise, sim, workloads};
+use neural_pim::{dataflow, dse, mapping, noise, sim, workloads};
 
 fn runtime_or_skip() -> Option<Runtime> {
     match Runtime::new(&neural_pim::artifact_dir()) {
@@ -265,6 +266,88 @@ fn neural_pim_wins_headline_metrics_full_suite() {
     assert!(t_i > 1.5, "throughput vs ISAAC {t_i}");
     assert!(t_c > 1.0, "throughput vs CASCADE {t_c}");
     assert!(e_i > e_c && t_i > t_c, "ISAAC must be the weaker baseline");
+}
+
+// ---------------------------------------------------------------------------
+// parallel evaluation engine: thread-count invariance
+//
+// These three tests mutate the process-global pool size and run
+// concurrently in this binary; that is safe *because* the property they
+// assert is exactly that outputs are identical at any thread count — an
+// interleaved set_threads can change where work runs, never its result.
+// ---------------------------------------------------------------------------
+
+/// Fingerprint of a full system comparison, bit-exact.
+fn sim_fingerprint(cmp: &sim::SystemComparison) -> Vec<(String, u64, u64, u64)> {
+    cmp.results
+        .iter()
+        .map(|r| {
+            (
+                format!("{}/{:?}", r.network, r.arch),
+                r.energy_per_inference.to_bits(),
+                r.throughput_gops.to_bits(),
+                r.latency_s.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn system_comparison_is_thread_count_invariant() {
+    let nets = workloads::all_benchmarks();
+    let mut base = None;
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let fp = sim_fingerprint(&sim::run_system_comparison(&nets));
+        pool::set_threads(0);
+        match &base {
+            None => base = Some(fp),
+            Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),
+        }
+    }
+}
+
+#[test]
+fn dse_sweep_is_thread_count_invariant() {
+    let mut base: Option<Vec<(String, u64, u64)>> = None;
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let fp: Vec<(String, u64, u64)> = dse::sweep()
+            .iter()
+            .map(|p| {
+                (
+                    p.label.clone(),
+                    p.compute_efficiency.to_bits(),
+                    p.energy_efficiency.to_bits(),
+                )
+            })
+            .collect();
+        pool::set_threads(0);
+        match &base {
+            None => {
+                assert!(fp.len() > 50, "sweep too small: {}", fp.len());
+                base = Some(fp);
+            }
+            Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),
+        }
+    }
+}
+
+#[test]
+fn noise_mc_is_thread_count_invariant() {
+    let mut base = None;
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let fp: Vec<u64> = ['A', 'B', 'C']
+            .iter()
+            .map(|&s| noise::strategy_sinad(s, 128, 5).to_bits())
+            .collect();
+        pool::set_threads(0);
+        match &base {
+            None => base = Some(fp),
+            Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),
+        }
+    }
 }
 
 #[test]

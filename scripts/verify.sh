@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (see ROADMAP.md): build, test, format check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+# Advisory until the tree has been run through rustfmt once (the seed
+# predates the gate); flip to a hard failure after that cleanup PR.
+cargo fmt --check || echo "WARN: rustfmt differences (advisory for now)"
+echo "verify OK"
