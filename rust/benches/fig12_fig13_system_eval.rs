@@ -15,6 +15,7 @@ fn main() {
     r.table_energy.print();
     r.table_throughput.print();
     r.table_breakdown.print();
+    r.table_latency.print();
     println!("{}\n", r.headline);
 
     bench("full 9-benchmark x 3-architecture simulation", 1, 10, || {

@@ -4,7 +4,15 @@
 //! The simulator charges average-hop energy; this module provides the
 //! exact router grid, XY routes, and a contention-free latency model the
 //! property tests exercise (routing reachability / determinism), plus
-//! the per-flit energy used by `sim/`.
+//! the per-flit energy used by `sim/`. The contention-aware queueing
+//! refinement lives in `event::noc`, which layers per-port occupancy on
+//! the same XY routes and reduces to [`CMesh::transfer_latency_ns`]
+//! exactly when no two transfers share a port.
+//!
+//! **Zero-hop convention:** tiles concentrated on the same router still
+//! cross that router's local crossbar, so *both* `transfer_energy` and
+//! `transfer_latency_ns` clamp the hop count to at least 1. A transfer
+//! is never free, even to a neighbouring tile.
 
 use crate::energy::constants as k;
 
@@ -51,22 +59,63 @@ impl CMesh {
         path
     }
 
-    /// Average hop count over uniform-random tile pairs (closed form for
-    /// a side-`s` mesh: 2 * (s^2 - 1) / (3 s) per dimension pair).
-    pub fn average_hops(&self) -> f64 {
-        let s = self.side as f64;
-        2.0 * (s * s - 1.0) / (3.0 * s)
+    /// Routers actually occupied by at least one tile (the grid's last
+    /// row may be partial when `tiles / concentration < side²`).
+    pub fn occupied_routers(&self) -> u32 {
+        self.tiles.div_ceil(self.concentration).max(1)
     }
 
-    /// Energy to move `bytes` across `hops` routers.
+    /// Exact average hop count over all ordered tile pairs (including
+    /// same-tile pairs, which contribute 0 hops).
+    ///
+    /// The old closed form `2(s²−1)/(3s)` assumes every slot of the s×s
+    /// router grid is occupied; with a partial last row (e.g. 12 routers
+    /// on a 4-wide mesh) it overestimates. Here we weight each router
+    /// pair by the number of tiles it concentrates, which is exact for
+    /// any tile count — O(R²) over occupied routers, cheap at the tile
+    /// counts the simulator uses.
+    pub fn average_hops(&self) -> f64 {
+        if self.tiles == 0 {
+            return 0.0;
+        }
+        let routers = self.occupied_routers();
+        // tiles per occupied router: `concentration`, except the last
+        // router which holds the remainder
+        let tiles_on = |r: u32| -> u64 {
+            let lo = r as u64 * self.concentration as u64;
+            let hi = (lo + self.concentration as u64).min(self.tiles as u64);
+            hi - lo
+        };
+        let coord = |r: u32| (r % self.side, r / self.side);
+        let mut weighted = 0u128;
+        for a in 0..routers {
+            let wa = tiles_on(a);
+            if wa == 0 {
+                continue;
+            }
+            for b in 0..routers {
+                let (ax, ay) = coord(a);
+                let (bx, by) = coord(b);
+                let h = (ax.abs_diff(bx) + ay.abs_diff(by)) as u128;
+                weighted += wa as u128 * tiles_on(b) as u128 * h;
+            }
+        }
+        let pairs = self.tiles as u128 * self.tiles as u128;
+        weighted as f64 / pairs as f64
+    }
+
+    /// Energy to move `bytes` across `hops` routers (min 1: see the
+    /// zero-hop convention in the module docs).
     pub fn transfer_energy(&self, bytes: u64, hops: u32) -> f64 {
         bytes as f64 * k::NOC_E_BYTE * (hops.max(1)) as f64
     }
 
-    /// Contention-free transfer latency in ns (1 cycle/hop at 1 GHz +
-    /// serialization at 32 B/cycle).
+    /// Contention-free transfer latency in ns: 1 cycle per hop at the
+    /// 1 GHz NoC clock — clamped to at least one router traversal, the
+    /// same zero-hop convention `transfer_energy` uses — plus
+    /// serialization at 32 B/cycle (at least one flit).
     pub fn transfer_latency_ns(&self, bytes: u64, hops: u32) -> f64 {
-        hops as f64 + bytes.div_ceil(32) as f64
+        hops.max(1) as f64 + bytes.div_ceil(32).max(1) as f64
     }
 }
 
@@ -125,5 +174,90 @@ mod tests {
         let mesh = CMesh::new(280, 4); // 70 routers -> side 9
         let avg = mesh.average_hops();
         assert!(avg > 2.0 && avg < 9.0, "avg {avg}");
+    }
+
+    #[test]
+    fn average_hops_matches_brute_force() {
+        // exact mean over ALL ordered tile pairs, incl. partial router
+        // grids and a partially-filled last router
+        for (tiles, conc) in
+            [(280u32, 4u32), (48, 4), (46, 4), (12, 1), (1, 1), (7, 2),
+             (100, 8), (33, 1), (512, 8)]
+        {
+            let mesh = CMesh::new(tiles, conc);
+            let mut sum = 0u64;
+            for a in 0..tiles {
+                for b in 0..tiles {
+                    sum += mesh.hops(a, b) as u64;
+                }
+            }
+            let brute = sum as f64 / (tiles as f64 * tiles as f64);
+            let fast = mesh.average_hops();
+            assert!(
+                (fast - brute).abs() < 1e-9,
+                "tiles {tiles} conc {conc}: fast {fast} vs brute {brute}"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_grid_average_below_old_closed_form() {
+        // 12 routers on a 4-wide mesh (3 of 4 rows occupied): the old
+        // closed form 2(s²−1)/(3s) assumed the full 4x4 grid and
+        // overestimated
+        let mesh = CMesh::new(48, 4);
+        assert_eq!(mesh.occupied_routers(), 12);
+        assert_eq!(mesh.side, 4);
+        let closed_form = 2.0 * (16.0 - 1.0) / (3.0 * 4.0);
+        assert!(
+            mesh.average_hops() < closed_form - 0.1,
+            "exact {} vs closed form {closed_form}",
+            mesh.average_hops()
+        );
+    }
+
+    #[test]
+    fn zero_hop_convention_unified() {
+        let mesh = CMesh::new(280, 4);
+        assert_eq!(mesh.hops(0, 3), 0); // tiles 0..3 share router 0
+        // both energy and latency charge exactly one router traversal
+        // for a local transfer — a 0-hop transfer costs the same as a
+        // 1-hop one, and never 0
+        assert!(mesh.transfer_energy(64, 0) > 0.0);
+        assert!(
+            (mesh.transfer_energy(64, 0) - mesh.transfer_energy(64, 1)).abs()
+                < 1e-30
+        );
+        assert!(
+            (mesh.transfer_latency_ns(64, 0) - mesh.transfer_latency_ns(64, 1))
+                .abs()
+                < 1e-12
+        );
+        // 64 B = 2 flits, 1 router traversal -> 3 cycles at 1 GHz
+        assert!((mesh.transfer_latency_ns(64, 0) - 3.0).abs() < 1e-12);
+        // two real hops cost strictly more than the local clamp
+        assert!(mesh.transfer_latency_ns(64, 2) > mesh.transfer_latency_ns(64, 0));
+        assert!(mesh.transfer_energy(64, 2) > mesh.transfer_energy(64, 0));
+        // zero bytes still serialize one flit
+        assert!((mesh.transfer_latency_ns(0, 0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn route_len_matches_hops_plus_one_on_partial_grids() {
+        // the routing property the event NoC relies on, exercised across
+        // meshes whose last router row is partial
+        prop::check("route(a,b).len() == hops(a,b) + 1", 200, |g| {
+            let conc = *g.pick(&[1u32, 2, 4, 8]);
+            let tiles = g.usize_in(1, 300) as u32;
+            let mesh = CMesh::new(tiles, conc);
+            let a = g.usize_in(0, tiles as usize - 1) as u32;
+            let b = g.usize_in(0, tiles as usize - 1) as u32;
+            crate::prop_assert!(
+                mesh.route(a, b).len() as u32 == mesh.hops(a, b) + 1,
+                "route len {} vs hops {}", mesh.route(a, b).len(),
+                mesh.hops(a, b)
+            );
+            Ok(())
+        });
     }
 }

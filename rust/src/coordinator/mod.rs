@@ -22,8 +22,9 @@ use crate::runtime::{self, Runtime};
 use anyhow::{anyhow, Result};
 use batcher::{BatchPolicy, Batcher};
 use queue::SharedQueue;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One inference request: a single image (u8-valued f32 HWC).
@@ -64,6 +65,10 @@ impl ExtraInput {
     }
 }
 
+/// Sliding window of per-request latencies retained for the percentile
+/// summary (bounds memory on long-running deployments).
+pub const LATENCY_WINDOW: usize = 16_384;
+
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -73,9 +78,40 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     pub exec_us_total: AtomicU64,
     pub queue_us_total: AtomicU64,
+    /// most recent per-request total latencies (µs), capped at
+    /// [`LATENCY_WINDOW`]; powers the p50/p99 in [`Metrics::summary`] —
+    /// the same `util::stats::percentile` path the event simulator's
+    /// request-level mode reports through
+    pub lat_us: Mutex<VecDeque<u64>>,
 }
 
 impl Metrics {
+    /// Record one served request's total (queue + exec) latency.
+    pub fn record_latency_us(&self, us: u64) {
+        if let Ok(mut w) = self.lat_us.lock() {
+            if w.len() == LATENCY_WINDOW {
+                w.pop_front();
+            }
+            w.push_back(us);
+        }
+    }
+
+    /// Sorted snapshot of the latency window, in milliseconds (one lock
+    /// acquisition + one sort, however many percentiles are read off it).
+    fn latency_snapshot_ms(&self) -> Vec<f64> {
+        let mut lat: Vec<f64> = match self.lat_us.lock() {
+            Ok(w) => w.iter().map(|&u| u as f64 / 1000.0).collect(),
+            Err(_) => return Vec::new(),
+        };
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat
+    }
+
+    /// Percentile over the retained latency window, in milliseconds.
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        crate::util::stats::percentile_sorted(&self.latency_snapshot_ms(), p)
+    }
+
     pub fn summary(&self) -> String {
         let reqs_raw = self.requests.load(Ordering::Relaxed);
         let pad = self.padded_slots.load(Ordering::Relaxed);
@@ -83,9 +119,11 @@ impl Metrics {
         let pad_frac = if slots == 0 { 0.0 } else { pad as f64 / slots as f64 };
         let reqs = reqs_raw.max(1);
         let batches = self.batches.load(Ordering::Relaxed).max(1);
+        let lat = self.latency_snapshot_ms();
         format!(
             "requests={} failed={} batches={} avg_batch={:.1} pad_frac={:.3} \
-             avg_exec={:.2}ms avg_queue={:.2}ms",
+             avg_exec={:.2}ms avg_queue={:.2}ms lat_p50={:.2}ms \
+             lat_p99={:.2}ms",
             reqs_raw,
             self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -95,6 +133,8 @@ impl Metrics {
                 / 1000.0,
             self.queue_us_total.load(Ordering::Relaxed) as f64 / reqs as f64
                 / 1000.0,
+            crate::util::stats::percentile_sorted(&lat, 50.0),
+            crate::util::stats::percentile_sorted(&lat, 99.0),
         )
     }
 }
@@ -281,6 +321,7 @@ fn run_batch(exe: &crate::runtime::Executable, extra: &[xla::Literal],
                 let total_us = r.enqueued.elapsed().as_micros() as u64;
                 let queue_us = total_us.saturating_sub(exec_us);
                 metrics.queue_us_total.fetch_add(queue_us, Ordering::Relaxed);
+                metrics.record_latency_us(total_us);
                 let _ = r.respond.send(Response {
                     id: r.id,
                     logits: logits[i * classes..(i + 1) * classes].to_vec(),
@@ -358,6 +399,33 @@ mod tests {
         assert!(s.contains("requests=10"));
         assert!(s.contains("avg_batch=5.0"));
         assert!(s.contains("failed=0"));
+    }
+
+    #[test]
+    fn metrics_latency_percentiles() {
+        let m = Metrics::default();
+        // empty window: percentiles report 0 (callers see an idle server)
+        assert_eq!(m.latency_percentile_ms(50.0), 0.0);
+        for us in [1000u64, 2000, 3000, 4000] {
+            m.record_latency_us(us);
+        }
+        assert!((m.latency_percentile_ms(50.0) - 2.5).abs() < 1e-9);
+        assert!((m.latency_percentile_ms(100.0) - 4.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("lat_p50=2.50ms"), "{s}");
+        assert!(s.contains("lat_p99="), "{s}");
+    }
+
+    #[test]
+    fn metrics_latency_window_is_bounded() {
+        let m = Metrics::default();
+        for us in 0..(LATENCY_WINDOW as u64 + 100) {
+            m.record_latency_us(us);
+        }
+        let w = m.lat_us.lock().unwrap();
+        assert_eq!(w.len(), LATENCY_WINDOW);
+        // the oldest 100 samples were evicted
+        assert_eq!(*w.front().unwrap(), 100);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Deterministic discrete-event core: a binary-heap event queue with
+//! stable FIFO tie-breaking, an integer picosecond clock, and the stats
+//! counters the microarchitectural models hook into.
+//!
+//! Determinism contract: one [`Engine`] is strictly sequential — events
+//! pop in `(time, schedule order)` and the clock never moves backwards —
+//! so any model built on it reproduces bit-identically run to run.
+//! Parallelism happens one level up: *independent* engines (replicas or
+//! scenarios) fan out over `util::pool::map`, which reassembles results
+//! by input index, keeping every aggregate bit-identical at any
+//! `--threads` count (the same contract `sim`/`dse`/`noise` rely on).
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Simulation time in integer picoseconds. 2⁶⁴ ps ≈ 213 days of sim
+/// time; an integer clock (not f64) is what makes the tie-breaking —
+/// and therefore the whole simulation — exactly reproducible.
+pub type Time = u64;
+
+pub const PS_PER_NS: Time = 1_000;
+
+/// Convert a (fractional) nanosecond quantity to the integer clock.
+pub fn ns_to_ps(ns: f64) -> Time {
+    (ns * PS_PER_NS as f64).round() as Time
+}
+
+/// Sim time back to seconds (for reporting next to analytical results).
+pub fn ps_to_s(ps: Time) -> f64 {
+    ps as f64 * 1e-12
+}
+
+/// Heap entry: ordered by `(time, seq)` so that simultaneous events pop
+/// in the order they were scheduled (stable FIFO tie-breaking).
+struct Scheduled<E> {
+    time: Time,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Counters every run exposes (the "stats hooks" models aggregate from).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    pub scheduled: u64,
+    pub processed: u64,
+    /// high-water mark of the pending-event queue
+    pub peak_queue: usize,
+}
+
+/// The event queue + clock. `E` is the model's event payload.
+pub struct Engine<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    now: Time,
+    seq: u64,
+    pub stats: EngineStats,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Engine<E> {
+        Engine {
+            heap: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute sim time `at` (clamped to `now`:
+    /// scheduling into the past is a model bug, caught in debug builds).
+    pub fn schedule_at(&mut self, at: Time, event: E) {
+        debug_assert!(at >= self.now, "event scheduled into the past");
+        self.heap.push(Reverse(Scheduled {
+            time: at.max(self.now),
+            seq: self.seq,
+            event,
+        }));
+        self.seq += 1;
+        self.stats.scheduled += 1;
+        self.stats.peak_queue = self.stats.peak_queue.max(self.heap.len());
+    }
+
+    /// Schedule `event` `delay` picoseconds from now.
+    pub fn schedule_in(&mut self, delay: Time, event: E) {
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let Reverse(s) = self.heap.pop()?;
+        self.now = s.time;
+        self.stats.processed += 1;
+        Some((s.time, s.event))
+    }
+
+    /// Drain the queue, handing each event (and the engine, so handlers
+    /// can schedule follow-ups) to `handler`.
+    pub fn run<F: FnMut(&mut Engine<E>, Time, E)>(&mut self, mut handler: F) {
+        while let Some((t, e)) = self.pop() {
+            handler(self, t, e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_fifo_ties() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(5, 1);
+        e.schedule_at(3, 2);
+        e.schedule_at(5, 3); // same time as id 1 -> must pop after it
+        e.schedule_at(0, 4);
+        let order: Vec<(Time, u32)> = std::iter::from_fn(|| e.pop()).collect();
+        assert_eq!(order, vec![(0, 4), (3, 2), (5, 1), (5, 3)]);
+        assert_eq!(e.now(), 5);
+    }
+
+    #[test]
+    fn fifo_ties_hold_for_many_events() {
+        let mut e: Engine<usize> = Engine::new();
+        for i in 0..500 {
+            e.schedule_at(7, i);
+        }
+        for want in 0..500 {
+            assert_eq!(e.pop(), Some((7, want)));
+        }
+    }
+
+    #[test]
+    fn handlers_can_reschedule_and_clock_is_monotone() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_in(10, 3);
+        let mut seen = Vec::new();
+        let mut last = 0;
+        e.run(|eng, t, ev| {
+            assert!(t >= last, "clock went backwards");
+            last = t;
+            seen.push((t, ev));
+            if ev > 0 {
+                eng.schedule_in(7, ev - 1);
+            }
+        });
+        assert_eq!(seen, vec![(10, 3), (17, 2), (24, 1), (31, 0)]);
+        assert_eq!(e.stats.processed, 4);
+        assert_eq!(e.stats.scheduled, 4);
+    }
+
+    #[test]
+    fn stats_track_queue_high_water() {
+        let mut e: Engine<u8> = Engine::new();
+        for i in 0..9 {
+            e.schedule_at(i as Time, i);
+        }
+        assert_eq!(e.stats.peak_queue, 9);
+        while e.pop().is_some() {}
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.stats.processed, 9);
+    }
+
+    #[test]
+    fn time_conversions_round_trip() {
+        assert_eq!(ns_to_ps(100.0), 100_000);
+        assert_eq!(ns_to_ps(50.0), 50_000);
+        assert_eq!(ns_to_ps(0.5), 500);
+        assert!((ps_to_s(1_000_000) - 1e-6).abs() < 1e-20);
+    }
+}

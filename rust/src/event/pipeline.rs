@@ -1,0 +1,401 @@
+//! Tile-stage pipeline with finite inter-stage buffers, NoC transport,
+//! and back-pressure, layered on `mapping::NetworkMapping`.
+//!
+//! Stage `i` is layer `i`'s replicated array group: a deterministic
+//! service time of `stage_cycles(ic) x t_cycle x 9/8` — the same §5.2.4
+//! pacing the analytical simulator uses — serving one inference at a
+//! time. Between stage `i` and `i+1` sits a finite buffer
+//! ([`NetworkMapping::buffer_capacity_infs`]: the consumer's eDRAM
+//! budget, clamped to `[1, MAX_BUF_INFS]` whole inferences). A stage
+//! only starts a job when the downstream buffer has a free slot
+//! (blocking-before-service), which is exactly the back-pressure the
+//! slowest-stage analytical model cannot express. Stage outputs travel
+//! tile-to-tile over the contention-aware [`NocModel`]; the last stage
+//! egresses to tile 0 (the chip's I/O corner).
+//!
+//! Energy is charged per event: when a stage completes a job it charges
+//! `sim::layer_energy(..).total() - noc` (the compute/memory share,
+//! identical to the analytical model), and every NoC delivery charges
+//! `CMesh::transfer_energy` with the transfer's *actual* hop count —
+//! replacing the analytical 1-hop average. HyperTransport is charged per
+//! transfer on multi-chip mappings, mirroring `sim::layer_energy`.
+
+use super::engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Time};
+use super::noc::NocModel;
+use crate::arch::noc::CMesh;
+use crate::config::AcceleratorConfig;
+use crate::energy::{self, constants as k};
+use crate::mapping::{self, NetworkMapping};
+use crate::sim;
+use crate::util::rng::Pcg;
+use crate::workloads::Network;
+use std::collections::VecDeque;
+
+/// Upper clamp on inter-stage buffer depth, in whole inferences: the
+/// IR/OR SRAMs stage only a handful of inference outputs even when a
+/// layer's output is tiny.
+pub const MAX_BUF_INFS: u64 = 8;
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// a new inference enters stage 0's admission queue
+    Arrive { job: u32 },
+    /// stage finished computing a job; output goes on the NoC
+    StageDone { stage: u16, job: u32 },
+    /// a job's activations landed in `stage`'s input buffer
+    Deliver { stage: u16, job: u32 },
+}
+
+struct Stage {
+    service_ps: Time,
+    tile: u32,
+    /// per-job compute+memory energy (layer energy minus its NoC share)
+    compute_e: f64,
+    /// per-transfer HyperTransport charge on multi-chip mappings
+    noc_e_extra: f64,
+    out_bytes: u64,
+    /// jobs delivered and waiting for service (FIFO); length ≤ capacity
+    queue: VecDeque<u32>,
+    busy: bool,
+}
+
+/// One simulated chip instance.
+pub struct PipelineSim {
+    engine: Engine<Ev>,
+    noc: NocModel,
+    stages: Vec<Stage>,
+    /// credits[i]: free slots in stage i's input buffer (i ≥ 1; stage
+    /// 0's admission queue is unbounded — it models the host request
+    /// stream). A producer reserves a slot when it STARTS a job, so a
+    /// finished output always has somewhere to land.
+    credits: Vec<u64>,
+    arrival_ps: Vec<Time>,
+    done_ps: Vec<Time>,
+    energy_j: f64,
+    blocked_starts: u64,
+    egress_tile: u32,
+}
+
+/// Everything a finished run reports.
+#[derive(Debug, Clone)]
+pub struct PipelineRun {
+    pub completed: u64,
+    /// sim time of the last egress
+    pub makespan_s: f64,
+    pub energy_j_total: f64,
+    pub energy_j_per_inference: f64,
+    /// per-job sojourn time (arrival -> egress), in job order
+    pub latency_s: Vec<f64>,
+    pub noc: super::noc::NocStats,
+    pub engine: EngineStats,
+    /// start attempts deferred by downstream back-pressure
+    pub blocked_starts: u64,
+    /// total head-flit NoC queueing across the run
+    pub noc_wait_s: f64,
+}
+
+impl PipelineSim {
+    /// Map `net` on `cfg` and build the event model from the mapping.
+    pub fn new(net: &Network, cfg: &AcceleratorConfig) -> PipelineSim {
+        let m = mapping::map_network(net, cfg);
+        Self::with_mapping(cfg, &m)
+    }
+
+    /// Build from a mapping the caller already computed (avoids a second
+    /// `map_network` and guarantees the event model sees the same
+    /// replication/chip split as whatever evaluated that mapping;
+    /// `map_network` is deterministic, so `new` is equivalent).
+    pub fn with_mapping(cfg: &AcceleratorConfig, m: &NetworkMapping)
+                        -> PipelineSim {
+        assert!(!m.layers.is_empty(), "empty network");
+        let ic = cfg.precision.input_cycles() as u64;
+        let cycle_ps = ns_to_ps(energy::cycle_seconds(cfg) * 1e9);
+        let tiles = m.layer_tiles(cfg);
+        let multi_chip = m.chips > 1;
+        let stages: Vec<Stage> = m
+            .layers
+            .iter()
+            .zip(&tiles)
+            .map(|(lm, &tile)| {
+                // integer 9/8 two-stage overhead; exact for the 100/50 ns
+                // cycles (cycle_ps is a multiple of 8 ps)
+                let service_ps = ((lm.stage_cycles(ic) as u128
+                    * cycle_ps as u128
+                    * 9)
+                    / 8) as Time;
+                let le = sim::layer_energy(lm, cfg, multi_chip);
+                Stage {
+                    service_ps,
+                    tile,
+                    compute_e: le.total() - le.noc,
+                    noc_e_extra: if multi_chip {
+                        lm.out_bytes() as f64 * k::HT_E_BYTE
+                    } else {
+                        0.0
+                    },
+                    out_bytes: lm.out_bytes(),
+                    queue: VecDeque::new(),
+                    busy: false,
+                }
+            })
+            .collect();
+        let mut credits = vec![0u64; stages.len()];
+        for (s, c) in credits.iter_mut().enumerate().skip(1) {
+            *c = m.buffer_capacity_infs(s, cfg.edram_bytes, MAX_BUF_INFS);
+        }
+        PipelineSim {
+            engine: Engine::new(),
+            noc: NocModel::new(CMesh::new(cfg.tiles, cfg.noc_concentration)),
+            stages,
+            credits,
+            arrival_ps: Vec::new(),
+            done_ps: Vec::new(),
+            energy_j: 0.0,
+            blocked_starts: 0,
+            egress_tile: 0,
+        }
+    }
+
+    /// The steady-state pacing of the pipeline: the slowest stage.
+    pub fn bottleneck_period_ps(&self) -> Time {
+        self.stages.iter().map(|s| s.service_ps).max().unwrap_or(0)
+    }
+
+    fn inject(&mut self, at: Time) {
+        let job = self.arrival_ps.len() as u32;
+        self.arrival_ps.push(at);
+        self.done_ps.push(Time::MAX);
+        self.engine.schedule_at(at, Ev::Arrive { job });
+    }
+
+    /// Inject `jobs` inferences at a fixed inter-arrival `period_ps`
+    /// (the cross-validation feed: the pipeline's own steady rate).
+    pub fn inject_paced(&mut self, jobs: u64, period_ps: Time) {
+        for j in 0..jobs {
+            self.inject(j * period_ps);
+        }
+    }
+
+    /// Inject `jobs` inferences with exponential inter-arrival gaps of
+    /// mean `mean_gap_ps` (the request-level mode). Deterministic per
+    /// `rng` stream — fork one per replica *before* fanning out.
+    pub fn inject_poisson(&mut self, jobs: u64, mean_gap_ps: f64,
+                          rng: &mut Pcg) {
+        let mut t: Time = 0;
+        for _ in 0..jobs {
+            let u = rng.uniform();
+            let gap = (-mean_gap_ps * (1.0 - u).max(f64::MIN_POSITIVE).ln())
+                .round() as Time;
+            t += gap;
+            self.inject(t);
+        }
+    }
+
+    /// Start the head-of-queue job on `s` if the stage is idle and the
+    /// downstream buffer can take its output. Starting frees our own
+    /// input slot, which may unblock the upstream stage (recursively).
+    fn try_start(&mut self, s: usize) {
+        if self.stages[s].busy || self.stages[s].queue.is_empty() {
+            return;
+        }
+        if s + 1 < self.stages.len() && self.credits[s + 1] == 0 {
+            self.blocked_starts += 1;
+            return;
+        }
+        let job = self.stages[s].queue.pop_front().unwrap();
+        if s + 1 < self.stages.len() {
+            self.credits[s + 1] -= 1; // reserve the landing slot
+        }
+        self.stages[s].busy = true;
+        let done = self.engine.now() + self.stages[s].service_ps;
+        self.engine.schedule_at(done, Ev::StageDone { stage: s as u16, job });
+        if s > 0 {
+            self.credits[s] += 1; // our input slot is free again
+            self.try_start(s - 1);
+        }
+    }
+
+    fn handle(&mut self, now: Time, ev: Ev) {
+        match ev {
+            Ev::Arrive { job } => {
+                self.stages[0].queue.push_back(job);
+                self.try_start(0);
+            }
+            Ev::Deliver { stage, job } => {
+                let s = stage as usize;
+                self.stages[s].queue.push_back(job);
+                self.try_start(s);
+            }
+            Ev::StageDone { stage, job } => {
+                let s = stage as usize;
+                self.stages[s].busy = false;
+                self.energy_j += self.stages[s].compute_e;
+                let from = self.stages[s].tile;
+                let bytes = self.stages[s].out_bytes;
+                let last = s + 1 >= self.stages.len();
+                let to = if last {
+                    self.egress_tile
+                } else {
+                    self.stages[s + 1].tile
+                };
+                let d = self.noc.send(now, from, to, bytes);
+                self.energy_j += d.energy_j + self.stages[s].noc_e_extra;
+                if last {
+                    self.done_ps[job as usize] = d.arrive_ps;
+                } else {
+                    self.engine.schedule_at(
+                        d.arrive_ps,
+                        Ev::Deliver { stage: (s + 1) as u16, job },
+                    );
+                }
+                self.try_start(s);
+            }
+        }
+    }
+
+    /// Drain every event and summarize. All injected jobs complete (the
+    /// credit scheme cannot deadlock: the last stage never blocks, so
+    /// every blocked chain unwinds from the back).
+    pub fn run(mut self) -> PipelineRun {
+        while let Some((t, ev)) = self.engine.pop() {
+            self.handle(t, ev);
+        }
+        debug_assert!(
+            self.done_ps.iter().all(|&d| d != Time::MAX),
+            "job never egressed"
+        );
+        let completed = self.done_ps.len() as u64;
+        let makespan = self.done_ps.iter().copied().max().unwrap_or(0);
+        let latency_s: Vec<f64> = self
+            .arrival_ps
+            .iter()
+            .zip(&self.done_ps)
+            .map(|(&a, &d)| ps_to_s(d.saturating_sub(a)))
+            .collect();
+        PipelineRun {
+            completed,
+            makespan_s: ps_to_s(makespan),
+            energy_j_total: self.energy_j,
+            energy_j_per_inference: self.energy_j / (completed as f64).max(1.0),
+            latency_s,
+            noc: self.noc.stats,
+            engine: self.engine.stats,
+            blocked_starts: self.blocked_starts,
+            noc_wait_s: ps_to_s(self.noc.stats.queued_ps_total),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::workloads::Layer;
+
+    /// Unreplicated 1-chip mapping for hand-built layer chains.
+    fn bare_mapping(cfg: &AcceleratorConfig, layers: &[Layer])
+                    -> NetworkMapping {
+        NetworkMapping {
+            layers: layers.iter().map(|l| mapping::map_layer(l, cfg)).collect(),
+            chips: 1,
+        }
+    }
+
+    #[test]
+    fn single_job_energy_is_exact_and_latency_covers_fill() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let layers = vec![
+            Layer::conv("l0", 3, 8, 16, 12, 1),
+            Layer::conv("l1", 3, 16, 16, 10, 1),
+            Layer::fc("l2", 1600, 10),
+        ];
+        let m = bare_mapping(&cfg, &layers);
+        let mut sim1 = PipelineSim::with_mapping(&cfg, &m);
+        let fill_ps: Time = sim1.stages.iter().map(|s| s.service_ps).sum();
+        sim1.inject_paced(1, 1);
+        let run = sim1.run();
+        assert_eq!(run.completed, 1);
+        // energy: sum of per-stage compute shares + per-transfer NoC with
+        // actual hops (recomputed independently here)
+        let mesh = CMesh::new(cfg.tiles, cfg.noc_concentration);
+        let tiles = m.layer_tiles(&cfg);
+        let mut want = 0.0;
+        for (i, lm) in m.layers.iter().enumerate() {
+            let le = sim::layer_energy(lm, &cfg, false);
+            want += le.total() - le.noc;
+            let to = if i + 1 < m.layers.len() { tiles[i + 1] } else { 0 };
+            let hops = mesh.hops(tiles[i], to);
+            want += mesh.transfer_energy(lm.out_bytes(), hops);
+        }
+        assert!(
+            (run.energy_j_total - want).abs() <= want * 1e-12,
+            "event {} vs expected {want}", run.energy_j_total
+        );
+        // latency: at least the pure compute fill (NoC adds on top)
+        assert!(run.latency_s[0] >= ps_to_s(fill_ps));
+        assert!(run.latency_s[0].is_finite() && run.latency_s[0] > 0.0);
+    }
+
+    #[test]
+    fn steady_state_throughput_paced_by_bottleneck() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let layers = vec![
+            Layer::conv("a", 3, 8, 8, 8, 1),
+            Layer::conv("b", 3, 8, 8, 12, 1), // bottleneck: most positions
+            Layer::fc("c", 1152, 10),
+        ];
+        let m = bare_mapping(&cfg, &layers);
+        let mut sim1 = PipelineSim::with_mapping(&cfg, &m);
+        let period = sim1.bottleneck_period_ps();
+        sim1.inject_paced(6, period);
+        let run = sim1.run();
+        assert_eq!(run.completed, 6);
+        // identical jobs fed at the bottleneck period egress at the
+        // bottleneck period once the pipeline is full
+        let spacing = run.latency_s[5] - run.latency_s[4];
+        assert!(
+            spacing.abs() < ps_to_s(period) * 1e-6,
+            "late jobs drift: sojourn delta {spacing}"
+        );
+    }
+
+    #[test]
+    fn finite_buffers_backpressure_fast_producer() {
+        let cfg = AcceleratorConfig::neural_pim();
+        // producer's output (10'000 x 8 B) exceeds the 64 KB eDRAM ->
+        // capacity clamps to 1 inference; consumer is 4x slower
+        let layers = vec![
+            Layer::conv("fast", 1, 1, 8, 100, 1),
+            Layer::conv("slow", 1, 8, 8, 200, 1),
+        ];
+        let m = bare_mapping(&cfg, &layers);
+        assert_eq!(m.buffer_capacity_infs(1, cfg.edram_bytes, MAX_BUF_INFS), 1);
+        let mut sim1 = PipelineSim::with_mapping(&cfg, &m);
+        assert!(sim1.stages[0].service_ps < sim1.stages[1].service_ps);
+        sim1.inject_paced(4, 1); // near-simultaneous arrivals
+        let run = sim1.run();
+        assert_eq!(run.completed, 4);
+        assert!(run.blocked_starts > 0, "producer never back-pressured");
+        // sojourns grow while jobs queue behind the slow consumer
+        assert!(run.latency_s[3] > run.latency_s[0]);
+    }
+
+    #[test]
+    fn poisson_injection_is_deterministic_per_stream() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let layers = vec![Layer::conv("x", 3, 4, 8, 6, 1),
+                          Layer::fc("y", 288, 10)];
+        let run = |seed: u64| {
+            let m = bare_mapping(&cfg, &layers);
+            let mut s = PipelineSim::with_mapping(&cfg, &m);
+            let mean = s.bottleneck_period_ps() as f64 / 0.8;
+            let mut rng = Pcg::new(seed);
+            s.inject_poisson(32, mean, &mut rng);
+            let r = s.run();
+            (r.latency_s.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+             r.energy_j_total.to_bits())
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).0, run(8).0);
+    }
+}

@@ -10,12 +10,22 @@
 //!   accumulation dataflows + NeuralPeriph training — lowered by
 //!   `python/compile/aot.py` into `artifacts/*.hlo.txt`.
 //! - **L3** (this crate): the architecture simulator, the §3 analytical
-//!   framework, the DSE engine, the PJRT runtime that executes the AOT
-//!   artifacts, and the inference coordinator. Python never runs at
-//!   request time.
+//!   framework, the `event` discrete-event microsimulator (contention-
+//!   aware NoC + finite-buffer pipelines + tail-latency percentiles),
+//!   the DSE engine, the PJRT runtime that executes the AOT artifacts,
+//!   and the inference coordinator. Python never runs at request time.
+//!
+//! Module map: `arch` (behavioural circuit models + c-mesh), `dataflow`
+//! (§3 equations), `energy`/`mapping`/`sim` (budgets, replication
+//! allocator, analytical system simulator), `event` (discrete-event
+//! refinement of `sim`: engine, queued NoC, back-pressured pipeline,
+//! cross-validation + request-level latency modes), `dse` (Fig. 11
+//! sweep), `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
+//! `runtime`/`coordinator` (PJRT serving), `baselines`, `config`,
+//! `report`, `workloads`, and the `util` substrate.
 //!
 //! See DESIGN.md for the experiment index (which bench regenerates which
-//! paper figure/table) and the module map.
+//! paper figure/table) and the fuller module map.
 
 pub mod arch;
 pub mod baselines;
@@ -24,6 +34,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
 pub mod energy;
+pub mod event;
 pub mod mapping;
 pub mod noise;
 pub mod periph;

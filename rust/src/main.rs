@@ -19,6 +19,13 @@ COMMANDS (analytical / simulator — no artifacts needed):
   characterize              §3 dataflow framework (Eqs. 2-8, Fig. 3d/4b/4c)
   simulate [--network N]    full-system simulation (Fig. 12/13 + headline)
             [--all]         all nine benchmarks
+  event-sim [--network N|--all]
+            [--requests N] [--replicas R] [--load F]
+                            discrete-event microsimulation: cross-validate
+                            the analytical energy model (per-scenario
+                            tolerance check) and report contention-aware
+                            p50/p95/p99 latency under Poisson load;
+                            bit-identical at any --threads
   dse [--top K]             design-space exploration (Fig. 11)
   table2 | table3           paper tables
   budget [--arch A]         PE/tile/chip power & area budget
@@ -36,7 +43,7 @@ OPTIONS:
   --artifacts DIR           artifact directory (default: ./artifacts)
   --seed S                  PRNG seed (default 42)
   --threads N               worker threads for the parallel sweeps
-                            (simulate/dse/mc; default: all cores)
+                            (simulate/event-sim/dse/mc; default: all cores)
 ";
 
 fn main() {
@@ -53,6 +60,7 @@ fn run(args: &Args) -> Result<()> {
     match cmd {
         "characterize" => characterize(),
         "simulate" => simulate(args),
+        "event-sim" => event_sim(args),
         "dse" => dse_cmd(args),
         "table2" => {
             report::table2().print();
@@ -82,19 +90,37 @@ fn characterize() -> Result<()> {
     Ok(())
 }
 
-fn simulate(args: &Args) -> Result<()> {
-    let nets = if args.flag("all") || args.get("network").is_none() {
-        workloads::all_benchmarks()
+fn selected_networks(args: &Args) -> Result<Vec<workloads::Network>> {
+    if args.flag("all") || args.get("network").is_none() {
+        Ok(workloads::all_benchmarks())
     } else {
         let name = args.get("network").unwrap();
-        vec![workloads::by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?]
-    };
+        Ok(vec![workloads::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?])
+    }
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let nets = selected_networks(args)?;
     let r = report::system_report(&nets);
     r.table_energy.print();
     r.table_throughput.print();
     r.table_breakdown.print();
+    r.table_latency.print();
     println!("{}", r.headline);
+    Ok(())
+}
+
+fn event_sim(args: &Args) -> Result<()> {
+    let nets = selected_networks(args)?;
+    report::event_cross_validation_table(&nets).print();
+    let load = neural_pim::event::RequestLoad {
+        requests: args.get_u64("requests", 256),
+        replicas: args.get_usize("replicas", 4),
+        utilization: args.get_f64("load", 0.8),
+        seed: args.get_u64("seed", 42),
+    };
+    report::event_latency_table(&nets, &load).print();
     Ok(())
 }
 

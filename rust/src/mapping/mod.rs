@@ -37,6 +37,12 @@ impl LayerMapping {
     pub fn stage_cycles(&self, input_cycles: u64) -> u64 {
         self.layer.positions().div_ceil(self.replication) * input_cycles
     }
+
+    /// Output activation bytes this stage produces per inference (8-bit
+    /// activations) — what crosses the NoC to the next stage.
+    pub fn out_bytes(&self) -> u64 {
+        self.layer.positions() * self.layer.cout as u64
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -58,6 +64,39 @@ impl NetworkMapping {
             .map(|l| l.stage_cycles(input_cycles))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Home tile of every layer stage. Layers occupy consecutive arrays
+    /// in mapping order (copies included), so a layer's home tile is
+    /// where its first array lands, wrapped modulo the chip for
+    /// multi-chip mappings. The event simulator routes inter-stage NoC
+    /// traffic between these tiles.
+    pub fn layer_tiles(&self, cfg: &AcceleratorConfig) -> Vec<u32> {
+        let per_tile =
+            (cfg.pes_per_tile as u64 * cfg.arrays_per_pe as u64).max(1);
+        let tiles = cfg.tiles.max(1) as u64;
+        let mut cum = 0u64;
+        self.layers
+            .iter()
+            .map(|lm| {
+                let t = ((cum / per_tile) % tiles) as u32;
+                cum += lm.total_arrays();
+                t
+            })
+            .collect()
+    }
+
+    /// Inter-stage buffer capacity, in whole inferences, of the buffer
+    /// feeding `layers[stage]` (stage ≥ 1): the consumer tile's eDRAM
+    /// budget divided by the producer's per-inference output, clamped to
+    /// `[1, max_infs]`. This finite capacity is what gives the event
+    /// simulator back-pressure — the analytical model implicitly assumes
+    /// it is infinite.
+    pub fn buffer_capacity_infs(&self, stage: usize, edram_bytes: u64,
+                                max_infs: u64) -> u64 {
+        assert!(stage >= 1 && stage < self.layers.len());
+        let out = self.layers[stage - 1].out_bytes().max(1);
+        (edram_bytes / out).clamp(1, max_infs.max(1))
     }
 }
 
@@ -184,6 +223,41 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn layer_tiles_are_in_range_and_monotone_until_wrap() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let net = alexnet();
+        let m = map_network(&net, &cfg);
+        let tiles = m.layer_tiles(&cfg);
+        assert_eq!(tiles.len(), m.layers.len());
+        let mut wrapped = false;
+        for w in tiles.windows(2) {
+            assert!(w[0] < cfg.tiles && w[1] < cfg.tiles);
+            if w[1] < w[0] {
+                assert!(!wrapped, "tile assignment wrapped twice");
+                wrapped = true;
+            }
+        }
+    }
+
+    #[test]
+    fn buffer_capacity_clamps_to_range() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let net = alexnet();
+        let m = map_network(&net, &cfg);
+        for s in 1..m.layers.len() {
+            let cap = m.buffer_capacity_infs(s, cfg.edram_bytes, 8);
+            assert!((1..=8).contains(&cap), "stage {s}: cap {cap}");
+            // big producer outputs pin the buffer at one inference
+            if m.layers[s - 1].out_bytes() > cfg.edram_bytes {
+                assert_eq!(cap, 1, "stage {s}");
+            }
+        }
+        // out_bytes is positions x cout
+        let l = &m.layers[0];
+        assert_eq!(l.out_bytes(), l.layer.positions() * l.layer.cout as u64);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::config::{AcceleratorConfig, Architecture, Precision};
 use crate::dataflow::{self, Strategy};
 use crate::dse;
 use crate::energy;
+use crate::event;
 use crate::sim;
 use crate::util::stats;
 use crate::util::table::{eng, Table};
@@ -173,11 +174,89 @@ pub fn fig11_table(top: usize) -> Table {
     t
 }
 
-/// Fig. 12 + headline ratios: full system comparison.
+/// Event-vs-analytical cross-validation (the `event-sim` view): per
+/// iso-area scenario, total-energy agreement and the contention-induced
+/// latency delta the analytical model hides.
+pub fn event_cross_validation_table(nets: &[workloads::Network]) -> Table {
+    let rows = event::cross_validate(nets);
+    let mut t = Table::new(
+        &format!(
+            "event-driven cross-validation (energy tolerance {:.0}%, \
+             {} scenarios)",
+            event::ENERGY_TOLERANCE * 100.0,
+            rows.len()
+        ),
+        &["network", "arch", "E/inf analytical", "E/inf event", "rel err",
+          "latency analytical", "latency event", "contention Δ", "events"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.network.into(),
+            r.arch.name().into(),
+            eng(r.analytical_energy_j),
+            eng(r.event_energy_j),
+            format!("{:.2}%", 100.0 * r.energy_rel_err),
+            format!("{:.1} µs", r.analytical_latency_s * 1e6),
+            format!("{:.1} µs", r.event_latency_s * 1e6),
+            format!("{:.2} µs", r.contention_delta_s * 1e6),
+            r.events.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Event-mode tail latency under Poisson load, iso-area across the
+/// three architectures (the request-level percentiles the serving-layer
+/// SLO story needs; deterministic at any `--threads`).
+pub fn event_latency_table(nets: &[workloads::Network],
+                           load: &event::RequestLoad) -> Table {
+    let np = AcceleratorConfig::neural_pim();
+    let reference_area = energy::chip_budget(&np).area();
+    let mut t = Table::new(
+        &format!(
+            "event-mode per-inference latency (Poisson load {:.0}% of \
+             bottleneck rate, {} req x {} replicas, seed {})",
+            load.utilization_clamped() * 100.0, load.requests, load.replicas,
+            load.seed
+        ),
+        &["network", "arch", "p50", "p95", "p99", "mean", "NoC wait",
+          "blocked starts"],
+    );
+    // one scenario per (network, arch): fan the scenarios out over the
+    // pool (replicas run sequentially inside each item — scenario-level
+    // parallelism already saturates the cores without nested spawns)
+    let scenarios: Vec<(&workloads::Network, Architecture)> = nets
+        .iter()
+        .flat_map(|net| Architecture::all().into_iter().map(move |a| (net, a)))
+        .collect();
+    let profiles = crate::util::pool::map(&scenarios, |&(net, arch)| {
+        let cfg = sim::iso_area_config(arch, reference_area);
+        event::request_profile_sequential(net, &cfg, load)
+    });
+    for p in &profiles {
+        let us = |s: f64| format!("{:.1} µs", s * 1e6);
+        t.row(&[
+            p.network.into(),
+            p.arch.name().into(),
+            us(p.p50_s),
+            us(p.p95_s),
+            us(p.p99_s),
+            us(p.mean_s),
+            us(p.noc_wait_s),
+            p.blocked_starts.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 12 + headline ratios: full system comparison, plus the
+/// event-mode latency percentiles sampled by the `event` subsystem.
 pub struct SystemReport {
     pub table_energy: Table,
     pub table_throughput: Table,
     pub table_breakdown: Table,
+    /// p50/p95/p99 per scenario from `event::request_profile`
+    pub table_latency: Table,
     pub headline: String,
 }
 
@@ -251,10 +330,20 @@ pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
         cmp.throughput_ratio(Architecture::IsaacLike),
         cmp.throughput_ratio(Architecture::CascadeLike),
     );
+    // request-level event simulation: a modest fixed load keeps the
+    // report fast while still exercising queueing (the `event-sim` CLI
+    // exposes the knobs)
+    let load = event::RequestLoad {
+        requests: 96,
+        replicas: 3,
+        utilization: 0.8,
+        seed: 42,
+    };
     SystemReport {
         table_energy: te,
         table_throughput: tt,
         table_breakdown: tb,
+        table_latency: event_latency_table(nets, &load),
         headline,
     }
 }
@@ -279,5 +368,19 @@ mod tests {
         let r = system_report(&nets);
         assert!(r.headline.contains("geomean"));
         assert!(r.table_energy.render().contains("AlexNet"));
+        // the event-mode latency table covers every scenario
+        let lat = r.table_latency.render();
+        assert!(lat.contains("AlexNet"));
+        assert!(lat.contains("Neural-PIM"));
+        assert!(lat.contains("p99"));
+    }
+
+    #[test]
+    fn event_cross_validation_table_renders() {
+        let nets = vec![workloads::alexnet()];
+        let t = event_cross_validation_table(&nets);
+        let s = t.render();
+        assert!(s.contains("cross-validation"));
+        assert!(s.contains("ISAAC-like") && s.contains("Neural-PIM"));
     }
 }

@@ -124,100 +124,119 @@ pub fn simulate(net: &Network, cfg: &AcceleratorConfig) -> SimResult {
 /// Per-inference energy with the Fig. 13 component resolution.
 pub fn energy_per_inference(_net: &Network, cfg: &AcceleratorConfig,
                             m: &NetworkMapping) -> EnergyBreakdown {
+    let mut out = EnergyBreakdown::default();
+    for lm in &m.layers {
+        out.add(&layer_energy(lm, cfg, m.chips > 1));
+    }
+    out
+}
+
+/// Per-inference energy of ONE mapped layer — the unit the event-driven
+/// simulator charges at stage granularity (`event::pipeline` charges
+/// `total() - noc` when a stage completes and replaces the analytical
+/// 1-hop NoC average with per-transfer hop counts);
+/// [`energy_per_inference`] is exactly the sum of these over the layers.
+pub fn layer_energy(lm: &mapping::LayerMapping, cfg: &AcceleratorConfig,
+                    multi_chip: bool) -> EnergyBreakdown {
     let p = &cfg.precision;
     let n = cfg.n_log2();
     let cycles = p.input_cycles() as u64;
     let rows = cfg.xbar_size as u64;
     let groups_per_array = cfg.groups_per_array();
-    let mut out = EnergyBreakdown::default();
+    let l = &lm.layer;
+    let positions = l.positions();
+    let k_dim = l.k_dim();
+    let k_chunks = lm.k_chunks;
+    let c_chunks = (l.cout as u64).div_ceil(groups_per_array);
+    // per inference: every sliding-window position evaluates every
+    // chunk of the weight matrix once per input cycle
+    let array_cycles = positions * k_chunks * c_chunks * cycles;
+    // dot-product groups (output channel x K-chunk) per inference
+    let group_chunks = positions * l.cout as u64 * k_chunks;
 
-    for lm in &m.layers {
-        let l = &lm.layer;
-        let positions = l.positions();
-        let k_dim = l.k_dim();
-        let k_chunks = lm.k_chunks;
-        let c_chunks = (l.cout as u64).div_ceil(groups_per_array);
-        // per inference: every sliding-window position evaluates every
-        // chunk of the weight matrix once per input cycle
-        let array_cycles = positions * k_chunks * c_chunks * cycles;
-        // dot-product groups (output channel x K-chunk) per inference
-        let group_chunks = positions * l.cout as u64 * k_chunks;
+    let mut e = EnergyBreakdown::default();
+    // wordline side: drive the used rows each cycle (each c-chunk is a
+    // separate array and drives its own copy of the rows)
+    e.dac = (positions * cycles * k_dim * c_chunks) as f64
+        * k::dac_e_cycle(p.p_d);
+    e.xbar = array_cycles as f64 * k::xbar_e_cycle(cfg.xbar_size, p.p_d)
+        * (k_dim.min(rows) as f64 / rows as f64);
 
-        let mut e = EnergyBreakdown::default();
-        // wordline side: drive the used rows each cycle (each c-chunk is a
-        // separate array and drives its own copy of the rows)
-        e.dac = (positions * cycles * k_dim * c_chunks) as f64
-            * k::dac_e_cycle(p.p_d);
-        e.xbar = array_cycles as f64 * k::xbar_e_cycle(cfg.xbar_size, p.p_d)
-            * (k_dim.min(rows) as f64 / rows as f64);
-
-        match cfg.arch {
-            Architecture::IsaacLike => {
-                let bits = dataflow::adc_resolution_a(p, n);
-                let convs = 2 * group_chunks * dataflow::conversions_a(p);
-                e.adc = convs as f64 * k::adc_e_conv(bits);
-                e.sa = convs as f64 * k::SA_DIGITAL_E_OP;
-                // OR read-modify-write per conversion (steps 3/5, Fig. 3a)
-                e.memory = convs as f64 * 2.0 * k::SRAM_E_BYTE;
-            }
-            Architecture::CascadeLike => {
-                // TIA subtracts W+/W- in analog: single-ended buffering
-                let writes = group_chunks * cycles * p.weight_cols() as u64;
-                let convs = group_chunks * dataflow::conversions_b(p);
-                e.sa = writes as f64 * k::BUFFER_WRITE_E
-                    + array_cycles as f64 * k::TIA_E_CYCLE
-                    + convs as f64 * k::SA_DIGITAL_E_OP;
-                // 10-bit nominal resolution at 8-bit-class conversion
-                // energy (see constants::CASCADE_ADC_E_CONV)
-                e.adc = convs as f64 * k::CASCADE_ADC_E_CONV;
-                e.digital += convs as f64 * k::SUMAMP_E_CYCLE;
-            }
-            Architecture::NeuralPim => {
-                // one NNS+A op per group-chunk per cycle; 1 conversion per
-                // group-chunk; inter-chunk combine is a cheap digital add
-                let sa_ops = group_chunks * cycles;
-                e.sa = sa_ops as f64 * (k::NNSA_E_OP + 2.0 * k::SH_E_OP);
-                e.adc = group_chunks as f64 * k::NNADC_E_CONV;
-                e.digital += group_chunks.saturating_sub(
-                    positions * l.cout as u64) as f64
-                    * k::SA_DIGITAL_E_OP;
-            }
+    match cfg.arch {
+        Architecture::IsaacLike => {
+            let bits = dataflow::adc_resolution_a(p, n);
+            let convs = 2 * group_chunks * dataflow::conversions_a(p);
+            e.adc = convs as f64 * k::adc_e_conv(bits);
+            e.sa = convs as f64 * k::SA_DIGITAL_E_OP;
+            // OR read-modify-write per conversion (steps 3/5, Fig. 3a)
+            e.memory = convs as f64 * 2.0 * k::SRAM_E_BYTE;
         }
-
-        // memory hierarchy: each unique activation is read from eDRAM
-        // once (ISAAC's buffer organization); the im2col replay — every
-        // position re-reads its kh*kw*cin patch — is served by the SRAM
-        // IR, and outputs stage through the OR on their way back.
-        let unique_in = (positions * l.stride as u64 * l.stride as u64
-            * l.cin as u64) as f64;
-        let replay = positions as f64 * k_dim as f64;
-        let out_bytes = positions as f64 * l.cout as f64;
-        e.memory += (unique_in + out_bytes) * k::EDRAM_E_BYTE
-            + (replay + out_bytes) * k::SRAM_E_BYTE;
-        // NoC: activations cross one c-mesh hop between producer and
-        // consumer tiles on average; chip-to-chip adds HyperTransport
-        e.noc = out_bytes * k::NOC_E_BYTE;
-        if m.chips > 1 {
-            e.noc += out_bytes * k::HT_E_BYTE;
+        Architecture::CascadeLike => {
+            // TIA subtracts W+/W- in analog: single-ended buffering
+            let writes = group_chunks * cycles * p.weight_cols() as u64;
+            let convs = group_chunks * dataflow::conversions_b(p);
+            e.sa = writes as f64 * k::BUFFER_WRITE_E
+                + array_cycles as f64 * k::TIA_E_CYCLE
+                + convs as f64 * k::SA_DIGITAL_E_OP;
+            // 10-bit nominal resolution at 8-bit-class conversion
+            // energy (see constants::CASCADE_ADC_E_CONV)
+            e.adc = convs as f64 * k::CASCADE_ADC_E_CONV;
+            e.digital += convs as f64 * k::SUMAMP_E_CYCLE;
         }
-        // post-processing: activation function per output (+pool share)
-        e.digital += out_bytes * k::ACT_E_OP;
-
-        // replication multiplies the *array* activity but not the work:
-        // replicas process different positions, so total counts above are
-        // already per-inference. (Replication costs area, not energy.)
-        out.add(&e);
+        Architecture::NeuralPim => {
+            // one NNS+A op per group-chunk per cycle; 1 conversion per
+            // group-chunk; inter-chunk combine is a cheap digital add
+            let sa_ops = group_chunks * cycles;
+            e.sa = sa_ops as f64 * (k::NNSA_E_OP + 2.0 * k::SH_E_OP);
+            e.adc = group_chunks as f64 * k::NNADC_E_CONV;
+            e.digital += group_chunks.saturating_sub(
+                positions * l.cout as u64) as f64
+                * k::SA_DIGITAL_E_OP;
+        }
     }
-    out
+
+    // memory hierarchy: each unique activation is read from eDRAM
+    // once (ISAAC's buffer organization); the im2col replay — every
+    // position re-reads its kh*kw*cin patch — is served by the SRAM
+    // IR, and outputs stage through the OR on their way back.
+    let unique_in = (positions * l.stride as u64 * l.stride as u64
+        * l.cin as u64) as f64;
+    let replay = positions as f64 * k_dim as f64;
+    let out_bytes = positions as f64 * l.cout as f64;
+    e.memory += (unique_in + out_bytes) * k::EDRAM_E_BYTE
+        + (replay + out_bytes) * k::SRAM_E_BYTE;
+    // NoC: activations cross one c-mesh hop between producer and
+    // consumer tiles on average; chip-to-chip adds HyperTransport
+    e.noc = out_bytes * k::NOC_E_BYTE;
+    if multi_chip {
+        e.noc += out_bytes * k::HT_E_BYTE;
+    }
+    // post-processing: activation function per output (+pool share)
+    e.digital += out_bytes * k::ACT_E_OP;
+
+    // replication multiplies the *array* activity but not the work:
+    // replicas process different positions, so total counts above are
+    // already per-inference. (Replication costs area, not energy.)
+    e
+}
+
+/// The configuration the Fig. 12 fairness rule evaluates: `arch`'s
+/// default config with its tile count scaled to `reference_area`. The
+/// single source of truth for iso-area scenario construction — the
+/// event-driven cross-validation and latency tables rebuild scenarios
+/// through this same helper so both simulators always see one chip.
+pub fn iso_area_config(arch: Architecture, reference_area: f64)
+                       -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::for_arch(arch);
+    cfg.tiles = energy::iso_area_tiles(&cfg, reference_area);
+    cfg
 }
 
 /// Iso-area variant of [`simulate`]: scale the config's tile count so all
 /// architectures occupy the reference area (the Fig. 12 fairness rule).
 pub fn simulate_iso_area(net: &Network, arch: Architecture,
                          reference_area: f64) -> SimResult {
-    let mut cfg = AcceleratorConfig::for_arch(arch);
-    cfg.tiles = energy::iso_area_tiles(&cfg, reference_area);
-    simulate(net, &cfg)
+    simulate(net, &iso_area_config(arch, reference_area))
 }
 
 /// The Fig. 12 experiment: all 9 benchmarks x 3 architectures at equal

@@ -32,6 +32,16 @@ pub fn percentile(v: &[f64], p: f64) -> f64 {
     }
     let mut s: Vec<f64> = v.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] over an ALREADY-SORTED slice — for callers that need
+/// several percentiles of one dataset without re-sorting per call.
+pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(s.windows(2).all(|w| w[0] <= w[1]), "unsorted input");
     let rank = p / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -120,6 +130,7 @@ impl Samples {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     #[test]
     fn basic_moments() {
@@ -159,6 +170,51 @@ mod tests {
         assert!((percentile(&v, 0.0) - 10.0).abs() < 1e-12);
         assert!((percentile(&v, 100.0) - 40.0).abs() < 1e-12);
         assert!((percentile(&v, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_property_bounds_endpoints_monotonicity() {
+        prop::check("percentile in [min,max], exact endpoints, monotone",
+                    150, |g| {
+            let n = g.usize_in(1, 60);
+            let v = g.vec_f64(n, -1e3, 1e3);
+            let p1 = g.f64_in(0.0, 100.0);
+            let p2 = g.f64_in(0.0, 100.0);
+            let (lo, hi) = (p1.min(p2), p1.max(p2));
+            crate::prop_assert!(percentile(&v, 0.0) == min(&v), "p0 != min");
+            crate::prop_assert!(percentile(&v, 100.0) == max(&v),
+                                "p100 != max");
+            let (qlo, qhi) = (percentile(&v, lo), percentile(&v, hi));
+            crate::prop_assert!(qlo <= qhi + 1e-9,
+                                "not monotone: q({lo})={qlo} > q({hi})={qhi}");
+            crate::prop_assert!(min(&v) - 1e-9 <= qlo && qhi <= max(&v) + 1e-9,
+                                "out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn moment_properties() {
+        prop::check("std >= 0, mean in [min,max], constant-vector identities",
+                    150, |g| {
+            let n = g.usize_in(1, 40);
+            let v = g.vec_f64(n, 0.5, 100.0);
+            crate::prop_assert!(std(&v) >= 0.0, "negative std");
+            let m = mean(&v);
+            crate::prop_assert!(min(&v) - 1e-9 <= m && m <= max(&v) + 1e-9,
+                                "mean {m} outside data range");
+            // geomean <= arithmetic mean on positive data (AM-GM)
+            crate::prop_assert!(geomean(&v) <= m + 1e-9 * m.abs(),
+                                "AM-GM violated");
+            let c = g.f64_in(0.1, 10.0);
+            let cv = vec![c; n];
+            crate::prop_assert!((geomean(&cv) - c).abs() < 1e-9 * c,
+                                "geomean of constant vector");
+            crate::prop_assert!(std(&cv) < 1e-9, "nonzero constant std");
+            crate::prop_assert!(percentile(&cv, g.f64_in(0.0, 100.0)) == c,
+                                "percentile of constant vector");
+            Ok(())
+        });
     }
 
     #[test]

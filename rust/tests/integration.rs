@@ -13,7 +13,7 @@ use neural_pim::runtime::{self, Runtime};
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
 use neural_pim::util::stats;
-use neural_pim::{dataflow, dse, mapping, noise, sim, workloads};
+use neural_pim::{dataflow, dse, event, mapping, noise, sim, workloads};
 
 fn runtime_or_skip() -> Option<Runtime> {
     match Runtime::new(&neural_pim::artifact_dir()) {
@@ -266,6 +266,98 @@ fn neural_pim_wins_headline_metrics_full_suite() {
     assert!(t_i > 1.5, "throughput vs ISAAC {t_i}");
     assert!(t_c > 1.0, "throughput vs CASCADE {t_c}");
     assert!(e_i > e_c && t_i > t_c, "ISAAC must be the weaker baseline");
+}
+
+// ---------------------------------------------------------------------------
+// event-driven microsimulator vs analytical model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn event_energy_cross_validates_analytical_on_two_networks() {
+    // the event model replays the iso-area Fig. 12 scenarios with
+    // per-event energy charging; totals must agree with the analytical
+    // simulator within the documented tolerance (the only modelling
+    // difference is exact NoC hop counts vs the 1-hop average)
+    let nets = vec![workloads::alexnet(), workloads::vgg16()];
+    let rows = event::cross_validate(&nets);
+    assert_eq!(rows.len(), 6); // 2 networks x 3 architectures
+    for r in &rows {
+        assert!(
+            r.energy_rel_err <= event::ENERGY_TOLERANCE,
+            "{}/{:?}: energy rel err {:.4} exceeds tolerance {} \
+             (event {:.3e} vs analytical {:.3e})",
+            r.network, r.arch, r.energy_rel_err, event::ENERGY_TOLERANCE,
+            r.event_energy_j, r.analytical_energy_j
+        );
+        // hop-count refinement only adds energy, never removes it
+        assert!(
+            r.event_energy_j >= r.analytical_energy_j * (1.0 - 1e-9),
+            "{}/{:?}: event energy below analytical", r.network, r.arch
+        );
+        // interconnect + queueing only add latency
+        assert!(
+            r.contention_delta_s >= -1e-15,
+            "{}/{:?}: contention delta {}", r.network, r.arch,
+            r.contention_delta_s
+        );
+    }
+}
+
+#[test]
+fn event_percentiles_are_thread_count_invariant() {
+    // request-level mode: per-replica Pcg::fork streams are derived
+    // sequentially before the pool fans out, so p50/p95/p99 are
+    // bit-identical at any --threads (the acceptance bar for the event
+    // subsystem, same contract as sim/dse/noise)
+    let net = workloads::alexnet();
+    let cfg = AcceleratorConfig::neural_pim();
+    let load = event::RequestLoad {
+        requests: 64,
+        replicas: 8,
+        utilization: 0.9,
+        seed: 7,
+    };
+    let mut base: Option<(u64, u64, u64, u64, u64)> = None;
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let p = event::request_profile(&net, &cfg, &load);
+        pool::set_threads(0);
+        let fp = (
+            p.p50_s.to_bits(),
+            p.p95_s.to_bits(),
+            p.p99_s.to_bits(),
+            p.mean_s.to_bits(),
+            p.energy_j_per_inference.to_bits(),
+        );
+        match &base {
+            None => base = Some(fp),
+            Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),
+        }
+    }
+}
+
+#[test]
+fn event_cross_validation_is_thread_count_invariant() {
+    let nets = vec![workloads::alexnet()];
+    let mut base: Option<Vec<(String, u64, u64)>> = None;
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let fp: Vec<(String, u64, u64)> = event::cross_validate(&nets)
+            .iter()
+            .map(|r| {
+                (
+                    format!("{}/{:?}", r.network, r.arch),
+                    r.event_energy_j.to_bits(),
+                    r.event_latency_s.to_bits(),
+                )
+            })
+            .collect();
+        pool::set_threads(0);
+        match &base {
+            None => base = Some(fp),
+            Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

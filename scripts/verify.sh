@@ -8,4 +8,9 @@ cargo test -q
 # Advisory until the tree has been run through rustfmt once (the seed
 # predates the gate); flip to a hard failure after that cleanup PR.
 cargo fmt --check || echo "WARN: rustfmt differences (advisory for now)"
+# Advisory for the same reason: the seed tree has never been linted in a
+# toolchain environment. Flip to a hard failure (drop the `|| echo`)
+# once the pre-existing findings, if any, are cleaned up.
+cargo clippy --all-targets -- -D warnings \
+    || echo "WARN: clippy findings (advisory until the tree is lint-clean)"
 echo "verify OK"
