@@ -15,7 +15,7 @@ use neural_pim::event::{self, Engine};
 use neural_pim::runtime::{self, Runtime};
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
-use neural_pim::{dse, mapping, noise, sim, workloads};
+use neural_pim::{dse, mapping, model, noise, sim, workloads};
 use std::time::Instant;
 
 /// Mean wall-clock seconds of `iters` runs (1 warmup).
@@ -132,6 +132,40 @@ fn main() -> anyhow::Result<()> {
         prof.p99_s * 1e6,
         prof.noc_wait_s * 1e6
     );
+
+    // memoized LayerCost table vs recomputation — the event-sim request
+    // path charges these per-stage costs; replicas now share one
+    // memoized model::network_cost table instead of re-pricing every
+    // layer per pipeline instance (the pre-`model` behaviour, mimicked
+    // by the "recompute" case below)
+    let alex_mapping = mapping::map_network(&alex, &cfg);
+    let multi = alex_mapping.chips > 1;
+    bench("layer costs: recompute full table (old event path)", 5, 200, || {
+        let mut total = 0.0;
+        for lm in &alex_mapping.layers {
+            total += model::layer_cost(lm, &cfg, multi).compute_e;
+        }
+        std::hint::black_box(total);
+    });
+    let _warm = model::network_cost(&alex, &cfg);
+    bench("layer costs: memoized network_cost hit", 5, 200, || {
+        std::hint::black_box(model::network_cost(&alex, &cfg).total.total());
+    });
+    // end-to-end view of the same effect: request sim with a cold cache
+    // every iteration vs the warm memoized path
+    let small = event::RequestLoad {
+        requests: 128,
+        replicas: 8,
+        utilization: 0.8,
+        seed: 42,
+    };
+    bench("event request sim, cold cost cache each iter", 1, 5, || {
+        model::clear_cost_cache();
+        let _ = event::request_profile(&alex, &cfg, &small);
+    });
+    bench("event request sim, memoized cost table", 1, 5, || {
+        let _ = event::request_profile(&alex, &cfg, &small);
+    });
 
     // L3: behavioural dataflow models (the MC inner loop)
     let mut rng = Pcg::new(1);

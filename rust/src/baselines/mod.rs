@@ -1,9 +1,11 @@
-//! PE-level comparison of the three architectures (Table 3) and the
+//! PE-level comparison of the registered architectures (Table 3) and the
 //! per-architecture configuration summaries the report module renders.
+//! Entirely registry-driven: a newly registered cost model appears here
+//! (and in `report::table3`) with no edits.
 
-use crate::config::{AcceleratorConfig, Architecture};
-use crate::dataflow;
+use crate::config::Architecture;
 use crate::energy;
+use crate::model;
 
 #[derive(Debug, Clone)]
 pub struct PeComparison {
@@ -20,39 +22,18 @@ pub struct PeComparison {
 }
 
 pub fn pe_comparison() -> Vec<PeComparison> {
-    Architecture::all()
+    model::models()
         .iter()
-        .map(|&arch| {
-            let cfg = AcceleratorConfig::for_arch(arch);
+        .map(|m| {
+            let cfg = m.default_config();
             let pe = energy::pe_budget(&cfg);
-            let p = &cfg.precision;
-            let n = cfg.n_log2();
-            let (accumulation, interface, adc_bits) = match arch {
-                Architecture::IsaacLike => (
-                    "Digital",
-                    "S+A",
-                    // the paper's Table 3 lists 7-bit for the ISAAC-style
-                    // baseline (one fewer than Eq. 2's worst case, since
-                    // one BL level is spare); we report Eq. 2 - 1
-                    dataflow::adc_resolution_a(p, n) - 1,
-                ),
-                Architecture::CascadeLike => (
-                    "Partially analog",
-                    "S+A and buffer array",
-                    dataflow::adc_resolution_b(p, n) - 1,
-                ),
-                Architecture::NeuralPim => (
-                    "Analog",
-                    "NNS+A",
-                    dataflow::adc_resolution_c(p),
-                ),
-            };
+            let meta = m.pe_metadata(&cfg);
             PeComparison {
-                arch,
-                accumulation,
-                interface,
-                dac_bits: p.p_d,
-                adc_bits,
+                arch: m.arch(),
+                accumulation: meta.accumulation,
+                interface: meta.interface,
+                dac_bits: cfg.precision.p_d,
+                adc_bits: meta.adc_bits,
                 adcs_per_64_arrays: cfg.adcs_per_pe * 64 / cfg.arrays_per_pe,
                 density_pct: pe.compute_density() * 100.0,
                 cells_per_mm2: pe.cells_per_mm2(&cfg),
@@ -70,10 +51,14 @@ mod tests {
     #[test]
     fn table3_row_shapes() {
         let rows = pe_comparison();
-        assert_eq!(rows.len(), 3);
-        let isaac = &rows[0];
-        let cascade = &rows[1];
-        let np = &rows[2];
+        assert_eq!(rows.len(), model::archs().len());
+        let get = |arch: Architecture| {
+            rows.iter().find(|r| r.arch == arch).unwrap()
+        };
+        let isaac = get(Architecture::IsaacLike);
+        let cascade = get(Architecture::CascadeLike);
+        let np = get(Architecture::NeuralPim);
+        let lowres = get(Architecture::LowResolution);
         // Table 3's headline facts
         assert_eq!(isaac.adcs_per_64_arrays, 64);
         assert_eq!(cascade.adcs_per_64_arrays, 3);
@@ -83,6 +68,11 @@ mod tests {
         assert_eq!(isaac.adc_bits, 7);
         assert_eq!(cascade.adc_bits, 10);
         assert_eq!(np.adc_bits, 8);
+        // the RAELLA-style reform's whole point: fewer converter bits
+        // than the ISAAC-style baseline, on the same organization
+        assert!(lowres.adc_bits < isaac.adc_bits);
+        assert_eq!(lowres.adcs_per_64_arrays, 64);
+        assert!(lowres.pe_area_mm2 < isaac.pe_area_mm2);
     }
 
     #[test]

@@ -11,7 +11,15 @@
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
-/// Which accumulation strategy the chip implements (Fig. 3).
+/// Which accumulation architecture the chip implements (Fig. 3).
+///
+/// This enum is only an *id*: everything an architecture IS — its
+/// dataflow equations, default chip, per-layer energy, PE periphery,
+/// Table-3 metadata — lives behind the [`crate::model::CostModel`]
+/// registered for the variant in `model/archs.rs`. Adding a variant
+/// here plus an impl there registers a new architecture everywhere
+/// (`simulate --all`, `table3`, iso-area comparisons, `event-sim`, DSE)
+/// with no further call-site edits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Architecture {
     /// Strategy A: per-conversion digital accumulation (ISAAC-style).
@@ -20,29 +28,20 @@ pub enum Architecture {
     CascadeLike,
     /// Strategy C: fully-analog accumulation with NeuralPeriph circuits.
     NeuralPim,
+    /// RAELLA-style speculative low-resolution conversion
+    /// (`model::archs::LowResolutionModel`).
+    LowResolution,
 }
 
 impl Architecture {
+    /// Display name, from the registered cost model.
     pub fn name(&self) -> &'static str {
-        match self {
-            Architecture::IsaacLike => "ISAAC-like",
-            Architecture::CascadeLike => "CASCADE-like",
-            Architecture::NeuralPim => "Neural-PIM",
-        }
+        crate::model::cost_model(*self).name()
     }
 
-    pub fn all() -> [Architecture; 3] {
-        [Architecture::IsaacLike, Architecture::CascadeLike,
-         Architecture::NeuralPim]
-    }
-
+    /// Parse a CLI spelling against every registered model's aliases.
     pub fn parse(s: &str) -> Result<Architecture> {
-        match s.to_ascii_lowercase().as_str() {
-            "isaac" | "isaac-like" | "a" => Ok(Architecture::IsaacLike),
-            "cascade" | "cascade-like" | "b" => Ok(Architecture::CascadeLike),
-            "neural-pim" | "neuralpim" | "pim" | "c" => Ok(Architecture::NeuralPim),
-            other => bail!("unknown architecture '{other}'"),
-        }
+        crate::model::parse_arch(s)
     }
 }
 
@@ -101,63 +100,25 @@ impl AcceleratorConfig {
     /// The paper's optimal Neural-PIM configuration (§7.1, Table 2):
     /// 64 128x128 arrays/PE, 4 NNADCs, 64 NNS+As, 4-bit DACs, 280 tiles.
     pub fn neural_pim() -> Self {
-        AcceleratorConfig {
-            arch: Architecture::NeuralPim,
-            precision: Precision { p_d: 4, ..Default::default() },
-            xbar_size: 128,
-            arrays_per_pe: 64,
-            adcs_per_pe: 4,
-            sa_per_array: 1,
-            pes_per_tile: 4,
-            tiles: 280,
-            cycle_ns: 100.0,
-            edram_bytes: 64 * 1024,
-            noc_concentration: 4,
-        }
+        Self::for_arch(Architecture::NeuralPim)
     }
 
     /// ISAAC-style baseline scaled to 8-bit inference (§6.1, Table 3):
     /// one 8-bit ADC per array, 1-bit DACs, digital S+A.
     pub fn isaac_like() -> Self {
-        AcceleratorConfig {
-            arch: Architecture::IsaacLike,
-            precision: Precision { p_d: 1, ..Default::default() },
-            xbar_size: 128,
-            arrays_per_pe: 64,
-            adcs_per_pe: 64,
-            sa_per_array: 0,
-            pes_per_tile: 4,
-            tiles: 280,
-            cycle_ns: 100.0,
-            edram_bytes: 64 * 1024,
-            noc_concentration: 4,
-        }
+        Self::for_arch(Architecture::IsaacLike)
     }
 
     /// CASCADE-style baseline (§6.1, Table 3): buffer arrays, TIAs,
     /// 3 shared 10-bit ADCs per 64 arrays, 1-bit DACs.
     pub fn cascade_like() -> Self {
-        AcceleratorConfig {
-            arch: Architecture::CascadeLike,
-            precision: Precision { p_d: 1, ..Default::default() },
-            xbar_size: 128,
-            arrays_per_pe: 64,
-            adcs_per_pe: 3,
-            sa_per_array: 0,
-            pes_per_tile: 4,
-            tiles: 280,
-            cycle_ns: 100.0,
-            edram_bytes: 64 * 1024,
-            noc_concentration: 4,
-        }
+        Self::for_arch(Architecture::CascadeLike)
     }
 
+    /// The architecture's registered default chip
+    /// ([`crate::model::CostModel::default_config`]).
     pub fn for_arch(arch: Architecture) -> Self {
-        match arch {
-            Architecture::IsaacLike => Self::isaac_like(),
-            Architecture::CascadeLike => Self::cascade_like(),
-            Architecture::NeuralPim => Self::neural_pim(),
-        }
+        crate::model::cost_model(arch).default_config()
     }
 
     /// §3.2's N (log2 of crossbar side).
@@ -209,12 +170,11 @@ impl AcceleratorConfig {
         if self.arrays_per_pe == 0 || self.pes_per_tile == 0 || self.tiles == 0 {
             bail!("counts must be positive");
         }
-        if self.arch == Architecture::NeuralPim && self.sa_per_array == 0 {
-            bail!("Neural-PIM needs at least one NNS+A per array");
-        }
         if self.adcs_per_pe == 0 {
             bail!("need at least one ADC per PE");
         }
+        // architecture-specific rules live with the cost model
+        crate::model::cost_model(self.arch).validate_config(self)?;
         Ok(())
     }
 
@@ -273,9 +233,22 @@ mod tests {
 
     #[test]
     fn defaults_validate() {
-        for arch in Architecture::all() {
+        for arch in crate::model::archs() {
             AcceleratorConfig::for_arch(arch).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn parse_accepts_registered_aliases() {
+        assert_eq!(Architecture::parse("isaac").unwrap(),
+                   Architecture::IsaacLike);
+        assert_eq!(Architecture::parse("B").unwrap(),
+                   Architecture::CascadeLike);
+        assert_eq!(Architecture::parse("NeuralPIM").unwrap(),
+                   Architecture::NeuralPim);
+        assert_eq!(Architecture::parse("raella").unwrap(),
+                   Architecture::LowResolution);
+        assert!(Architecture::parse("tpu").is_err());
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! vector down a 2^N-row crossbar) and scales linearly to full arrays —
 //! exactly the paper's "derived based on a single group of inputs and
 //! weights" framing.
+//!
+//! These are the *equations*; which equation a given architecture uses
+//! is bound by its `model::CostModel` impl (`model/archs.rs`) — nothing
+//! else in the crate picks an equation by matching on an architecture.
+//! The [`Strategy`] enum below stays closed on purpose: it is the
+//! paper's §3 taxonomy of the three accumulation strategies behind
+//! Fig. 3/4, not the open set of registered architectures.
 
 use crate::config::Precision;
 use crate::energy::constants as k;
@@ -119,13 +126,13 @@ pub fn group_energy(s: Strategy, p: &Precision, n: u32) -> GroupEnergy {
     let rows = 1u64 << n;
     let cycles = p.input_cycles() as u64;
     let groups_per_array = (1u64 << n) / (2 * p.weight_cols() as u64);
-    let mut e = GroupEnergy::default();
 
     // wordline side: every cycle drives all rows (shared by all groups)
-    e.dac = cycles as f64 * rows as f64 * k::dac_e_cycle(p.p_d)
+    let dac = cycles as f64 * rows as f64 * k::dac_e_cycle(p.p_d)
         / groups_per_array as f64;
-    e.xbar = cycles as f64 * k::xbar_e_cycle(1 << n, p.p_d)
+    let xbar = cycles as f64 * k::xbar_e_cycle(1 << n, p.p_d)
         / groups_per_array as f64;
+    let mut e = GroupEnergy { dac, xbar, ..Default::default() };
 
     match s {
         Strategy::A => {

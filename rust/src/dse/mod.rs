@@ -4,6 +4,7 @@
 
 use crate::config::{AcceleratorConfig, Precision};
 use crate::energy;
+use crate::model;
 use crate::util::pool;
 
 #[derive(Debug, Clone)]
@@ -32,21 +33,25 @@ fn label(cfg: &AcceleratorConfig) -> String {
 /// all PEs can be somehow utilized in every cycle").
 pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
     cfg.validate().ok()?;
-    // the shared NNADCs must keep up: groups needing conversion per
-    // input-period <= ADC conversion slots
+    let m = model::cost_model(cfg.arch);
+    // the shared converters must keep up: groups needing conversion per
+    // input-period <= conversion slots (rate from the cost model)
     let groups = cfg.arrays_per_pe as u64 * cfg.groups_per_array();
     let period_s =
         cfg.precision.input_cycles() as f64 * energy::cycle_seconds(cfg);
-    let adc_slots = cfg.adcs_per_pe as f64 * 1.2e9 * period_s;
+    let adc_slots = cfg.adcs_per_pe as f64 * m.adc_samples_per_s() * period_s;
     if (groups as f64) > adc_slots {
         return None; // conversion-starved: not a usable design point
     }
-    // NNS+A service rate: each NNS+A serves its array's groups
-    // sequentially inside one input cycle at 80 MHz
-    if (cfg.groups_per_array() as f64)
-        > 80e6 * energy::cycle_seconds(cfg) * cfg.sa_per_array as f64
-    {
-        return None;
+    // analog accumulator service rate (e.g. each NNS+A serves its
+    // array's groups sequentially inside one input cycle at 80 MHz);
+    // digital accumulators impose no such limit
+    if let Some(sa_rate) = m.sa_ops_per_s() {
+        if (cfg.groups_per_array() as f64)
+            > sa_rate * energy::cycle_seconds(cfg) * cfg.sa_per_array as f64
+        {
+            return None;
+        }
     }
     // I/O bandwidth limit (§7.1: "the I/O bandwidth limits the number of
     // RRAM arrays"): the IR bus can feed at most 8192 wordline bytes per

@@ -78,6 +78,7 @@ pub fn dac_e_cycle(bits: u32) -> f64 {
 /// WL driver area anchored to [T2]: 8192 4-bit DACs occupy 4.3e-3 mm²
 /// -> 5.25e-7 mm² each; scaled back to 1-bit with the same weak
 /// exponent as the energy law.
+#[allow(clippy::approx_constant)] // 3.14 is 2^(0.55*3) rounded, not pi
 pub const DAC_AREA_1B: f64 = 5.25e-7 / 3.14; // 2^(0.55*3) = 3.14
 
 /// DAC area scaling: same weak exponential as dac_e_cycle (capacitor

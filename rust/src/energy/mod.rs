@@ -66,118 +66,32 @@ impl PeBudget {
     }
 }
 
-/// Build the PE-level budget for a configuration.
+/// Build the PE-level budget for a configuration: the crossbar + WL-DAC
+/// rows common to every architecture, plus whatever periphery the
+/// architecture's registered cost model declares
+/// ([`crate::model::CostModel::peripheral_components`]).
 pub fn pe_budget(cfg: &AcceleratorConfig) -> PeBudget {
     let p = &cfg.precision;
     let cyc = cycle_seconds(cfg);
     let m = cfg.arrays_per_pe as u64;
     let size = cfg.xbar_size;
     let wl = size as u64; // wordlines per array
-    let mut comps = Vec::new();
-
-    // crossbars + their WL DACs are common to all three architectures
-    comps.push(ComponentBudget {
-        name: "crossbar",
-        count: m,
-        unit_power: k::xbar_e_cycle(size, p.p_d) / cyc,
-        unit_area: k::xbar_area(size),
-    });
-    comps.push(ComponentBudget {
-        name: "dac",
-        count: m * wl,
-        unit_power: k::dac_e_cycle(p.p_d) / cyc,
-        unit_area: k::dac_area(p.p_d),
-    });
-
-    match cfg.arch {
-        Architecture::IsaacLike => {
-            let adc_bits = crate::dataflow::adc_resolution_a(p, cfg.n_log2());
-            comps.push(ComponentBudget {
-                name: "adc",
-                count: cfg.adcs_per_pe as u64,
-                unit_power: k::adc_e_conv(adc_bits) * (size as f64) / cyc,
-                unit_area: k::adc_area(adc_bits),
-            });
-            comps.push(ComponentBudget {
-                name: "s+a",
-                count: m,
-                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc,
-                unit_area: k::SA_DIGITAL_AREA,
-            });
-            comps.push(ComponentBudget {
-                name: "ir",
-                count: 1,
-                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
-                unit_area: k::IR_AREA * m as f64 / 8.0,
-            });
-        }
-        Architecture::CascadeLike => {
-            let adc_bits = crate::dataflow::adc_resolution_b(p, cfg.n_log2());
-            comps.push(ComponentBudget {
-                name: "adc",
-                count: cfg.adcs_per_pe as u64,
-                unit_power: k::adc_e_conv(adc_bits) * (size as f64) / cyc,
-                unit_area: k::adc_area(adc_bits),
-            });
-            comps.push(ComponentBudget {
-                name: "buffer-array",
-                count: m * k::BUFFER_ARRAYS_PER_XBAR as u64,
-                unit_power: k::BUFFER_WRITE_E * (size as f64) / cyc / 4.0,
-                unit_area: k::xbar_area(size),
-            });
-            comps.push(ComponentBudget {
-                name: "tia",
-                count: m,
-                unit_power: k::TIA_E_CYCLE / cyc,
-                unit_area: k::TIA_AREA,
-            });
-            comps.push(ComponentBudget {
-                name: "sum-amp",
-                count: m * k::BUFFER_ARRAYS_PER_XBAR as u64,
-                unit_power: k::SUMAMP_E_CYCLE / cyc,
-                unit_area: k::SUMAMP_AREA,
-            });
-            comps.push(ComponentBudget {
-                name: "s+a",
-                count: m,
-                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc / 8.0,
-                unit_area: k::SA_DIGITAL_AREA,
-            });
-            comps.push(ComponentBudget {
-                name: "ir",
-                count: 1,
-                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
-                unit_area: k::IR_AREA * m as f64 / 8.0,
-            });
-        }
-        Architecture::NeuralPim => {
-            comps.push(ComponentBudget {
-                name: "nnadc",
-                count: cfg.adcs_per_pe as u64,
-                unit_power: k::NNADC_E_CONV * 1.2e9 / 8.0, // [T2] duty cycle
-                unit_area: k::NNADC_AREA,
-            });
-            let sa_count = (m * cfg.sa_per_array as u64).max(1);
-            comps.push(ComponentBudget {
-                name: "nns+a",
-                count: sa_count,
-                unit_power: k::NNSA_E_OP * 80e6, // 80 MHz [T2]
-                unit_area: k::NNSA_AREA,
-            });
-            comps.push(ComponentBudget {
-                name: "s/h",
-                count: sa_count * 144 / 64, // [T2]: 144 S/H per 64 NNS+A
-                unit_power: k::SH_E_OP * 80e6,
-                unit_area: k::SH_AREA,
-            });
-            comps.push(ComponentBudget {
-                name: "ir",
-                count: 1,
-                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
-                unit_area: k::NP_IR_AREA * (m as f64 / 64.0),
-            });
-        }
-    }
+    let mut comps = vec![
+        ComponentBudget {
+            name: "crossbar",
+            count: m,
+            unit_power: k::xbar_e_cycle(size, p.p_d) / cyc,
+            unit_area: k::xbar_area(size),
+        },
+        ComponentBudget {
+            name: "dac",
+            count: m * wl,
+            unit_power: k::dac_e_cycle(p.p_d) / cyc,
+            unit_area: k::dac_area(p.p_d),
+        },
+    ];
+    comps.extend(crate::model::cost_model(cfg.arch)
+        .peripheral_components(cfg));
     PeBudget { arch: cfg.arch, components: comps }
 }
 
@@ -262,14 +176,10 @@ pub fn chip_budget(cfg: &AcceleratorConfig) -> ChipBudget {
     ChipBudget { tile: tile_budget(cfg), tiles: cfg.tiles }
 }
 
-/// Architecture-specific input-cycle time in seconds (see constants.rs).
+/// Architecture-specific input-cycle time in seconds, from the
+/// registered cost model (see the `*_CYCLE_NS` constants).
 pub fn cycle_seconds(cfg: &AcceleratorConfig) -> f64 {
-    let ns = match cfg.arch {
-        Architecture::IsaacLike => k::ISAAC_CYCLE_NS,
-        Architecture::CascadeLike => k::CASCADE_CYCLE_NS,
-        Architecture::NeuralPim => k::NEURAL_PIM_CYCLE_NS,
-    };
-    ns * 1e-9
+    crate::model::cost_model(cfg.arch).cycle_ns() * 1e-9
 }
 
 /// Iso-area tile count: scale an architecture's tile count so its chip

@@ -14,19 +14,23 @@
 //! egresses to tile 0 (the chip's I/O corner).
 //!
 //! Energy is charged per event: when a stage completes a job it charges
-//! `sim::layer_energy(..).total() - noc` (the compute/memory share,
-//! identical to the analytical model), and every NoC delivery charges
+//! its layer's memoized `model::LayerCost::compute_e` (the compute/
+//! memory share, identical to the analytical model's
+//! `layer_energy total() - noc`), and every NoC delivery charges
 //! `CMesh::transfer_energy` with the transfer's *actual* hop count —
 //! replacing the analytical 1-hop average. HyperTransport is charged per
-//! transfer on multi-chip mappings, mirroring `sim::layer_energy`.
+//! transfer on multi-chip mappings (`LayerCost::noc_e_extra`). The cost
+//! table is built once per `(network, config)` and shared by every
+//! replica — the pre-`model` code re-priced all layers per instance on
+//! the request path.
 
 use super::engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Time};
 use super::noc::NocModel;
 use crate::arch::noc::CMesh;
 use crate::config::AcceleratorConfig;
-use crate::energy::{self, constants as k};
-use crate::mapping::{self, NetworkMapping};
-use crate::sim;
+use crate::energy;
+use crate::mapping::NetworkMapping;
+use crate::model::{self, LayerCost, NetworkCost};
 use crate::util::rng::Pcg;
 use crate::workloads::Network;
 use std::collections::VecDeque;
@@ -95,44 +99,61 @@ pub struct PipelineRun {
 }
 
 impl PipelineSim {
-    /// Map `net` on `cfg` and build the event model from the mapping.
+    /// Map `net` on `cfg` and build the event model from the memoized
+    /// [`model::network_cost`] table — replicas and repeated runs of the
+    /// same `(network, config)` pair share one layer-cost table instead
+    /// of re-pricing every layer per instance.
     pub fn new(net: &Network, cfg: &AcceleratorConfig) -> PipelineSim {
-        let m = mapping::map_network(net, cfg);
-        Self::with_mapping(cfg, &m)
+        let nc = model::network_cost(net, cfg);
+        Self::with_costs(cfg, &nc)
     }
 
-    /// Build from a mapping the caller already computed (avoids a second
-    /// `map_network` and guarantees the event model sees the same
-    /// replication/chip split as whatever evaluated that mapping;
-    /// `map_network` is deterministic, so `new` is equivalent).
+    /// Build from a cost table the caller already holds (the memoized
+    /// fast path: `request_profile` fetches it once and fans replicas
+    /// out over it).
+    pub fn with_costs(cfg: &AcceleratorConfig, nc: &NetworkCost)
+                      -> PipelineSim {
+        Self::build(cfg, &nc.mapping, &nc.layers)
+    }
+
+    /// Build from a bare mapping the caller computed (hand-built layer
+    /// chains in tests); prices the layers directly, uncached — the
+    /// values are identical to the memoized path by construction.
     pub fn with_mapping(cfg: &AcceleratorConfig, m: &NetworkMapping)
                         -> PipelineSim {
+        let multi_chip = m.chips > 1;
+        let costs: Vec<LayerCost> = m
+            .layers
+            .iter()
+            .map(|lm| model::layer_cost(lm, cfg, multi_chip))
+            .collect();
+        Self::build(cfg, m, &costs)
+    }
+
+    fn build(cfg: &AcceleratorConfig, m: &NetworkMapping,
+             costs: &[LayerCost]) -> PipelineSim {
         assert!(!m.layers.is_empty(), "empty network");
+        assert_eq!(m.layers.len(), costs.len(), "cost table arity");
         let ic = cfg.precision.input_cycles() as u64;
         let cycle_ps = ns_to_ps(energy::cycle_seconds(cfg) * 1e9);
         let tiles = m.layer_tiles(cfg);
-        let multi_chip = m.chips > 1;
         let stages: Vec<Stage> = m
             .layers
             .iter()
+            .zip(costs)
             .zip(&tiles)
-            .map(|(lm, &tile)| {
+            .map(|((lm, cost), &tile)| {
                 // integer 9/8 two-stage overhead; exact for the 100/50 ns
                 // cycles (cycle_ps is a multiple of 8 ps)
                 let service_ps = ((lm.stage_cycles(ic) as u128
                     * cycle_ps as u128
                     * 9)
                     / 8) as Time;
-                let le = sim::layer_energy(lm, cfg, multi_chip);
                 Stage {
                     service_ps,
                     tile,
-                    compute_e: le.total() - le.noc,
-                    noc_e_extra: if multi_chip {
-                        lm.out_bytes() as f64 * k::HT_E_BYTE
-                    } else {
-                        0.0
-                    },
+                    compute_e: cost.compute_e,
+                    noc_e_extra: cost.noc_e_extra,
                     out_bytes: lm.out_bytes(),
                     queue: VecDeque::new(),
                     busy: false,
@@ -296,7 +317,10 @@ mod tests {
     fn bare_mapping(cfg: &AcceleratorConfig, layers: &[Layer])
                     -> NetworkMapping {
         NetworkMapping {
-            layers: layers.iter().map(|l| mapping::map_layer(l, cfg)).collect(),
+            layers: layers
+                .iter()
+                .map(|l| crate::mapping::map_layer(l, cfg))
+                .collect(),
             chips: 1,
         }
     }
@@ -321,7 +345,7 @@ mod tests {
         let tiles = m.layer_tiles(&cfg);
         let mut want = 0.0;
         for (i, lm) in m.layers.iter().enumerate() {
-            let le = sim::layer_energy(lm, &cfg, false);
+            let le = crate::sim::layer_energy(lm, &cfg, false);
             want += le.total() - le.noc;
             let to = if i + 1 < m.layers.len() { tiles[i + 1] } else { 0 };
             let hops = mesh.hops(tiles[i], to);

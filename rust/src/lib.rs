@@ -16,7 +16,12 @@
 //!   and the inference coordinator. Python never runs at request time.
 //!
 //! Module map: `arch` (behavioural circuit models + c-mesh), `dataflow`
-//! (§3 equations), `energy`/`mapping`/`sim` (budgets, replication
+//! (§3 equations), `model` (the trait-based architecture cost-model
+//! layer: one `CostModel` impl per architecture, the `ArchRegistry`
+//! every comparison iterates, and the memoized per-`(network, config)`
+//! `LayerCost` tables shared by the analytical and event simulators —
+//! register a new architecture by adding an enum variant plus one impl
+//! in `model/archs.rs`), `energy`/`mapping`/`sim` (budgets, replication
 //! allocator, analytical system simulator), `event` (discrete-event
 //! refinement of `sim`: engine, queued NoC, back-pressured pipeline,
 //! cross-validation + request-level latency modes), `dse` (Fig. 11
@@ -36,6 +41,7 @@ pub mod dse;
 pub mod energy;
 pub mod event;
 pub mod mapping;
+pub mod model;
 pub mod noise;
 pub mod periph;
 pub mod report;

@@ -19,6 +19,9 @@ COMMANDS (analytical / simulator — no artifacts needed):
   characterize              §3 dataflow framework (Eqs. 2-8, Fig. 3d/4b/4c)
   simulate [--network N]    full-system simulation (Fig. 12/13 + headline)
             [--all]         all nine benchmarks
+            [--network-file F]  a runtime-defined network from a JSON
+                            spec (see workloads::from_spec; also accepted
+                            by event-sim)
   event-sim [--network N|--all]
             [--requests N] [--replicas R] [--load F]
                             discrete-event microsimulation: cross-validate
@@ -76,7 +79,7 @@ fn run(args: &Args) -> Result<()> {
         "periph" => periph_cmd(args),
         "serve" => serve(args),
         "infer" => infer(args),
-        "help" | _ => {
+        _ => {
             println!("{USAGE}");
             Ok(())
         }
@@ -91,6 +94,10 @@ fn characterize() -> Result<()> {
 }
 
 fn selected_networks(args: &Args) -> Result<Vec<workloads::Network>> {
+    if let Some(path) = args.get("network-file") {
+        // runtime-defined network: a JSON layer spec (workloads::load)
+        return Ok(vec![workloads::load(path)?]);
+    }
     if args.flag("all") || args.get("network").is_none() {
         Ok(workloads::all_benchmarks())
     } else {

@@ -209,7 +209,7 @@ mod tests {
                 let out = g.usize_in(1, 56) as u32;
                 layers.push(Layer::conv(&format!("l{i}"), 3, cin, cout, out, 1));
             }
-            let net = crate::workloads::Network { name: "prop", layers };
+            let net = crate::workloads::Network { name: "prop".into(), layers };
             let m = map_network(&net, &cfg);
             let budget = m.chips * cfg.total_arrays();
             crate::prop_assert!(

@@ -1,0 +1,507 @@
+//! The registered [`CostModel`] implementations — one per architecture.
+//!
+//! Each impl binds an architecture to its §3 dataflow equations
+//! (`dataflow::*_{a,b,c}`), its per-layer interface energy (the former
+//! `sim::layer_energy` match arms), its PE periphery (the former
+//! `energy::pe_budget` match arms), its default chip, and its Table-3
+//! metadata. This file is the ONLY place in the crate that knows how the
+//! architectures differ; registering a new one means writing an impl
+//! here and appending it to `model::MODELS`.
+
+use super::{CostModel, InterfaceEnergy, LayerCtx, PeMetadata};
+use crate::config::{AcceleratorConfig, Architecture, Precision};
+use crate::dataflow;
+use crate::energy::{constants as k, ComponentBudget};
+use anyhow::{bail, Result};
+
+/// Shared IR row of the SAR-ADC-based PEs (ISAAC / CASCADE / RAELLA).
+fn sar_ir_row(cfg: &AcceleratorConfig, cyc: f64) -> ComponentBudget {
+    let m = cfg.arrays_per_pe as u64;
+    let wl = cfg.xbar_size as u64;
+    ComponentBudget {
+        name: "ir",
+        count: 1,
+        unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
+        unit_area: k::IR_AREA * m as f64 / 8.0,
+    }
+}
+
+// ---------------------------------------------------------------- ISAAC --
+
+/// Strategy A: per-conversion digital accumulation (ISAAC-style).
+pub struct IsaacLikeModel;
+
+impl CostModel for IsaacLikeModel {
+    fn arch(&self) -> Architecture {
+        Architecture::IsaacLike
+    }
+
+    fn name(&self) -> &'static str {
+        "ISAAC-like"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["isaac", "isaac-like", "a"]
+    }
+
+    /// ISAAC-style baseline scaled to 8-bit inference (§6.1, Table 3):
+    /// one 8-bit ADC per array, 1-bit DACs, digital S+A.
+    fn default_config(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            arch: Architecture::IsaacLike,
+            precision: Precision { p_d: 1, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 64,
+            sa_per_array: 0,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    fn cycle_ns(&self) -> f64 {
+        k::ISAAC_CYCLE_NS
+    }
+
+    fn adc_resolution(&self, p: &Precision, n: u32) -> u32 {
+        dataflow::adc_resolution_a(p, n)
+    }
+
+    fn conversions_per_group(&self, p: &Precision) -> u64 {
+        dataflow::conversions_a(p)
+    }
+
+    fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy {
+        let bits = dataflow::adc_resolution_a(ctx.p, ctx.n);
+        // each of the 2*weight_cols BLs converts every cycle (Eq. 5,
+        // doubled for the W+/W- pair)
+        let convs = 2 * ctx.group_chunks * dataflow::conversions_a(ctx.p);
+        InterfaceEnergy {
+            adc: convs as f64 * k::adc_e_conv(bits),
+            // one digital S+A op per conversion
+            sa: convs as f64 * k::SA_DIGITAL_E_OP,
+            // OR read-modify-write per conversion (steps 3/5, Fig. 3a)
+            memory: convs as f64 * 2.0 * k::SRAM_E_BYTE,
+            digital: 0.0,
+        }
+    }
+
+    fn peripheral_components(&self, cfg: &AcceleratorConfig)
+                             -> Vec<ComponentBudget> {
+        let cyc = self.cycle_ns() * 1e-9;
+        let m = cfg.arrays_per_pe as u64;
+        let size = cfg.xbar_size;
+        let adc_bits = dataflow::adc_resolution_a(&cfg.precision, cfg.n_log2());
+        vec![
+            ComponentBudget {
+                name: "adc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::adc_e_conv(adc_bits) * (size as f64) / cyc,
+                unit_area: k::adc_area(adc_bits),
+            },
+            ComponentBudget {
+                name: "s+a",
+                count: m,
+                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc,
+                unit_area: k::SA_DIGITAL_AREA,
+            },
+            sar_ir_row(cfg, cyc),
+        ]
+    }
+
+    fn pe_metadata(&self, cfg: &AcceleratorConfig) -> PeMetadata {
+        PeMetadata {
+            accumulation: "Digital",
+            interface: "S+A",
+            // the paper's Table 3 lists 7-bit for the ISAAC-style
+            // baseline (one fewer than Eq. 2's worst case, since one BL
+            // level is spare); we report Eq. 2 - 1
+            adc_bits: dataflow::adc_resolution_a(&cfg.precision,
+                                                 cfg.n_log2()) - 1,
+        }
+    }
+
+    /// ISAAC's SAR ADCs run at 1.28 GS/s [I].
+    fn adc_samples_per_s(&self) -> f64 {
+        1.28e9
+    }
+}
+
+// -------------------------------------------------------------- CASCADE --
+
+/// Strategy B: RRAM buffer arrays + shared ADCs (CASCADE-style).
+pub struct CascadeLikeModel;
+
+impl CostModel for CascadeLikeModel {
+    fn arch(&self) -> Architecture {
+        Architecture::CascadeLike
+    }
+
+    fn name(&self) -> &'static str {
+        "CASCADE-like"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["cascade", "cascade-like", "b"]
+    }
+
+    /// CASCADE-style baseline (§6.1, Table 3): buffer arrays, TIAs,
+    /// 3 shared 10-bit ADCs per 64 arrays, 1-bit DACs.
+    fn default_config(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            arch: Architecture::CascadeLike,
+            precision: Precision { p_d: 1, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 3,
+            sa_per_array: 0,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    fn cycle_ns(&self) -> f64 {
+        k::CASCADE_CYCLE_NS
+    }
+
+    fn adc_resolution(&self, p: &Precision, n: u32) -> u32 {
+        dataflow::adc_resolution_b(p, n)
+    }
+
+    fn conversions_per_group(&self, p: &Precision) -> u64 {
+        dataflow::conversions_b(p)
+    }
+
+    fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy {
+        // TIA subtracts W+/W- in analog: single-ended buffering
+        let writes = ctx.group_chunks * ctx.cycles
+            * ctx.p.weight_cols() as u64;
+        let convs = ctx.group_chunks * dataflow::conversions_b(ctx.p);
+        InterfaceEnergy {
+            sa: writes as f64 * k::BUFFER_WRITE_E
+                + ctx.array_cycles as f64 * k::TIA_E_CYCLE
+                + convs as f64 * k::SA_DIGITAL_E_OP,
+            // 10-bit nominal resolution at 8-bit-class conversion
+            // energy (see constants::CASCADE_ADC_E_CONV)
+            adc: convs as f64 * k::CASCADE_ADC_E_CONV,
+            digital: convs as f64 * k::SUMAMP_E_CYCLE,
+            memory: 0.0,
+        }
+    }
+
+    fn peripheral_components(&self, cfg: &AcceleratorConfig)
+                             -> Vec<ComponentBudget> {
+        let cyc = self.cycle_ns() * 1e-9;
+        let m = cfg.arrays_per_pe as u64;
+        let size = cfg.xbar_size;
+        let adc_bits = dataflow::adc_resolution_b(&cfg.precision, cfg.n_log2());
+        vec![
+            ComponentBudget {
+                name: "adc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::adc_e_conv(adc_bits) * (size as f64) / cyc,
+                unit_area: k::adc_area(adc_bits),
+            },
+            ComponentBudget {
+                name: "buffer-array",
+                count: m * k::BUFFER_ARRAYS_PER_XBAR as u64,
+                unit_power: k::BUFFER_WRITE_E * (size as f64) / cyc / 4.0,
+                unit_area: k::xbar_area(size),
+            },
+            ComponentBudget {
+                name: "tia",
+                count: m,
+                unit_power: k::TIA_E_CYCLE / cyc,
+                unit_area: k::TIA_AREA,
+            },
+            ComponentBudget {
+                name: "sum-amp",
+                count: m * k::BUFFER_ARRAYS_PER_XBAR as u64,
+                unit_power: k::SUMAMP_E_CYCLE / cyc,
+                unit_area: k::SUMAMP_AREA,
+            },
+            ComponentBudget {
+                name: "s+a",
+                count: m,
+                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc / 8.0,
+                unit_area: k::SA_DIGITAL_AREA,
+            },
+            sar_ir_row(cfg, cyc),
+        ]
+    }
+
+    fn pe_metadata(&self, cfg: &AcceleratorConfig) -> PeMetadata {
+        PeMetadata {
+            accumulation: "Partially analog",
+            interface: "S+A and buffer array",
+            adc_bits: dataflow::adc_resolution_b(&cfg.precision,
+                                                 cfg.n_log2()) - 1,
+        }
+    }
+
+    fn adc_samples_per_s(&self) -> f64 {
+        1.28e9
+    }
+}
+
+// ----------------------------------------------------------- Neural-PIM --
+
+/// Strategy C: fully-analog accumulation with NeuralPeriph circuits.
+pub struct NeuralPimModel;
+
+impl CostModel for NeuralPimModel {
+    fn arch(&self) -> Architecture {
+        Architecture::NeuralPim
+    }
+
+    fn name(&self) -> &'static str {
+        "Neural-PIM"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["neural-pim", "neuralpim", "pim", "c"]
+    }
+
+    /// The paper's optimal Neural-PIM configuration (§7.1, Table 2):
+    /// 64 128x128 arrays/PE, 4 NNADCs, 64 NNS+As, 4-bit DACs, 280 tiles.
+    fn default_config(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            arch: Architecture::NeuralPim,
+            precision: Precision { p_d: 4, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 4,
+            sa_per_array: 1,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    fn validate_config(&self, cfg: &AcceleratorConfig) -> Result<()> {
+        if cfg.sa_per_array == 0 {
+            bail!("Neural-PIM needs at least one NNS+A per array");
+        }
+        Ok(())
+    }
+
+    fn cycle_ns(&self) -> f64 {
+        k::NEURAL_PIM_CYCLE_NS
+    }
+
+    fn adc_resolution(&self, p: &Precision, _n: u32) -> u32 {
+        dataflow::adc_resolution_c(p)
+    }
+
+    fn conversions_per_group(&self, _p: &Precision) -> u64 {
+        dataflow::conversions_c()
+    }
+
+    fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy {
+        // one NNS+A op per group-chunk per cycle; 1 conversion per
+        // group-chunk; inter-chunk combine is a cheap digital add
+        let sa_ops = ctx.group_chunks * ctx.cycles;
+        InterfaceEnergy {
+            sa: sa_ops as f64 * (k::NNSA_E_OP + 2.0 * k::SH_E_OP),
+            adc: ctx.group_chunks as f64 * k::NNADC_E_CONV,
+            digital: ctx.group_chunks
+                .saturating_sub(ctx.positions * ctx.cout) as f64
+                * k::SA_DIGITAL_E_OP,
+            memory: 0.0,
+        }
+    }
+
+    fn peripheral_components(&self, cfg: &AcceleratorConfig)
+                             -> Vec<ComponentBudget> {
+        let cyc = self.cycle_ns() * 1e-9;
+        let m = cfg.arrays_per_pe as u64;
+        let wl = cfg.xbar_size as u64;
+        let sa_count = (m * cfg.sa_per_array as u64).max(1);
+        vec![
+            ComponentBudget {
+                name: "nnadc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::NNADC_E_CONV * 1.2e9 / 8.0, // [T2] duty cycle
+                unit_area: k::NNADC_AREA,
+            },
+            ComponentBudget {
+                name: "nns+a",
+                count: sa_count,
+                unit_power: k::NNSA_E_OP * 80e6, // 80 MHz [T2]
+                unit_area: k::NNSA_AREA,
+            },
+            ComponentBudget {
+                name: "s/h",
+                count: sa_count * 144 / 64, // [T2]: 144 S/H per 64 NNS+A
+                unit_power: k::SH_E_OP * 80e6,
+                unit_area: k::SH_AREA,
+            },
+            ComponentBudget {
+                name: "ir",
+                count: 1,
+                unit_power: k::SRAM_E_BYTE * (wl * m) as f64 / cyc,
+                unit_area: k::NP_IR_AREA * (m as f64 / 64.0),
+            },
+        ]
+    }
+
+    fn pe_metadata(&self, cfg: &AcceleratorConfig) -> PeMetadata {
+        PeMetadata {
+            accumulation: "Analog",
+            interface: "NNS+A",
+            adc_bits: dataflow::adc_resolution_c(&cfg.precision),
+        }
+    }
+
+    /// NNADCs convert at 1.2 GS/s [T2].
+    fn adc_samples_per_s(&self) -> f64 {
+        1.2e9
+    }
+
+    /// Each NNS+A serves its array's groups sequentially at 80 MHz [T2].
+    fn sa_ops_per_s(&self) -> Option<f64> {
+        Some(80e6)
+    }
+}
+
+// ------------------------------------------------------ RAELLA-like -------
+
+/// Reported A/D resolution of the speculative low-resolution dataflow
+/// (RAELLA, Andrulis et al., ISCA 2023: center+offset weight encoding +
+/// input speculation keep almost every conversion low-resolution).
+pub const LOWRES_ADC_BITS: u32 = 6;
+
+/// Fraction of conversions whose speculation misses and redoes the
+/// conversion at the full Eq.-2 resolution (RAELLA reports a few percent
+/// of slices needing recovery; we charge a conservative 5%).
+pub const LOWRES_RECOVERY_FRAC: f64 = 0.05;
+
+/// Per-conversion speculation check: one comparator + controller op,
+/// a fraction of a digital S+A op.
+pub const LOWRES_SPEC_E_OP: f64 = 0.04e-12;
+
+/// Speculation controller area per array (comparator + mask logic),
+/// roughly half a digital S+A unit.
+pub const LOWRES_SPEC_AREA: f64 = 0.00012;
+
+/// RAELLA-style fourth architecture: ISAAC's per-cycle conversion
+/// dataflow, but almost every conversion happens on a low-resolution
+/// ADC; mis-speculations redo at full resolution. Exists to prove the
+/// cost-model layer is open — the rest of the crate learned about it
+/// from the registry alone.
+pub struct LowResolutionModel;
+
+impl CostModel for LowResolutionModel {
+    fn arch(&self) -> Architecture {
+        Architecture::LowResolution
+    }
+
+    fn name(&self) -> &'static str {
+        "RAELLA-like"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["raella", "raella-like", "lowres", "low-resolution", "d"]
+    }
+
+    /// ISAAC's organization (one converter per array, 1-bit DACs,
+    /// digital S+A) with the converters swapped for low-resolution ones.
+    fn default_config(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            arch: Architecture::LowResolution,
+            precision: Precision { p_d: 1, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 64,
+            sa_per_array: 0,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    /// ADC-rate-bound like ISAAC: the speculation logic sits off the
+    /// conversion critical path.
+    fn cycle_ns(&self) -> f64 {
+        k::ISAAC_CYCLE_NS
+    }
+
+    fn adc_resolution(&self, p: &Precision, n: u32) -> u32 {
+        LOWRES_ADC_BITS.min(dataflow::adc_resolution_a(p, n))
+    }
+
+    /// Same conversion count as Strategy A (Eq. 5); the recovery
+    /// fraction is charged as energy, not extra scheduled conversions.
+    fn conversions_per_group(&self, p: &Precision) -> u64 {
+        dataflow::conversions_a(p)
+    }
+
+    fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy {
+        let bits_full = dataflow::adc_resolution_a(ctx.p, ctx.n);
+        let bits_lo = LOWRES_ADC_BITS.min(bits_full);
+        let convs = 2 * ctx.group_chunks * dataflow::conversions_a(ctx.p);
+        InterfaceEnergy {
+            // every conversion at low resolution + the recovery tail at
+            // full Eq.-2 resolution
+            adc: convs as f64
+                * (k::adc_e_conv(bits_lo)
+                    + LOWRES_RECOVERY_FRAC * k::adc_e_conv(bits_full)),
+            // digital S+A per conversion + the speculation check
+            sa: convs as f64 * (k::SA_DIGITAL_E_OP + LOWRES_SPEC_E_OP),
+            // OR read-modify-write per conversion, as in Strategy A
+            memory: convs as f64 * 2.0 * k::SRAM_E_BYTE,
+            digital: 0.0,
+        }
+    }
+
+    fn peripheral_components(&self, cfg: &AcceleratorConfig)
+                             -> Vec<ComponentBudget> {
+        let cyc = self.cycle_ns() * 1e-9;
+        let m = cfg.arrays_per_pe as u64;
+        let size = cfg.xbar_size;
+        let bits = self.adc_resolution(&cfg.precision, cfg.n_log2());
+        vec![
+            ComponentBudget {
+                name: "adc",
+                count: cfg.adcs_per_pe as u64,
+                unit_power: k::adc_e_conv(bits) * (size as f64) / cyc,
+                unit_area: k::adc_area(bits),
+            },
+            ComponentBudget {
+                name: "s+a",
+                count: m,
+                unit_power: k::SA_DIGITAL_E_OP * (size as f64) / cyc,
+                unit_area: k::SA_DIGITAL_AREA,
+            },
+            ComponentBudget {
+                name: "spec-ctrl",
+                count: m,
+                unit_power: LOWRES_SPEC_E_OP * (size as f64) / cyc,
+                unit_area: LOWRES_SPEC_AREA,
+            },
+            sar_ir_row(cfg, cyc),
+        ]
+    }
+
+    fn pe_metadata(&self, _cfg: &AcceleratorConfig) -> PeMetadata {
+        PeMetadata {
+            accumulation: "Digital (speculative)",
+            interface: "S+A + recovery",
+            adc_bits: LOWRES_ADC_BITS,
+        }
+    }
+
+    fn adc_samples_per_s(&self) -> f64 {
+        1.28e9
+    }
+}

@@ -7,10 +7,18 @@ use crate::dataflow::{self, Strategy};
 use crate::dse;
 use crate::energy;
 use crate::event;
+use crate::model;
 use crate::sim;
 use crate::util::stats;
 use crate::util::table::{eng, Table};
 use crate::workloads;
+
+/// `Table::new` over owned header strings (the registry-driven tables
+/// build their column sets at runtime).
+fn table_with_headers(title: &str, headers: &[String]) -> Table {
+    let refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    Table::new(title, &refs)
+}
 
 /// §3.1 / Fig. 3(d): per-strategy step counts for the running example.
 pub fn characterization_table() -> Table {
@@ -124,18 +132,23 @@ pub fn table2() -> Table {
     t
 }
 
-/// Table 3: PE-level architecture comparison.
+/// Table 3: PE-level architecture comparison, one column per registered
+/// architecture (newly registered cost models appear automatically).
 pub fn table3() -> Table {
-    let mut t = Table::new(
-        "Table 3: PE-level comparison (128x128 arrays, 1-bit cells)",
-        &["metric", "ISAAC-style", "CASCADE-style", "Neural-PIM"],
-    );
     let rows = baselines::pe_comparison();
+    let mut headers: Vec<String> = vec!["metric".into()];
+    headers.extend(rows.iter().map(|r| r.arch.name().to_string()));
+    let mut t = table_with_headers(
+        "Table 3: PE-level comparison (128x128 arrays, 1-bit cells)",
+        &headers,
+    );
     let get = |f: &dyn Fn(&baselines::PeComparison) -> String| -> Vec<String> {
         rows.iter().map(|r| f(r)).collect()
     };
     let push = |t: &mut Table, name: &str, vals: Vec<String>| {
-        t.row(&[name.into(), vals[0].clone(), vals[1].clone(), vals[2].clone()]);
+        let mut cells: Vec<String> = vec![name.into()];
+        cells.extend(vals);
+        t.row(&cells);
     };
     push(&mut t, "accumulation", get(&|r| r.accumulation.into()));
     push(&mut t, "interface", get(&|r| r.interface.into()));
@@ -191,7 +204,7 @@ pub fn event_cross_validation_table(nets: &[workloads::Network]) -> Table {
     );
     for r in &rows {
         t.row(&[
-            r.network.into(),
+            r.network.to_string(),
             r.arch.name().into(),
             eng(r.analytical_energy_j),
             eng(r.event_energy_j),
@@ -222,12 +235,13 @@ pub fn event_latency_table(nets: &[workloads::Network],
         &["network", "arch", "p50", "p95", "p99", "mean", "NoC wait",
           "blocked starts"],
     );
-    // one scenario per (network, arch): fan the scenarios out over the
-    // pool (replicas run sequentially inside each item — scenario-level
-    // parallelism already saturates the cores without nested spawns)
+    // one scenario per (network, registered arch): fan the scenarios out
+    // over the pool (replicas run sequentially inside each item —
+    // scenario-level parallelism already saturates the cores without
+    // nested spawns)
     let scenarios: Vec<(&workloads::Network, Architecture)> = nets
         .iter()
-        .flat_map(|net| Architecture::all().into_iter().map(move |a| (net, a)))
+        .flat_map(|net| model::archs().into_iter().map(move |a| (net, a)))
         .collect();
     let profiles = crate::util::pool::map(&scenarios, |&(net, arch)| {
         let cfg = sim::iso_area_config(arch, reference_area);
@@ -236,7 +250,7 @@ pub fn event_latency_table(nets: &[workloads::Network],
     for p in &profiles {
         let us = |s: f64| format!("{:.1} µs", s * 1e6);
         t.row(&[
-            p.network.into(),
+            p.network.to_string(),
             p.arch.name().into(),
             us(p.p50_s),
             us(p.p95_s),
@@ -262,15 +276,22 @@ pub struct SystemReport {
 
 pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
     let cmp = sim::run_system_comparison(nets);
-    let mut te = Table::new(
+    // columns come from the registry: one per architecture, plus one
+    // ratio column per non-flagship architecture
+    let archs = model::archs();
+    let reference = model::reference();
+    let others: Vec<Architecture> =
+        archs.iter().copied().filter(|&a| a != reference).collect();
+    let mut headers: Vec<String> = vec!["network".into()];
+    headers.extend(archs.iter().map(|a| a.name().to_string()));
+    headers.extend(others.iter().map(|a| format!("vs {}", a.name())));
+    let mut te = table_with_headers(
         "Fig 12a: energy per inference (J), iso-area",
-        &["network", "ISAAC-style", "CASCADE-style", "Neural-PIM",
-          "vs ISAAC", "vs CASCADE"],
+        &headers,
     );
-    let mut tt = Table::new(
+    let mut tt = table_with_headers(
         "Fig 12b: throughput (GOPS), iso-area",
-        &["network", "ISAAC-style", "CASCADE-style", "Neural-PIM",
-          "vs ISAAC", "vs CASCADE"],
+        &headers,
     );
     for net in nets {
         let find = |arch| {
@@ -279,25 +300,27 @@ pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
                 .find(|r| r.network == net.name && r.arch == arch)
                 .unwrap()
         };
-        let i = find(Architecture::IsaacLike);
-        let c = find(Architecture::CascadeLike);
-        let n = find(Architecture::NeuralPim);
-        te.row(&[
-            net.name.into(),
-            eng(i.energy_per_inference),
-            eng(c.energy_per_inference),
-            eng(n.energy_per_inference),
-            format!("{:.2}x", i.energy_per_inference / n.energy_per_inference),
-            format!("{:.2}x", c.energy_per_inference / n.energy_per_inference),
-        ]);
-        tt.row(&[
-            net.name.into(),
-            format!("{:.0}", i.throughput_gops),
-            format!("{:.0}", c.throughput_gops),
-            format!("{:.0}", n.throughput_gops),
-            format!("{:.2}x", n.throughput_gops / i.throughput_gops),
-            format!("{:.2}x", n.throughput_gops / c.throughput_gops),
-        ]);
+        let flagship = find(reference);
+        let mut erow: Vec<String> = vec![net.name.to_string()];
+        let mut trow: Vec<String> = vec![net.name.to_string()];
+        for &arch in &archs {
+            let r = find(arch);
+            erow.push(eng(r.energy_per_inference));
+            trow.push(format!("{:.0}", r.throughput_gops));
+        }
+        for &arch in &others {
+            let r = find(arch);
+            erow.push(format!(
+                "{:.2}x",
+                r.energy_per_inference / flagship.energy_per_inference
+            ));
+            trow.push(format!(
+                "{:.2}x",
+                flagship.throughput_gops / r.throughput_gops
+            ));
+        }
+        te.row(&erow);
+        tt.row(&trow);
     }
 
     let mut tb = Table::new(
@@ -305,7 +328,7 @@ pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
         &["arch", "ADC", "DAC", "S+A", "crossbar", "memory", "NoC+IO",
           "digital"],
     );
-    for arch in Architecture::all() {
+    for &arch in &archs {
         let mut shares = vec![Vec::new(); 7];
         for r in cmp.results.iter().filter(|r| r.arch == arch) {
             let tot = r.breakdown.total();

@@ -11,57 +11,21 @@
 //! Fig. 8), which is how the authors' simulator works too.
 
 use crate::config::{AcceleratorConfig, Architecture};
-use crate::dataflow;
-use crate::energy::{self, constants as k};
-use crate::mapping::{self, NetworkMapping};
+use crate::energy;
+use crate::mapping::NetworkMapping;
+use crate::model;
 use crate::util::pool;
 use crate::workloads::Network;
+use std::sync::Arc;
 
-/// Energy per inference, by component class (Fig. 13's categories).
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct EnergyBreakdown {
-    pub adc: f64,
-    pub dac: f64,
-    pub sa: f64,   // digital S+A / buffer writes+TIA / NNS+A+S/H
-    pub xbar: f64, // VMM array reads
-    pub memory: f64, // eDRAM + SRAM IR/OR
-    pub noc: f64,  // c-mesh + HyperTransport
-    pub digital: f64, // activation, pooling, element-wise
-}
-
-impl EnergyBreakdown {
-    pub fn total(&self) -> f64 {
-        self.adc + self.dac + self.sa + self.xbar + self.memory + self.noc
-            + self.digital
-    }
-
-    pub fn add(&mut self, other: &EnergyBreakdown) {
-        self.adc += other.adc;
-        self.dac += other.dac;
-        self.sa += other.sa;
-        self.xbar += other.xbar;
-        self.memory += other.memory;
-        self.noc += other.noc;
-        self.digital += other.digital;
-    }
-
-    pub fn categories(&self) -> [(&'static str, f64); 7] {
-        [
-            ("ADC", self.adc),
-            ("DAC", self.dac),
-            ("S+A", self.sa),
-            ("Crossbar", self.xbar),
-            ("Memory", self.memory),
-            ("NoC+IO", self.noc),
-            ("Digital", self.digital),
-        ]
-    }
-}
+/// Re-exported from the `model` subsystem, which owns the per-layer cost
+/// computation; existing `sim::EnergyBreakdown` paths keep working.
+pub use crate::model::EnergyBreakdown;
 
 /// Simulation result for one (network, architecture) pair.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    pub network: &'static str,
+    pub network: Arc<str>,
     pub arch: Architecture,
     pub energy_per_inference: f64,
     pub breakdown: EnergyBreakdown,
@@ -78,10 +42,15 @@ pub struct SimResult {
     pub chip_area_mm2: f64,
 }
 
-/// Simulate one network on one accelerator configuration.
+/// Simulate one network on one accelerator configuration. The mapping
+/// and per-layer energies come from the memoized
+/// [`model::network_cost`] table, so repeated evaluations of the same
+/// `(network, config)` pair — across the report tables, the event
+/// simulator's scenarios, and the golden tests — price the layers once.
 pub fn simulate(net: &Network, cfg: &AcceleratorConfig) -> SimResult {
-    let m = mapping::map_network(net, cfg);
-    let e = energy_per_inference(net, cfg, &m);
+    let nc = model::network_cost(net, cfg);
+    let m = &nc.mapping;
+    let e = nc.total.clone();
     let t_cycle = energy::cycle_seconds(cfg);
     let input_cycles = cfg.precision.input_cycles() as u64;
 
@@ -106,7 +75,7 @@ pub fn simulate(net: &Network, cfg: &AcceleratorConfig) -> SimResult {
     // efficiency (GOPS/W) is then ops/s over watts = ops/J
     let power = e.total() * inferences_per_s;
     SimResult {
-        network: net.name,
+        network: net.name.clone(),
         arch: cfg.arch,
         energy_per_inference: e.total(),
         breakdown: e,
@@ -132,92 +101,17 @@ pub fn energy_per_inference(_net: &Network, cfg: &AcceleratorConfig,
 }
 
 /// Per-inference energy of ONE mapped layer — the unit the event-driven
-/// simulator charges at stage granularity (`event::pipeline` charges
-/// `total() - noc` when a stage completes and replaces the analytical
-/// 1-hop NoC average with per-transfer hop counts);
+/// simulator charges at stage granularity;
 /// [`energy_per_inference`] is exactly the sum of these over the layers.
-pub fn layer_energy(lm: &mapping::LayerMapping, cfg: &AcceleratorConfig,
+///
+/// Thin dispatch over [`model::layer_cost`]: the architecture-common
+/// terms and the per-architecture interface energy both live in the
+/// `model` subsystem now, and the memoized
+/// [`model::network_cost`] table stores exactly these values.
+pub fn layer_energy(lm: &crate::mapping::LayerMapping,
+                    cfg: &AcceleratorConfig,
                     multi_chip: bool) -> EnergyBreakdown {
-    let p = &cfg.precision;
-    let n = cfg.n_log2();
-    let cycles = p.input_cycles() as u64;
-    let rows = cfg.xbar_size as u64;
-    let groups_per_array = cfg.groups_per_array();
-    let l = &lm.layer;
-    let positions = l.positions();
-    let k_dim = l.k_dim();
-    let k_chunks = lm.k_chunks;
-    let c_chunks = (l.cout as u64).div_ceil(groups_per_array);
-    // per inference: every sliding-window position evaluates every
-    // chunk of the weight matrix once per input cycle
-    let array_cycles = positions * k_chunks * c_chunks * cycles;
-    // dot-product groups (output channel x K-chunk) per inference
-    let group_chunks = positions * l.cout as u64 * k_chunks;
-
-    let mut e = EnergyBreakdown::default();
-    // wordline side: drive the used rows each cycle (each c-chunk is a
-    // separate array and drives its own copy of the rows)
-    e.dac = (positions * cycles * k_dim * c_chunks) as f64
-        * k::dac_e_cycle(p.p_d);
-    e.xbar = array_cycles as f64 * k::xbar_e_cycle(cfg.xbar_size, p.p_d)
-        * (k_dim.min(rows) as f64 / rows as f64);
-
-    match cfg.arch {
-        Architecture::IsaacLike => {
-            let bits = dataflow::adc_resolution_a(p, n);
-            let convs = 2 * group_chunks * dataflow::conversions_a(p);
-            e.adc = convs as f64 * k::adc_e_conv(bits);
-            e.sa = convs as f64 * k::SA_DIGITAL_E_OP;
-            // OR read-modify-write per conversion (steps 3/5, Fig. 3a)
-            e.memory = convs as f64 * 2.0 * k::SRAM_E_BYTE;
-        }
-        Architecture::CascadeLike => {
-            // TIA subtracts W+/W- in analog: single-ended buffering
-            let writes = group_chunks * cycles * p.weight_cols() as u64;
-            let convs = group_chunks * dataflow::conversions_b(p);
-            e.sa = writes as f64 * k::BUFFER_WRITE_E
-                + array_cycles as f64 * k::TIA_E_CYCLE
-                + convs as f64 * k::SA_DIGITAL_E_OP;
-            // 10-bit nominal resolution at 8-bit-class conversion
-            // energy (see constants::CASCADE_ADC_E_CONV)
-            e.adc = convs as f64 * k::CASCADE_ADC_E_CONV;
-            e.digital += convs as f64 * k::SUMAMP_E_CYCLE;
-        }
-        Architecture::NeuralPim => {
-            // one NNS+A op per group-chunk per cycle; 1 conversion per
-            // group-chunk; inter-chunk combine is a cheap digital add
-            let sa_ops = group_chunks * cycles;
-            e.sa = sa_ops as f64 * (k::NNSA_E_OP + 2.0 * k::SH_E_OP);
-            e.adc = group_chunks as f64 * k::NNADC_E_CONV;
-            e.digital += group_chunks.saturating_sub(
-                positions * l.cout as u64) as f64
-                * k::SA_DIGITAL_E_OP;
-        }
-    }
-
-    // memory hierarchy: each unique activation is read from eDRAM
-    // once (ISAAC's buffer organization); the im2col replay — every
-    // position re-reads its kh*kw*cin patch — is served by the SRAM
-    // IR, and outputs stage through the OR on their way back.
-    let unique_in = (positions * l.stride as u64 * l.stride as u64
-        * l.cin as u64) as f64;
-    let replay = positions as f64 * k_dim as f64;
-    let out_bytes = positions as f64 * l.cout as f64;
-    e.memory += (unique_in + out_bytes) * k::EDRAM_E_BYTE
-        + (replay + out_bytes) * k::SRAM_E_BYTE;
-    // NoC: activations cross one c-mesh hop between producer and
-    // consumer tiles on average; chip-to-chip adds HyperTransport
-    e.noc = out_bytes * k::NOC_E_BYTE;
-    if multi_chip {
-        e.noc += out_bytes * k::HT_E_BYTE;
-    }
-    // post-processing: activation function per output (+pool share)
-    e.digital += out_bytes * k::ACT_E_OP;
-
-    // replication multiplies the *array* activity but not the work:
-    // replicas process different positions, so total counts above are
-    // already per-inference. (Replication costs area, not energy.)
-    e
+    model::layer_cost(lm, cfg, multi_chip).energy
 }
 
 /// The configuration the Fig. 12 fairness rule evaluates: `arch`'s
@@ -239,8 +133,9 @@ pub fn simulate_iso_area(net: &Network, arch: Architecture,
     simulate(net, &iso_area_config(arch, reference_area))
 }
 
-/// The Fig. 12 experiment: all 9 benchmarks x 3 architectures at equal
-/// chip area, plus geomean ratios (the headline numbers).
+/// The Fig. 12 experiment: all 9 benchmarks x every registered
+/// architecture at equal chip area, plus geomean ratios (the headline
+/// numbers).
 pub struct SystemComparison {
     pub results: Vec<SimResult>,
     pub reference_area: f64,
@@ -252,10 +147,11 @@ pub fn run_system_comparison(nets: &[Network]) -> SystemComparison {
     // every (network, architecture) pair is independent: evaluate them
     // across the worker pool, in the same order the sequential loop used
     // (pool::map reassembles by index, so results are identical at any
-    // thread count)
+    // thread count); the architectures come from the model registry, so
+    // newly registered ones appear here with no edits
     let pairs: Vec<(&Network, Architecture)> = nets
         .iter()
-        .flat_map(|net| Architecture::all().into_iter().map(move |a| (net, a)))
+        .flat_map(|net| model::archs().into_iter().map(move |a| (net, a)))
         .collect();
     let results = pool::map(&pairs, |&(net, arch)| {
         simulate_iso_area(net, arch, reference_area)
@@ -269,20 +165,21 @@ impl SystemComparison {
         let mut ratios = Vec::new();
         let nets: Vec<&str> = {
             let mut v: Vec<&str> =
-                self.results.iter().map(|r| r.network).collect();
+                self.results.iter().map(|r| r.network.as_ref()).collect();
             v.dedup();
             v
         };
+        let reference = model::reference();
         for net in nets {
             let np = self
                 .results
                 .iter()
-                .find(|r| r.network == net && r.arch == Architecture::NeuralPim)
+                .find(|r| r.network.as_ref() == net && r.arch == reference)
                 .unwrap();
             let base = self
                 .results
                 .iter()
-                .find(|r| r.network == net && r.arch == vs)
+                .find(|r| r.network.as_ref() == net && r.arch == vs)
                 .unwrap();
             ratios.push(f(np) / f(base));
         }
@@ -374,7 +271,7 @@ mod tests {
     fn breakdown_sums_to_total() {
         let cfg = AcceleratorConfig::cascade_like();
         let net = workloads::alexnet();
-        let m = mapping::map_network(&net, &cfg);
+        let m = crate::mapping::map_network(&net, &cfg);
         let e = energy_per_inference(&net, &cfg, &m);
         let cat_sum: f64 = e.categories().iter().map(|(_, v)| v).sum();
         assert!((cat_sum - e.total()).abs() < 1e-12 * e.total().max(1.0));

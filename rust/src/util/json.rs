@@ -127,12 +127,8 @@ impl Json {
     }
 
     // -- writer ----------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // serialization goes through `Display`, so `.to_string()` keeps
+    // working at every call site
 
     fn write(&self, s: &mut String) {
         match self {
@@ -186,6 +182,14 @@ impl Json {
                 s.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

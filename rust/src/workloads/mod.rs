@@ -11,6 +11,10 @@ mod networks;
 
 pub use networks::*;
 
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::sync::{Arc, OnceLock};
+
 /// One VMM-bearing layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
@@ -27,7 +31,7 @@ pub struct Layer {
     pub stride: u32,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     Conv,
     Fc,
@@ -112,10 +116,14 @@ impl Layer {
     }
 }
 
-/// A whole benchmark network.
+/// A whole benchmark network. The name is a shared `Arc<str>` (not a
+/// `&'static str`) so networks can be defined at runtime — from a JSON
+/// spec ([`from_spec`] / [`load`], the CLI's `--network-file`) — and
+/// flow through `SimResult`, the event-simulator results, and the memo
+/// cache exactly like the built-in benchmarks.
 #[derive(Debug, Clone)]
 pub struct Network {
-    pub name: &'static str,
+    pub name: Arc<str>,
     pub layers: Vec<Layer>,
 }
 
@@ -134,27 +142,128 @@ impl Network {
     }
 }
 
-/// All nine §6.1 benchmarks in the paper's Fig. 12 order.
-pub fn all_benchmarks() -> Vec<Network> {
-    vec![
-        alexnet(),
-        vgg16(),
-        vgg19(),
-        resnet50(),
-        resnet101(),
-        googlenet(),
-        inception_v3(),
-        mobilenet_v2(),
-        neuraltalk(),
-    ]
+/// The built-in networks (nine benchmarks + the synthetic CNN), built
+/// exactly once per process. Lookups and benchmark sweeps clone from
+/// here instead of rebuilding every layer table per probe.
+fn catalog() -> &'static [Network] {
+    static CATALOG: OnceLock<Vec<Network>> = OnceLock::new();
+    CATALOG.get_or_init(|| {
+        vec![
+            alexnet(),
+            vgg16(),
+            vgg19(),
+            resnet50(),
+            resnet101(),
+            googlenet(),
+            inception_v3(),
+            mobilenet_v2(),
+            neuraltalk(),
+            synthetic_cnn(),
+        ]
+    })
 }
 
+/// All nine §6.1 benchmarks in the paper's Fig. 12 order.
+pub fn all_benchmarks() -> Vec<Network> {
+    catalog()[..9].to_vec()
+}
+
+/// Normalized lookup key: case-insensitive, punctuation-insensitive
+/// ("VGG-16" == "vgg_16" == "Vgg 16").
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace(['-', '_', ' '], "")
+}
+
+/// Case/punctuation-insensitive lookup over the built-in catalog. Does
+/// NOT rebuild the benchmark tables per probe — it matches against the
+/// process-wide [`catalog`] and clones only the hit.
 pub fn by_name(name: &str) -> Option<Network> {
-    let want = name.to_ascii_lowercase().replace(['-', '_'], "");
-    all_benchmarks()
-        .into_iter()
-        .chain(std::iter::once(synthetic_cnn()))
-        .find(|n| n.name.to_ascii_lowercase().replace(['-', '_'], "") == want)
+    let want = normalize(name);
+    catalog().iter().find(|n| normalize(&n.name) == want).cloned()
+}
+
+/// Build a [`Network`] from a JSON spec (the CLI's `--network-file`):
+///
+/// ```json
+/// {
+///   "name": "my-net",
+///   "layers": [
+///     {"kind": "conv", "name": "c1", "kh": 3, "cin": 3, "cout": 16,
+///      "out": 32, "stride": 1},
+///     {"kind": "fc", "cin": 1024, "cout": 10},
+///     {"kind": "lstm", "input": 512, "hidden": 512, "steps": 20}
+///   ]
+/// }
+/// ```
+///
+/// Conv layers accept `kw`/`out_w` overrides (default: square kernels
+/// and outputs); `out`/`out_h` are synonyms; `stride` defaults to 1.
+pub fn from_spec(j: &Json) -> Result<Network> {
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("custom");
+    let layers_j = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .context("network spec needs a 'layers' array")?;
+    let mut layers = Vec::new();
+    for (i, lj) in layers_j.iter().enumerate() {
+        layers.push(
+            layer_from_spec(lj, i).with_context(|| format!("layer {i}"))?,
+        );
+    }
+    if layers.is_empty() {
+        bail!("network spec has no layers");
+    }
+    Ok(Network { name: name.into(), layers })
+}
+
+fn layer_from_spec(j: &Json, index: usize) -> Result<Layer> {
+    let num = |key: &str| j.get(key).and_then(Json::as_f64);
+    let req = |key: &str| -> Result<u32> {
+        let v = num(key).with_context(|| format!("missing field '{key}'"))?;
+        if !(1.0..=u32::MAX as f64).contains(&v) || v.fract() != 0.0 {
+            bail!("field '{key}' must be a positive integer (got {v})");
+        }
+        Ok(v as u32)
+    };
+    let fallback = format!("layer{index}");
+    let name = j.get("name").and_then(Json::as_str).unwrap_or(&fallback);
+    let kind = j.get("kind").and_then(Json::as_str).unwrap_or("conv");
+    match kind {
+        "conv" => {
+            let kh = req("kh")?;
+            let kw = if num("kw").is_some() { req("kw")? } else { kh };
+            let out_h = if num("out_h").is_some() {
+                req("out_h")?
+            } else {
+                req("out")?
+            };
+            let out_w = if num("out_w").is_some() { req("out_w")? } else { out_h };
+            let stride = if num("stride").is_some() { req("stride")? } else { 1 };
+            Ok(Layer {
+                name: name.into(),
+                kind: LayerKind::Conv,
+                kh,
+                kw,
+                cin: req("cin")?,
+                cout: req("cout")?,
+                out_h,
+                out_w,
+                stride,
+            })
+        }
+        "fc" => Ok(Layer::fc(name, req("cin")?, req("cout")?)),
+        "lstm" => Ok(Layer::lstm(name, req("input")?, req("hidden")?,
+                                 req("steps")?)),
+        other => bail!("unknown layer kind '{other}' (conv | fc | lstm)"),
+    }
+}
+
+/// Load a [`from_spec`] network from a JSON file.
+pub fn load(path: &str) -> Result<Network> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading network spec {path}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    from_spec(&j).with_context(|| format!("parsing network spec {path}"))
 }
 
 #[cfg(test)]
@@ -213,5 +322,78 @@ mod tests {
         assert!(by_name("resnet-50").is_some());
         assert!(by_name("neuraltalk").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn lookup_is_case_and_punctuation_insensitive() {
+        for probe in ["ALEXNET", "alex_net", "Alex Net", "aLeXnEt"] {
+            let n = by_name(probe).unwrap_or_else(|| panic!("{probe}"));
+            assert_eq!(n.name.as_ref(), "AlexNet", "{probe}");
+        }
+        for probe in ["VGG-16", "vgg_16", "Vgg 16", "vgg16"] {
+            assert_eq!(by_name(probe).unwrap().name.as_ref(), "VGG-16");
+        }
+        assert_eq!(by_name("synthetic-cnn").unwrap().name.as_ref(),
+                   "SyntheticCNN");
+    }
+
+    #[test]
+    fn lookups_share_the_process_wide_catalog() {
+        // by_name clones from the build-once catalog: names from two
+        // probes alias the same Arc allocation instead of rebuilding
+        // all nine benchmark tables per probe
+        let a = by_name("googlenet").unwrap();
+        let b = by_name("GoogLeNet").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a.name, &b.name));
+        assert!(std::sync::Arc::ptr_eq(
+            &all_benchmarks()[0].name,
+            &by_name("alexnet").unwrap().name
+        ));
+    }
+
+    #[test]
+    fn from_spec_round_trip() {
+        let spec = r#"{
+            "name": "tiny",
+            "layers": [
+                {"kind": "conv", "name": "c1", "kh": 3, "cin": 3,
+                 "cout": 16, "out": 12, "stride": 2},
+                {"kind": "conv", "kh": 1, "kw": 3, "cin": 16, "cout": 8,
+                 "out_h": 12, "out_w": 6},
+                {"kind": "fc", "cin": 576, "cout": 10},
+                {"kind": "lstm", "input": 64, "hidden": 32, "steps": 4}
+            ]
+        }"#;
+        let net = from_spec(&Json::parse(spec).unwrap()).unwrap();
+        assert_eq!(net.name.as_ref(), "tiny");
+        assert_eq!(net.layers.len(), 4);
+        let c1 = &net.layers[0];
+        assert_eq!((c1.kh, c1.kw, c1.cin, c1.cout, c1.out_h, c1.stride),
+                   (3, 3, 3, 16, 12, 2));
+        let c2 = &net.layers[1];
+        assert_eq!((c2.kh, c2.kw, c2.out_h, c2.out_w, c2.stride),
+                   (1, 3, 12, 6, 1));
+        assert_eq!(net.layers[1].name, "layer1"); // default name
+        let l = &net.layers[3];
+        assert_eq!(l.kind, LayerKind::Lstm);
+        assert_eq!((l.cin, l.cout, l.out_h), (96, 128, 4));
+        assert!(net.total_macs() > 0);
+    }
+
+    #[test]
+    fn from_spec_rejects_bad_input() {
+        let bad = [
+            r#"{"name": "x"}"#,                                   // no layers
+            r#"{"layers": []}"#,                                  // empty
+            r#"{"layers": [{"kind": "pool", "cin": 1}]}"#,        // kind
+            r#"{"layers": [{"kind": "fc", "cin": 128}]}"#,        // missing
+            r#"{"layers": [{"kind": "fc", "cin": 0, "cout": 1}]}"#, // zero
+            r#"{"layers": [{"kind": "conv", "kh": 1.5, "cin": 1,
+                            "cout": 1, "out": 1}]}"#,             // fraction
+        ];
+        for spec in bad {
+            let j = Json::parse(spec).unwrap();
+            assert!(from_spec(&j).is_err(), "{spec}");
+        }
     }
 }

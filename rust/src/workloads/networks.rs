@@ -6,7 +6,7 @@ use super::{Layer, Network};
 /// AlexNet (Krizhevsky et al., 2012), 227x227 input.
 pub fn alexnet() -> Network {
     Network {
-        name: "AlexNet",
+        name: "AlexNet".into(),
         layers: vec![
             Layer { name: "conv1".into(), kind: super::LayerKind::Conv,
                     kh: 11, kw: 11, cin: 3, cout: 96, out_h: 55, out_w: 55,
@@ -46,7 +46,7 @@ pub fn vgg16() -> Network {
     l.push(Layer::fc("fc6", 512 * 7 * 7, 4096));
     l.push(Layer::fc("fc7", 4096, 4096));
     l.push(Layer::fc("fc8", 4096, 1000));
-    Network { name: "VGG-16", layers: l }
+    Network { name: "VGG-16".into(), layers: l }
 }
 
 /// VGG-19: the 4-conv variant of blocks 3-5.
@@ -60,7 +60,7 @@ pub fn vgg19() -> Network {
     l.push(Layer::fc("fc6", 512 * 7 * 7, 4096));
     l.push(Layer::fc("fc7", 4096, 4096));
     l.push(Layer::fc("fc8", 4096, 1000));
-    Network { name: "VGG-19", layers: l }
+    Network { name: "VGG-19".into(), layers: l }
 }
 
 /// ResNet bottleneck stage: `blocks` x [1x1 c, 3x3 c, 1x1 4c].
@@ -90,7 +90,7 @@ pub fn resnet50() -> Network {
     resnet_stage(&mut l, "res4", 6, 512, 256, 14, 2);
     resnet_stage(&mut l, "res5", 3, 1024, 512, 7, 2);
     l.push(Layer::fc("fc", 2048, 1000));
-    Network { name: "ResNet-50", layers: l }
+    Network { name: "ResNet-50".into(), layers: l }
 }
 
 pub fn resnet101() -> Network {
@@ -103,10 +103,11 @@ pub fn resnet101() -> Network {
     resnet_stage(&mut l, "res4", 23, 512, 256, 14, 2);
     resnet_stage(&mut l, "res5", 3, 1024, 512, 7, 2);
     l.push(Layer::fc("fc", 2048, 1000));
-    Network { name: "ResNet-101", layers: l }
+    Network { name: "ResNet-101".into(), layers: l }
 }
 
 /// GoogLeNet (Inception-v1) inception module.
+#[allow(clippy::too_many_arguments)] // mirrors the paper's table columns
 fn inception_v1(l: &mut Vec<Layer>, tag: &str, cin: u32, out: u32,
                 c1: u32, c3r: u32, c3: u32, c5r: u32, c5: u32, pp: u32) {
     l.push(Layer::conv(&format!("{}_1x1", tag), 1, cin, c1, out, 1));
@@ -137,7 +138,7 @@ pub fn googlenet() -> Network {
     inception_v1(&mut l, "5a", 832, 7, 256, 160, 320, 32, 128, 128);
     inception_v1(&mut l, "5b", 832, 7, 384, 192, 384, 48, 128, 128);
     l.push(Layer::fc("fc", 1024, 1000));
-    Network { name: "GoogLeNet", layers: l }
+    Network { name: "GoogLeNet".into(), layers: l }
 }
 
 /// Inception-v3 (Szegedy et al. 2016), 299x299 — condensed but
@@ -218,7 +219,7 @@ pub fn inception_v3() -> Network {
         l.push(Layer::conv(&format!("{t}_pool"), 1, *cin, 192, 8, 1));
     }
     l.push(Layer::fc("fc", 2048, 1000));
-    Network { name: "Inception-v3", layers: l }
+    Network { name: "Inception-v3".into(), layers: l }
 }
 
 /// MobileNet-V2 (Sandler et al. 2018), 224x224. Depthwise convolutions
@@ -261,14 +262,14 @@ pub fn mobilenet_v2() -> Network {
     }
     l.push(Layer::conv("conv_last", 1, 320, 1280, 7, 1));
     l.push(Layer::fc("fc", 1280, 1000));
-    Network { name: "MobileNet-V2", layers: l }
+    Network { name: "MobileNet-V2".into(), layers: l }
 }
 
 /// NeuralTalk-style image-captioning LSTM: VGG feature + LSTM-512
 /// decoder over 20 tokens (the RNN benchmark of Fig. 12).
 pub fn neuraltalk() -> Network {
     Network {
-        name: "NeuralTalk",
+        name: "NeuralTalk".into(),
         layers: vec![
             Layer::fc("img_embed", 4096, 512),
             Layer::lstm("lstm1", 512, 512, 20),
@@ -280,7 +281,7 @@ pub fn neuraltalk() -> Network {
 /// The synthetic-dataset CNN the accuracy artifacts run (train_cnn.py).
 pub fn synthetic_cnn() -> Network {
     Network {
-        name: "SyntheticCNN",
+        name: "SyntheticCNN".into(),
         layers: vec![
             Layer::conv("conv1", 3, 3, 16, 12, 1),
             Layer::conv("conv2", 3, 16, 24, 6, 2),

@@ -1,0 +1,515 @@
+#!/usr/bin/env python3
+"""Reference port of the analytical Fig. 12 pipeline (pre-`model` refactor).
+
+Mirrors, expression for expression, the Rust chain
+`workloads -> mapping -> energy budgets -> sim::simulate ->
+SystemComparison::{energy,throughput}_ratio` as it stood before the
+trait-based `model` subsystem was extracted, and prints the four headline
+geomeans. `rust/tests/golden_fig12.rs` pins the refactored simulator to
+these values within 1e-9 relative tolerance, so any behavioural drift in
+the refactor (as opposed to a pure reorganization) fails the suite.
+
+Every arithmetic expression keeps the operand order of the Rust original:
+Python floats are the same IEEE-754 doubles, so faithful transcription
+agrees to far better than the 1e-9 gate.
+"""
+
+import math
+
+# --- energy/constants.rs ---------------------------------------------------
+ADC_E_CONV_8B = 1.5625e-12
+def adc_e_conv(bits):
+    return ADC_E_CONV_8B * 2.0 ** (bits - 8)
+CASCADE_ADC_E_CONV = ADC_E_CONV_8B
+ADC_AREA_8B = 0.0015
+def adc_area(bits):
+    return ADC_AREA_8B * 2.0 ** (bits - 8)
+NNADC_E_CONV = 1.25e-12
+NNADC_AREA = 1.2e-3
+DAC_E_CYCLE_1B = 0.39e-12
+def dac_e_cycle(bits):
+    return DAC_E_CYCLE_1B * 2.0 ** (0.55 * (bits - 1.0))
+DAC_AREA_1B = 5.25e-7 / 3.14
+def dac_area(bits):
+    return DAC_AREA_1B * 2.0 ** (0.55 * (bits - 1.0))
+XBAR_E_CYCLE_128 = 30e-12
+def xbar_e_cycle(size, _pd):
+    return XBAR_E_CYCLE_128 * (size / 128.0) ** 2
+def xbar_area(size):
+    return 2.5e-5 * (size / 128.0) ** 2
+SA_DIGITAL_E_OP = 0.156e-12
+SA_DIGITAL_AREA = 0.00024
+NNSA_E_OP = 3.7e-12
+NNSA_AREA = 6.9e-4
+SH_E_OP = 0.09e-15
+SH_AREA = 3.2e-4 / 9216.0
+TIA_E_CYCLE = 2e-12
+TIA_AREA = 0.0002
+BUFFER_WRITE_E = 0.3e-12
+BUFFER_ARRAYS_PER_XBAR = 4
+SUMAMP_E_CYCLE = 0.5e-12
+SUMAMP_AREA = 0.0001
+EDRAM_E_BYTE = 1.0e-12
+EDRAM_AREA_64KB = 0.083
+SRAM_E_BYTE = 0.3e-12
+IR_AREA = 0.0021
+NP_IR_AREA = 2.4e-2
+NOC_E_BYTE = 1.7e-12
+ROUTER_AREA = 0.151
+HT_POWER = 10.4
+HT_AREA = 22.88
+HT_E_BYTE = 1.6e-12
+ACT_E_OP = 0.05e-12
+ACT_AREA = 0.0006
+TILE_CTRL_POWER = 0.5e-3
+TILE_CTRL_AREA = 0.00145
+ISAAC_CYCLE_NS = 100.0
+CASCADE_CYCLE_NS = 50.0
+NEURAL_PIM_CYCLE_NS = 100.0
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+# --- config ----------------------------------------------------------------
+class Cfg:
+    def __init__(self, arch, p_d, adcs_per_pe, sa_per_array):
+        self.arch = arch
+        self.p_i, self.p_w, self.p_o, self.p_r, self.p_d = 8, 8, 8, 1, p_d
+        self.xbar_size = 128
+        self.arrays_per_pe = 64
+        self.adcs_per_pe = adcs_per_pe
+        self.sa_per_array = sa_per_array
+        self.pes_per_tile = 4
+        self.tiles = 280
+        self.cycle_ns = 100.0
+        self.edram_bytes = 64 * 1024
+        self.noc_concentration = 4
+
+    def input_cycles(self):
+        return ceil_div(self.p_i, self.p_d)
+
+    def weight_cols(self):
+        return ceil_div(self.p_w, self.p_r)
+
+    def n_log2(self):
+        return self.xbar_size.bit_length() - 1
+
+    def groups_per_array(self):
+        return self.xbar_size // (2 * self.weight_cols())
+
+    def total_arrays(self):
+        return self.tiles * self.pes_per_tile * self.arrays_per_pe
+
+
+def for_arch(arch):
+    if arch == "isaac":
+        return Cfg(arch, 1, 64, 0)
+    if arch == "cascade":
+        return Cfg(arch, 1, 3, 0)
+    return Cfg(arch, 4, 4, 1)
+
+
+def cycle_seconds(cfg):
+    ns = {"isaac": ISAAC_CYCLE_NS, "cascade": CASCADE_CYCLE_NS,
+          "np": NEURAL_PIM_CYCLE_NS}[cfg.arch]
+    return ns * 1e-9
+
+
+# --- dataflow equations ----------------------------------------------------
+def adc_resolution_a(cfg, n):
+    if cfg.p_r > 1 and cfg.p_d > 1:
+        return cfg.p_r + cfg.p_d + n
+    return cfg.p_r + cfg.p_d - 1 + n
+
+
+def adc_resolution_b(cfg, n):
+    return adc_resolution_a(cfg, n) + math.ceil(math.log2(float(cfg.input_cycles())))
+
+
+def conversions_a(cfg):
+    return cfg.input_cycles() * cfg.weight_cols()
+
+
+def conversions_b(cfg):
+    return cfg.input_cycles() + cfg.weight_cols() - 1
+
+
+# --- energy budgets (areas only feed the iso-area rule) --------------------
+def pe_area(cfg):
+    m = cfg.arrays_per_pe
+    size = cfg.xbar_size
+    wl = size
+    cyc = cycle_seconds(cfg)
+    comps = [m * xbar_area(size), m * wl * dac_area(cfg.p_d)]
+    if cfg.arch == "isaac":
+        bits = adc_resolution_a(cfg, cfg.n_log2())
+        comps += [cfg.adcs_per_pe * adc_area(bits),
+                  m * SA_DIGITAL_AREA,
+                  1 * IR_AREA * m / 8.0]
+    elif cfg.arch == "cascade":
+        bits = adc_resolution_b(cfg, cfg.n_log2())
+        comps += [cfg.adcs_per_pe * adc_area(bits),
+                  m * BUFFER_ARRAYS_PER_XBAR * xbar_area(size),
+                  m * TIA_AREA,
+                  m * BUFFER_ARRAYS_PER_XBAR * SUMAMP_AREA,
+                  m * SA_DIGITAL_AREA,
+                  1 * IR_AREA * m / 8.0]
+    else:
+        sa_count = max(m * cfg.sa_per_array, 1)
+        comps += [cfg.adcs_per_pe * NNADC_AREA,
+                  sa_count * NNSA_AREA,
+                  (sa_count * 144 // 64) * SH_AREA,
+                  1 * NP_IR_AREA * (m / 64.0)]
+    _ = cyc
+    return sum(comps)
+
+
+def tile_area(cfg):
+    extra = (EDRAM_AREA_64KB * (cfg.edram_bytes / (64.0 * 1024.0))
+             + ACT_AREA * cfg.pes_per_tile
+             + TILE_CTRL_AREA
+             + ROUTER_AREA / cfg.noc_concentration)
+    return pe_area(cfg) * cfg.pes_per_tile + extra
+
+
+def chip_area(cfg):
+    return tile_area(cfg) * cfg.tiles + HT_AREA
+
+
+def iso_area_tiles(cfg, target_area):
+    return max(int(math.floor((target_area - HT_AREA) / tile_area(cfg))), 1)
+
+
+# --- workloads -------------------------------------------------------------
+class Layer:
+    def __init__(self, kh, kw, cin, cout, out_h, out_w, stride):
+        self.kh, self.kw, self.cin, self.cout = kh, kw, cin, cout
+        self.out_h, self.out_w, self.stride = out_h, out_w, stride
+
+    def k_dim(self):
+        return self.kh * self.kw * self.cin
+
+    def positions(self):
+        return self.out_h * self.out_w
+
+    def weights(self):
+        return self.k_dim() * self.cout
+
+    def macs(self):
+        return self.weights() * self.positions()
+
+
+def conv(kh, cin, cout, out, stride):
+    return Layer(kh, kh, cin, cout, out, out, stride)
+
+
+def fc(cin, cout):
+    return Layer(1, 1, cin, cout, 1, 1, 1)
+
+
+def lstm(inp, hidden, steps):
+    return Layer(1, 1, inp + hidden, 4 * hidden, steps, 1, 1)
+
+
+def alexnet():
+    return [Layer(11, 11, 3, 96, 55, 55, 4),
+            Layer(5, 5, 48, 256, 27, 27, 1),
+            conv(3, 256, 384, 13, 1),
+            conv(3, 192, 384, 13, 1),
+            conv(3, 192, 256, 13, 1),
+            fc(256 * 6 * 6, 4096), fc(4096, 4096), fc(4096, 1000)]
+
+
+def vgg(blocks):
+    l = []
+    chans = [(3, 64, 224), (64, 128, 112), (128, 256, 56), (256, 512, 28),
+             (512, 512, 14)]
+    for n, (cin, cout, out) in zip(blocks, chans):
+        for i in range(n):
+            l.append(conv(3, cin if i == 0 else cout, cout, out, 1))
+    l += [fc(512 * 7 * 7, 4096), fc(4096, 4096), fc(4096, 1000)]
+    return l
+
+
+def resnet(stage_blocks):
+    l = [Layer(7, 7, 3, 64, 112, 112, 2)]
+    stages = [(stage_blocks[0], 64, 64, 56, 1),
+              (stage_blocks[1], 256, 128, 28, 2),
+              (stage_blocks[2], 512, 256, 14, 2),
+              (stage_blocks[3], 1024, 512, 7, 2)]
+    for blocks, cin, c, out, first_stride in stages:
+        cout = 4 * c
+        for b in range(blocks):
+            ci = cin if b == 0 else cout
+            s = first_stride if b == 0 else 1
+            l.append(conv(1, ci, c, out, s))
+            l.append(conv(3, c, c, out, 1))
+            l.append(conv(1, c, cout, out, 1))
+            if b == 0:
+                l.append(conv(1, ci, cout, out, s))
+    l.append(fc(2048, 1000))
+    return l
+
+
+def googlenet():
+    l = [Layer(7, 7, 3, 64, 112, 112, 2),
+         conv(1, 64, 64, 56, 1), conv(3, 64, 192, 56, 1)]
+
+    def inception(cin, out, c1, c3r, c3, c5r, c5, pp):
+        l.append(conv(1, cin, c1, out, 1))
+        l.append(conv(1, cin, c3r, out, 1))
+        l.append(conv(3, c3r, c3, out, 1))
+        l.append(conv(1, cin, c5r, out, 1))
+        l.append(Layer(5, 5, c5r, c5, out, out, 1))
+        l.append(conv(1, cin, pp, out, 1))
+
+    inception(192, 28, 64, 96, 128, 16, 32, 32)
+    inception(256, 28, 128, 128, 192, 32, 96, 64)
+    inception(480, 14, 192, 96, 208, 16, 48, 64)
+    inception(512, 14, 160, 112, 224, 24, 64, 64)
+    inception(512, 14, 128, 128, 256, 24, 64, 64)
+    inception(512, 14, 112, 144, 288, 32, 64, 64)
+    inception(528, 14, 256, 160, 320, 32, 128, 128)
+    inception(832, 7, 256, 160, 320, 32, 128, 128)
+    inception(832, 7, 384, 192, 384, 48, 128, 128)
+    l.append(fc(1024, 1000))
+    return l
+
+
+def inception_v3():
+    l = [conv(3, 3, 32, 149, 2), conv(3, 32, 32, 147, 1),
+         conv(3, 32, 64, 147, 1), conv(1, 64, 80, 73, 1),
+         conv(3, 80, 192, 71, 1)]
+    for i, cin in enumerate([192, 256, 288]):
+        l.append(conv(1, cin, 64, 35, 1))
+        l.append(conv(1, cin, 48, 35, 1))
+        l.append(Layer(5, 5, 48, 64, 35, 35, 1))
+        l.append(conv(1, cin, 64, 35, 1))
+        l.append(conv(3, 64, 96, 35, 1))
+        l.append(conv(3, 96, 96, 35, 1))
+        l.append(conv(1, cin, 32 if i == 0 else 64, 35, 1))
+    l.append(conv(3, 288, 384, 17, 2))
+    l.append(conv(1, 288, 64, 35, 1))
+    l.append(conv(3, 64, 96, 35, 1))
+    l.append(conv(3, 96, 96, 17, 2))
+    for c7 in [128, 160, 160, 192]:
+        l.append(conv(1, 768, 192, 17, 1))
+        l.append(conv(1, 768, c7, 17, 1))
+        l.append(Layer(1, 7, c7, c7, 17, 17, 1))
+        l.append(Layer(7, 1, c7, 192, 17, 17, 1))
+        l.append(conv(1, 768, c7, 17, 1))
+        l.append(Layer(7, 1, c7, c7, 17, 17, 1))
+        l.append(Layer(1, 7, c7, c7, 17, 17, 1))
+        l.append(Layer(7, 1, c7, c7, 17, 17, 1))
+        l.append(Layer(1, 7, c7, 192, 17, 17, 1))
+        l.append(conv(1, 768, 192, 17, 1))
+    l.append(conv(1, 768, 192, 17, 1))
+    l.append(conv(3, 192, 320, 8, 2))
+    for cin in [1280, 2048]:
+        l.append(conv(1, cin, 320, 8, 1))
+        l.append(conv(1, cin, 384, 8, 1))
+        l.append(Layer(1, 3, 384, 384, 8, 8, 1))
+        l.append(Layer(3, 1, 384, 384, 8, 8, 1))
+        l.append(conv(1, cin, 448, 8, 1))
+        l.append(conv(3, 448, 384, 8, 1))
+        l.append(Layer(1, 3, 384, 384, 8, 8, 1))
+        l.append(Layer(3, 1, 384, 384, 8, 8, 1))
+        l.append(conv(1, cin, 192, 8, 1))
+    l.append(fc(2048, 1000))
+    return l
+
+
+def mobilenet_v2():
+    l = [conv(3, 3, 32, 112, 2)]
+    cfg = [(1, 16, 1, 112, 1), (6, 24, 2, 56, 2), (6, 32, 3, 28, 2),
+           (6, 64, 4, 14, 2), (6, 96, 3, 14, 1), (6, 160, 3, 7, 2),
+           (6, 320, 1, 7, 1)]
+    cin = 32
+    for t, cout, n, out, s in cfg:
+        for b in range(n):
+            stride = s if b == 0 else 1
+            hidden = cin * t
+            if t != 1:
+                l.append(conv(1, cin, hidden, out, 1))
+            l.append(Layer(3, 3, 1, hidden, out, out, stride))
+            l.append(conv(1, hidden, cout, out, 1))
+            cin = cout
+    l.append(conv(1, 320, 1280, 7, 1))
+    l.append(fc(1280, 1000))
+    return l
+
+
+def neuraltalk():
+    return [fc(4096, 512), lstm(512, 512, 20), fc(512, 8791)]
+
+
+BENCHMARKS = [("AlexNet", alexnet()), ("VGG-16", vgg([2, 2, 3, 3, 3])),
+              ("VGG-19", vgg([2, 2, 4, 4, 4])),
+              ("ResNet-50", resnet([3, 4, 6, 3])),
+              ("ResNet-101", resnet([3, 4, 23, 3])),
+              ("GoogLeNet", googlenet()), ("Inception-v3", inception_v3()),
+              ("MobileNet-V2", mobilenet_v2()), ("NeuralTalk", neuraltalk())]
+
+
+# --- mapping ---------------------------------------------------------------
+class LayerMapping:
+    def __init__(self, layer, cfg):
+        rows = cfg.xbar_size
+        groups = cfg.groups_per_array()
+        self.layer = layer
+        self.k_chunks = ceil_div(layer.k_dim(), rows)
+        self.c_chunks = ceil_div(layer.cout, groups)
+        self.arrays_per_copy = self.k_chunks * self.c_chunks
+        self.replication = 1
+
+    def stage_cycles(self, ic):
+        return ceil_div(self.layer.positions(), self.replication) * ic
+
+
+def map_network(layers, cfg):
+    ms = [LayerMapping(l, cfg) for l in layers]
+    per_chip = cfg.total_arrays()
+    base = sum(m.arrays_per_copy for m in ms)
+    chips = max(ceil_div(base, per_chip), 1)
+    budget = chips * per_chip
+    used = base
+    ic = cfg.input_cycles()
+    while True:
+        # Rust max_by_key keeps the LAST maximal element
+        idx, best = 0, -1
+        for i, m in enumerate(ms):
+            v = m.stage_cycles(ic)
+            if v >= best:
+                idx, best = i, v
+        if ms[idx].stage_cycles(ic) <= ic:
+            break
+        cost = ms[idx].arrays_per_copy
+        if used + cost > budget:
+            break
+        ms[idx].replication += 1
+        used += cost
+    return ms, chips
+
+
+# --- sim::layer_energy / simulate ------------------------------------------
+def layer_energy(lm, cfg, multi_chip):
+    cycles = cfg.input_cycles()
+    rows = cfg.xbar_size
+    groups_per_array = cfg.groups_per_array()
+    n = cfg.n_log2()
+    l = lm.layer
+    positions = l.positions()
+    k_dim = l.k_dim()
+    k_chunks = lm.k_chunks
+    c_chunks = ceil_div(l.cout, groups_per_array)
+    array_cycles = positions * k_chunks * c_chunks * cycles
+    group_chunks = positions * l.cout * k_chunks
+
+    e = {k: 0.0 for k in ("adc", "dac", "sa", "xbar", "memory", "noc",
+                          "digital")}
+    e["dac"] = float(positions * cycles * k_dim * c_chunks) * dac_e_cycle(cfg.p_d)
+    e["xbar"] = (float(array_cycles) * xbar_e_cycle(cfg.xbar_size, cfg.p_d)
+                 * (float(min(k_dim, rows)) / float(rows)))
+
+    if cfg.arch == "isaac":
+        bits = adc_resolution_a(cfg, n)
+        convs = 2 * group_chunks * conversions_a(cfg)
+        e["adc"] = float(convs) * adc_e_conv(bits)
+        e["sa"] = float(convs) * SA_DIGITAL_E_OP
+        e["memory"] = float(convs) * 2.0 * SRAM_E_BYTE
+    elif cfg.arch == "cascade":
+        writes = group_chunks * cycles * cfg.weight_cols()
+        convs = group_chunks * conversions_b(cfg)
+        e["sa"] = (float(writes) * BUFFER_WRITE_E
+                   + float(array_cycles) * TIA_E_CYCLE
+                   + float(convs) * SA_DIGITAL_E_OP)
+        e["adc"] = float(convs) * CASCADE_ADC_E_CONV
+        e["digital"] += float(convs) * SUMAMP_E_CYCLE
+    else:
+        sa_ops = group_chunks * cycles
+        e["sa"] = float(sa_ops) * (NNSA_E_OP + 2.0 * SH_E_OP)
+        e["adc"] = float(group_chunks) * NNADC_E_CONV
+        e["digital"] += float(max(group_chunks - positions * l.cout, 0)) \
+            * SA_DIGITAL_E_OP
+
+    unique_in = float(positions * l.stride * l.stride * l.cin)
+    replay = float(positions) * float(k_dim)
+    out_bytes = float(positions) * float(l.cout)
+    e["memory"] += ((unique_in + out_bytes) * EDRAM_E_BYTE
+                    + (replay + out_bytes) * SRAM_E_BYTE)
+    e["noc"] = out_bytes * NOC_E_BYTE
+    if multi_chip:
+        e["noc"] += out_bytes * HT_E_BYTE
+    e["digital"] += out_bytes * ACT_E_OP
+    return e
+
+
+def simulate(name, layers, cfg):
+    ms, chips = map_network(layers, cfg)
+    tot = {k: 0.0 for k in ("adc", "dac", "sa", "xbar", "memory", "noc",
+                            "digital")}
+    for lm in ms:
+        le = layer_energy(lm, cfg, chips > 1)
+        for k in tot:
+            tot[k] += le[k]
+    energy = (tot["adc"] + tot["dac"] + tot["sa"] + tot["xbar"]
+              + tot["memory"] + tot["noc"] + tot["digital"])
+    t_cycle = cycle_seconds(cfg)
+    ic = cfg.input_cycles()
+    stage_overhead = 9.0 / 8.0
+    bottleneck = float(max(m.stage_cycles(ic) for m in ms))
+    per_inference_s = bottleneck * t_cycle * stage_overhead
+    inferences_per_s = 1.0 / per_inference_s
+    macs = sum(l.macs() for l in layers)
+    gops = (2.0 * float(macs) / 1e9) * inferences_per_s
+    return {"name": name, "arch": cfg.arch, "energy": energy,
+            "throughput": gops}
+
+
+def geomean(v):
+    return math.exp(sum(math.log(x) for x in v) / len(v))
+
+
+def main():
+    # sanity: mirror the workloads unit tests
+    for name, lo, hi, key in [("AlexNet", 55e6, 65e6, "w"),
+                              ("VGG-16", 132e6, 144e6, "w"),
+                              ("ResNet-50", 22e6, 28e6, "w")]:
+        layers = dict(BENCHMARKS)[name]
+        w = sum(l.weights() for l in layers)
+        assert lo < w < hi, (name, key, w)
+
+    np_cfg = for_arch("np")
+    ref_area = chip_area(np_cfg)
+    results = []
+    for name, layers in BENCHMARKS:
+        for arch in ("isaac", "cascade", "np"):
+            cfg = for_arch(arch)
+            cfg.tiles = iso_area_tiles(cfg, ref_area)
+            results.append(simulate(name, layers, cfg))
+
+    def ratio(vs, f):
+        out = []
+        for name, _ in BENCHMARKS:
+            np_r = next(r for r in results
+                        if r["name"] == name and r["arch"] == "np")
+            base = next(r for r in results
+                        if r["name"] == name and r["arch"] == vs)
+            out.append(f(np_r) / f(base))
+        return geomean(out)
+
+    e_i = ratio("isaac", lambda r: 1.0 / r["energy"])
+    e_c = ratio("cascade", lambda r: 1.0 / r["energy"])
+    t_i = ratio("isaac", lambda r: r["throughput"])
+    t_c = ratio("cascade", lambda r: r["throughput"])
+    print(f"reference_area_mm2 = {ref_area!r}")
+    print(f"energy_vs_isaac    = {e_i!r}")
+    print(f"energy_vs_cascade  = {e_c!r}")
+    print(f"throughput_vs_isaac   = {t_i!r}")
+    print(f"throughput_vs_cascade = {t_c!r}")
+
+
+if __name__ == "__main__":
+    main()

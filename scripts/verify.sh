@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (see ROADMAP.md): build, test, format check.
+# Tier-1 verification gate (see ROADMAP.md): build, test, format check,
+# lint, and the architecture open-closed gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -8,9 +9,20 @@ cargo test -q
 # Advisory until the tree has been run through rustfmt once (the seed
 # predates the gate); flip to a hard failure after that cleanup PR.
 cargo fmt --check || echo "WARN: rustfmt differences (advisory for now)"
-# Advisory for the same reason: the seed tree has never been linted in a
-# toolchain environment. Flip to a hard failure (drop the `|| echo`)
-# once the pre-existing findings, if any, are cleaned up.
-cargo clippy --all-targets -- -D warnings \
-    || echo "WARN: clippy findings (advisory until the tree is lint-clean)"
+# Hard gate since the model-layer PR linted the tree (PR 2 introduced it
+# as advisory).
+cargo clippy --all-targets -- -D warnings
+
+# Architecture open-closed gate: per-architecture dispatch must live in
+# the model/ cost-model impls only. A `Architecture::X =>` match arm
+# anywhere else reintroduces the scattered fan-outs the model subsystem
+# removed.
+if grep -rn --include='*.rs' -E \
+    'Architecture::[A-Za-z_]+[[:space:]]*=>' \
+    rust/src rust/tests rust/benches examples \
+    | grep -v '^rust/src/model/'; then
+  echo "FAIL: per-architecture match arm outside rust/src/model/" >&2
+  exit 1
+fi
+
 echo "verify OK"
