@@ -13,6 +13,7 @@ use neural_pim::config::AcceleratorConfig;
 use neural_pim::coordinator::{Coordinator, CoordinatorConfig};
 use neural_pim::event::{self, Engine};
 use neural_pim::runtime::{self, Runtime};
+use neural_pim::scenario::{self, suite};
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
 use neural_pim::{dse, mapping, model, noise, sim, workloads};
@@ -166,6 +167,40 @@ fn main() -> anyhow::Result<()> {
     bench("event request sim, memoized cost table", 1, 5, || {
         let _ = event::request_profile(&alex, &cfg, &small);
     });
+
+    // scenario layer: the content-addressed results store — a cold
+    // suite computes every entry, a warm one replays the stored
+    // outcomes (the `--cache` acceptance number: cached must be far
+    // cheaper than computed)
+    let store_root = std::env::temp_dir()
+        .join(format!("np-bench-store-{}", std::process::id()));
+    let spec = suite::SuiteSpec::from_json(
+        &neural_pim::util::json::Json::parse(
+            r#"{"name": "bench", "scenarios": [
+                {"scenario": "table2"},
+                {"scenario": "table3"},
+                {"scenario": "budget"},
+                {"scenario": "characterize"}]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let opts = scenario::ExecOptions {
+        cache: true,
+        results_dir: store_root.to_string_lossy().into_owned(),
+    };
+    bench("suite x4 scenarios, cold store (computed)", 1, 5, || {
+        let _ = std::fs::remove_dir_all(&store_root);
+        let r = suite::run_spec(&spec, &opts);
+        assert_eq!(r.failures(), 0);
+    });
+    // one priming run so the timed iterations all hit
+    let _ = suite::run_spec(&spec, &opts);
+    bench("suite x4 scenarios, warm store (cached replay)", 2, 20, || {
+        let r = suite::run_spec(&spec, &opts);
+        assert!(r.all_cached(), "warm suite recomputed");
+    });
+    let _ = std::fs::remove_dir_all(&store_root);
 
     // L3: behavioural dataflow models (the MC inner loop)
     let mut rng = Pcg::new(1);

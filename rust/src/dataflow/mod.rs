@@ -26,9 +26,11 @@ pub fn adc_resolution_a(p: &Precision, n: u32) -> u32 {
 }
 
 /// Eq. (3): Strategy B's buffer-BL resolution — Strategy A's plus
-/// log2(input cycles) for the buffer-row accumulation.
+/// ceil(log2(input cycles)) for the buffer-row accumulation. Integer
+/// ceil-log2 ([`crate::util::num::ceil_log2`]): the float route can
+/// round across power-of-two boundaries and mis-size the ADC.
 pub fn adc_resolution_b(p: &Precision, n: u32) -> u32 {
-    adc_resolution_a(p, n) + (p.input_cycles() as f64).log2().ceil() as u32
+    adc_resolution_a(p, n) + crate::util::num::ceil_log2(p.input_cycles() as u64)
 }
 
 /// Eq. (4): Strategy C only extracts the P_O MSBs of the final analog sum.
@@ -214,6 +216,32 @@ mod tests {
         assert_eq!(adc_resolution_b(&p(1, 1), 7), 11);
         // PD=2: Eq.2 gives 9 bits, 4 cycles -> +2 bits
         assert_eq!(adc_resolution_b(&p(2, 1), 7), 11);
+    }
+
+    #[test]
+    fn prop_eq3_matches_float_ceil_log2_over_precision_sweep() {
+        // the exact integer ceil-log2 must agree with the float version
+        // everywhere the §3/§7.1 sweeps can reach: every (P_I, P_D)
+        // pair with 1 <= P_D <= P_I <= 64 (input_cycles = ceil(P_I/P_D))
+        // and every N in the fabricable crossbar range
+        crate::util::prop::check("eq3 integer vs float", 400, |g| {
+            let p_i = g.usize_in(1, 64) as u32;
+            let p_d = g.usize_in(1, p_i as usize) as u32;
+            let p_r = g.usize_in(1, 6) as u32;
+            let n = g.usize_in(5, 9) as u32;
+            let p = Precision { p_i, p_d, p_r, ..Default::default() };
+            let float_bits = adc_resolution_a(&p, n)
+                + (p.input_cycles() as f64).log2().ceil() as u32;
+            let got = adc_resolution_b(&p, n);
+            if got != float_bits {
+                return Err(format!(
+                    "P_I={p_i} P_D={p_d} (cycles {}): exact {got} vs \
+                     float {float_bits}",
+                    p.input_cycles()
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

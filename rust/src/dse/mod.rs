@@ -106,17 +106,23 @@ pub fn sweep() -> Vec<DsePoint> {
     pool::map(&grid, evaluate).into_iter().flatten().collect()
 }
 
-/// Best point of the sweep (the paper's N128-D4-A4-S64 M64 at
-/// 1904 GOPS/s/mm²).
-pub fn best() -> DsePoint {
-    sweep()
-        .into_iter()
+/// Best point among already-computed sweep results (callers that also
+/// render the Fig. 11 table share one sweep instead of re-running it).
+pub fn best_of(points: &[DsePoint]) -> &DsePoint {
+    points
+        .iter()
         .max_by(|a, b| {
             a.compute_efficiency
                 .partial_cmp(&b.compute_efficiency)
                 .unwrap()
         })
         .expect("sweep produced no feasible points")
+}
+
+/// Best point of the sweep (the paper's N128-D4-A4-S64 M64 at
+/// 1904 GOPS/s/mm²).
+pub fn best() -> DsePoint {
+    best_of(&sweep()).clone()
 }
 
 #[cfg(test)]

@@ -27,7 +27,14 @@
 //! cross-validation + request-level latency modes), `dse` (Fig. 11
 //! sweep), `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
 //! `runtime`/`coordinator` (PJRT serving), `baselines`, `config`,
-//! `report`, `workloads`, and the `util` substrate.
+//! `report`, `workloads`, the `util` substrate, and `scenario` — the
+//! unified experiment layer: every CLI subcommand is a registered
+//! `scenario::Scenario` with typed params and a typed `Outcome`
+//! (text tables or schema-versioned JSON), executed through a
+//! content-addressed results store (`--cache`) and composable into
+//! JSON-defined suites (`neural-pim suite`). Register a new experiment
+//! by implementing the trait and appending one line in
+//! `scenario/registry.rs`.
 //!
 //! See DESIGN.md for the experiment index (which bench regenerates which
 //! paper figure/table) and the fuller module map.
@@ -46,6 +53,7 @@ pub mod noise;
 pub mod periph;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 pub mod workloads;

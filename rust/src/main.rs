@@ -1,365 +1,24 @@
-//! `neural-pim` CLI: characterization, simulation, DSE, paper
-//! table/figure regeneration, and the PJRT-backed inference service.
+//! `neural-pim` CLI — a thin shell over the scenario registry.
+//!
+//! Every subcommand (characterization, simulation, DSE, paper tables,
+//! the event microsimulation, the PJRT-backed paths) is a registered
+//! `scenario::Scenario`; this binary only wires argv to
+//! `scenario::dispatch`, which resolves the command generically,
+//! validates flags, runs through the results store, and renders text
+//! or JSON. No per-scenario match arms live here (grep-enforced by
+//! `scripts/verify.sh`) — registering a scenario in
+//! `scenario/registry.rs` is the whole job of adding a command.
+//!
+//! Run `neural-pim help` (or `help <scenario>`) for the generated
+//! usage.
 
-use anyhow::{bail, Result};
-use neural_pim::config::{AcceleratorConfig, Architecture};
-use neural_pim::coordinator::{Coordinator, CoordinatorConfig};
-use neural_pim::runtime::{self, Runtime};
 use neural_pim::util::cli::Args;
-use neural_pim::util::stats;
-use neural_pim::util::table::Table;
-use neural_pim::{noise, periph, report, workloads};
-
-const USAGE: &str = "\
-neural-pim — Neural-PIM (IEEE TC 2022) reproduction
-
-USAGE: neural-pim <command> [options]
-
-COMMANDS (analytical / simulator — no artifacts needed):
-  characterize              §3 dataflow framework (Eqs. 2-8, Fig. 3d/4b/4c)
-  simulate [--network N]    full-system simulation (Fig. 12/13 + headline)
-            [--all]         all nine benchmarks
-            [--network-file F]  a runtime-defined network from a JSON
-                            spec (see workloads::from_spec; also accepted
-                            by event-sim)
-  event-sim [--network N|--all]
-            [--requests N] [--replicas R] [--load F]
-                            discrete-event microsimulation: cross-validate
-                            the analytical energy model (per-scenario
-                            tolerance check) and report contention-aware
-                            p50/p95/p99 latency under Poisson load;
-                            bit-identical at any --threads
-  dse [--top K]             design-space exploration (Fig. 11)
-  table2 | table3           paper tables
-  budget [--arch A]         PE/tile/chip power & area budget
-
-COMMANDS (need `make artifacts`):
-  accuracy [--strategy A|B|C|ideal|noisy] [--adc-bits B] [--sinad DB]
-                            run the CNN through a dataflow via PJRT
-  mc [--naive] [--trials N] Fig. 9 Monte-Carlo (trained NeuralPeriph)
-  periph                    Table 1 metrics of the trained circuits
-  serve [--requests N]      start the inference coordinator, drive N
-                            requests from the test set, report metrics
-  infer                     single-batch smoke inference
-
-OPTIONS:
-  --artifacts DIR           artifact directory (default: ./artifacts)
-  --seed S                  PRNG seed (default 42)
-  --threads N               worker threads for the parallel sweeps
-                            (simulate/event-sim/dse/mc; default: all cores)
-";
 
 fn main() {
     let args = Args::from_env();
     neural_pim::util::pool::set_threads(args.threads());
-    if let Err(e) = run(&args) {
+    if let Err(e) = neural_pim::scenario::dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-fn run(args: &Args) -> Result<()> {
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
-        "characterize" => characterize(),
-        "simulate" => simulate(args),
-        "event-sim" => event_sim(args),
-        "dse" => dse_cmd(args),
-        "table2" => {
-            report::table2().print();
-            Ok(())
-        }
-        "table3" => {
-            report::table3().print();
-            Ok(())
-        }
-        "budget" => budget(args),
-        "accuracy" => accuracy(args),
-        "mc" => mc(args),
-        "periph" => periph_cmd(args),
-        "serve" => serve(args),
-        "infer" => infer(args),
-        _ => {
-            println!("{USAGE}");
-            Ok(())
-        }
-    }
-}
-
-fn characterize() -> Result<()> {
-    report::characterization_table().print();
-    report::fig4b_table().print();
-    report::fig4c_table().print();
-    Ok(())
-}
-
-fn selected_networks(args: &Args) -> Result<Vec<workloads::Network>> {
-    if let Some(path) = args.get("network-file") {
-        // runtime-defined network: a JSON layer spec (workloads::load)
-        return Ok(vec![workloads::load(path)?]);
-    }
-    if args.flag("all") || args.get("network").is_none() {
-        Ok(workloads::all_benchmarks())
-    } else {
-        let name = args.get("network").unwrap();
-        Ok(vec![workloads::by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?])
-    }
-}
-
-fn simulate(args: &Args) -> Result<()> {
-    let nets = selected_networks(args)?;
-    let r = report::system_report(&nets);
-    r.table_energy.print();
-    r.table_throughput.print();
-    r.table_breakdown.print();
-    r.table_latency.print();
-    println!("{}", r.headline);
-    Ok(())
-}
-
-fn event_sim(args: &Args) -> Result<()> {
-    let nets = selected_networks(args)?;
-    report::event_cross_validation_table(&nets).print();
-    let load = neural_pim::event::RequestLoad {
-        requests: args.get_u64("requests", 256),
-        replicas: args.get_usize("replicas", 4),
-        utilization: args.get_f64("load", 0.8),
-        seed: args.get_u64("seed", 42),
-    };
-    report::event_latency_table(&nets, &load).print();
-    Ok(())
-}
-
-fn dse_cmd(args: &Args) -> Result<()> {
-    let top = args.get_usize("top", 12);
-    report::fig11_table(top).print();
-    let best = neural_pim::dse::best();
-    println!(
-        "best: {} at {:.1} GOPS/s/mm² (paper: N128-D4-A4-S64 M64 at 1904.0)",
-        best.label, best.compute_efficiency
-    );
-    Ok(())
-}
-
-fn budget(args: &Args) -> Result<()> {
-    let arch = Architecture::parse(args.get_or("arch", "neural-pim"))?;
-    let cfg = AcceleratorConfig::for_arch(arch);
-    let tile = neural_pim::energy::tile_budget(&cfg);
-    let chip = neural_pim::energy::chip_budget(&cfg);
-    let mut t = Table::new(
-        &format!("{} budget", arch.name()),
-        &["level", "power (W)", "area (mm²)"],
-    );
-    t.row(&["PE".into(), format!("{:.3}", tile.pe.power()),
-            format!("{:.4}", tile.pe.area())]);
-    t.row(&["tile".into(), format!("{:.3}", tile.power()),
-            format!("{:.4}", tile.area())]);
-    t.row(&[format!("chip ({} tiles)", cfg.tiles),
-            format!("{:.1}", chip.power()), format!("{:.1}", chip.area())]);
-    t.print();
-    Ok(())
-}
-
-fn accuracy(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get_or("artifacts",
-                                      &neural_pim::artifact_dir()))?;
-    let ts = runtime::TestSet::load(rt.dir())?;
-    let strategy = args.get_or("strategy", "C").to_string();
-    let seed = args.get_u64("seed", 42);
-    let batch = 128usize;
-    let n_batches = (ts.n / batch).max(1);
-
-    let (artifact, extra): (String, Vec<xla::Literal>) = match strategy.as_str() {
-        "ideal" => ("cnn_ideal".into(), vec![]),
-        "noisy" => {
-            let sinad = args.get_f64("sinad", 50.0);
-            ("cnn_noisy".into(),
-             vec![runtime::lit_key(seed)?, runtime::lit_scalar_f32(sinad as f32)])
-        }
-        s @ ("A" | "B" | "C") => {
-            let bits = args.get_usize("adc-bits", 8);
-            let levels = (1u64 << bits) as f32 - 1.0;
-            let mut extra = vec![runtime::lit_scalar_f32(levels)];
-            if s != "A" {
-                // strategy A is deterministic; its HLO has no key param
-                extra.push(runtime::lit_key(seed)?);
-            }
-            (format!("cnn_strat{s}"), extra)
-        }
-        other => bail!("unknown strategy {other}"),
-    };
-    let exe = rt.load(&artifact)?;
-    println!("loaded {artifact} (compiled in {:.1}s) on {}",
-             exe.compile_seconds, rt.platform());
-    let mut correct = 0usize;
-    let mut total = 0usize;
-    for b in 0..n_batches {
-        let images = ts.batch_literal(b * batch, batch)?;
-        let mut inputs = vec![images];
-        for e in &extra {
-            inputs.push(clone_lit(e));
-        }
-        let out = exe.run(&inputs)?;
-        let logits = runtime::to_f32_vec(&out[0])?;
-        let labels = ts.batch_labels(b * batch, batch);
-        correct += (runtime::accuracy(&logits, &labels, 10) * batch as f64)
-            .round() as usize;
-        total += batch;
-    }
-    println!("strategy={strategy} accuracy={:.4} ({} images)",
-             correct as f64 / total as f64, total);
-    Ok(())
-}
-
-fn clone_lit(l: &xla::Literal) -> xla::Literal {
-    match l.ty().unwrap() {
-        xla::ElementType::U32 => {
-            let v = l.to_vec::<u32>().unwrap();
-            xla::Literal::vec1(&v).reshape(&[v.len() as i64]).unwrap()
-        }
-        _ => {
-            let v = l.to_vec::<f32>().unwrap();
-            if l.element_count() == 1
-                && l.array_shape().map(|s| s.dims().is_empty()).unwrap_or(false)
-            {
-                xla::Literal::scalar(v[0])
-            } else {
-                xla::Literal::vec1(&v).reshape(&[v.len() as i64]).unwrap()
-            }
-        }
-    }
-}
-
-fn mc(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get_or("artifacts", &neural_pim::artifact_dir()))?;
-    let naive = args.flag("naive");
-    let trials = args.get_usize("trials", 4);
-    let artifact = if naive { "mc_naive" } else { "mc_opt" };
-    let exe = rt.load(artifact)?;
-    let mut all_hw = Vec::new();
-    let mut all_sw = Vec::new();
-    for t in 0..trials {
-        let key = runtime::lit_key(args.get_u64("seed", 42) + t as u64)?;
-        let out = exe.run(&[key])?;
-        let hw = runtime::to_f32_vec(&out[0])?;
-        let sw = runtime::to_f32_vec(&out[1])?;
-        all_hw.extend(hw.iter().map(|&v| v as f64));
-        all_sw.extend(sw.iter().map(|&v| v as f64));
-    }
-    let r = noise::mc_result(&all_hw, &all_sw);
-    println!(
-        "Fig 9{}: {} trials x {} dot products -> SINAD {:.1} dB \
-         (err rms {:.0}, bias {:.0}, range [{:.0}, {:.0}])",
-        if naive { "b (no optimizations)" } else { "a (optimized)" },
-        trials, r.n / trials, r.sinad_db, r.err_rms, r.err_mean,
-        r.err_min, r.err_max
-    );
-    Ok(())
-}
-
-fn periph_cmd(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", &neural_pim::artifact_dir()).to_string();
-    let p = periph::Periph::load(&format!("{dir}/periph.json"))?;
-    let (mse, emax, emin) = p.nns_a_error_stats(8192, args.get_u64("seed", 42));
-    let tr = p.nnadc.transfer(1 << 13);
-    let (dnl, inl, missing) = periph::dnl_inl(&tr, 8);
-    let (enob, sinad) = periph::enob(&p.nnadc, 1 << 13);
-    let mut t = Table::new(
-        "Table 1: trained NeuralPeriph circuits (measured natively in Rust)",
-        &["metric", "NNS+A", "8-bit NNADC", "paper"],
-    );
-    t.row(&["approx. MSE (V²)".into(), format!("{mse:.2e}"), "-".into(),
-            "<1e-5".into()]);
-    t.row(&["max error (mV)".into(), format!("{:.1}", emax * 1e3), "-".into(),
-            "4-5".into()]);
-    t.row(&["min error (mV)".into(), format!("{:.1}", emin * 1e3), "-".into(),
-            "-3..-4".into()]);
-    t.row(&["DNL (LSB)".into(), "-".into(),
-            format!("{:.2}/{:.2}", stats::min(&dnl), stats::max(&dnl)),
-            "-0.25/0.55".into()]);
-    t.row(&["INL (LSB)".into(), "-".into(),
-            format!("{:.2}/{:.2}", stats::min(&inl), stats::max(&inl)),
-            "-0.56/0.62".into()]);
-    t.row(&["missing codes".into(), "-".into(), missing.to_string(),
-            "0".into()]);
-    t.row(&["ENOB (bits)".into(), "-".into(), format!("{enob:.2}"),
-            "7.88".into()]);
-    t.row(&["sine SINAD (dB)".into(), "-".into(), format!("{sinad:.1}"),
-            "~49".into()]);
-    t.print();
-    Ok(())
-}
-
-fn serve(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", &neural_pim::artifact_dir()).to_string();
-    let ts = runtime::TestSet::load(std::path::Path::new(&dir))?;
-    let n_req = args.get_usize("requests", 512);
-    let (h, w, c) = ts.dims;
-    let cfg = CoordinatorConfig {
-        artifact_dir: dir.clone(),
-        artifact: args.get_or("artifact", "cnn_ideal").to_string(),
-        batch: 128,
-        classes: 10,
-        max_wait: std::time::Duration::from_millis(
-            args.get_usize("max-wait-ms", 2) as u64),
-        workers: args.get_usize("workers", 1),
-        extra_inputs: vec![],
-        image_param_first: true,
-    };
-    let coord = Coordinator::start(cfg, h * w * c)?;
-    println!("coordinator up — driving {n_req} requests");
-
-    let t0 = std::time::Instant::now();
-    let stride = h * w * c;
-    let mut pending = Vec::new();
-    for i in 0..n_req {
-        let idx = i % ts.n;
-        let img = ts.images[idx * stride..(idx + 1) * stride].to_vec();
-        pending.push((coord.submit(img)?, ts.labels[idx]));
-    }
-    let mut correct = 0usize;
-    let mut lat_ms = Vec::new();
-    for (rx, label) in pending {
-        let resp = rx.recv()?;
-        if let Some(err) = &resp.error {
-            bail!("request {} failed in its batch: {err}", resp.id);
-        }
-        lat_ms.push((resp.queue_us + resp.exec_us) as f64 / 1000.0);
-        let pred = resp
-            .logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j as i32)
-            .unwrap();
-        if pred == label {
-            correct += 1;
-        }
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "served {n_req} requests in {:.2}s ({:.0} req/s), accuracy {:.4}",
-        dt, n_req as f64 / dt, correct as f64 / n_req as f64
-    );
-    println!(
-        "latency p50 {:.1} ms, p99 {:.1} ms | {}",
-        stats::percentile(&lat_ms, 50.0),
-        stats::percentile(&lat_ms, 99.0),
-        coord.metrics.summary()
-    );
-    coord.shutdown();
-    Ok(())
-}
-
-fn infer(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get_or("artifacts", &neural_pim::artifact_dir()))?;
-    let ts = runtime::TestSet::load(rt.dir())?;
-    let exe = rt.load("cnn_ideal")?;
-    let images = ts.batch_literal(0, 128)?;
-    let out = exe.run(&[images])?;
-    let logits = runtime::to_f32_vec(&out[0])?;
-    let acc = runtime::accuracy(&logits, &ts.batch_labels(0, 128), 10);
-    println!("cnn_ideal first-batch accuracy: {acc:.4}");
-    Ok(())
 }

@@ -8,9 +8,10 @@ use crate::dse;
 use crate::energy;
 use crate::event;
 use crate::model;
+use crate::scenario::Metric;
 use crate::sim;
 use crate::util::stats;
-use crate::util::table::{eng, Table};
+use crate::util::table::{eng, Cell, Table};
 use crate::workloads;
 
 /// `Table::new` over owned header strings (the registry-driven tables
@@ -162,9 +163,16 @@ pub fn table3() -> Table {
     t
 }
 
-/// Fig. 11: top design points of the DSE sweep.
+/// Fig. 11: top design points of the DSE sweep. Numeric columns carry
+/// typed cells, so the JSON rendering keeps the unrounded values.
 pub fn fig11_table(top: usize) -> Table {
-    let mut pts = dse::sweep();
+    fig11_table_from(&dse::sweep(), top)
+}
+
+/// [`fig11_table`] over an already-computed sweep (the `dse` scenario
+/// shares one sweep between the table and the best-point metrics).
+pub fn fig11_table_from(points: &[dse::DsePoint], top: usize) -> Table {
+    let mut pts: Vec<&dse::DsePoint> = points.iter().collect();
     pts.sort_by(|a, b| b.compute_efficiency.partial_cmp(&a.compute_efficiency)
         .unwrap());
     let mut t = Table::new(
@@ -172,17 +180,54 @@ pub fn fig11_table(top: usize) -> Table {
         &["config", "GOPS/s/mm²", "GOPS/s/W"],
     );
     for p in pts.iter().take(top) {
-        t.row(&[
-            p.label.clone(),
-            format!("{:.1}", p.compute_efficiency),
-            format!("{:.1}", p.energy_efficiency),
+        t.cells(vec![
+            Cell::s(p.label.clone()),
+            Cell::num(p.compute_efficiency, format!("{:.1}", p.compute_efficiency)),
+            Cell::num(p.energy_efficiency, format!("{:.1}", p.energy_efficiency)),
         ]);
     }
     let paper = dse::evaluate(&AcceleratorConfig::neural_pim()).unwrap();
-    t.row(&[
-        format!("{} (paper Table 2)", paper.label),
-        format!("{:.1}", paper.compute_efficiency),
-        format!("{:.1}", paper.energy_efficiency),
+    t.cells(vec![
+        Cell::s(format!("{} (paper Table 2)", paper.label)),
+        Cell::num(paper.compute_efficiency,
+                  format!("{:.1}", paper.compute_efficiency)),
+        Cell::num(paper.energy_efficiency,
+                  format!("{:.1}", paper.energy_efficiency)),
+    ]);
+    t
+}
+
+/// PE/tile/chip power & area budget for one architecture (the CLI's
+/// `budget` scenario).
+pub fn budget_table(cfg: &AcceleratorConfig) -> Table {
+    budget_table_from(cfg, &energy::tile_budget(cfg),
+                      &energy::chip_budget(cfg))
+}
+
+/// [`budget_table`] over already-computed budgets (the `budget`
+/// scenario derives its metric records from the very same numbers the
+/// table prints).
+pub fn budget_table_from(cfg: &AcceleratorConfig,
+                         tile: &energy::TileBudget,
+                         chip: &energy::ChipBudget) -> Table {
+    let mut t = Table::new(
+        &format!("{} budget", cfg.arch.name()),
+        &["level", "power (W)", "area (mm²)"],
+    );
+    t.cells(vec![
+        Cell::s("PE"),
+        Cell::num(tile.pe.power(), format!("{:.3}", tile.pe.power())),
+        Cell::num(tile.pe.area(), format!("{:.4}", tile.pe.area())),
+    ]);
+    t.cells(vec![
+        Cell::s("tile"),
+        Cell::num(tile.power(), format!("{:.3}", tile.power())),
+        Cell::num(tile.area(), format!("{:.4}", tile.area())),
+    ]);
+    t.cells(vec![
+        Cell::s(format!("chip ({} tiles)", cfg.tiles)),
+        Cell::num(chip.power(), format!("{:.1}", chip.power())),
+        Cell::num(chip.area(), format!("{:.1}", chip.area())),
     ]);
     t
 }
@@ -191,7 +236,14 @@ pub fn fig11_table(top: usize) -> Table {
 /// iso-area scenario, total-energy agreement and the contention-induced
 /// latency delta the analytical model hides.
 pub fn event_cross_validation_table(nets: &[workloads::Network]) -> Table {
-    let rows = event::cross_validate(nets);
+    event_cross_validation_table_from(&event::cross_validate(nets))
+}
+
+/// [`event_cross_validation_table`] over already-computed rows (the
+/// event-sim scenario shares one `cross_validate` run between its table
+/// and its metric records).
+pub fn event_cross_validation_table_from(rows: &[event::CrossValidation])
+                                         -> Table {
     let mut t = Table::new(
         &format!(
             "event-driven cross-validation (energy tolerance {:.0}%, \
@@ -202,7 +254,7 @@ pub fn event_cross_validation_table(nets: &[workloads::Network]) -> Table {
         &["network", "arch", "E/inf analytical", "E/inf event", "rel err",
           "latency analytical", "latency event", "contention Δ", "events"],
     );
-    for r in &rows {
+    for r in rows {
         t.row(&[
             r.network.to_string(),
             r.arch.name().into(),
@@ -223,8 +275,32 @@ pub fn event_cross_validation_table(nets: &[workloads::Network]) -> Table {
 /// SLO story needs; deterministic at any `--threads`).
 pub fn event_latency_table(nets: &[workloads::Network],
                            load: &event::RequestLoad) -> Table {
+    event_latency_table_from(&event_latency_profiles(nets, load), load)
+}
+
+/// The per-(network, arch) latency profiles behind
+/// [`event_latency_table`]: one scenario per (network, registered
+/// arch), fanned out over the pool (replicas run sequentially inside
+/// each item — scenario-level parallelism already saturates the cores
+/// without nested spawns).
+pub fn event_latency_profiles(nets: &[workloads::Network],
+                              load: &event::RequestLoad)
+                              -> Vec<event::LatencyProfile> {
     let np = AcceleratorConfig::neural_pim();
     let reference_area = energy::chip_budget(&np).area();
+    let scenarios: Vec<(&workloads::Network, Architecture)> = nets
+        .iter()
+        .flat_map(|net| model::archs().into_iter().map(move |a| (net, a)))
+        .collect();
+    crate::util::pool::map(&scenarios, |&(net, arch)| {
+        let cfg = sim::iso_area_config(arch, reference_area);
+        event::request_profile_sequential(net, &cfg, load)
+    })
+}
+
+/// [`event_latency_table`] over already-computed profiles.
+pub fn event_latency_table_from(profiles: &[event::LatencyProfile],
+                                load: &event::RequestLoad) -> Table {
     let mut t = Table::new(
         &format!(
             "event-mode per-inference latency (Poisson load {:.0}% of \
@@ -235,19 +311,7 @@ pub fn event_latency_table(nets: &[workloads::Network],
         &["network", "arch", "p50", "p95", "p99", "mean", "NoC wait",
           "blocked starts"],
     );
-    // one scenario per (network, registered arch): fan the scenarios out
-    // over the pool (replicas run sequentially inside each item —
-    // scenario-level parallelism already saturates the cores without
-    // nested spawns)
-    let scenarios: Vec<(&workloads::Network, Architecture)> = nets
-        .iter()
-        .flat_map(|net| model::archs().into_iter().map(move |a| (net, a)))
-        .collect();
-    let profiles = crate::util::pool::map(&scenarios, |&(net, arch)| {
-        let cfg = sim::iso_area_config(arch, reference_area);
-        event::request_profile_sequential(net, &cfg, load)
-    });
-    for p in &profiles {
+    for p in profiles {
         let us = |s: f64| format!("{:.1} µs", s * 1e6);
         t.row(&[
             p.network.to_string(),
@@ -272,6 +336,10 @@ pub struct SystemReport {
     /// p50/p95/p99 per scenario from `event::request_profile`
     pub table_latency: Table,
     pub headline: String,
+    /// the structured form of the headline (and more): geomean ratios
+    /// vs every non-reference architecture, per-network energy and
+    /// throughput — what the `simulate` scenario exports as records
+    pub metrics: Vec<Metric>,
 }
 
 pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
@@ -353,6 +421,40 @@ pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
         cmp.throughput_ratio(Architecture::IsaacLike),
         cmp.throughput_ratio(Architecture::CascadeLike),
     );
+    // structured counterpart of the tables: geomean ratios vs every
+    // non-reference architecture plus per-(network, arch) energy and
+    // throughput records (registry-generic — a newly registered
+    // architecture grows metrics here with no edits)
+    let mut metrics = vec![Metric::new(
+        "reference_area_mm2",
+        cmp.reference_area,
+        "mm²",
+    )];
+    for &arch in &others {
+        metrics.push(Metric::new(
+            format!("energy_geomean_vs_{}", arch.name()),
+            cmp.energy_ratio(arch),
+            "x",
+        ));
+        metrics.push(Metric::new(
+            format!("throughput_geomean_vs_{}", arch.name()),
+            cmp.throughput_ratio(arch),
+            "x",
+        ));
+    }
+    for r in &cmp.results {
+        metrics.push(Metric::new(
+            format!("energy_per_inference/{}/{}", r.network, r.arch.name()),
+            r.energy_per_inference,
+            "J",
+        ));
+        metrics.push(Metric::new(
+            format!("throughput_gops/{}/{}", r.network, r.arch.name()),
+            r.throughput_gops,
+            "GOPS",
+        ));
+    }
+
     // request-level event simulation: a modest fixed load keeps the
     // report fast while still exercising queueing (the `event-sim` CLI
     // exposes the knobs)
@@ -368,6 +470,7 @@ pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
         table_breakdown: tb,
         table_latency: event_latency_table(nets, &load),
         headline,
+        metrics,
     }
 }
 
@@ -396,6 +499,29 @@ mod tests {
         assert!(lat.contains("AlexNet"));
         assert!(lat.contains("Neural-PIM"));
         assert!(lat.contains("p99"));
+    }
+
+    #[test]
+    fn system_report_exports_structured_metrics() {
+        let nets = vec![workloads::alexnet()];
+        let r = system_report(&nets);
+        // registry-generic: one pair of geomean metrics per
+        // non-reference architecture, plus per-(network, arch) records
+        let n_others = model::archs().len() - 1;
+        let geo = r
+            .metrics
+            .iter()
+            .filter(|m| m.name.starts_with("energy_geomean_vs_"))
+            .count();
+        assert_eq!(geo, n_others);
+        assert!(r.metrics.iter().any(|m| m.name == "reference_area_mm2"));
+        let e_np = r
+            .metrics
+            .iter()
+            .find(|m| m.name == "energy_per_inference/AlexNet/Neural-PIM")
+            .expect("per-scenario record");
+        assert!(e_np.value > 0.0 && e_np.value.is_finite());
+        assert_eq!(e_np.unit, "J");
     }
 
     #[test]

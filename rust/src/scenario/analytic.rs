@@ -1,0 +1,358 @@
+//! Scenario impls over the analytical/simulator stack (`sim`, `event`,
+//! `dse`, `noise`, `baselines` via `report`) — everything that runs
+//! from a fresh checkout with no artifacts.
+//!
+//! Each impl is a thin shim: parameters declared once, the heavy
+//! lifting delegated to `report`/`sim`/`event`/`dse`/`noise`, and the
+//! result packaged as a typed [`Outcome`] whose text rendering is
+//! byte-identical to the pre-scenario CLI arms (golden-tested).
+
+use super::{Outcome, ParamSpec, Params, Scenario};
+use crate::config::AcceleratorConfig;
+use crate::dataflow;
+use crate::util::num::fnv1a64;
+use crate::workloads::{self, Network};
+use crate::{dse, energy, event, noise, report};
+use anyhow::{Context, Result};
+
+/// The `--network` / `--all` / `--network-file` triple shared by the
+/// simulation scenarios (same semantics as the pre-scenario CLI: a
+/// file wins, then an explicit name, else all nine benchmarks).
+fn network_specs() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec::str("network", "", "one benchmark by name"),
+        ParamSpec::flag("all", "all nine benchmarks (the default)"),
+        ParamSpec::str("network-file", "",
+                       "runtime-defined network from a JSON spec"),
+    ]
+}
+
+fn selected_networks(p: &Params) -> Result<Vec<Network>> {
+    let file = p.get_str("network-file");
+    if !file.is_empty() {
+        return Ok(vec![workloads::load(file)?]);
+    }
+    let name = p.get_str("network");
+    if p.get_bool("all") || name.is_empty() {
+        Ok(workloads::all_benchmarks())
+    } else {
+        Ok(vec![workloads::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?])
+    }
+}
+
+/// Content hash of the `--network-file` spec (when present), so cached
+/// results can never be served after the file changes.
+fn network_file_extra(p: &Params) -> Result<String> {
+    let file = p.get_str("network-file");
+    if file.is_empty() {
+        return Ok(String::new());
+    }
+    let text = std::fs::read_to_string(file)
+        .with_context(|| format!("reading network spec {file}"))?;
+    Ok(format!("netfile:{:016x}", fnv1a64(text.as_bytes())))
+}
+
+// -------------------------------------------------------- characterize --
+
+pub struct Characterize;
+
+impl Scenario for Characterize {
+    fn name(&self) -> &'static str {
+        "characterize"
+    }
+
+    fn description(&self) -> &'static str {
+        "§3 dataflow framework (Eqs. 2-8, Fig. 3d/4b/4c)"
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(report::characterization_table())
+            .table(report::fig4b_table())
+            .table(report::fig4c_table());
+        let default = Default::default();
+        o.metric("conversions_per_group_A",
+                 dataflow::conversions_a(&default) as f64, "")
+            .metric("conversions_per_group_B",
+                    dataflow::conversions_b(&default) as f64, "")
+            .metric("conversions_per_group_C",
+                    dataflow::conversions_c() as f64, "");
+        Ok(o)
+    }
+}
+
+// ------------------------------------------------------------ simulate --
+
+pub struct Simulate;
+
+impl Scenario for Simulate {
+    fn name(&self) -> &'static str {
+        "simulate"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["sim"]
+    }
+
+    fn description(&self) -> &'static str {
+        "full-system simulation (Fig. 12/13 + headline)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        network_specs()
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let nets = selected_networks(p)?;
+        let r = report::system_report(&nets);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(r.table_energy)
+            .table(r.table_throughput)
+            .table(r.table_breakdown)
+            .table(r.table_latency)
+            .note(r.headline);
+        o.metrics = r.metrics;
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        network_file_extra(p)
+    }
+}
+
+// ------------------------------------------------------------ event-sim --
+
+pub struct EventSim;
+
+impl EventSim {
+    fn load_from(p: &Params) -> event::RequestLoad {
+        event::RequestLoad {
+            requests: p.get_u64("requests"),
+            replicas: p.get_usize("replicas"),
+            utilization: p.get_f64("load"),
+            seed: p.get_u64("seed"),
+        }
+    }
+}
+
+impl Scenario for EventSim {
+    fn name(&self) -> &'static str {
+        "event-sim"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["event"]
+    }
+
+    fn description(&self) -> &'static str {
+        "discrete-event cross-validation + tail latency under Poisson load"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        let mut specs = network_specs();
+        specs.push(ParamSpec::u64("requests", 256, "total inferences"));
+        specs.push(ParamSpec::u64("replicas", 4, "independent chip replicas"));
+        specs.push(ParamSpec::f64("load", 0.8,
+                                  "offered load vs bottleneck rate"));
+        specs.push(ParamSpec::u64("seed", 42, "PRNG seed"));
+        specs
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let nets = selected_networks(p)?;
+        let rows = event::cross_validate(&nets);
+        let load = Self::load_from(p);
+        let profiles = report::event_latency_profiles(&nets, &load);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(report::event_cross_validation_table_from(&rows))
+            .table(report::event_latency_table_from(&profiles, &load));
+        let max_rel_err = rows
+            .iter()
+            .map(|r| r.energy_rel_err)
+            .fold(0.0f64, f64::max);
+        let events: u64 = rows.iter().map(|r| r.events).sum::<u64>()
+            + profiles.iter().map(|p| p.events).sum::<u64>();
+        o.metric("max_energy_rel_err", max_rel_err, "")
+            .metric("events", events as f64, "");
+        for lp in &profiles {
+            o.metric(
+                format!("p99_s/{}/{}", lp.network, lp.arch.name()),
+                lp.p99_s,
+                "s",
+            );
+        }
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        network_file_extra(p)
+    }
+}
+
+// ----------------------------------------------------------------- dse --
+
+pub struct Dse;
+
+impl Scenario for Dse {
+    fn name(&self) -> &'static str {
+        "dse"
+    }
+
+    fn description(&self) -> &'static str {
+        "design-space exploration (Fig. 11)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![ParamSpec::u64("top", 12, "design points to list")]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let top = p.get_usize("top");
+        // one sweep shared by the table and the best-point metrics (the
+        // old CLI arm ran it twice)
+        let pts = dse::sweep();
+        let best = dse::best_of(&pts);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(report::fig11_table_from(&pts, top)).note(format!(
+            "best: {} at {:.1} GOPS/s/mm² (paper: N128-D4-A4-S64 M64 at \
+             1904.0)",
+            best.label, best.compute_efficiency
+        ));
+        o.metric("best_compute_efficiency", best.compute_efficiency,
+                 "GOPS/s/mm²")
+            .metric("best_energy_efficiency", best.energy_efficiency,
+                    "GOPS/s/W");
+        Ok(o)
+    }
+}
+
+// -------------------------------------------------------- table2/table3 --
+
+pub struct Table2;
+
+impl Scenario for Table2 {
+    fn name(&self) -> &'static str {
+        "table2"
+    }
+
+    fn description(&self) -> &'static str {
+        "Table 2: Neural-PIM tile-level parameters"
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(report::table2());
+        let chip = energy::chip_budget(&AcceleratorConfig::neural_pim());
+        o.metric("chip_power_w", chip.power(), "W")
+            .metric("chip_area_mm2", chip.area(), "mm²");
+        Ok(o)
+    }
+}
+
+pub struct Table3;
+
+impl Scenario for Table3 {
+    fn name(&self) -> &'static str {
+        "table3"
+    }
+
+    fn description(&self) -> &'static str {
+        "Table 3: PE-level architecture comparison"
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(report::table3());
+        for r in crate::baselines::pe_comparison() {
+            o.metric(format!("pe_power_w/{}", r.arch.name()), r.pe_power_w,
+                     "W")
+                .metric(format!("pe_area_mm2/{}", r.arch.name()),
+                        r.pe_area_mm2, "mm²");
+        }
+        Ok(o)
+    }
+}
+
+// -------------------------------------------------------------- budget --
+
+pub struct Budget;
+
+impl Scenario for Budget {
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+
+    fn description(&self) -> &'static str {
+        "PE/tile/chip power & area budget for one architecture"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![ParamSpec::str("arch", "neural-pim",
+                            "architecture name or alias")]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let arch = crate::config::Architecture::parse(p.get_str("arch"))?;
+        let cfg = AcceleratorConfig::for_arch(arch);
+        let tile = energy::tile_budget(&cfg);
+        let chip = energy::chip_budget(&cfg);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        // table and metric records come from the same computed budgets
+        o.table(report::budget_table_from(&cfg, &tile, &chip));
+        o.metric("pe_power_w", tile.pe.power(), "W")
+            .metric("pe_area_mm2", tile.pe.area(), "mm²")
+            .metric("tile_power_w", tile.power(), "W")
+            .metric("chip_power_w", chip.power(), "W")
+            .metric("chip_area_mm2", chip.area(), "mm²");
+        Ok(o)
+    }
+}
+
+// --------------------------------------------------------------- noise --
+
+pub struct Noise;
+
+impl Scenario for Noise {
+    fn name(&self) -> &'static str {
+        "noise"
+    }
+
+    fn description(&self) -> &'static str {
+        "native noise MC: per-strategy SINAD markers (Fig. 10)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::u64("samples", 400, "Monte-Carlo dot products"),
+            ParamSpec::u64("seed", 42, "PRNG seed"),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let samples = p.get_usize("samples");
+        let seed = p.get_u64("seed");
+        let mut o = Outcome::new(self.name(), p.to_json());
+        let mut t = crate::util::table::Table::new(
+            &format!(
+                "Fig 10: dataflow SINAD markers from the behavioural models \
+                 ({samples} samples, seed {seed})"
+            ),
+            &["strategy", "SINAD (dB)"],
+        );
+        for (ch, label) in [
+            ('A', "A (ISAAC-style digital acc.)"),
+            ('B', "B (CASCADE-style buffered)"),
+            ('C', "C (ideal fully-analog)"),
+        ] {
+            let sinad = noise::strategy_sinad(ch, samples, seed);
+            t.cells(vec![
+                crate::util::table::Cell::s(label),
+                crate::util::table::Cell::num(sinad, format!("{sinad:.1}")),
+            ]);
+            o.metric(format!("sinad_db_{ch}"), sinad, "dB");
+        }
+        o.table(t);
+        Ok(o)
+    }
+}

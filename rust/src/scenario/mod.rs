@@ -1,0 +1,765 @@
+//! The unified scenario layer: every experiment the crate can run —
+//! the §3 characterization, the Fig. 4/11/12 sweeps, Tables 1/2/3, the
+//! event microsimulation, the noise MC, the PJRT serving paths — is a
+//! registered [`Scenario`] behind one generic dispatch.
+//!
+//! A scenario declares its typed parameters ([`ParamSpec`]) once;
+//! params then parse uniformly from CLI flags ([`params_from_args`]) or
+//! a JSON spec ([`params_from_json`], the [`suite`] runner's input) and
+//! canonicalize into the content-address the [`store`] caches results
+//! under. Running produces a typed [`Outcome`] (metric records + tables
+//! + notes) that renders either as the exact text the pre-scenario CLI
+//! printed (golden-tested byte-identical) or as schema-versioned JSON
+//! (`--format json`, `--out <path>`).
+//!
+//! `main.rs` contains **no per-scenario match arms** — it hands the
+//! whole argv to [`dispatch`], which resolves the command against the
+//! [`registry`] (grep-enforced in `scripts/verify.sh`, like the model
+//! layer's architecture rule). Registering a new experiment is one impl
+//! plus one registry entry; it immediately gains `run <name>`,
+//! `--format json`, `--cache`, suite membership, and help text.
+
+mod analytic;
+pub mod outcome;
+mod pjrt;
+pub mod registry;
+pub mod store;
+pub mod suite;
+
+pub use outcome::{Metric, Outcome, OUTCOME_KIND, OUTCOME_SCHEMA};
+pub use registry::{find, scenarios};
+
+use crate::util::cli::{self, Args};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One typed parameter value. `U64` doubles for usize-shaped counts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Bool(bool),
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl ParamValue {
+    fn kind(&self) -> &'static str {
+        match self {
+            ParamValue::Bool(_) => "bool",
+            ParamValue::U64(_) => "integer",
+            ParamValue::F64(_) => "number",
+            ParamValue::Str(_) => "string",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ParamValue::Bool(b) => Json::Bool(*b),
+            ParamValue::U64(v) => Json::Num(*v as f64),
+            ParamValue::F64(v) => Json::Num(*v),
+            ParamValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// Declaration of one scenario parameter: its name (`--name` on the
+/// CLI, `"name"` in a JSON spec), default value (which fixes its type),
+/// and help text.
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub default: ParamValue,
+    pub help: &'static str,
+}
+
+impl ParamSpec {
+    pub fn flag(name: &'static str, help: &'static str) -> ParamSpec {
+        ParamSpec { name, default: ParamValue::Bool(false), help }
+    }
+
+    pub fn u64(name: &'static str, default: u64,
+               help: &'static str) -> ParamSpec {
+        ParamSpec { name, default: ParamValue::U64(default), help }
+    }
+
+    pub fn f64(name: &'static str, default: f64,
+               help: &'static str) -> ParamSpec {
+        ParamSpec { name, default: ParamValue::F64(default), help }
+    }
+
+    pub fn str(name: &'static str, default: &str,
+               help: &'static str) -> ParamSpec {
+        ParamSpec { name, default: ParamValue::Str(default.into()), help }
+    }
+}
+
+/// A fully-resolved parameter set: every declared spec is present
+/// (defaults filled in), so the canonical JSON form — and therefore the
+/// store fingerprint — does not depend on which spelling supplied it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Params(BTreeMap<String, ParamValue>);
+
+impl Params {
+    pub fn set(&mut self, name: &str, v: ParamValue) {
+        self.0.insert(name.to_string(), v);
+    }
+
+    fn expect(&self, name: &str) -> &ParamValue {
+        self.0
+            .get(name)
+            .unwrap_or_else(|| panic!("param '{name}' not declared"))
+    }
+
+    /// Typed accessors. Panicking on a missing/mistyped name is
+    /// deliberate: params always come through [`params_from_args`] /
+    /// [`params_from_json`] against the scenario's own specs, so a
+    /// failure here is a bug in the scenario's declaration, not input.
+    pub fn get_bool(&self, name: &str) -> bool {
+        match self.expect(name) {
+            ParamValue::Bool(b) => *b,
+            v => panic!("param '{name}' is {}, not bool", v.kind()),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        match self.expect(name) {
+            ParamValue::U64(v) => *v,
+            v => panic!("param '{name}' is {}, not integer", v.kind()),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_u64(name) as usize
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        match self.expect(name) {
+            ParamValue::F64(v) => *v,
+            v => panic!("param '{name}' is {}, not number", v.kind()),
+        }
+    }
+
+    pub fn get_str(&self, name: &str) -> &str {
+        match self.expect(name) {
+            ParamValue::Str(s) => s,
+            v => panic!("param '{name}' is {}, not string", v.kind()),
+        }
+    }
+
+    /// Canonical JSON object (BTreeMap keeps keys sorted).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.0.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+    }
+
+    /// Canonical serialization the fingerprint hashes.
+    pub fn canonical(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// One registered experiment. Implementations live in
+/// `scenario/analytic.rs` (pure model/simulator scenarios) and
+/// `scenario/pjrt.rs` (artifact-backed PJRT scenarios); `registry.rs`
+/// is the only list that knows them all.
+pub trait Scenario: Sync {
+    /// Canonical CLI name (kebab-case).
+    fn name(&self) -> &'static str;
+
+    /// Alternate spellings; matching is case- and `-`/`_`-insensitive.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `help` and the suite report.
+    fn description(&self) -> &'static str;
+
+    /// Declared parameters (defaults fix each one's type).
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        Vec::new()
+    }
+
+    /// Execute with fully-resolved params.
+    fn run(&self, p: &Params) -> Result<Outcome>;
+
+    /// Extra content the fingerprint must cover beyond name + params +
+    /// crate version (e.g. the bytes of a `--network-file` spec).
+    fn fingerprint_extra(&self, _p: &Params) -> Result<String> {
+        Ok(String::new())
+    }
+}
+
+/// Parse `specs` from CLI arguments, defaulting absent ones.
+pub fn params_from_args(specs: &[ParamSpec], args: &Args) -> Result<Params> {
+    let mut p = Params::default();
+    for spec in specs {
+        // a value-typed option given as a bare flag means its value was
+        // omitted (or swallowed by a following `--flag`) — error rather
+        // than silently falling back to the default
+        if !matches!(spec.default, ParamValue::Bool(_)) && args.flag(spec.name)
+        {
+            bail!("--{} needs a value", spec.name);
+        }
+        let v = match &spec.default {
+            ParamValue::Bool(d) => match args.get(spec.name) {
+                Some(s) => ParamValue::Bool(parse_bool(spec.name, s)?),
+                None => ParamValue::Bool(*d || args.flag(spec.name)),
+            },
+            ParamValue::U64(d) => ParamValue::U64(match args.get(spec.name) {
+                Some(s) => {
+                    let v: u64 = s.parse().with_context(|| {
+                        format!("--{} must be an integer (got '{s}')",
+                                spec.name)
+                    })?;
+                    // same JSON-safe bound params_from_json enforces:
+                    // canonical params (and so the fingerprint) go
+                    // through f64, which is exact only up to 2^53
+                    if v > (1u64 << 53) {
+                        bail!("--{} must be <= 2^53 (got {v})", spec.name);
+                    }
+                    v
+                }
+                None => *d,
+            }),
+            ParamValue::F64(d) => ParamValue::F64(match args.get(spec.name) {
+                Some(s) => {
+                    let v: f64 = s.parse().with_context(|| {
+                        format!("--{} must be a number (got '{s}')",
+                                spec.name)
+                    })?;
+                    // JSON has no NaN/inf: a non-finite value would
+                    // serialize into params the store can never re-parse
+                    if !v.is_finite() {
+                        bail!("--{} must be finite (got {v})", spec.name);
+                    }
+                    v
+                }
+                None => *d,
+            }),
+            ParamValue::Str(d) => ParamValue::Str(
+                args.get(spec.name).unwrap_or(d).to_string(),
+            ),
+        };
+        p.set(spec.name, v);
+    }
+    Ok(p)
+}
+
+fn parse_bool(name: &str, s: &str) -> Result<bool> {
+    match s {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => bail!("--{name} must be true/false (got '{other}')"),
+    }
+}
+
+/// Parse `specs` from a JSON object (a suite entry's `"params"`),
+/// defaulting absent keys and rejecting unknown ones with a suggestion.
+pub fn params_from_json(specs: &[ParamSpec], j: &Json) -> Result<Params> {
+    let empty = BTreeMap::new();
+    let map = match j {
+        Json::Null => &empty,
+        Json::Obj(m) => m,
+        other => bail!("params must be a JSON object (got {other})"),
+    };
+    let known: Vec<&str> = specs.iter().map(|s| s.name).collect();
+    for key in map.keys() {
+        if !known.contains(&key.as_str()) {
+            match cli::suggest(key, &known) {
+                Some(s) => bail!("unknown param '{key}' (did you mean '{s}'?)"),
+                None => bail!("unknown param '{key}'"),
+            }
+        }
+    }
+    let mut p = Params::default();
+    for spec in specs {
+        let v = match (map.get(spec.name), &spec.default) {
+            (None, d) => d.clone(),
+            (Some(Json::Bool(b)), ParamValue::Bool(_)) => ParamValue::Bool(*b),
+            (Some(Json::Num(n)), ParamValue::U64(_)) => {
+                let max = (1u64 << 53) as f64;
+                if n.fract() != 0.0 || !(0.0..=max).contains(n) {
+                    bail!("param '{}' must be a non-negative integer \
+                           (got {n})", spec.name);
+                }
+                ParamValue::U64(*n as u64)
+            }
+            (Some(Json::Num(n)), ParamValue::F64(_)) => ParamValue::F64(*n),
+            (Some(Json::Str(s)), ParamValue::Str(_)) => {
+                ParamValue::Str(s.clone())
+            }
+            (Some(other), d) => bail!(
+                "param '{}' must be a {} (got {other})",
+                spec.name,
+                d.kind()
+            ),
+        };
+        p.set(spec.name, v);
+    }
+    Ok(p)
+}
+
+// ---------------------------------------------------------------- exec --
+
+/// Options shared by every scenario invocation (not fingerprinted).
+pub struct ExecOptions {
+    /// consult/populate the results store
+    pub cache: bool,
+    /// store root (`--results-dir`, default [`store::default_root`])
+    pub results_dir: String,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { cache: false, results_dir: store::default_root() }
+    }
+}
+
+impl ExecOptions {
+    pub fn from_args(args: &Args) -> ExecOptions {
+        ExecOptions {
+            // `--cache` is a bare flag, but the parser captures a
+            // following bare word as its value — accept the explicit
+            // boolean spellings too (one truth table: parse_bool;
+            // dispatch has already rejected anything else)
+            cache: args.flag("cache")
+                || args
+                    .get("cache")
+                    .map(|v| parse_bool("cache", v).unwrap_or(false))
+                    .unwrap_or(false),
+            results_dir: args
+                .get("results-dir")
+                .map(str::to_string)
+                .unwrap_or_else(store::default_root),
+        }
+    }
+}
+
+/// The result of [`execute`]: the outcome plus cache provenance.
+pub struct Execution {
+    pub outcome: Outcome,
+    pub fingerprint: String,
+    /// served from the results store without recompute
+    pub cached: bool,
+    /// where the outcome lives on disk (when caching)
+    pub stored: Option<std::path::PathBuf>,
+}
+
+/// Run a scenario through the store: on a `--cache` hit the stored
+/// outcome is replayed (no recompute); on a miss (or without `--cache`)
+/// the scenario runs, and with `--cache` the result is persisted.
+pub fn execute(sc: &dyn Scenario, p: &Params,
+               opts: &ExecOptions) -> Result<Execution> {
+    let extra = sc.fingerprint_extra(p)?;
+    let fp = store::fingerprint(sc.name(), p, &extra);
+    let st = store::Store::new(&opts.results_dir);
+    if opts.cache {
+        if let Some(j) = st.load(sc.name(), &fp) {
+            // an undecodable entry is a miss like any other corrupt
+            // file (recompute and overwrite), never a hard failure
+            match Outcome::from_json(&j) {
+                Ok(outcome) => {
+                    return Ok(Execution {
+                        outcome,
+                        stored: Some(st.path_for(sc.name(), &fp)),
+                        fingerprint: fp,
+                        cached: true,
+                    });
+                }
+                Err(e) => eprintln!(
+                    "[cache] ignoring undecodable {}: {e:#}",
+                    st.path_for(sc.name(), &fp).display()
+                ),
+            }
+        }
+    }
+    let outcome = sc.run(p)?;
+    let stored = if opts.cache {
+        Some(st.save(sc.name(), &fp, &outcome)?)
+    } else {
+        None
+    };
+    Ok(Execution { outcome, fingerprint: fp, cached: false, stored })
+}
+
+// ------------------------------------------------------------ dispatch --
+
+/// Options every invocation understands, beyond the scenario's own.
+const GLOBAL_OPTIONS: [&str; 5] =
+    ["threads", "format", "out", "cache", "results-dir"];
+
+/// The CLI entry point `main.rs` delegates to: resolve the command
+/// against the registry, validate flags, parse params, execute through
+/// the cache, render text or JSON. No scenario name appears here.
+pub fn dispatch(args: &Args) -> Result<()> {
+    // Bare flags capture a following bare word as their value, so a
+    // leading flag (`--cache simulate`, `--all simulate`) eats the
+    // command: the positional list ends up empty and the run would fall
+    // through to the help screen with exit 0. Error instead — silently
+    // doing nothing is the failure mode this layer exists to kill.
+    if args.positional.is_empty()
+        && !(args.options.is_empty() && args.flags.is_empty())
+    {
+        if let Some((k, v)) =
+            args.options.iter().find(|(_, v)| find(v).is_some())
+        {
+            bail!(
+                "--{k} is a flag and swallowed the command '{v}' as its \
+                 value; put --{k} after the command"
+            );
+        }
+        bail!("options given but no command; run `neural-pim help`");
+    }
+    // `--cache` anywhere else: a trailing bare word is equally silent
+    // (`simulate --cache extra` would disable caching). Only boolean
+    // spellings are valid values.
+    if let Some(v) = args.get("cache") {
+        if parse_bool("cache", v).is_err() {
+            bail!(
+                "--cache is a flag and swallowed '{v}' as its value; put \
+                 --cache after the command (or spell it --cache=true)"
+            );
+        }
+    }
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    if cmd == "help" {
+        if let Some(n) = args.positional.get(1) {
+            // `help <typo>` must not silently fall back to the generic
+            // usage screen — same did-you-mean path as command position
+            let Some(sc) = find(n) else {
+                let names: Vec<&str> = command_names();
+                bail!(
+                    "unknown scenario '{n}'{} — run `neural-pim help`",
+                    cli::suggest(n, &names)
+                        .map(|s| format!(" (did you mean '{s}'?)"))
+                        .unwrap_or_default()
+                );
+            };
+            println!("{}", scenario_help(sc));
+        } else {
+            println!("{}", usage());
+        }
+        return Ok(());
+    }
+    if cmd == "suite" {
+        return suite::run_cli(args);
+    }
+    let name = if cmd == "run" {
+        args.positional
+            .get(1)
+            .map(String::as_str)
+            .context("usage: neural-pim run <scenario> [options]")?
+    } else {
+        cmd
+    };
+    let Some(sc) = find(name) else {
+        let names: Vec<&str> = command_names();
+        bail!(
+            "unknown command '{name}'{} — run `neural-pim help`",
+            cli::suggest(name, &names)
+                .map(|s| format!(" (did you mean '{s}'?)"))
+                .unwrap_or_default()
+        );
+    };
+    // the command takes no positional arguments of its own — a stray
+    // one (`simulate AlexNet`) would otherwise be ignored and the run
+    // would silently fall back to defaults (all nine benchmarks)
+    let n_expected = if cmd == "run" { 2 } else { 1 };
+    if let Some(extra) = args.positional.get(n_expected) {
+        bail!(
+            "unexpected argument '{extra}' — scenario parameters are \
+             passed as --options (e.g. --network {extra}); see \
+             `neural-pim help {name}`"
+        );
+    }
+    let specs = sc.param_specs();
+    let mut known: Vec<&str> = GLOBAL_OPTIONS.to_vec();
+    known.extend(specs.iter().map(|s| s.name));
+    args.reject_unknown(&known).map_err(|e| anyhow!("{e}"))?;
+    reject_valueless(args, &["format", "out", "results-dir", "threads"])?;
+    let format = args.get_or("format", "text");
+    if format != "text" && format != "json" {
+        bail!("--format must be text or json (got '{format}')");
+    }
+    let p = params_from_args(&specs, args)?;
+    let ex = execute(sc, &p, &ExecOptions::from_args(args))?;
+    if ex.cached {
+        // stderr, so text output stays byte-identical to an uncached run
+        eprintln!(
+            "[cache] {} served from {}",
+            sc.name(),
+            ex.stored.as_ref().expect("cached implies stored").display()
+        );
+    }
+    let rendered = if format == "json" {
+        let mut s = ex.outcome.to_json().to_pretty_string();
+        s.push('\n');
+        s
+    } else {
+        ex.outcome.render_text()
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, rendered)
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+/// Bail when a value-typed global option was given as a bare flag (its
+/// value forgotten or swallowed by a following `--flag`) — the same
+/// guard `params_from_args` applies to scenario params.
+fn reject_valueless(args: &Args, names: &[&str]) -> Result<()> {
+    for &n in names {
+        if args.flag(n) {
+            bail!("--{n} needs a value");
+        }
+    }
+    Ok(())
+}
+
+/// Every spelling `dispatch` accepts in command position.
+fn command_names() -> Vec<&'static str> {
+    let mut names = vec!["run", "suite", "help"];
+    for sc in scenarios() {
+        names.push(sc.name());
+        names.extend(sc.aliases().iter().copied());
+    }
+    names
+}
+
+/// Top-level usage text, generated from the registry.
+pub fn usage() -> String {
+    let mut out = String::from(
+        "neural-pim — Neural-PIM (IEEE TC 2022) reproduction\n\n\
+         USAGE:\n  \
+         neural-pim <scenario> [--param value ...] [global options]\n  \
+         neural-pim run <scenario> [...]     the same, explicit form\n  \
+         neural-pim suite <spec.json> [--cache] [--bench-out FILE]\n  \
+         neural-pim help [scenario]\n\n\
+         SCENARIOS:\n",
+    );
+    let width = scenarios().iter().map(|s| s.name().len()).max().unwrap_or(0);
+    for sc in scenarios() {
+        out.push_str(&format!(
+            "  {:width$}  {}\n",
+            sc.name(),
+            sc.description()
+        ));
+    }
+    out.push_str(
+        "\nGLOBAL OPTIONS:\n  \
+         --format text|json   render outcome as text tables (default) or\n  \
+         \x20                    schema-versioned JSON\n  \
+         --out FILE           write the rendering to FILE instead of stdout\n  \
+         --cache              reuse/populate the content-addressed results\n  \
+         \x20                    store (results/<scenario>/<fingerprint>.json)\n  \
+         --results-dir DIR    store root (default: results, or\n  \
+         \x20                    $NEURAL_PIM_RESULTS)\n  \
+         --threads N          worker threads for the parallel sweeps\n\n\
+         `neural-pim help <scenario>` lists a scenario's parameters.\n",
+    );
+    out
+}
+
+/// Per-scenario help: description, aliases, declared params.
+pub fn scenario_help(sc: &dyn Scenario) -> String {
+    let mut out = format!("{} — {}\n", sc.name(), sc.description());
+    if !sc.aliases().is_empty() {
+        out.push_str(&format!("aliases: {}\n", sc.aliases().join(", ")));
+    }
+    let specs = sc.param_specs();
+    if specs.is_empty() {
+        out.push_str("no parameters\n");
+    } else {
+        out.push_str("parameters:\n");
+        let width = specs.iter().map(|s| s.name.len()).max().unwrap_or(0);
+        for s in &specs {
+            let default = match &s.default {
+                ParamValue::Bool(_) => "flag".to_string(),
+                ParamValue::U64(v) => format!("default {v}"),
+                ParamValue::F64(v) => format!("default {v}"),
+                ParamValue::Str(v) if v.is_empty() => "optional".into(),
+                ParamValue::Str(v) => format!("default {v}"),
+            };
+            out.push_str(&format!(
+                "  --{:width$}  {} ({default})\n",
+                s.name, s.help
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::str("network", "", "benchmark name"),
+            ParamSpec::flag("all", "all benchmarks"),
+            ParamSpec::u64("requests", 256, "total requests"),
+            ParamSpec::f64("load", 0.8, "offered load"),
+        ]
+    }
+
+    fn argv(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn args_and_json_agree_on_the_same_input() {
+        let from_args = params_from_args(
+            &specs(),
+            &argv(&["--network", "AlexNet", "--requests", "64", "--all"]),
+        )
+        .unwrap();
+        let from_json = params_from_json(
+            &specs(),
+            &Json::parse(
+                r#"{"network":"AlexNet","requests":64,"all":true}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(from_args, from_json);
+        assert_eq!(from_args.get_str("network"), "AlexNet");
+        assert_eq!(from_args.get_u64("requests"), 64);
+        assert!(from_args.get_bool("all"));
+        assert_eq!(from_args.get_f64("load"), 0.8);
+    }
+
+    #[test]
+    fn defaults_make_params_canonical() {
+        let a = params_from_args(&specs(), &argv(&[])).unwrap();
+        let b = params_from_json(&specs(), &Json::Null).unwrap();
+        assert_eq!(a.canonical(), b.canonical());
+        assert!(a.canonical().contains("\"requests\":256"), "{}", a.canonical());
+    }
+
+    #[test]
+    fn json_params_reject_unknown_and_mistyped() {
+        let err = params_from_json(
+            &specs(),
+            &Json::parse(r#"{"request":64}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("did you mean 'requests'"), "{err}");
+        for bad in [
+            r#"{"requests":1.5}"#,
+            r#"{"requests":-1}"#,
+            r#"{"requests":"many"}"#,
+            r#"{"all":"yes"}"#,
+        ] {
+            assert!(
+                params_from_json(&specs(), &Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn cli_params_parse_errors_are_errors_not_panics() {
+        assert!(params_from_args(&specs(), &argv(&["--requests", "x"]))
+            .is_err());
+        assert!(params_from_args(&specs(), &argv(&["--load", "fast"]))
+            .is_err());
+        assert!(params_from_args(&specs(), &argv(&["--all", "maybe"]))
+            .is_err());
+    }
+
+    #[test]
+    fn value_option_without_a_value_is_an_error() {
+        // `--network` at the end (or before another --flag) parses as a
+        // bare flag; silently running all nine benchmarks would hide
+        // the mistake
+        let err = params_from_args(&specs(), &argv(&["--network"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--network needs a value"), "{err}");
+        let err =
+            params_from_args(&specs(), &argv(&["--requests", "--all"]))
+                .unwrap_err();
+        assert!(err.to_string().contains("--requests needs a value"),
+                "{err}");
+    }
+
+    #[test]
+    fn leading_flag_swallowing_the_command_is_an_error() {
+        // `--cache simulate` / `--all simulate` would otherwise lose the
+        // command and fall through to the help screen with exit 0
+        for flag in ["--cache", "--all"] {
+            let err = dispatch(&argv(&[flag, "simulate"])).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("swallowed the command \
+                                             'simulate'"),
+                "{flag}: {err:#}"
+            );
+        }
+        // options with no command at all error too (no silent help)
+        assert!(dispatch(&argv(&["--format", "json"])).is_err());
+        // a trailing bare word after --cache is equally rejected
+        let err = dispatch(&argv(&["dse", "--cache", "extra"])).unwrap_err();
+        assert!(format!("{err:#}").contains("swallowed 'extra'"), "{err:#}");
+    }
+
+    #[test]
+    fn help_with_a_typo_suggests_instead_of_generic_usage() {
+        let err = dispatch(&argv(&["help", "simulte"])).unwrap_err();
+        assert!(format!("{err:#}").contains("did you mean 'simulate'"),
+                "{err:#}");
+    }
+
+    #[test]
+    fn non_finite_cli_floats_are_rejected() {
+        // NaN/inf would serialize into params JSON the store can never
+        // re-parse (silent permanent cache miss)
+        for bad in ["nan", "inf", "-inf"] {
+            assert!(
+                params_from_args(&specs(), &argv(&["--load", bad])).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn cli_u64_params_share_the_json_safe_bound() {
+        // fingerprints canonicalize through f64; a u64 beyond 2^53 would
+        // silently collide with its neighbours
+        let err = params_from_args(
+            &specs(),
+            &argv(&["--requests", "18446744073709551615"]),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("2^53"), "{err}");
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_findable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for sc in scenarios() {
+            assert!(seen.insert(sc.name()), "duplicate {}", sc.name());
+            let found = find(sc.name()).expect("own name resolves");
+            assert_eq!(found.name(), sc.name());
+            for a in sc.aliases() {
+                assert_eq!(find(a).expect("alias resolves").name(), sc.name());
+            }
+        }
+        // alias + case/punctuation-insensitive lookup
+        assert!(find("EVENT_SIM").is_some());
+        assert!(find("EventSim").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn usage_lists_every_scenario() {
+        let u = usage();
+        for sc in scenarios() {
+            assert!(u.contains(sc.name()), "usage missing {}", sc.name());
+        }
+        let h = scenario_help(find("event-sim").unwrap());
+        assert!(h.contains("--requests"), "{h}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Typed scenario outcomes: named metric records, text tables, and
+//! notes, rendering either as the exact plain-text stream the CLI has
+//! always printed or as schema-versioned JSON for the results store.
+
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+use anyhow::{bail, Context, Result};
+
+/// Bumped only when the JSON layout changes incompatibly (fields
+/// renamed/removed or their meaning changed). Additive fields do NOT
+/// bump it — readers must ignore keys they don't know. See DESIGN.md
+/// §2b for the policy.
+pub const OUTCOME_SCHEMA: u32 = 1;
+
+/// The `kind` tag stored outcomes are recognized by.
+pub const OUTCOME_KIND: &str = "neural-pim.outcome";
+
+/// One named result quantity — the machine-readable counterpart of a
+/// table cell or headline phrase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    /// free-form unit label ("J", "x", "dB", ""), for display only
+    pub unit: String,
+}
+
+impl Metric {
+    pub fn new(name: impl Into<String>, value: f64, unit: &str) -> Metric {
+        Metric { name: name.into(), value, unit: unit.to_string() }
+    }
+}
+
+/// What running a scenario produces: tables and notes for humans (the
+/// text rendering is byte-identical to the pre-scenario CLI output),
+/// metric records for machines, and the resolved params for provenance.
+#[derive(Debug)]
+pub struct Outcome {
+    pub scenario: String,
+    /// the fully-defaulted params the run resolved to (canonical JSON)
+    pub params: Json,
+    pub metrics: Vec<Metric>,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl Outcome {
+    pub fn new(scenario: &str, params: Json) -> Outcome {
+        Outcome {
+            scenario: scenario.to_string(),
+            params,
+            metrics: Vec::new(),
+            tables: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn table(&mut self, t: Table) -> &mut Self {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    pub fn metric(&mut self, name: impl Into<String>, value: f64,
+                  unit: &str) -> &mut Self {
+        self.metrics.push(Metric::new(name, value, unit));
+        self
+    }
+
+    pub fn get_metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|m| m.name == name).map(|m| m.value)
+    }
+
+    /// The plain-text rendering: every table exactly as `Table::print`
+    /// emitted it (render + trailing blank line), then the notes —
+    /// byte-identical to the hand-rolled pre-scenario `main.rs` arms.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(n);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Schema-versioned JSON form (see [`OUTCOME_SCHEMA`]).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", Json::Str(OUTCOME_KIND.into())),
+            ("schema", Json::Num(OUTCOME_SCHEMA as f64)),
+            ("crate_version", Json::Str(crate::version().into())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("params", self.params.clone()),
+            ("metrics",
+             Json::Arr(
+                 self.metrics
+                     .iter()
+                     .map(|m| {
+                         json::obj(vec![
+                             ("name", Json::Str(m.name.clone())),
+                             ("value", Json::Num(m.value)),
+                             ("unit", Json::Str(m.unit.clone())),
+                         ])
+                     })
+                     .collect(),
+             )),
+            ("tables",
+             Json::Arr(self.tables.iter().map(Table::to_json).collect())),
+            ("notes",
+             Json::Arr(
+                 self.notes.iter().cloned().map(Json::Str).collect(),
+             )),
+        ])
+    }
+
+    /// Rebuild an outcome from its [`Outcome::to_json`] form — how the
+    /// results store replays cached runs through the same renderers.
+    pub fn from_json(j: &Json) -> Result<Outcome> {
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("");
+        if kind != OUTCOME_KIND {
+            bail!("not a stored outcome (kind '{kind}')");
+        }
+        let schema = j.get("schema").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+        if schema != OUTCOME_SCHEMA {
+            bail!("outcome schema {schema} != supported {OUTCOME_SCHEMA}");
+        }
+        let mut out = Outcome::new(
+            j.get("scenario")
+                .and_then(Json::as_str)
+                .context("outcome missing 'scenario'")?,
+            j.get("params").cloned().unwrap_or(Json::Null),
+        );
+        for mj in j.get("metrics").and_then(Json::as_arr).unwrap_or(&[]) {
+            out.metrics.push(Metric {
+                name: mj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("metric missing 'name'")?
+                    .to_string(),
+                value: mj
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .context("metric missing 'value'")?,
+                unit: mj
+                    .get("unit")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        for tj in j.get("tables").and_then(Json::as_arr).unwrap_or(&[]) {
+            out.tables.push(
+                Table::from_json(tj).context("malformed stored table")?,
+            );
+        }
+        for nj in j.get("notes").and_then(Json::as_arr).unwrap_or(&[]) {
+            out.notes
+                .push(nj.as_str().context("note is not a string")?.to_string());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::table::Cell;
+
+    fn sample() -> Outcome {
+        let mut o = Outcome::new(
+            "demo",
+            json::obj(vec![("top", Json::Num(3.0))]),
+        );
+        let mut t = Table::new("T", &["k", "v"]);
+        t.cells(vec![Cell::s("alpha"), Cell::num(1.5, "1.500")]);
+        o.table(t);
+        o.metric("best", 1.5, "x").note("done");
+        o
+    }
+
+    #[test]
+    fn text_rendering_matches_print_sequence() {
+        let o = sample();
+        let s = o.render_text();
+        // table render + blank line + note line
+        assert!(s.starts_with("== T ==\n"));
+        assert!(s.contains("\n\ndone\n"), "{s:?}");
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let o = sample();
+        let j = o.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some(OUTCOME_KIND));
+        assert_eq!(j.get("schema").unwrap().as_f64(),
+                   Some(OUTCOME_SCHEMA as f64));
+        let back = Outcome::from_json(&j).unwrap();
+        assert_eq!(back.scenario, o.scenario);
+        assert_eq!(back.params, o.params);
+        assert_eq!(back.metrics, o.metrics);
+        assert_eq!(back.notes, o.notes);
+        assert_eq!(back.render_text(), o.render_text());
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_kind_and_schema() {
+        assert!(Outcome::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Num(999.0));
+        }
+        assert!(Outcome::from_json(&j).is_err());
+    }
+}

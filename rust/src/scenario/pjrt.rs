@@ -1,0 +1,400 @@
+//! Scenario impls over the PJRT runtime (`runtime`, `coordinator`,
+//! `periph`, the Fig. 9 MC artifacts) — everything that needs
+//! `make artifacts` first. They fail with a clear error (and the suite
+//! records it per entry) when the artifact directory is absent.
+
+use super::{Outcome, ParamSpec, Params, Scenario};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::periph;
+use crate::runtime::{self, Runtime};
+use crate::util::stats;
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+
+fn artifacts_spec() -> ParamSpec {
+    ParamSpec::str("artifacts", "",
+                   "artifact directory (default: ./artifacts)")
+}
+
+fn artifacts_dir(p: &Params) -> String {
+    let dir = p.get_str("artifacts");
+    if dir.is_empty() {
+        crate::artifact_dir()
+    } else {
+        dir.to_string()
+    }
+}
+
+/// Fingerprint the *resolved* artifact directory: the param defaults to
+/// "" and resolves through `$NEURAL_PIM_ARTIFACTS`/the manifest probe,
+/// so two runs against different artifact sets must never share a cache
+/// address. (Directory contents are not hashed — re-run without
+/// `--cache` after `make artifacts`; see DESIGN.md §2b.)
+fn artifacts_extra(p: &Params) -> Result<String> {
+    Ok(format!("artifacts:{}", artifacts_dir(p)))
+}
+
+// ------------------------------------------------------------ accuracy --
+
+pub struct Accuracy;
+
+impl Scenario for Accuracy {
+    fn name(&self) -> &'static str {
+        "accuracy"
+    }
+
+    fn description(&self) -> &'static str {
+        "run the CNN through a dataflow via PJRT (needs artifacts)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::str("strategy", "C", "A | B | C | ideal | noisy"),
+            ParamSpec::u64("adc-bits", 8, "ADC resolution for A/B/C"),
+            ParamSpec::f64("sinad", 50.0, "injected SINAD for 'noisy' (dB)"),
+            ParamSpec::u64("seed", 42, "PRNG seed"),
+            artifacts_spec(),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let rt = Runtime::new(&artifacts_dir(p))?;
+        let ts = runtime::TestSet::load(rt.dir())?;
+        let strategy = p.get_str("strategy").to_string();
+        let seed = p.get_u64("seed");
+        let batch = 128usize;
+        let n_batches = (ts.n / batch).max(1);
+
+        let (artifact, extra): (String, Vec<xla::Literal>) =
+            match strategy.as_str() {
+                "ideal" => ("cnn_ideal".into(), vec![]),
+                "noisy" => {
+                    let sinad = p.get_f64("sinad");
+                    ("cnn_noisy".into(),
+                     vec![runtime::lit_key(seed)?,
+                          runtime::lit_scalar_f32(sinad as f32)])
+                }
+                s @ ("A" | "B" | "C") => {
+                    let bits = p.get_usize("adc-bits");
+                    if !(1..=16).contains(&bits) {
+                        bail!("--adc-bits must be in [1, 16] (got {bits})");
+                    }
+                    let levels = (1u64 << bits) as f32 - 1.0;
+                    let mut extra = vec![runtime::lit_scalar_f32(levels)];
+                    if s != "A" {
+                        // strategy A is deterministic; its HLO has no key
+                        extra.push(runtime::lit_key(seed)?);
+                    }
+                    (format!("cnn_strat{s}"), extra)
+                }
+                other => bail!("unknown strategy {other}"),
+            };
+        let exe = rt.load(&artifact)?;
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.note(format!(
+            "loaded {artifact} (compiled in {:.1}s) on {}",
+            exe.compile_seconds,
+            rt.platform()
+        ));
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..n_batches {
+            let images = ts.batch_literal(b * batch, batch)?;
+            let mut inputs = vec![images];
+            for e in &extra {
+                inputs.push(clone_lit(e));
+            }
+            let out = exe.run(&inputs)?;
+            let logits = runtime::to_f32_vec(&out[0])?;
+            let labels = ts.batch_labels(b * batch, batch);
+            correct += (runtime::accuracy(&logits, &labels, 10)
+                * batch as f64)
+                .round() as usize;
+            total += batch;
+        }
+        let acc = correct as f64 / total as f64;
+        o.note(format!(
+            "strategy={strategy} accuracy={acc:.4} ({total} images)"
+        ));
+        o.metric("accuracy", acc, "").metric("images", total as f64, "");
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        artifacts_extra(p)
+    }
+}
+
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    match l.ty().unwrap() {
+        xla::ElementType::U32 => {
+            let v = l.to_vec::<u32>().unwrap();
+            xla::Literal::vec1(&v).reshape(&[v.len() as i64]).unwrap()
+        }
+        _ => {
+            let v = l.to_vec::<f32>().unwrap();
+            if l.element_count() == 1
+                && l.array_shape().map(|s| s.dims().is_empty()).unwrap_or(false)
+            {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(&v).reshape(&[v.len() as i64]).unwrap()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- mc --
+
+pub struct Mc;
+
+impl Scenario for Mc {
+    fn name(&self) -> &'static str {
+        "mc"
+    }
+
+    fn description(&self) -> &'static str {
+        "Fig. 9 Monte-Carlo on the trained NeuralPeriph (needs artifacts)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::flag("naive", "run the unoptimized circuits (Fig. 9b)"),
+            ParamSpec::u64("trials", 4, "Monte-Carlo keys"),
+            ParamSpec::u64("seed", 42, "base PRNG seed"),
+            artifacts_spec(),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let rt = Runtime::new(&artifacts_dir(p))?;
+        let naive = p.get_bool("naive");
+        let trials = p.get_usize("trials");
+        let artifact = if naive { "mc_naive" } else { "mc_opt" };
+        let exe = rt.load(artifact)?;
+        let mut all_hw = Vec::new();
+        let mut all_sw = Vec::new();
+        for t in 0..trials {
+            let key = runtime::lit_key(p.get_u64("seed") + t as u64)?;
+            let out = exe.run(&[key])?;
+            all_hw.extend(
+                runtime::to_f32_vec(&out[0])?.iter().map(|&v| v as f64),
+            );
+            all_sw.extend(
+                runtime::to_f32_vec(&out[1])?.iter().map(|&v| v as f64),
+            );
+        }
+        let r = crate::noise::mc_result(&all_hw, &all_sw);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.note(format!(
+            "Fig 9{}: {} trials x {} dot products -> SINAD {:.1} dB \
+             (err rms {:.0}, bias {:.0}, range [{:.0}, {:.0}])",
+            if naive { "b (no optimizations)" } else { "a (optimized)" },
+            trials, r.n / trials, r.sinad_db, r.err_rms, r.err_mean,
+            r.err_min, r.err_max
+        ));
+        o.metric("sinad_db", r.sinad_db, "dB")
+            .metric("err_rms", r.err_rms, "")
+            .metric("err_mean", r.err_mean, "")
+            .metric("samples", r.n as f64, "");
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        artifacts_extra(p)
+    }
+}
+
+// -------------------------------------------------------------- periph --
+
+pub struct PeriphTable;
+
+impl Scenario for PeriphTable {
+    fn name(&self) -> &'static str {
+        "periph"
+    }
+
+    fn description(&self) -> &'static str {
+        "Table 1 metrics of the trained circuits (needs artifacts)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![ParamSpec::u64("seed", 42, "PRNG seed"), artifacts_spec()]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let dir = artifacts_dir(p);
+        let pr = periph::Periph::load(&format!("{dir}/periph.json"))?;
+        let (mse, emax, emin) = pr.nns_a_error_stats(8192, p.get_u64("seed"));
+        let tr = pr.nnadc.transfer(1 << 13);
+        let (dnl, inl, missing) = periph::dnl_inl(&tr, 8);
+        let (enob, sinad) = periph::enob(&pr.nnadc, 1 << 13);
+        let mut t = Table::new(
+            "Table 1: trained NeuralPeriph circuits (measured natively in \
+             Rust)",
+            &["metric", "NNS+A", "8-bit NNADC", "paper"],
+        );
+        t.row(&["approx. MSE (V²)".into(), format!("{mse:.2e}"), "-".into(),
+                "<1e-5".into()]);
+        t.row(&["max error (mV)".into(), format!("{:.1}", emax * 1e3),
+                "-".into(), "4-5".into()]);
+        t.row(&["min error (mV)".into(), format!("{:.1}", emin * 1e3),
+                "-".into(), "-3..-4".into()]);
+        t.row(&["DNL (LSB)".into(), "-".into(),
+                format!("{:.2}/{:.2}", stats::min(&dnl), stats::max(&dnl)),
+                "-0.25/0.55".into()]);
+        t.row(&["INL (LSB)".into(), "-".into(),
+                format!("{:.2}/{:.2}", stats::min(&inl), stats::max(&inl)),
+                "-0.56/0.62".into()]);
+        t.row(&["missing codes".into(), "-".into(), missing.to_string(),
+                "0".into()]);
+        t.row(&["ENOB (bits)".into(), "-".into(), format!("{enob:.2}"),
+                "7.88".into()]);
+        t.row(&["sine SINAD (dB)".into(), "-".into(), format!("{sinad:.1}"),
+                "~49".into()]);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(t);
+        o.metric("nns_a_mse_v2", mse, "V²")
+            .metric("nnadc_enob_bits", enob, "bits")
+            .metric("nnadc_sinad_db", sinad, "dB")
+            .metric("nnadc_missing_codes", missing as f64, "");
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        artifacts_extra(p)
+    }
+}
+
+// --------------------------------------------------------------- serve --
+
+pub struct Serve;
+
+impl Scenario for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn description(&self) -> &'static str {
+        "drive the inference coordinator, report metrics (needs artifacts)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::u64("requests", 512, "requests to drive"),
+            ParamSpec::str("artifact", "cnn_ideal", "model artifact"),
+            ParamSpec::u64("max-wait-ms", 2, "batching window"),
+            ParamSpec::u64("workers", 1, "coordinator workers"),
+            artifacts_spec(),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let dir = artifacts_dir(p);
+        let ts = runtime::TestSet::load(std::path::Path::new(&dir))?;
+        let n_req = p.get_usize("requests");
+        let (h, w, c) = ts.dims;
+        let cfg = CoordinatorConfig {
+            artifact_dir: dir.clone(),
+            artifact: p.get_str("artifact").to_string(),
+            batch: 128,
+            classes: 10,
+            max_wait: std::time::Duration::from_millis(
+                p.get_u64("max-wait-ms")),
+            workers: p.get_usize("workers"),
+            extra_inputs: vec![],
+            image_param_first: true,
+        };
+        let coord = Coordinator::start(cfg, h * w * c)?;
+        // progress on stderr: stdout carries only the rendered outcome
+        eprintln!("coordinator up — driving {n_req} requests");
+
+        let t0 = std::time::Instant::now();
+        let stride = h * w * c;
+        let mut pending = Vec::new();
+        for i in 0..n_req {
+            let idx = i % ts.n;
+            let img = ts.images[idx * stride..(idx + 1) * stride].to_vec();
+            pending.push((coord.submit(img)?, ts.labels[idx]));
+        }
+        let mut correct = 0usize;
+        let mut lat_ms = Vec::new();
+        for (rx, label) in pending {
+            let resp = rx.recv()?;
+            if let Some(err) = &resp.error {
+                bail!("request {} failed in its batch: {err}", resp.id);
+            }
+            lat_ms.push((resp.queue_us + resp.exec_us) as f64 / 1000.0);
+            let pred = resp
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap();
+            if pred == label {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let acc = correct as f64 / n_req as f64;
+        let p50 = stats::percentile(&lat_ms, 50.0);
+        let p99 = stats::percentile(&lat_ms, 99.0);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.note(format!(
+            "served {n_req} requests in {dt:.2}s ({:.0} req/s), accuracy \
+             {acc:.4}",
+            n_req as f64 / dt
+        ));
+        o.note(format!(
+            "latency p50 {p50:.1} ms, p99 {p99:.1} ms | {}",
+            coord.metrics.summary()
+        ));
+        o.metric("req_per_s", n_req as f64 / dt, "req/s")
+            .metric("accuracy", acc, "")
+            .metric("latency_p50_ms", p50, "ms")
+            .metric("latency_p99_ms", p99, "ms");
+        coord.shutdown();
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        artifacts_extra(p)
+    }
+}
+
+// --------------------------------------------------------------- infer --
+
+pub struct Infer;
+
+impl Scenario for Infer {
+    fn name(&self) -> &'static str {
+        "infer"
+    }
+
+    fn description(&self) -> &'static str {
+        "single-batch smoke inference (needs artifacts)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![artifacts_spec()]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let rt = Runtime::new(&artifacts_dir(p))?;
+        let ts = runtime::TestSet::load(rt.dir())?;
+        let exe = rt.load("cnn_ideal")?;
+        let images = ts.batch_literal(0, 128)?;
+        let out = exe.run(&[images])?;
+        let logits = runtime::to_f32_vec(&out[0])?;
+        let acc = runtime::accuracy(&logits, &ts.batch_labels(0, 128), 10);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.note(format!("cnn_ideal first-batch accuracy: {acc:.4}"));
+        o.metric("accuracy", acc, "");
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        artifacts_extra(p)
+    }
+}

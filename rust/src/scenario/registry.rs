@@ -1,0 +1,47 @@
+//! The scenario registry: the one list that knows every experiment.
+//!
+//! `main.rs` dispatches through [`find`]; the suite runner, the CLI
+//! usage text, and the integration tests iterate [`scenarios`]. Append
+//! an entry here (plus its impl in `analytic.rs`/`pjrt.rs`) and the new
+//! experiment is reachable as `neural-pim <name>`, `run <name>
+//! --format json`, a cacheable store entry, and a suite member — with
+//! zero call-site edits anywhere else.
+
+use super::{analytic, pjrt, Scenario};
+
+/// Every registered scenario, in help/report order.
+static SCENARIOS: [&dyn Scenario; 13] = [
+    &analytic::Characterize,
+    &analytic::Simulate,
+    &analytic::EventSim,
+    &analytic::Dse,
+    &analytic::Table2,
+    &analytic::Table3,
+    &analytic::Budget,
+    &analytic::Noise,
+    &pjrt::Accuracy,
+    &pjrt::Mc,
+    &pjrt::PeriphTable,
+    &pjrt::Serve,
+    &pjrt::Infer,
+];
+
+/// All registered scenarios, in registry order.
+pub fn scenarios() -> &'static [&'static dyn Scenario] {
+    &SCENARIOS
+}
+
+/// Normalized lookup key: case-insensitive, `-`/`_`/space-insensitive
+/// (`event-sim` == `event_sim` == `EventSim`).
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace(['-', '_', ' '], "")
+}
+
+/// Resolve a command spelling against every name and alias.
+pub fn find(name: &str) -> Option<&'static dyn Scenario> {
+    let want = normalize(name);
+    SCENARIOS.iter().copied().find(|s| {
+        normalize(s.name()) == want
+            || s.aliases().iter().any(|a| normalize(a) == want)
+    })
+}

@@ -1,0 +1,143 @@
+//! Content-addressed results store: `results/<scenario>/<fingerprint>.json`.
+//!
+//! The fingerprint covers everything that determines a scenario's
+//! output — scenario name, canonical (fully-defaulted) params, the
+//! crate version, and any extra content the scenario declares (e.g. the
+//! bytes of a `--network-file` spec) — so a hit can be replayed without
+//! recompute and a stale entry can never be served after the model
+//! changes. Writes are atomic (temp file + rename), so concurrent suite
+//! entries with the same fingerprint cannot tear each other's files.
+
+use super::outcome::Outcome;
+use super::Params;
+use crate::util::json::Json;
+use crate::util::num::fnv1a64;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default store root: `$NEURAL_PIM_RESULTS` or `results/` in the CWD.
+pub fn default_root() -> String {
+    std::env::var("NEURAL_PIM_RESULTS").unwrap_or_else(|_| "results".into())
+}
+
+/// The content address of one scenario invocation.
+pub fn fingerprint(scenario: &str, params: &Params, extra: &str) -> String {
+    let key = format!(
+        "{}|{}|{}|{}",
+        scenario,
+        crate::version(),
+        params.canonical(),
+        extra
+    );
+    format!("{:016x}", fnv1a64(key.as_bytes()))
+}
+
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    pub fn new(root: &str) -> Store {
+        Store { root: PathBuf::from(root) }
+    }
+
+    pub fn path_for(&self, scenario: &str, fp: &str) -> PathBuf {
+        self.root.join(scenario).join(format!("{fp}.json"))
+    }
+
+    /// Stored outcome for `(scenario, fp)`, or `None` on a miss. A
+    /// corrupt or foreign file is treated as a miss (recompute and
+    /// overwrite), never as an error.
+    pub fn load(&self, scenario: &str, fp: &str) -> Option<Json> {
+        let text = std::fs::read_to_string(self.path_for(scenario, fp)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        // cheap validity probe; full decoding happens in Outcome::from_json
+        (j.get("kind").and_then(Json::as_str)
+            == Some(super::outcome::OUTCOME_KIND))
+        .then_some(j)
+    }
+
+    /// Persist `outcome` under `(scenario, fp)`, atomically.
+    pub fn save(&self, scenario: &str, fp: &str,
+                outcome: &Outcome) -> Result<PathBuf> {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = self.path_for(scenario, fp);
+        let dir = path.parent().expect("store path has a parent");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let tmp = dir.join(format!(
+            ".{fp}.{}.{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut text = outcome.to_json().to_pretty_string();
+        text.push('\n');
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ParamValue;
+
+    fn params(pairs: &[(&str, ParamValue)]) -> Params {
+        let mut p = Params::default();
+        for (k, v) in pairs {
+            p.set(k, v.clone());
+        }
+        p
+    }
+
+    fn tmp_root(tag: &str) -> String {
+        let d = std::env::temp_dir()
+            .join(format!("np-store-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_and_param_sensitive() {
+        let a = params(&[("top", ParamValue::U64(12))]);
+        let b = params(&[("top", ParamValue::U64(13))]);
+        assert_eq!(fingerprint("dse", &a, ""), fingerprint("dse", &a, ""));
+        assert_ne!(fingerprint("dse", &a, ""), fingerprint("dse", &b, ""));
+        assert_ne!(fingerprint("dse", &a, ""), fingerprint("sim", &a, ""));
+        assert_ne!(fingerprint("dse", &a, ""), fingerprint("dse", &a, "x"));
+    }
+
+    #[test]
+    fn save_then_load_round_trips() {
+        let root = tmp_root("roundtrip");
+        let st = Store::new(&root);
+        let p = params(&[("k", ParamValue::Str("v".into()))]);
+        let fp = fingerprint("demo", &p, "");
+        assert!(st.load("demo", &fp).is_none(), "cold store must miss");
+        let mut o = Outcome::new("demo", p.to_json());
+        o.metric("m", 2.0, "");
+        let path = st.save("demo", &fp, &o).unwrap();
+        assert!(path.ends_with(format!("{fp}.json")));
+        let j = st.load("demo", &fp).expect("hit after save");
+        let back = Outcome::from_json(&j).unwrap();
+        assert_eq!(back.get_metric("m"), Some(2.0));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn corrupt_entries_read_as_misses() {
+        let root = tmp_root("corrupt");
+        let st = Store::new(&root);
+        let path = st.path_for("demo", "deadbeef");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(st.load("demo", "deadbeef").is_none());
+        std::fs::write(&path, r#"{"kind":"other"}"#).unwrap();
+        assert!(st.load("demo", "deadbeef").is_none());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,320 @@
+//! Suite runner: execute a JSON-defined list of scenarios across
+//! `util::pool`, consolidate one report, and emit a BENCH-shaped
+//! perf/metrics JSON for the performance trajectory.
+//!
+//! Spec format (see `examples/suite_smoke.json`):
+//!
+//! ```json
+//! {
+//!   "name": "smoke",
+//!   "scenarios": [
+//!     {"scenario": "table2"},
+//!     {"scenario": "simulate", "params": {"network": "AlexNet"}}
+//!   ]
+//! }
+//! ```
+//!
+//! Every entry resolves against the registry up front (unknown names or
+//! params fail before anything runs), executes through the results
+//! store when `--cache` is set, and is timed individually. A failed
+//! entry is recorded in the report instead of aborting the suite.
+
+use super::{execute, find, params_from_json, ExecOptions, Outcome, Params,
+            Scenario};
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::table::{Cell, Table};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Schema tag of the consolidated suite report.
+pub const SUITE_KIND: &str = "neural-pim.suite-report";
+pub const SUITE_SCHEMA: u32 = 1;
+
+pub struct SuiteEntry {
+    pub scenario: &'static dyn Scenario,
+    pub params: Params,
+}
+
+pub struct SuiteSpec {
+    pub name: String,
+    pub entries: Vec<SuiteEntry>,
+}
+
+impl SuiteSpec {
+    /// Parse and fully resolve a spec: every scenario found in the
+    /// registry, every param set validated against its specs.
+    pub fn from_json(j: &Json) -> Result<SuiteSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("suite")
+            .to_string();
+        let list = j
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .context("suite spec needs a 'scenarios' array")?;
+        if list.is_empty() {
+            bail!("suite spec has no scenarios");
+        }
+        let mut entries = Vec::new();
+        for (i, ej) in list.iter().enumerate() {
+            let sc_name = ej
+                .get("scenario")
+                .and_then(Json::as_str)
+                .with_context(|| format!("entry {i}: missing 'scenario'"))?;
+            let scenario = find(sc_name)
+                .ok_or_else(|| anyhow!("entry {i}: unknown scenario \
+                                        '{sc_name}'"))?;
+            let params = params_from_json(
+                &scenario.param_specs(),
+                ej.get("params").unwrap_or(&Json::Null),
+            )
+            .with_context(|| format!("entry {i} ({sc_name})"))?;
+            entries.push(SuiteEntry { scenario, params });
+        }
+        Ok(SuiteSpec { name, entries })
+    }
+
+    pub fn load(path: &str) -> Result<SuiteSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading suite spec {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j).with_context(|| format!("parsing suite spec \
+                                                     {path}"))
+    }
+}
+
+/// One executed suite entry.
+pub struct EntryResult {
+    pub scenario: String,
+    pub fingerprint: String,
+    pub cached: bool,
+    /// Wall-clock of this entry *under suite-level concurrency*:
+    /// entries fan out across the pool while scenarios also parallelize
+    /// internally, so absolute values include contention — compare
+    /// wall_ms within like suites (cold vs cached, PR vs PR on the same
+    /// spec), not across suite compositions.
+    pub wall_ms: f64,
+    pub result: Result<Outcome, String>,
+}
+
+pub struct SuiteReport {
+    pub name: String,
+    pub entries: Vec<EntryResult>,
+}
+
+/// Run every entry across the worker pool. Entry order is preserved
+/// (`pool::map` reassembles by index), failures are captured per entry
+/// — including panics, which would otherwise kill the pool worker and
+/// abort the whole suite with no report written.
+pub fn run_spec(spec: &SuiteSpec, opts: &ExecOptions) -> SuiteReport {
+    let items: Vec<&SuiteEntry> = spec.entries.iter().collect();
+    let entries = pool::map(&items, |e| {
+        let t0 = std::time::Instant::now();
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || execute(e.scenario, &e.params, opts),
+        ))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(anyhow!("scenario panicked: {msg}"))
+        });
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        match run {
+            Ok(ex) => EntryResult {
+                scenario: e.scenario.name().to_string(),
+                fingerprint: ex.fingerprint,
+                cached: ex.cached,
+                wall_ms,
+                result: Ok(ex.outcome),
+            },
+            Err(err) => EntryResult {
+                scenario: e.scenario.name().to_string(),
+                fingerprint: String::new(),
+                cached: false,
+                wall_ms,
+                result: Err(format!("{err:#}")),
+            },
+        }
+    });
+    SuiteReport { name: spec.name.clone(), entries }
+}
+
+impl SuiteReport {
+    pub fn failures(&self) -> usize {
+        self.entries.iter().filter(|e| e.result.is_err()).count()
+    }
+
+    /// Did every entry come straight from the results store?
+    pub fn all_cached(&self) -> bool {
+        self.entries.iter().all(|e| e.cached)
+    }
+
+    /// The consolidated human-readable view.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("suite '{}': {} scenarios, {} failed", self.name,
+                     self.entries.len(), self.failures()),
+            &["scenario", "status", "cached", "wall (ms)", "metrics",
+              "fingerprint"],
+        );
+        for e in &self.entries {
+            let (status, n_metrics) = match &e.result {
+                Ok(o) => ("ok", o.metrics.len()),
+                Err(_) => ("FAILED", 0),
+            };
+            t.cells(vec![
+                Cell::s(e.scenario.clone()),
+                Cell::s(status),
+                Cell::s(if e.cached { "yes" } else { "no" }),
+                Cell::num(e.wall_ms, format!("{:.1}", e.wall_ms)),
+                Cell::num(n_metrics as f64, n_metrics.to_string()),
+                Cell::s(e.fingerprint.clone()),
+            ]);
+        }
+        t
+    }
+
+    /// Consolidated report: per-entry provenance plus the full outcome
+    /// (or the error) of every scenario.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", Json::Str(SUITE_KIND.into())),
+            ("schema", Json::Num(SUITE_SCHEMA as f64)),
+            ("crate_version", Json::Str(crate::version().into())),
+            ("suite", Json::Str(self.name.clone())),
+            ("entries",
+             Json::Arr(
+                 self.entries
+                     .iter()
+                     .map(|e| {
+                         json::obj(vec![
+                             ("scenario", Json::Str(e.scenario.clone())),
+                             ("fingerprint",
+                              Json::Str(e.fingerprint.clone())),
+                             ("cached", Json::Bool(e.cached)),
+                             ("wall_ms", Json::Num(e.wall_ms)),
+                             ("ok", Json::Bool(e.result.is_ok())),
+                             match &e.result {
+                                 Ok(o) => ("outcome", o.to_json()),
+                                 Err(err) => ("error",
+                                              Json::Str(err.clone())),
+                             },
+                         ])
+                     })
+                     .collect(),
+             )),
+            ("bench", self.bench_json()),
+        ])
+    }
+
+    /// BENCH-shaped flat metric map (`<scenario>.<metric>` → number):
+    /// the perf/metrics trajectory the CI artifact tracks across PRs.
+    pub fn bench_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = Vec::new();
+        let mut total_ms = 0.0;
+        // a scenario that appears once keeps its bare name (the stable
+        // trajectory key); repeated scenarios are keyed by their param
+        // fingerprint, so reordering or inserting suite entries can
+        // never silently remap an existing series onto different params
+        let mut count: std::collections::BTreeMap<&str, usize> =
+            std::collections::BTreeMap::new();
+        for e in &self.entries {
+            *count.entry(e.scenario.as_str()).or_insert(0) += 1;
+        }
+        let mut used = std::collections::BTreeSet::new();
+        for (i, e) in self.entries.iter().enumerate() {
+            total_ms += e.wall_ms;
+            let mut prefix = if count[e.scenario.as_str()] == 1 {
+                e.scenario.clone()
+            } else if e.fingerprint.len() >= 8 {
+                format!("{}[{}]", e.scenario, &e.fingerprint[..8])
+            } else {
+                // failed entry with no fingerprint: fall back to index
+                format!("{}[entry{}]", e.scenario, i)
+            };
+            // byte-identical repeats (same scenario AND params — e.g. a
+            // cold-vs-warm probe listing one entry twice) would collide
+            // in the flat map and silently drop the first series
+            if !used.insert(prefix.clone()) {
+                prefix = format!("{}[entry{}]", e.scenario, i);
+            }
+            pairs.push((format!("{prefix}.wall_ms"), Json::Num(e.wall_ms)));
+            if let Ok(o) = &e.result {
+                for m in &o.metrics {
+                    pairs.push((format!("{prefix}.{}", m.name),
+                                Json::Num(m.value)));
+                }
+            }
+        }
+        pairs.push(("suite.wall_ms_total".into(), Json::Num(total_ms)));
+        pairs.push(("suite.failures".into(),
+                    Json::Num(self.failures() as f64)));
+        Json::Obj(pairs.into_iter().collect())
+    }
+}
+
+/// The `neural-pim suite <spec.json>` CLI entry.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: neural-pim suite <spec.json> [--cache] \
+                  [--results-dir D] [--out F] [--bench-out F] \
+                  [--format text|json]")?;
+    if let Some(extra) = args.positional.get(2) {
+        bail!("unexpected argument '{extra}' after the suite spec");
+    }
+    let mut known: Vec<&str> = super::GLOBAL_OPTIONS.to_vec();
+    known.push("bench-out");
+    args.reject_unknown(&known).map_err(|e| anyhow!("{e}"))?;
+    super::reject_valueless(
+        args,
+        &["format", "out", "bench-out", "results-dir", "threads"],
+    )?;
+    let format = args.get_or("format", "text");
+    if format != "text" && format != "json" {
+        bail!("--format must be text or json (got '{format}')");
+    }
+    let spec = SuiteSpec::load(path)?;
+    let opts = ExecOptions::from_args(args);
+    let report = run_spec(&spec, &opts);
+
+    std::fs::create_dir_all(&opts.results_dir)
+        .with_context(|| format!("creating {}", opts.results_dir))?;
+    let out_path = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}/suite-{}.json", opts.results_dir,
+                                   spec.name));
+    let bench_path = args
+        .get("bench-out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}/BENCH_suite_{}.json",
+                                   opts.results_dir, spec.name));
+    let mut consolidated = report.to_json().to_pretty_string();
+    consolidated.push('\n');
+    std::fs::write(&out_path, &consolidated)
+        .with_context(|| format!("writing {out_path}"))?;
+    let mut bench = report.bench_json().to_pretty_string();
+    bench.push('\n');
+    std::fs::write(&bench_path, bench)
+        .with_context(|| format!("writing {bench_path}"))?;
+
+    if format == "json" {
+        print!("{consolidated}");
+    } else {
+        report.table().print();
+        println!("consolidated report: {out_path}");
+        println!("bench metrics:       {bench_path}");
+    }
+    if report.failures() > 0 {
+        bail!("{} of {} suite entries failed (see {})",
+              report.failures(), report.entries.len(), out_path);
+    }
+    Ok(())
+}

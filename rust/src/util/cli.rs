@@ -75,6 +75,66 @@ impl Args {
     pub fn threads(&self) -> usize {
         self.get_usize("threads", 0)
     }
+
+    /// Every `--name` the caller passed, options and bare flags alike.
+    pub fn given_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.options.keys().map(String::as_str).collect();
+        v.extend(self.flags.iter().map(String::as_str));
+        v
+    }
+
+    /// Reject any `--flag` not in `known`, with a "did you mean"
+    /// suggestion — a silently ignored typo (`--thread 8`) is worse than
+    /// an error. Returns the full complaint for all unknown names.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), String> {
+        let bad: Vec<String> = self
+            .given_names()
+            .into_iter()
+            .filter(|n| !known.contains(n))
+            .map(|n| match suggest(n, known) {
+                Some(s) => format!("--{n} (did you mean --{s}?)"),
+                None => format!("--{n}"),
+            })
+            .collect();
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option{} {}", if bad.len() > 1 { "s" } else { "" },
+                        bad.join(", ")))
+        }
+    }
+}
+
+/// Levenshtein edit distance (insert/delete/substitute, unit costs).
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// The closest known name within an edit-distance budget that scales
+/// with the typo's length (distance <= 2, and never more than half the
+/// candidate — "x" should not suggest "dse"). Ties go to the earliest
+/// candidate, so suggestion order is deterministic.
+pub fn suggest<'a>(given: &str, known: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(usize, &'a str)> = None;
+    for &k in known {
+        let d = levenshtein(given, k);
+        let budget = 2.min(k.chars().count().saturating_sub(1) / 2 + 1);
+        if d <= budget && best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            best = Some((d, k));
+        }
+    }
+    best.map(|(_, k)| k)
 }
 
 #[cfg(test)]
@@ -107,6 +167,46 @@ mod tests {
         let a = Args::parse(&argv(&[]));
         assert_eq!(a.get_or("x", "y"), "y");
         assert_eq!(a.get_f64("z", 1.5), 1.5);
+    }
+
+    #[test]
+    fn levenshtein_distances() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("thread", "threads"), 1);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("netwrok", "network"), 2);
+    }
+
+    #[test]
+    fn suggestions_catch_typos_but_not_noise() {
+        let known = ["threads", "network", "requests", "top", "all"];
+        assert_eq!(suggest("thread", &known), Some("threads"));
+        assert_eq!(suggest("netwrok", &known), Some("network"));
+        assert_eq!(suggest("tops", &known), Some("top"));
+        // short candidates get a tight budget: "x" must not match "top"
+        assert_eq!(suggest("x", &known), None);
+        assert_eq!(suggest("verbose", &known), None);
+    }
+
+    #[test]
+    fn reject_unknown_flags_with_suggestion() {
+        let a = Args::parse(&argv(&["simulate", "--thread", "8", "--all"]));
+        let err = a.reject_unknown(&["threads", "all"]).unwrap_err();
+        assert!(err.contains("--thread"), "{err}");
+        assert!(err.contains("did you mean --threads"), "{err}");
+        assert!(!err.contains("--all,"), "{err}");
+        // the same args pass once every name is known
+        assert!(a.reject_unknown(&["thread", "all"]).is_ok());
+    }
+
+    #[test]
+    fn reject_unknown_lists_every_offender() {
+        let a = Args::parse(&argv(&["--foo", "--bar=1"]));
+        let err = a.reject_unknown(&["threads"]).unwrap_err();
+        assert!(err.starts_with("unknown options"), "{err}");
+        assert!(err.contains("--foo") && err.contains("--bar"), "{err}");
     }
 
     #[test]

@@ -185,6 +185,49 @@ impl Json {
     }
 }
 
+impl Json {
+    /// Pretty-printed serialization (2-space indent) for the on-disk
+    /// results store and suite reports — same grammar as `Display`,
+    /// just human-diffable. `Json::parse` round-trips both forms.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write_pretty(&self, s: &mut String, indent: usize) {
+        const STEP: usize = 2;
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                s.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    s.push_str(if i > 0 { ",\n" } else { "\n" });
+                    s.push_str(&" ".repeat(indent + STEP));
+                    v.write_pretty(s, indent + STEP);
+                }
+                s.push('\n');
+                s.push_str(&" ".repeat(indent));
+                s.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                s.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    s.push_str(if i > 0 { ",\n" } else { "\n" });
+                    s.push_str(&" ".repeat(indent + STEP));
+                    Json::Str(k.clone()).write(s);
+                    s.push_str(": ");
+                    v.write_pretty(s, indent + STEP);
+                }
+                s.push('\n');
+                s.push_str(&" ".repeat(indent));
+                s.push('}');
+            }
+            // scalars and empty containers render compactly
+            other => other.write(s),
+        }
+    }
+}
+
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let mut s = String::new();
@@ -437,5 +480,78 @@ mod tests {
     fn escapes_in_writer() {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_round_trips_and_indents() {
+        let j = Json::parse(r#"{"a":[1,2,{"b":false}],"c":"x","d":[],"e":{}}"#)
+            .unwrap();
+        let pretty = j.to_pretty_string();
+        assert_eq!(Json::parse(&pretty).unwrap(), j);
+        assert!(pretty.contains("\n  \"a\": [\n    1,"), "{pretty}");
+        // empty containers stay compact
+        assert!(pretty.contains("\"d\": []") && pretty.contains("\"e\": {}"));
+    }
+
+    /// Random `Json` value: scalars, escape-heavy strings, nested
+    /// arrays/objects. Floats are drawn finite (JSON has no NaN/inf);
+    /// some are rounded to integers to hit the integer-format fast path.
+    fn gen_json(g: &mut crate::util::prop::Gen, depth: usize) -> Json {
+        let pick = g.usize_in(0, if depth >= 3 { 4 } else { 6 });
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => {
+                let v = g.f64_in(-1e18, 1e18);
+                Json::Num(if g.bool() { v.trunc() } else { v })
+            }
+            3 => Json::Num(g.f64_in(-1e-6, 1e-6)),
+            4 => {
+                let n = g.usize_in(0, 12);
+                let s: String = (0..n)
+                    .map(|_| {
+                        *g.pick(&[
+                            'a', 'β', '"', '\\', '\n', '\t', '\r', '\u{8}',
+                            '\u{c}', '\u{1}', '/', '𝄞', ' ',
+                        ])
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            5 => {
+                let n = g.usize_in(0, 4);
+                Json::Arr((0..n).map(|_| gen_json(g, depth + 1)).collect())
+            }
+            _ => {
+                let n = g.usize_in(0, 4);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{}{}", i, g.usize_in(0, 9)),
+                                  gen_json(g, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    #[test]
+    fn prop_serialization_round_trips() {
+        // the results store depends on parse(to_string(j)) == j for
+        // arbitrary outcomes: escapes, nesting, and float fidelity
+        // (Display prints the shortest string that re-reads bit-exactly)
+        crate::util::prop::check("json round-trip", 300, |g| {
+            let j = gen_json(g, 0);
+            let compact = Json::parse(&j.to_string())
+                .map_err(|e| format!("compact re-parse failed: {e}"))?;
+            if compact != j {
+                return Err(format!("compact: {j:?} != {compact:?}"));
+            }
+            let pretty = Json::parse(&j.to_pretty_string())
+                .map_err(|e| format!("pretty re-parse failed: {e}"))?;
+            if pretty != j {
+                return Err(format!("pretty: {j:?} != {pretty:?}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -1,0 +1,108 @@
+//! Exact integer numerics the float-based helpers get subtly wrong, plus
+//! the FNV-1a hash the content-addressed results store fingerprints with.
+
+/// Exact ceil(log2(x)) for x >= 1 (0 for x <= 1).
+///
+/// The float route `(x as f64).log2().ceil()` mis-sizes at power-of-two
+/// boundaries once `x as f64` rounds: e.g. `2^53 + 1` rounds to `2^53`,
+/// whose log2 is exactly 53.0, so the float ceil answers 53 where the
+/// exact answer is 54. This version never touches floats.
+pub fn ceil_log2(x: u64) -> u32 {
+    if x <= 1 {
+        0
+    } else {
+        64 - (x - 1).leading_zeros()
+    }
+}
+
+/// 64-bit FNV-1a over raw bytes — deterministic across runs and
+/// platforms (unlike `DefaultHasher`, which is seeded per process), so
+/// it is safe to key on-disk cache entries with.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ceil_log2_known_values() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(u64::MAX), 64);
+    }
+
+    #[test]
+    fn ceil_log2_exact_at_power_of_two_boundaries() {
+        for k in 1..63u32 {
+            let p = 1u64 << k;
+            assert_eq!(ceil_log2(p), k, "2^{k}");
+            assert_eq!(ceil_log2(p - 1), k, "2^{k}-1");
+            assert_eq!(ceil_log2(p + 1), k + 1, "2^{k}+1");
+        }
+    }
+
+    #[test]
+    fn ceil_log2_beats_the_float_version_where_floats_round() {
+        // 2^53 + 1 is not representable as f64: the cast rounds down to
+        // 2^53 and the float ceil under-sizes by one bit
+        let x = (1u64 << 53) + 1;
+        let float_bits = (x as f64).log2().ceil() as u32;
+        assert_eq!(float_bits, 53, "float rounds the boundary away");
+        assert_eq!(ceil_log2(x), 54, "exact version does not");
+    }
+
+    #[test]
+    fn ceil_log2_matches_float_over_small_range() {
+        // exhaustive agreement where f64 is exact (the practical CLI
+        // range): the fix must not change any in-range answer
+        for x in 1u64..=1 << 16 {
+            assert_eq!(
+                ceil_log2(x),
+                (x as f64).log2().ceil() as u32,
+                "x = {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_ceil_log2_is_the_least_sufficient_bit_count() {
+        prop::check("2^(r-1) < x <= 2^r", 500, |g| {
+            let x = g.u64().max(2);
+            let r = ceil_log2(x);
+            // x fits in 2^r values...
+            if r < 64 && (1u64 << r) < x {
+                return Err(format!("2^{r} < {x}"));
+            }
+            // ...and r is minimal
+            if (1u64 << (r - 1)) >= x {
+                return Err(format!("2^{} already >= {x}", r - 1));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fnv_is_stable_and_collision_free_on_distinct_keys() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        // pinned vector (any change to the hash invalidates stores)
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..1000u32 {
+            assert!(seen.insert(fnv1a64(format!("key-{i}").as_bytes())));
+        }
+    }
+}

@@ -1,10 +1,59 @@
 //! Aligned plain-text tables — the benches print the paper's tables and
 //! figure series as text rows, and this keeps them readable and diffable.
+//!
+//! Cells are *typed*: every cell carries its rendered text (what the
+//! text tables have always shown, byte-for-byte) and optionally the
+//! numeric value behind it, so the scenario layer can serialize tables
+//! to JSON without re-parsing formatted strings.
 
-#[derive(Default)]
+use crate::util::json::{self, Json};
+
+/// One table cell: the exact text the plain-text renderer prints, plus
+/// the numeric value it was formatted from (when there is one).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Cell {
+    pub text: String,
+    pub value: Option<f64>,
+}
+
+impl Cell {
+    /// Text-only cell (labels, names, annotations).
+    pub fn s(text: impl Into<String>) -> Cell {
+        Cell { text: text.into(), value: None }
+    }
+
+    /// Numeric cell: `text` is what the table prints, `value` what the
+    /// JSON rendering carries alongside it.
+    pub fn num(value: f64, text: impl Into<String>) -> Cell {
+        Cell { text: text.into(), value: Some(value) }
+    }
+
+    fn to_json(&self) -> Json {
+        match self.value {
+            None => Json::Str(self.text.clone()),
+            Some(v) => json::obj(vec![
+                ("t", Json::Str(self.text.clone())),
+                ("v", Json::Num(v)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Option<Cell> {
+        match j {
+            Json::Str(s) => Some(Cell::s(s.clone())),
+            Json::Obj(_) => Some(Cell {
+                text: j.get("t")?.as_str()?.to_string(),
+                value: j.get("v").and_then(Json::as_f64),
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
 pub struct Table {
     headers: Vec<String>,
-    rows: Vec<Vec<String>>,
+    rows: Vec<Vec<Cell>>,
     title: Option<String>,
 }
 
@@ -18,14 +67,27 @@ impl Table {
     }
 
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
-        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
-        self.rows.push(cells.to_vec());
-        self
+        self.cells(cells.iter().map(|c| Cell::s(c.as_str())).collect())
     }
 
     pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
         let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
         self.row(&cells)
+    }
+
+    /// Append a row of typed [`Cell`]s.
+    pub fn cells(&mut self, cells: Vec<Cell>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn title(&self) -> Option<&str> {
+        self.title.as_deref()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
     }
 
     pub fn render(&self) -> String {
@@ -34,20 +96,20 @@ impl Table {
             self.headers.iter().map(|h| h.chars().count()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
-                widths[i] = widths[i].max(c.chars().count());
+                widths[i] = widths[i].max(c.text.chars().count());
             }
         }
         let mut out = String::new();
         if let Some(t) = &self.title {
             out.push_str(&format!("== {} ==\n", t));
         }
-        let fmt_row = |cells: &[String]| -> String {
+        let fmt_row = |cells: &[&str]| -> String {
             let mut line = String::new();
             for i in 0..ncol {
                 if i > 0 {
                     line.push_str("  ");
                 }
-                let c = &cells[i];
+                let c = cells[i];
                 line.push_str(c);
                 for _ in c.chars().count()..widths[i] {
                     line.push(' ');
@@ -55,13 +117,16 @@ impl Table {
             }
             line.trim_end().to_string()
         };
-        out.push_str(&fmt_row(&self.headers));
+        let header_refs: Vec<&str> =
+            self.headers.iter().map(String::as_str).collect();
+        out.push_str(&fmt_row(&header_refs));
         out.push('\n');
         let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
         out.push_str(&"-".repeat(total));
         out.push('\n');
         for row in &self.rows {
-            out.push_str(&fmt_row(row));
+            let refs: Vec<&str> = row.iter().map(|c| c.text.as_str()).collect();
+            out.push_str(&fmt_row(&refs));
             out.push('\n');
         }
         out
@@ -69,6 +134,55 @@ impl Table {
 
     pub fn print(&self) {
         println!("{}", self.render());
+    }
+
+    /// JSON form: `{"title", "headers", "rows"}` with plain strings for
+    /// text cells and `{"t", "v"}` objects for numeric ones.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("title",
+             Json::Str(self.title.clone().unwrap_or_default())),
+            ("headers",
+             Json::Arr(self.headers.iter().cloned().map(Json::Str).collect())),
+            ("rows",
+             Json::Arr(
+                 self.rows
+                     .iter()
+                     .map(|r| Json::Arr(r.iter().map(Cell::to_json).collect()))
+                     .collect(),
+             )),
+        ])
+    }
+
+    /// Rebuild a table from its [`Table::to_json`] form (the cached
+    /// results store renders text tables from stored outcomes).
+    pub fn from_json(j: &Json) -> Option<Table> {
+        let headers: Vec<String> = j
+            .get("headers")?
+            .as_arr()?
+            .iter()
+            .map(|h| h.as_str().map(str::to_string))
+            .collect::<Option<_>>()?;
+        if headers.is_empty() {
+            // the renderer's width math assumes >= 1 column; reject a
+            // zero-column table so a degenerate stored file reads as a
+            // cache miss, not a panic at replay time
+            return None;
+        }
+        let mut rows = Vec::new();
+        for rj in j.get("rows")?.as_arr()? {
+            let row: Vec<Cell> =
+                rj.as_arr()?.iter().map(Cell::from_json).collect::<Option<_>>()?;
+            if row.len() != headers.len() {
+                return None;
+            }
+            rows.push(row);
+        }
+        Some(Table {
+            headers,
+            rows,
+            title: j.get("title").and_then(Json::as_str).map(str::to_string),
+        })
     }
 }
 
@@ -94,6 +208,11 @@ pub fn eng(v: f64) -> String {
     } else {
         format!("{:.2}p", v * 1e12)
     }
+}
+
+/// [`Cell::num`] with [`eng`] formatting — the common typed-cell case.
+pub fn eng_cell(v: f64) -> Cell {
+    Cell::num(v, eng(v))
 }
 
 #[cfg(test)]
@@ -126,5 +245,49 @@ mod tests {
         assert_eq!(eng(1.5e-3), "1.50m");
         assert_eq!(eng(2.0e6), "2.00M");
         assert_eq!(eng(96.0e-3), "96.00m");
+    }
+
+    #[test]
+    fn typed_cells_render_identically_to_strings() {
+        let mut a = Table::new("T", &["name", "val"]);
+        a.row(&["x".into(), "1.50m".into()]);
+        let mut b = Table::new("T", &["name", "val"]);
+        b.cells(vec![Cell::s("x"), eng_cell(1.5e-3)]);
+        assert_eq!(a.render(), b.render());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_render_and_values() {
+        let mut t = Table::new("T", &["name", "val"]);
+        t.cells(vec![Cell::s("x"), Cell::num(2.5, "2.500")]);
+        t.row(&["plain".into(), "-".into()]);
+        let j = t.to_json();
+        let back = Table::from_json(&j).unwrap();
+        assert_eq!(back.render(), t.render());
+        // numeric value survives; text-only cells stay strings in JSON
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[1].get("v").unwrap().as_f64(),
+                   Some(2.5));
+        assert!(rows[1].as_arr().unwrap()[1].as_str().is_some());
+    }
+
+    #[test]
+    fn from_json_rejects_ragged_rows() {
+        let j = crate::util::json::Json::parse(
+            r#"{"title":"T","headers":["a","b"],"rows":[["only-one"]]}"#,
+        )
+        .unwrap();
+        assert!(Table::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn from_json_rejects_zero_column_tables() {
+        // render()'s width math assumes >= 1 column; a degenerate
+        // stored table must read as invalid, not panic at replay time
+        let j = crate::util::json::Json::parse(
+            r#"{"title":"","headers":[],"rows":[[]]}"#,
+        )
+        .unwrap();
+        assert!(Table::from_json(&j).is_none());
     }
 }

@@ -1,0 +1,330 @@
+//! Acceptance gates for the scenario layer (the `multi_layer_refactor`
+//! contract):
+//!
+//! 1. **Golden text**: `simulate --all`, `table2`, `table3`, `dse`, and
+//!    `characterize` render byte-identical to the pre-scenario CLI
+//!    print sequence (the hand-rolled `report::*().print()` arms the
+//!    old `main.rs` carried, reproduced literally here).
+//! 2. **Generic JSON path**: every registered scenario runs through
+//!    `params_from_json` + `run` and emits schema-validated JSON that
+//!    round-trips exactly (artifact-backed scenarios skip cleanly in a
+//!    bare checkout).
+//! 3. **Results store**: a second `--cache` execution replays the
+//!    stored outcome without recompute, identically; suites report
+//!    all-cached on their second invocation.
+
+use neural_pim::scenario::{self, store, suite, ExecOptions, Outcome, Params,
+                           Scenario};
+use neural_pim::util::cli::Args;
+use neural_pim::util::json::Json;
+use neural_pim::{dse, report, workloads};
+
+fn params(sc: &dyn Scenario, json: &str) -> Params {
+    scenario::params_from_json(&sc.param_specs(), &Json::parse(json).unwrap())
+        .unwrap_or_else(|e| panic!("params {json} for {}: {e:#}", sc.name()))
+}
+
+fn run(name: &str, json_params: &str) -> Outcome {
+    let sc = scenario::find(name).unwrap_or_else(|| panic!("no {name}"));
+    sc.run(&params(sc, json_params))
+        .unwrap_or_else(|e| panic!("{name} failed: {e:#}"))
+}
+
+fn tmp_dir(tag: &str) -> String {
+    let d = std::env::temp_dir()
+        .join(format!("np-scenario-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_string_lossy().into_owned()
+}
+
+// ---------------------------------------------------------------------------
+// golden text: byte-identical to the pre-scenario print sequence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_simulate_all_text_byte_identical() {
+    // the old `simulate` arm: four `Table::print`s then the headline
+    let nets = workloads::all_benchmarks();
+    let r = report::system_report(&nets);
+    let mut expected = String::new();
+    for t in [&r.table_energy, &r.table_throughput, &r.table_breakdown,
+              &r.table_latency] {
+        expected.push_str(&t.render());
+        expected.push('\n');
+    }
+    expected.push_str(&r.headline);
+    expected.push('\n');
+    let got = run("simulate", r#"{"all": true}"#).render_text();
+    assert_eq!(got, expected, "simulate --all text drifted");
+}
+
+#[test]
+fn golden_table2_table3_characterize_text_byte_identical() {
+    assert_eq!(run("table2", "{}").render_text(),
+               report::table2().render() + "\n");
+    assert_eq!(run("table3", "{}").render_text(),
+               report::table3().render() + "\n");
+    let expected = report::characterization_table().render() + "\n"
+        + &report::fig4b_table().render() + "\n"
+        + &report::fig4c_table().render() + "\n";
+    assert_eq!(run("characterize", "{}").render_text(), expected);
+}
+
+#[test]
+fn golden_dse_text_byte_identical() {
+    // the old `dse` arm: fig11 table then the "best: ..." line
+    let best = dse::best();
+    let expected = report::fig11_table(12).render() + "\n"
+        + &format!(
+            "best: {} at {:.1} GOPS/s/mm² (paper: N128-D4-A4-S64 M64 at \
+             1904.0)\n",
+            best.label, best.compute_efficiency
+        );
+    assert_eq!(run("dse", "{}").render_text(), expected);
+}
+
+// ---------------------------------------------------------------------------
+// generic JSON path over the whole registry
+// ---------------------------------------------------------------------------
+
+/// Cheap parameter overrides so the registry-wide sweep stays fast.
+fn cheap_params(name: &str) -> &'static str {
+    match name {
+        "simulate" => r#"{"network": "AlexNet"}"#,
+        "event-sim" => r#"{"network": "AlexNet", "requests": 16,
+                           "replicas": 2}"#,
+        "dse" => r#"{"top": 5}"#,
+        "noise" => r#"{"samples": 64}"#,
+        _ => "{}",
+    }
+}
+
+fn validate_outcome_json(name: &str, j: &Json) {
+    assert_eq!(j.get("kind").and_then(Json::as_str),
+               Some(scenario::OUTCOME_KIND), "{name}: kind");
+    assert_eq!(j.get("schema").and_then(Json::as_f64),
+               Some(scenario::OUTCOME_SCHEMA as f64), "{name}: schema");
+    assert_eq!(j.get("scenario").and_then(Json::as_str), Some(name));
+    assert!(j.get("params").and_then(Json::as_obj).is_some(),
+            "{name}: params must be an object");
+    for m in j.get("metrics").unwrap().as_arr().unwrap() {
+        let v = m.get("value").and_then(Json::as_f64).unwrap();
+        assert!(v.is_finite(), "{name}: non-finite metric {m}");
+        assert!(m.get("name").and_then(Json::as_str).is_some());
+    }
+    for t in j.get("tables").unwrap().as_arr().unwrap() {
+        let headers = t.get("headers").unwrap().as_arr().unwrap();
+        for row in t.get("rows").unwrap().as_arr().unwrap() {
+            assert_eq!(row.as_arr().unwrap().len(), headers.len(),
+                       "{name}: ragged table row");
+        }
+    }
+    // exact round-trip: the stored form decodes and re-encodes to itself
+    let back = Outcome::from_json(j)
+        .unwrap_or_else(|e| panic!("{name}: from_json: {e:#}"));
+    assert_eq!(&back.to_json(), j, "{name}: JSON round-trip drifted");
+}
+
+#[test]
+fn every_scenario_runs_via_generic_json_path() {
+    let mut ran = 0;
+    for sc in scenario::scenarios() {
+        let p = params(*sc, cheap_params(sc.name()));
+        match sc.run(&p) {
+            // artifact-backed scenarios skip cleanly in a bare checkout
+            Err(e) => eprintln!("SKIP {} (no artifacts?): {e:#}", sc.name()),
+            Ok(o) => {
+                assert_eq!(o.scenario, sc.name());
+                validate_outcome_json(sc.name(), &o.to_json());
+                assert!(!o.render_text().is_empty());
+                ran += 1;
+            }
+        }
+    }
+    // the analytical half of the registry must always run
+    assert!(ran >= 8, "only {ran} scenarios ran");
+}
+
+#[test]
+fn event_sim_outcome_exports_latency_metrics() {
+    let o = run("event-sim",
+                r#"{"network": "AlexNet", "requests": 16, "replicas": 2}"#);
+    assert_eq!(o.tables.len(), 2);
+    let rel = o.get_metric("max_energy_rel_err").unwrap();
+    assert!((0.0..=neural_pim::event::ENERGY_TOLERANCE).contains(&rel));
+    assert!(o
+        .metrics
+        .iter()
+        .any(|m| m.name.starts_with("p99_s/AlexNet/")));
+}
+
+// ---------------------------------------------------------------------------
+// results store: cached replay
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_execution_skips_recompute_and_replays_identically() {
+    let root = tmp_dir("cache");
+    let sc = scenario::find("budget").unwrap();
+    let p = params(sc, r#"{"arch": "isaac"}"#);
+    let opts = ExecOptions { cache: true, results_dir: root.clone() };
+
+    let first = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(!first.cached, "cold store must compute");
+    let stored = first.stored.clone().expect("cache run persists");
+    assert!(stored.exists());
+
+    let second = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(second.cached, "second run must hit the store");
+    assert_eq!(second.fingerprint, first.fingerprint);
+    assert_eq!(second.outcome.to_json(), first.outcome.to_json());
+    assert_eq!(second.outcome.render_text(), first.outcome.render_text());
+
+    // different params → different address → miss
+    let p2 = params(sc, r#"{"arch": "neural-pim"}"#);
+    let other = scenario::execute(sc, &p2, &opts).unwrap();
+    assert!(!other.cached);
+    assert_ne!(other.fingerprint, first.fingerprint);
+
+    // without --cache the store is bypassed entirely
+    let opts_off = ExecOptions { cache: false, results_dir: root.clone() };
+    let third = scenario::execute(sc, &p, &opts_off).unwrap();
+    assert!(!third.cached && third.stored.is_none());
+
+    // a kind-valid but undecodable entry is a miss (recompute +
+    // overwrite), not a hard failure — the documented corrupt policy
+    std::fs::write(
+        &stored,
+        r#"{"kind": "neural-pim.outcome", "schema": 999}"#,
+    )
+    .unwrap();
+    let healed = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(!healed.cached, "undecodable entry must not serve");
+    let after = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(after.cached, "recompute must overwrite the bad entry");
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn network_file_content_is_part_of_the_fingerprint() {
+    let root = tmp_dir("netfile");
+    let path = format!("{root}/net.json");
+    let spec = |cout: u32| {
+        format!(
+            r#"{{"name": "tiny", "layers": [{{"kind": "fc", "cin": 64,
+                 "cout": {cout}}}]}}"#
+        )
+    };
+    std::fs::write(&path, spec(10)).unwrap();
+    let sc = scenario::find("simulate").unwrap();
+    let p = params(sc, &format!(r#"{{"network-file": "{path}"}}"#));
+    let fp1 = store::fingerprint(sc.name(), &p,
+                                 &sc.fingerprint_extra(&p).unwrap());
+    // same content → same address; changed content → new address
+    let fp1b = store::fingerprint(sc.name(), &p,
+                                  &sc.fingerprint_extra(&p).unwrap());
+    assert_eq!(fp1, fp1b);
+    std::fs::write(&path, spec(20)).unwrap();
+    let fp2 = store::fingerprint(sc.name(), &p,
+                                 &sc.fingerprint_extra(&p).unwrap());
+    assert_ne!(fp1, fp2, "stale cache would survive a spec edit");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// suite runner
+// ---------------------------------------------------------------------------
+
+const SUITE_SPEC: &str = r#"{
+    "name": "test",
+    "scenarios": [
+        {"scenario": "table2"},
+        {"scenario": "budget", "params": {"arch": "isaac"}},
+        {"scenario": "budget", "params": {"arch": "neural-pim"}},
+        {"scenario": "characterize"}
+    ]
+}"#;
+
+#[test]
+fn suite_second_invocation_is_fully_cached() {
+    let root = tmp_dir("suite");
+    let spec = suite::SuiteSpec::from_json(&Json::parse(SUITE_SPEC).unwrap())
+        .unwrap();
+    let opts = ExecOptions { cache: true, results_dir: root.clone() };
+
+    let r1 = suite::run_spec(&spec, &opts);
+    assert_eq!(r1.failures(), 0);
+    assert!(!r1.all_cached(), "cold suite must compute");
+
+    let j = r1.to_json();
+    assert_eq!(j.get("kind").and_then(Json::as_str),
+               Some(suite::SUITE_KIND));
+    let bench = j.get("bench").unwrap().as_obj().unwrap();
+    assert!(bench.contains_key("suite.wall_ms_total"));
+    assert!(bench.contains_key("table2.chip_power_w"), "{j}");
+    assert!(bench.len() > spec.entries.len(), "bench too thin");
+    // repeated scenarios are keyed by param fingerprint, never by
+    // order-dependent bare names (reordering must not remap a series)
+    assert!(!bench.contains_key("budget.chip_power_w"), "{j}");
+    let fp_keyed = bench
+        .keys()
+        .filter(|k| k.starts_with("budget[") && k.ends_with(".chip_power_w"))
+        .count();
+    assert_eq!(fp_keyed, 2, "{j}");
+
+    let r2 = suite::run_spec(&spec, &opts);
+    assert_eq!(r2.failures(), 0);
+    assert!(r2.all_cached(), "second suite run must skip recompute");
+    for (a, b) in r1.entries.iter().zip(&r2.entries) {
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.result.as_ref().unwrap().to_json(),
+                   b.result.as_ref().unwrap().to_json(),
+                   "{}: cached replay differs", a.scenario);
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn suite_spec_rejects_unknown_scenarios_and_params() {
+    let bad_scenario =
+        Json::parse(r#"{"scenarios": [{"scenario": "nope"}]}"#).unwrap();
+    assert!(suite::SuiteSpec::from_json(&bad_scenario).is_err());
+    let bad_param = Json::parse(
+        r#"{"scenarios": [{"scenario": "dse", "params": {"tops": 5}}]}"#,
+    )
+    .unwrap();
+    let err = suite::SuiteSpec::from_json(&bad_param).unwrap_err();
+    assert!(format!("{err:#}").contains("did you mean 'top'"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// dispatch-level flag hygiene
+// ---------------------------------------------------------------------------
+
+fn argv(s: &[&str]) -> Args {
+    Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+}
+
+#[test]
+fn dispatch_suggests_on_command_and_flag_typos() {
+    let err = scenario::dispatch(&argv(&["simulte"])).unwrap_err();
+    assert!(format!("{err:#}").contains("did you mean 'simulate'"),
+            "{err:#}");
+    // an unknown flag fails fast (before any compute) with a suggestion
+    let err = scenario::dispatch(&argv(&["dse", "--tops", "5"])).unwrap_err();
+    assert!(format!("{err:#}").contains("did you mean --top"), "{err:#}");
+    let err =
+        scenario::dispatch(&argv(&["simulate", "--thread", "8"])).unwrap_err();
+    assert!(format!("{err:#}").contains("did you mean --threads"), "{err:#}");
+    // a stray positional would otherwise be ignored and the run would
+    // fall back to all nine benchmarks
+    let err = scenario::dispatch(&argv(&["simulate", "AlexNet"])).unwrap_err();
+    assert!(format!("{err:#}").contains("unexpected argument 'AlexNet'"),
+            "{err:#}");
+    // a global value option given as a bare flag fails fast too
+    let err = scenario::dispatch(&argv(&["dse", "--out", "--cache"]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("--out needs a value"), "{err:#}");
+}

@@ -25,4 +25,13 @@ if grep -rn --include='*.rs' -E \
   exit 1
 fi
 
+# Scenario open-closed gate: main.rs dispatches through the scenario
+# registry only. A literal-command match arm ("simulate" => ...) there
+# reintroduces the hand-rolled per-experiment fan-out the scenario
+# subsystem removed; new experiments register in scenario/registry.rs.
+if grep -nE '"[A-Za-z0-9_-]+"[[:space:]]*=>' rust/src/main.rs; then
+  echo "FAIL: scenario-specific match arm in rust/src/main.rs" >&2
+  exit 1
+fi
+
 echo "verify OK"
