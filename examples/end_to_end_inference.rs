@@ -15,8 +15,9 @@
 //! (add `--quick` to shrink the sweeps). Results land in EXPERIMENTS.md.
 
 use neural_pim::config::Architecture;
-use neural_pim::coordinator::{Coordinator, CoordinatorConfig, ExtraInput};
-use neural_pim::runtime::{self, Runtime};
+use neural_pim::runtime;
+use neural_pim::serve::{open_runtime, Coordinator, PjrtBackend,
+                        ServeOptions};
 use neural_pim::util::cli::Args;
 use neural_pim::util::stats;
 use neural_pim::util::table::Table;
@@ -33,18 +34,17 @@ fn main() -> anyhow::Result<()> {
     // ---------------------------------------------------------------- 2.
     println!("== serving the test set through the coordinator ==");
     let coord = Coordinator::start(
-        CoordinatorConfig {
-            artifact_dir: dir.clone(),
-            ..Default::default()
-        },
-        h * w * c,
+        PjrtBackend::new(dir.clone(), "cnn_ideal", h * w * c),
+        ServeOptions::default(),
     )?;
     let t0 = std::time::Instant::now();
     let stride = h * w * c;
     let mut pending = Vec::new();
     for i in 0..ts.n {
         pending.push((
-            coord.submit(ts.images[i * stride..(i + 1) * stride].to_vec())?,
+            coord
+                .submit(ts.images[i * stride..(i + 1) * stride].to_vec())?
+                .accepted()?,
             ts.labels[i],
         ));
     }
@@ -67,13 +67,13 @@ fn main() -> anyhow::Result<()> {
         ts.n, dt, ts.n as f64 / dt,
         correct as f64 / ts.n as f64,
         stats::percentile(&lat, 50.0), stats::percentile(&lat, 99.0),
-        coord.metrics.summary()
+        coord.metrics.snapshot()
     );
     coord.shutdown();
 
     // ---------------------------------------------------------------- 3.
     println!("\n== Fig 4a: accuracy vs A/D resolution (bit-exact dataflows) ==");
-    let rt = Runtime::new(&dir)?;
+    let rt = open_runtime(&dir)?;
     let bits_list: &[usize] =
         if quick { &[4, 8] } else { &[2, 3, 4, 5, 6, 7, 8, 10] };
     let mut t = Table::new("accuracy (512 images; strategy C uses 4-bit DACs)",

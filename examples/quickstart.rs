@@ -11,11 +11,12 @@
 use neural_pim::arch::{self, crossbar::Group};
 use neural_pim::config::Precision;
 use neural_pim::dataflow;
-use neural_pim::runtime::{self, Runtime};
+use neural_pim::runtime;
+use neural_pim::serve::open_runtime;
 use neural_pim::util::rng::Pcg;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(&neural_pim::artifact_dir())?;
+    let rt = open_runtime(&neural_pim::artifact_dir())?;
     println!("PJRT platform: {}", rt.platform());
 
     // ---- L1: the Pallas kernel, AOT-lowered to HLO, executed from Rust

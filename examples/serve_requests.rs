@@ -1,16 +1,24 @@
-//! Serving-scenario example: open-loop load against the coordinator at a
-//! configured arrival rate, with the noisy-dataflow artifact standing in
-//! for the real analog chip (each batch sees the measured Neural-PIM
-//! SINAD). Reports throughput, latency percentiles, batch fill, and
-//! accuracy under analog noise.
+//! Serving-scenario example: open-loop load against the backend-generic
+//! coordinator at a configured arrival rate, with the noisy-dataflow
+//! artifact standing in for the real analog chip (each batch sees the
+//! measured Neural-PIM SINAD). Reports throughput, latency percentiles,
+//! batch fill, accuracy under analog noise, and — when `--depth` bounds
+//! the admission queue — the shed rate.
 //!
 //! Run: `cargo run --release --example serve_requests`
-//!      [--rate 2000] [--requests 1024] [--sinad 30]
+//!      [--rate 2000] [--requests 1024] [--sinad 30] [--depth 0]
+//!
+//! Swap `--backend sim` to drive the same loop against the simulated
+//! backend (no artifacts needed).
 
-use neural_pim::coordinator::{Coordinator, CoordinatorConfig, ExtraInput};
+use neural_pim::config::AcceleratorConfig;
 use neural_pim::runtime::TestSet;
+use neural_pim::serve::{Coordinator, ExtraInput, PjrtBackend, ServeOptions,
+                        SimBackend, Submission};
 use neural_pim::util::cli::Args;
+use neural_pim::util::rng::Pcg;
 use neural_pim::util::stats;
+use neural_pim::workloads;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
@@ -18,43 +26,76 @@ fn main() -> anyhow::Result<()> {
     let rate = args.get_f64("rate", 2000.0); // requests/s
     let n_req = args.get_usize("requests", 1024);
     let sinad = args.get_f64("sinad", 30.0);
+    let depth = args.get_usize("depth", 0);
+    let seed = args.get_u64("seed", 42);
 
-    let dir = neural_pim::artifact_dir();
-    let ts = TestSet::load(std::path::Path::new(&dir))?;
-    let (h, w, c) = ts.dims;
-    let coord = Coordinator::start(
-        CoordinatorConfig {
-            artifact_dir: dir,
-            artifact: "cnn_noisy".into(),
+    let opts = ServeOptions {
+        max_wait: Duration::from_millis(
+            args.get_usize("max-wait-ms", 4) as u64
+        ),
+        max_queue_depth: if depth == 0 { None } else { Some(depth) },
+        ..Default::default()
+    };
+    // the serving loop below never mentions which backend executes
+    let (coord, images, labels): (Coordinator, Vec<Vec<f32>>, Vec<i32>) =
+        if args.get_or("backend", "pjrt") == "sim" {
+            let net = workloads::synthetic_cnn();
+            let cfg = AcceleratorConfig::neural_pim();
+            let backend = SimBackend::new(&net, &cfg, 128, 32 * 32 * 3, seed);
+            let classes = backend.classes();
+            let mut rng = Pcg::new(seed);
+            let images = (0..n_req)
+                .map(|_| {
+                    (0..32 * 32 * 3).map(|_| rng.below(256) as f32).collect()
+                })
+                .collect();
+            let labels =
+                (0..n_req).map(|_| rng.below(classes) as i32).collect();
+            (Coordinator::start(backend, opts)?, images, labels)
+        } else {
+            let dir = neural_pim::artifact_dir();
+            let ts = TestSet::load(std::path::Path::new(&dir))?;
+            let (h, w, c) = ts.dims;
+            let stride = h * w * c;
             // cnn_noisy takes (images, key, sinad)
-            extra_inputs: vec![
-                ExtraInput::KeyU32(args.get_u64("seed", 42)),
-                ExtraInput::ScalarF32(sinad as f32),
-            ],
-            max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 4) as u64),
-            ..Default::default()
-        },
-        h * w * c,
-    )?;
-    println!("open-loop load: {rate:.0} req/s, {n_req} requests, \
-              analog SINAD {sinad:.0} dB");
+            let backend = PjrtBackend {
+                artifact: "cnn_noisy".into(),
+                extra_inputs: vec![
+                    ExtraInput::KeyU32(seed),
+                    ExtraInput::ScalarF32(sinad as f32),
+                ],
+                ..PjrtBackend::new(dir, "", stride)
+            };
+            let images = (0..n_req)
+                .map(|i| {
+                    let idx = i % ts.n;
+                    ts.images[idx * stride..(idx + 1) * stride].to_vec()
+                })
+                .collect();
+            let labels = (0..n_req).map(|i| ts.labels[i % ts.n]).collect();
+            (Coordinator::start(backend, opts)?, images, labels)
+        };
+    println!(
+        "open-loop load: {rate:.0} req/s, {n_req} requests, analog SINAD \
+         {sinad:.0} dB"
+    );
 
-    let stride = h * w * c;
     let gap = Duration::from_secs_f64(1.0 / rate);
     let t0 = Instant::now();
     let mut pending = Vec::new();
-    for i in 0..n_req {
+    let mut shed = 0usize;
+    for (i, (img, label)) in images.into_iter().zip(labels).enumerate() {
         // open-loop pacing
         let target = t0 + gap * i as u32;
         if let Some(sleep) = target.checked_duration_since(Instant::now()) {
             std::thread::sleep(sleep);
         }
-        let idx = i % ts.n;
-        pending.push((
-            coord.submit(ts.images[idx * stride..(idx + 1) * stride].to_vec())?,
-            ts.labels[idx],
-        ));
+        match coord.submit(img)? {
+            Submission::Accepted(rx) => pending.push((rx, label)),
+            Submission::Rejected(_) => shed += 1,
+        }
     }
+    let served = pending.len();
     let mut correct = 0usize;
     let mut lat = Vec::new();
     let mut fills = Vec::new();
@@ -71,9 +112,12 @@ fn main() -> anyhow::Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {n_req} in {:.2}s -> {:.0} req/s sustained",
-        dt, n_req as f64 / dt
+        "served {served} in {:.2}s -> {:.0} req/s sustained",
+        dt, served as f64 / dt
     );
+    if shed > 0 {
+        println!("admission shed {shed} of {n_req} (depth limit {depth})");
+    }
     println!(
         "latency: p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms; mean batch fill \
          {:.1}",
@@ -85,9 +129,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "accuracy under {:.0} dB analog noise: {:.4}",
         sinad,
-        correct as f64 / n_req as f64
+        correct as f64 / served.max(1) as f64
     );
-    println!("{}", coord.metrics.summary());
+    println!("{}", coord.metrics.snapshot());
     coord.shutdown();
     Ok(())
 }

@@ -6,7 +6,8 @@ mod bench_util;
 
 use bench_util::{bench, try_or_skip};
 use neural_pim::report;
-use neural_pim::runtime::{self, Runtime};
+use neural_pim::runtime;
+use neural_pim::serve::open_runtime;
 use neural_pim::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -21,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     // Fig 4a through PJRT (needs artifacts)
-    let Some(rt) = try_or_skip("runtime", Runtime::new(&neural_pim::artifact_dir()))
+    let Some(rt) = try_or_skip("runtime", open_runtime(&neural_pim::artifact_dir()))
     else {
         return Ok(());
     };

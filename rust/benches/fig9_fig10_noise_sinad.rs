@@ -6,14 +6,15 @@
 mod bench_util;
 
 use bench_util::{bench, try_or_skip};
-use neural_pim::runtime::{self, Runtime};
+use neural_pim::runtime;
+use neural_pim::serve::open_runtime;
 use neural_pim::util::stats;
 use neural_pim::util::table::Table;
 use neural_pim::{noise, workloads};
 
 fn main() -> anyhow::Result<()> {
     println!("### Fig 9 / Fig 10 — noise and SINAD\n");
-    let Some(rt) = try_or_skip("runtime", Runtime::new(&neural_pim::artifact_dir()))
+    let Some(rt) = try_or_skip("runtime", open_runtime(&neural_pim::artifact_dir()))
     else {
         return Ok(());
     };

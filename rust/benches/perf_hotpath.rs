@@ -10,10 +10,12 @@ mod bench_util;
 use bench_util::{bench, try_or_skip};
 use neural_pim::arch::crossbar::Group;
 use neural_pim::config::AcceleratorConfig;
-use neural_pim::coordinator::{Coordinator, CoordinatorConfig};
 use neural_pim::event::{self, Engine};
-use neural_pim::runtime::{self, Runtime};
+use neural_pim::runtime;
 use neural_pim::scenario::{self, suite};
+use neural_pim::serve::{loadgen, open_runtime, Coordinator, PjrtBackend,
+                        ServeOptions};
+use neural_pim::util::json::Json;
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
 use neural_pim::{dse, mapping, model, noise, sim, workloads};
@@ -202,6 +204,50 @@ fn main() -> anyhow::Result<()> {
     });
     let _ = std::fs::remove_dir_all(&store_root);
 
+    // serve layer: the virtual-time load generator behind `serve-sim`
+    // (throughput/p99/shed across an offered-load sweep, zero
+    // artifacts). The headline numbers land in BENCH_serve.json — the
+    // serving-layer perf trajectory, like BENCH_suite_* for scenarios.
+    let syn = workloads::synthetic_cnn();
+    let nc = model::network_cost(&syn, &cfg);
+    let sp = event::service_profile(&cfg, &nc);
+    let lg = loadgen::LoadGenConfig {
+        requests: 8192,
+        workers: 2,
+        max_batch: 64,
+        max_wait_us: 200,
+        max_queue_depth: 256,
+        batch_exec_us: sp.batch_us(64),
+        seed: 42,
+    };
+    let lg_loads = [0.5, 0.8, 1.0, 1.2];
+    bench("serve loadgen sweep (4 loads x 8192 arrivals)", 2, 10, || {
+        let _ = loadgen::sweep(&lg, &lg_loads);
+    });
+    let pts = loadgen::sweep(&lg, &lg_loads);
+    let mut bench_pairs: Vec<(String, Json)> = Vec::new();
+    for pt in &pts {
+        let tag = format!("{:.2}", pt.offered);
+        println!(
+            "[bench] serve-sim @{tag}: {:.0} req/s, p99 {:.3} ms, shed \
+             {:.3}",
+            pt.throughput_rps, pt.p99_ms, pt.shed_rate
+        );
+        bench_pairs.push((format!("serve.throughput_rps@{tag}"),
+                          Json::Num(pt.throughput_rps)));
+        bench_pairs.push((format!("serve.p99_ms@{tag}"),
+                          Json::Num(pt.p99_ms)));
+        bench_pairs.push((format!("serve.shed_rate@{tag}"),
+                          Json::Num(pt.shed_rate)));
+    }
+    bench_pairs.push(("serve.batch_exec_us".into(),
+                      Json::Num(lg.batch_exec_us as f64)));
+    let mut bench_json = Json::Obj(bench_pairs.into_iter().collect())
+        .to_pretty_string();
+    bench_json.push('\n');
+    std::fs::write("BENCH_serve.json", bench_json)?;
+    println!("[bench] wrote BENCH_serve.json");
+
     // L3: behavioural dataflow models (the MC inner loop)
     let mut rng = Pcg::new(1);
     let w: Vec<i32> = (0..128).map(|_| rng.below(255) as i32 - 127).collect();
@@ -215,7 +261,8 @@ fn main() -> anyhow::Result<()> {
     });
 
     // PJRT: compile + execute
-    let Some(rt) = try_or_skip("runtime", Runtime::new(&neural_pim::artifact_dir()))
+    let Some(rt) =
+        try_or_skip("runtime", open_runtime(&neural_pim::artifact_dir()))
     else {
         return Ok(());
     };
@@ -230,10 +277,10 @@ fn main() -> anyhow::Result<()> {
     // coordinator round-trip (queue + batch + execute + demux)
     let (h, w_, c) = ts.dims;
     let coord = Coordinator::start(
-        CoordinatorConfig { artifact_dir: neural_pim::artifact_dir(),
-                            max_wait: std::time::Duration::from_millis(1),
-                            ..Default::default() },
-        h * w_ * c,
+        PjrtBackend::new(neural_pim::artifact_dir(), "cnn_ideal",
+                         h * w_ * c),
+        ServeOptions { max_wait: std::time::Duration::from_millis(1),
+                       ..Default::default() },
     )?;
     let stride = h * w_ * c;
     bench("coordinator round-trip (128 requests)", 1, 10, || {
@@ -243,6 +290,8 @@ fn main() -> anyhow::Result<()> {
             pending.push(
                 coord
                     .submit(ts.images[idx * stride..(idx + 1) * stride].to_vec())
+                    .unwrap()
+                    .accepted()
                     .unwrap(),
             );
         }
@@ -250,7 +299,7 @@ fn main() -> anyhow::Result<()> {
             let _ = rx.recv().unwrap();
         }
     });
-    println!("{}", coord.metrics.summary());
+    println!("{}", coord.metrics.snapshot());
     coord.shutdown();
     Ok(())
 }

@@ -6,7 +6,8 @@ mod bench_util;
 
 use bench_util::{bench, try_or_skip};
 use neural_pim::periph::{self, Periph};
-use neural_pim::runtime::{self, Runtime};
+use neural_pim::runtime;
+use neural_pim::serve::open_runtime;
 use neural_pim::util::rng::Pcg;
 use neural_pim::util::stats;
 use neural_pim::util::table::Table;
@@ -75,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     // PJRT artifact path
-    if let Some(rt) = try_or_skip("runtime", Runtime::new(&dir)) {
+    if let Some(rt) = try_or_skip("runtime", open_runtime(&dir)) {
         let exe = rt.load("nns_a")?;
         let v: Vec<f32> = (0..1024 * 9).map(|i| (i % 97) as f32 * 0.002).collect();
         let lit = runtime::lit_f32(&v, &[1024, 9])?;

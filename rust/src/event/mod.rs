@@ -37,7 +37,8 @@ pub mod pipeline;
 
 pub use engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Time};
 pub use noc::{Delivery, NocModel, NocStats};
-pub use pipeline::{PipelineRun, PipelineSim, MAX_BUF_INFS};
+pub use pipeline::{service_profile, PipelineRun, PipelineSim, ServiceProfile,
+                   MAX_BUF_INFS};
 
 use crate::config::{AcceleratorConfig, Architecture};
 use crate::model;

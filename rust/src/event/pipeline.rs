@@ -29,7 +29,7 @@ use super::noc::NocModel;
 use crate::arch::noc::CMesh;
 use crate::config::AcceleratorConfig;
 use crate::energy;
-use crate::mapping::NetworkMapping;
+use crate::mapping::{LayerMapping, NetworkMapping};
 use crate::model::{self, LayerCost, NetworkCost};
 use crate::util::rng::Pcg;
 use crate::workloads::Network;
@@ -39,6 +39,67 @@ use std::collections::VecDeque;
 /// IR/OR SRAMs stage only a handful of inference outputs even when a
 /// layer's output is tiny.
 pub const MAX_BUF_INFS: u64 = 8;
+
+/// Deterministic service time of one pipeline stage: the layer's
+/// stage-cycle occupancy at the chip's cycle time with the §5.2.4
+/// integer 9/8 two-phase overhead (exact for the 100/50 ns cycles —
+/// `cycle_ps` is a multiple of 8 ps). The single pacing formula shared
+/// by [`PipelineSim`] and [`service_profile`].
+fn stage_service_ps(lm: &LayerMapping, ic: u64, cycle_ps: Time) -> Time {
+    ((lm.stage_cycles(ic) as u128 * cycle_ps as u128 * 9) / 8) as Time
+}
+
+/// The pipeline's deterministic per-stage service times — the
+/// service-time hook the `serve` layer prices simulated batches with
+/// (the same pacing [`PipelineSim`] schedules by, minus NoC/buffer
+/// dynamics).
+#[derive(Debug, Clone)]
+pub struct ServiceProfile {
+    /// per-stage service time, in layer order (integer picoseconds)
+    pub stage_ps: Vec<Time>,
+}
+
+impl ServiceProfile {
+    /// Pipeline fill: one inference front-to-back with no overlap.
+    pub fn fill_ps(&self) -> Time {
+        self.stage_ps.iter().sum()
+    }
+
+    /// Steady-state pacing: the slowest stage (≥ 1 ps so rates stay
+    /// finite on degenerate mappings).
+    pub fn bottleneck_ps(&self) -> Time {
+        self.stage_ps.iter().copied().max().unwrap_or(0).max(1)
+    }
+
+    /// A batch of `n` inferences streamed through the pipeline: fill for
+    /// the first, one bottleneck period for each that follows.
+    pub fn batch_ps(&self, n: u64) -> Time {
+        self.fill_ps() + n.saturating_sub(1) * self.bottleneck_ps()
+    }
+
+    /// [`ServiceProfile::batch_ps`] in whole microseconds (≥ 1), the
+    /// unit the serving metrics speak.
+    pub fn batch_us(&self, n: u64) -> u64 {
+        self.batch_ps(n).div_ceil(1_000_000).max(1)
+    }
+}
+
+/// Compute the [`ServiceProfile`] of `cfg` over a memoized cost table's
+/// mapping (`model::network_cost`). Pure and deterministic: safe to
+/// share across threads and cache keys.
+pub fn service_profile(cfg: &AcceleratorConfig,
+                       nc: &NetworkCost) -> ServiceProfile {
+    let ic = cfg.precision.input_cycles() as u64;
+    let cycle_ps = ns_to_ps(energy::cycle_seconds(cfg) * 1e9);
+    ServiceProfile {
+        stage_ps: nc
+            .mapping
+            .layers
+            .iter()
+            .map(|lm| stage_service_ps(lm, ic, cycle_ps))
+            .collect(),
+    }
+}
 
 #[derive(Debug, Clone, Copy)]
 enum Ev {
@@ -143,14 +204,8 @@ impl PipelineSim {
             .zip(costs)
             .zip(&tiles)
             .map(|((lm, cost), &tile)| {
-                // integer 9/8 two-stage overhead; exact for the 100/50 ns
-                // cycles (cycle_ps is a multiple of 8 ps)
-                let service_ps = ((lm.stage_cycles(ic) as u128
-                    * cycle_ps as u128
-                    * 9)
-                    / 8) as Time;
                 Stage {
-                    service_ps,
+                    service_ps: stage_service_ps(lm, ic, cycle_ps),
                     tile,
                     compute_e: cost.compute_e,
                     noc_e_extra: cost.noc_e_extra,
@@ -402,6 +457,31 @@ mod tests {
         assert!(run.blocked_starts > 0, "producer never back-pressured");
         // sojourns grow while jobs queue behind the slow consumer
         assert!(run.latency_s[3] > run.latency_s[0]);
+    }
+
+    #[test]
+    fn service_profile_matches_the_pipeline_stages() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let net = crate::workloads::alexnet();
+        let nc = crate::model::network_cost(&net, &cfg);
+        let sp = service_profile(&cfg, &nc);
+        let sim1 = PipelineSim::with_costs(&cfg, &nc);
+        // one shared pacing formula: profile stages == simulator stages
+        assert_eq!(sp.stage_ps.len(), sim1.stages.len());
+        for (a, s) in sp.stage_ps.iter().zip(&sim1.stages) {
+            assert_eq!(*a, s.service_ps);
+        }
+        assert_eq!(sp.bottleneck_ps(), sim1.bottleneck_period_ps().max(1));
+        assert_eq!(sp.fill_ps(),
+                   sim1.stages.iter().map(|s| s.service_ps).sum::<Time>());
+        // batch pacing: fill + (n-1) x bottleneck, monotone in n
+        assert_eq!(sp.batch_ps(1), sp.fill_ps());
+        assert_eq!(
+            sp.batch_ps(5),
+            sp.fill_ps() + 4 * sp.bottleneck_ps()
+        );
+        assert!(sp.batch_us(5) >= sp.batch_us(1));
+        assert!(sp.batch_us(1) >= 1);
     }
 
     #[test]

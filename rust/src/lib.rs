@@ -13,7 +13,8 @@
 //!   framework, the `event` discrete-event microsimulator (contention-
 //!   aware NoC + finite-buffer pipelines + tail-latency percentiles),
 //!   the DSE engine, the PJRT runtime that executes the AOT artifacts,
-//!   and the inference coordinator. Python never runs at request time.
+//!   and the backend-agnostic serving layer. Python never runs at
+//!   request time.
 //!
 //! Module map: `arch` (behavioural circuit models + c-mesh), `dataflow`
 //! (§3 equations), `model` (the trait-based architecture cost-model
@@ -26,8 +27,21 @@
 //! refinement of `sim`: engine, queued NoC, back-pressured pipeline,
 //! cross-validation + request-level latency modes), `dse` (Fig. 11
 //! sweep), `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
-//! `runtime`/`coordinator` (PJRT serving), `baselines`, `config`,
-//! `report`, `workloads`, the `util` substrate, and `scenario` — the
+//! `runtime` (PJRT execution of the AOT artifacts), `serve` — the
+//! backend-agnostic serving layer: an `InferenceBackend` trait (per-
+//! worker-thread setup, `execute(batch) -> BatchResult`, declared
+//! batch/classes/image shape) with two registered implementations
+//! (`PjrtBackend` over the compiled artifacts, `SimBackend` priced by
+//! `model::network_cost` + the `event` service-time model so serving
+//! runs with zero artifacts), a backend-generic `Coordinator` with
+//! admission control (bounded queue depth, typed `Rejection` responses)
+//! and pluggable batch policy, typed `MetricsSnapshot` (counters, pad
+//! fraction, p50/p95/p99, `last_error`) replacing the old summary
+//! string, and a virtual-time load generator for the deterministic
+//! `serve-sim` offered-load sweep; register a backend by implementing
+//! the trait and listing it in `serve::BACKENDS` — `baselines`,
+//! `config`, `report`, `workloads`, the `util` substrate, and
+//! `scenario` — the
 //! unified experiment layer: every CLI subcommand is a registered
 //! `scenario::Scenario` with typed params and a typed `Outcome`
 //! (text tables or schema-versioned JSON), executed through a
@@ -42,7 +56,6 @@
 pub mod arch;
 pub mod baselines;
 pub mod config;
-pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
 pub mod energy;
@@ -54,6 +67,7 @@ pub mod periph;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workloads;

@@ -5,6 +5,11 @@
 //! rejects jax>=0.5 serialized protos (64-bit instruction ids), while the
 //! text parser reassigns ids cleanly. All artifacts were lowered with
 //! `return_tuple=True`, so every result is a tuple literal.
+//!
+//! Construction discipline: code outside this module and `serve/` opens
+//! runtimes through `serve::open_runtime` (grep-gated by
+//! `scripts/verify.sh`), so the serving stack never re-welds itself to
+//! direct PJRT construction behind the `InferenceBackend` trait's back.
 
 use anyhow::{anyhow, Context, Result};
 use std::cell::RefCell;

@@ -23,6 +23,7 @@ mod analytic;
 pub mod outcome;
 mod pjrt;
 pub mod registry;
+mod serve;
 pub mod store;
 pub mod suite;
 

@@ -1,22 +1,25 @@
-//! Scenario impls over the PJRT runtime (`runtime`, `coordinator`,
-//! `periph`, the Fig. 9 MC artifacts) — everything that needs
-//! `make artifacts` first. They fail with a clear error (and the suite
-//! records it per entry) when the artifact directory is absent.
+//! Scenario impls over the PJRT runtime (`runtime`, `periph`, the
+//! Fig. 9 MC artifacts) — everything that needs `make artifacts` first.
+//! They fail with a clear error (and the suite records it per entry)
+//! when the artifact directory is absent. The serving paths live in
+//! `scenario/serve.rs`, parameterized over the `serve` backend registry;
+//! runtimes here open through `serve::open_runtime` (the grep-gated
+//! construction site).
 
 use super::{Outcome, ParamSpec, Params, Scenario};
-use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::periph;
-use crate::runtime::{self, Runtime};
+use crate::runtime;
+use crate::serve::open_runtime;
 use crate::util::stats;
 use crate::util::table::Table;
 use anyhow::{bail, Result};
 
-fn artifacts_spec() -> ParamSpec {
+pub(super) fn artifacts_spec() -> ParamSpec {
     ParamSpec::str("artifacts", "",
                    "artifact directory (default: ./artifacts)")
 }
 
-fn artifacts_dir(p: &Params) -> String {
+pub(super) fn artifacts_dir(p: &Params) -> String {
     let dir = p.get_str("artifacts");
     if dir.is_empty() {
         crate::artifact_dir()
@@ -30,7 +33,7 @@ fn artifacts_dir(p: &Params) -> String {
 /// so two runs against different artifact sets must never share a cache
 /// address. (Directory contents are not hashed — re-run without
 /// `--cache` after `make artifacts`; see DESIGN.md §2b.)
-fn artifacts_extra(p: &Params) -> Result<String> {
+pub(super) fn artifacts_extra(p: &Params) -> Result<String> {
     Ok(format!("artifacts:{}", artifacts_dir(p)))
 }
 
@@ -58,7 +61,7 @@ impl Scenario for Accuracy {
     }
 
     fn run(&self, p: &Params) -> Result<Outcome> {
-        let rt = Runtime::new(&artifacts_dir(p))?;
+        let rt = open_runtime(&artifacts_dir(p))?;
         let ts = runtime::TestSet::load(rt.dir())?;
         let strategy = p.get_str("strategy").to_string();
         let seed = p.get_u64("seed");
@@ -167,7 +170,7 @@ impl Scenario for Mc {
     }
 
     fn run(&self, p: &Params) -> Result<Outcome> {
-        let rt = Runtime::new(&artifacts_dir(p))?;
+        let rt = open_runtime(&artifacts_dir(p))?;
         let naive = p.get_bool("naive");
         let trials = p.get_usize("trials");
         let artifact = if naive { "mc_naive" } else { "mc_opt" };
@@ -266,135 +269,3 @@ impl Scenario for PeriphTable {
     }
 }
 
-// --------------------------------------------------------------- serve --
-
-pub struct Serve;
-
-impl Scenario for Serve {
-    fn name(&self) -> &'static str {
-        "serve"
-    }
-
-    fn description(&self) -> &'static str {
-        "drive the inference coordinator, report metrics (needs artifacts)"
-    }
-
-    fn param_specs(&self) -> Vec<ParamSpec> {
-        vec![
-            ParamSpec::u64("requests", 512, "requests to drive"),
-            ParamSpec::str("artifact", "cnn_ideal", "model artifact"),
-            ParamSpec::u64("max-wait-ms", 2, "batching window"),
-            ParamSpec::u64("workers", 1, "coordinator workers"),
-            artifacts_spec(),
-        ]
-    }
-
-    fn run(&self, p: &Params) -> Result<Outcome> {
-        let dir = artifacts_dir(p);
-        let ts = runtime::TestSet::load(std::path::Path::new(&dir))?;
-        let n_req = p.get_usize("requests");
-        let (h, w, c) = ts.dims;
-        let cfg = CoordinatorConfig {
-            artifact_dir: dir.clone(),
-            artifact: p.get_str("artifact").to_string(),
-            batch: 128,
-            classes: 10,
-            max_wait: std::time::Duration::from_millis(
-                p.get_u64("max-wait-ms")),
-            workers: p.get_usize("workers"),
-            extra_inputs: vec![],
-            image_param_first: true,
-        };
-        let coord = Coordinator::start(cfg, h * w * c)?;
-        // progress on stderr: stdout carries only the rendered outcome
-        eprintln!("coordinator up — driving {n_req} requests");
-
-        let t0 = std::time::Instant::now();
-        let stride = h * w * c;
-        let mut pending = Vec::new();
-        for i in 0..n_req {
-            let idx = i % ts.n;
-            let img = ts.images[idx * stride..(idx + 1) * stride].to_vec();
-            pending.push((coord.submit(img)?, ts.labels[idx]));
-        }
-        let mut correct = 0usize;
-        let mut lat_ms = Vec::new();
-        for (rx, label) in pending {
-            let resp = rx.recv()?;
-            if let Some(err) = &resp.error {
-                bail!("request {} failed in its batch: {err}", resp.id);
-            }
-            lat_ms.push((resp.queue_us + resp.exec_us) as f64 / 1000.0);
-            let pred = resp
-                .logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j as i32)
-                .unwrap();
-            if pred == label {
-                correct += 1;
-            }
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let acc = correct as f64 / n_req as f64;
-        let p50 = stats::percentile(&lat_ms, 50.0);
-        let p99 = stats::percentile(&lat_ms, 99.0);
-        let mut o = Outcome::new(self.name(), p.to_json());
-        o.note(format!(
-            "served {n_req} requests in {dt:.2}s ({:.0} req/s), accuracy \
-             {acc:.4}",
-            n_req as f64 / dt
-        ));
-        o.note(format!(
-            "latency p50 {p50:.1} ms, p99 {p99:.1} ms | {}",
-            coord.metrics.summary()
-        ));
-        o.metric("req_per_s", n_req as f64 / dt, "req/s")
-            .metric("accuracy", acc, "")
-            .metric("latency_p50_ms", p50, "ms")
-            .metric("latency_p99_ms", p99, "ms");
-        coord.shutdown();
-        Ok(o)
-    }
-
-    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
-        artifacts_extra(p)
-    }
-}
-
-// --------------------------------------------------------------- infer --
-
-pub struct Infer;
-
-impl Scenario for Infer {
-    fn name(&self) -> &'static str {
-        "infer"
-    }
-
-    fn description(&self) -> &'static str {
-        "single-batch smoke inference (needs artifacts)"
-    }
-
-    fn param_specs(&self) -> Vec<ParamSpec> {
-        vec![artifacts_spec()]
-    }
-
-    fn run(&self, p: &Params) -> Result<Outcome> {
-        let rt = Runtime::new(&artifacts_dir(p))?;
-        let ts = runtime::TestSet::load(rt.dir())?;
-        let exe = rt.load("cnn_ideal")?;
-        let images = ts.batch_literal(0, 128)?;
-        let out = exe.run(&[images])?;
-        let logits = runtime::to_f32_vec(&out[0])?;
-        let acc = runtime::accuracy(&logits, &ts.batch_labels(0, 128), 10);
-        let mut o = Outcome::new(self.name(), p.to_json());
-        o.note(format!("cnn_ideal first-batch accuracy: {acc:.4}"));
-        o.metric("accuracy", acc, "");
-        Ok(o)
-    }
-
-    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
-        artifacts_extra(p)
-    }
-}

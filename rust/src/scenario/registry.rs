@@ -7,10 +7,10 @@
 //! --format json`, a cacheable store entry, and a suite member — with
 //! zero call-site edits anywhere else.
 
-use super::{analytic, pjrt, Scenario};
+use super::{analytic, pjrt, serve, Scenario};
 
 /// Every registered scenario, in help/report order.
-static SCENARIOS: [&dyn Scenario; 13] = [
+static SCENARIOS: [&dyn Scenario; 14] = [
     &analytic::Characterize,
     &analytic::Simulate,
     &analytic::EventSim,
@@ -19,11 +19,12 @@ static SCENARIOS: [&dyn Scenario; 13] = [
     &analytic::Table3,
     &analytic::Budget,
     &analytic::Noise,
+    &serve::ServeSim,
     &pjrt::Accuracy,
     &pjrt::Mc,
     &pjrt::PeriphTable,
-    &pjrt::Serve,
-    &pjrt::Infer,
+    &serve::Serve,
+    &serve::Infer,
 ];
 
 /// All registered scenarios, in registry order.

@@ -1,0 +1,475 @@
+//! Scenario impls over the `serve` layer: the backend-parameterized
+//! `serve`/`infer` paths (PJRT artifacts or the simulated backend) and
+//! the artifact-free `serve-sim` offered-load sweep.
+//!
+//! `--backend pjrt` (the default) keeps the historical behaviour and
+//! byte-identical text output; `--backend sim` runs the same serving
+//! machinery against [`crate::serve::SimBackend`], so every serving
+//! scenario works in a bare checkout. `serve-sim` never touches the
+//! wall clock: it replays the serving discipline in virtual time
+//! ([`crate::serve::loadgen`]), making its outcome bit-identical at any
+//! `--threads` count and byte-identical on cached replay.
+
+use super::pjrt::{artifacts_dir, artifacts_extra, artifacts_spec};
+use super::{Outcome, ParamSpec, Params, Scenario};
+use crate::config::{AcceleratorConfig, Architecture};
+use crate::serve::{self, loadgen, Coordinator, PjrtBackend, ServeOptions,
+                   SimBackend, Submission};
+use crate::util::cli;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+use crate::util::table::{Cell, Table};
+use crate::workloads::{self, Network};
+use crate::{event, model, runtime};
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+fn backend_spec() -> ParamSpec {
+    ParamSpec::str("backend", "pjrt",
+                   "inference backend: pjrt | sim (serve::BACKENDS)")
+}
+
+/// Validate `--backend` against the registered backend list, with the
+/// usual did-you-mean suggestion.
+fn parse_backend(p: &Params) -> Result<String> {
+    let name = p.get_str("backend").to_ascii_lowercase();
+    let known = serve::backend_names();
+    if !known.contains(&name.as_str()) {
+        match cli::suggest(&name, &known) {
+            Some(s) => bail!("unknown backend '{name}' (did you mean \
+                              '{s}'?)"),
+            None => bail!("unknown backend '{name}'"),
+        }
+    }
+    Ok(name)
+}
+
+fn sim_network(p: &Params) -> Result<Network> {
+    let name = p.get_str("network");
+    workloads::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {name}"))
+}
+
+fn sim_config(p: &Params) -> Result<AcceleratorConfig> {
+    Ok(AcceleratorConfig::for_arch(Architecture::parse(p.get_str("arch"))?))
+}
+
+/// Synthetic image side for the simulated backends (CIFAR-shaped).
+const SIM_SIDE: usize = 32;
+const SIM_IMAGE_LEN: usize = SIM_SIDE * SIM_SIDE * 3;
+
+// --------------------------------------------------------------- serve --
+
+pub struct Serve;
+
+impl Scenario for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn description(&self) -> &'static str {
+        "drive the serving coordinator on a pluggable backend \
+         (pjrt needs artifacts; sim runs anywhere)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::u64("requests", 512, "requests to drive"),
+            ParamSpec::str("artifact", "cnn_ideal", "model artifact (pjrt)"),
+            ParamSpec::u64("max-wait-ms", 2, "batching window"),
+            ParamSpec::u64("workers", 1, "coordinator workers"),
+            ParamSpec::u64("depth", 0,
+                           "admission queue bound; 0 = never shed"),
+            backend_spec(),
+            ParamSpec::str("network", "SyntheticCNN",
+                           "simulated network (sim backend)"),
+            ParamSpec::str("arch", "neural-pim",
+                           "simulated chip architecture (sim backend)"),
+            ParamSpec::u64("seed", 42, "PRNG seed (sim backend)"),
+            artifacts_spec(),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let backend_name = parse_backend(p)?;
+        let n_req = p.get_usize("requests");
+        let depth = p.get_usize("depth");
+        let opts = ServeOptions {
+            workers: p.get_usize("workers"),
+            max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
+            max_batch: 0,
+            max_queue_depth: if depth == 0 { None } else { Some(depth) },
+        };
+        // backend + request stream: the serving loop below is identical
+        // for both; only construction differs
+        let (coord, images, labels) = match backend_name.as_str() {
+            "pjrt" => {
+                let dir = artifacts_dir(p);
+                let ts =
+                    runtime::TestSet::load(std::path::Path::new(&dir))?;
+                let (h, w, c) = ts.dims;
+                let stride = h * w * c;
+                let backend = PjrtBackend::new(
+                    dir,
+                    p.get_str("artifact"),
+                    stride,
+                );
+                let images: Vec<Vec<f32>> = (0..n_req)
+                    .map(|i| {
+                        let idx = i % ts.n;
+                        ts.images[idx * stride..(idx + 1) * stride].to_vec()
+                    })
+                    .collect();
+                let labels: Vec<i32> =
+                    (0..n_req).map(|i| ts.labels[i % ts.n]).collect();
+                (Coordinator::start(backend, opts)?, images, labels)
+            }
+            "sim" => {
+                let net = sim_network(p)?;
+                let cfg = sim_config(p)?;
+                let seed = p.get_u64("seed");
+                let backend =
+                    SimBackend::new(&net, &cfg, 128, SIM_IMAGE_LEN, seed);
+                let classes = backend.classes();
+                // synthetic u8-valued images + random labels (accuracy
+                // against a hash-logit backend is a determinism probe,
+                // not a model quality number)
+                let mut rng = Pcg::new(seed);
+                let images: Vec<Vec<f32>> = (0..n_req)
+                    .map(|_| {
+                        (0..SIM_IMAGE_LEN)
+                            .map(|_| rng.below(256) as f32)
+                            .collect()
+                    })
+                    .collect();
+                let labels: Vec<i32> =
+                    (0..n_req).map(|_| rng.below(classes) as i32).collect();
+                (Coordinator::start(backend, opts)?, images, labels)
+            }
+            // a backend registered in serve::BACKENDS but not given a
+            // construction arm here must fail loudly, never silently
+            // fall back to another backend's results
+            other => bail!("backend '{other}' has no construction path in \
+                            the serve scenario"),
+        };
+        // progress on stderr: stdout carries only the rendered outcome
+        eprintln!("coordinator up — driving {n_req} requests");
+
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        let mut shed = 0usize;
+        for (img, label) in images.into_iter().zip(labels) {
+            match coord.submit(img)? {
+                Submission::Accepted(rx) => pending.push((rx, label)),
+                Submission::Rejected(_) => shed += 1,
+            }
+        }
+        let served = pending.len();
+        let mut correct = 0usize;
+        let mut lat_ms = Vec::new();
+        for (rx, label) in pending {
+            let resp = rx.recv()?;
+            if let Some(err) = &resp.error {
+                bail!("request {} failed in its batch: {err}", resp.id);
+            }
+            lat_ms.push((resp.queue_us + resp.exec_us) as f64 / 1000.0);
+            let pred = resp
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap();
+            if pred == label {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let acc = correct as f64 / served.max(1) as f64;
+        let p50 = stats::percentile(&lat_ms, 50.0);
+        let p99 = stats::percentile(&lat_ms, 99.0);
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.note(format!(
+            "served {served} requests in {dt:.2}s ({:.0} req/s), accuracy \
+             {acc:.4}",
+            served as f64 / dt
+        ));
+        if shed > 0 {
+            o.note(format!(
+                "admission shed {shed} of {n_req} offered (queue depth \
+                 limit {depth})"
+            ));
+        }
+        o.note(format!(
+            "latency p50 {p50:.1} ms, p99 {p99:.1} ms | {}",
+            coord.metrics.snapshot()
+        ));
+        o.metric("req_per_s", served as f64 / dt, "req/s")
+            .metric("accuracy", acc, "")
+            .metric("latency_p50_ms", p50, "ms")
+            .metric("latency_p99_ms", p99, "ms")
+            .metric("shed", shed as f64, "");
+        coord.shutdown();
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        // only the pjrt path reads the artifact directory (matching
+        // run()'s case-insensitive backend resolution)
+        if p.get_str("backend").eq_ignore_ascii_case("pjrt") {
+            artifacts_extra(p)
+        } else {
+            Ok(String::new())
+        }
+    }
+}
+
+// --------------------------------------------------------------- infer --
+
+pub struct Infer;
+
+impl Scenario for Infer {
+    fn name(&self) -> &'static str {
+        "infer"
+    }
+
+    fn description(&self) -> &'static str {
+        "single-batch smoke inference on a pluggable backend"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            backend_spec(),
+            ParamSpec::str("network", "SyntheticCNN",
+                           "simulated network (sim backend)"),
+            ParamSpec::str("arch", "neural-pim",
+                           "simulated chip architecture (sim backend)"),
+            ParamSpec::u64("seed", 42, "PRNG seed (sim backend)"),
+            artifacts_spec(),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let backend_name = parse_backend(p)?;
+        let mut o = Outcome::new(self.name(), p.to_json());
+        match backend_name.as_str() {
+            "pjrt" => {
+                let dir = artifacts_dir(p);
+                let ts =
+                    runtime::TestSet::load(std::path::Path::new(&dir))?;
+                let (h, w, c) = ts.dims;
+                let stride = h * w * c;
+                let backend = PjrtBackend::new(dir, "cnn_ideal", stride);
+                let mut worker = backend.worker()?;
+                let data: Vec<f32> = (0..128)
+                    .flat_map(|i| {
+                        let idx = i % ts.n;
+                        ts.images[idx * stride..(idx + 1) * stride].to_vec()
+                    })
+                    .collect();
+                let r = worker.execute(&crate::serve::BatchInput {
+                    data: &data,
+                    n: 128,
+                    image_len: stride,
+                })?;
+                let acc = runtime::accuracy(
+                    &r.logits,
+                    &ts.batch_labels(0, 128),
+                    10,
+                );
+                o.note(format!("cnn_ideal first-batch accuracy: {acc:.4}"));
+                o.metric("accuracy", acc, "");
+            }
+            "sim" => {
+                let net = sim_network(p)?;
+                let cfg = sim_config(p)?;
+                let seed = p.get_u64("seed");
+                let backend =
+                    SimBackend::new(&net, &cfg, 128, SIM_IMAGE_LEN, seed);
+                let mut worker = backend.worker()?;
+                let mut rng = Pcg::new(seed);
+                let data: Vec<f32> = (0..128 * SIM_IMAGE_LEN)
+                    .map(|_| rng.below(256) as f32)
+                    .collect();
+                let r = worker.execute(&crate::serve::BatchInput {
+                    data: &data,
+                    n: 128,
+                    image_len: SIM_IMAGE_LEN,
+                })?;
+                anyhow::ensure!(
+                    r.logits.len() == 128 * backend.classes(),
+                    "sim backend returned {} logits",
+                    r.logits.len()
+                );
+                let exec_ms = r.exec_us as f64 / 1000.0;
+                o.note(format!(
+                    "sim first-batch: 128 images through {} in {exec_ms:.3} \
+                     ms (simulated)",
+                    backend.network()
+                ));
+                o.metric("sim_exec_ms", exec_ms, "ms");
+            }
+            other => bail!("backend '{other}' has no construction path in \
+                            the infer scenario"),
+        }
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        if p.get_str("backend").eq_ignore_ascii_case("pjrt") {
+            artifacts_extra(p)
+        } else {
+            Ok(String::new())
+        }
+    }
+}
+
+// ----------------------------------------------------------- serve-sim --
+
+pub struct ServeSim;
+
+impl Scenario for ServeSim {
+    fn name(&self) -> &'static str {
+        "serve-sim"
+    }
+
+    fn description(&self) -> &'static str {
+        "offered-load sweep of the serving layer on the simulated \
+         backend (no artifacts)"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::str("network", "SyntheticCNN", "simulated network"),
+            ParamSpec::str("arch", "neural-pim",
+                           "simulated chip architecture"),
+            ParamSpec::str("loads", "0.5,0.8,1.0,1.2",
+                           "offered loads vs padded-batch service rate"),
+            ParamSpec::u64("requests", 2048, "arrivals per load point"),
+            ParamSpec::u64("workers", 2, "serving workers"),
+            ParamSpec::u64("max-batch", 64, "executable batch"),
+            ParamSpec::u64("max-wait-us", 200,
+                           "batching fill window (virtual µs)"),
+            ParamSpec::u64("depth", 256, "admission queue bound"),
+            ParamSpec::u64("seed", 42, "PRNG seed"),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let net = sim_network(p)?;
+        let cfg = sim_config(p)?;
+        let loads = parse_loads(p.get_str("loads"))?;
+        let max_batch = p.get_usize("max-batch").max(1);
+        let nc = model::network_cost(&net, &cfg);
+        let sp = event::service_profile(&cfg, &nc);
+        let lg = loadgen::LoadGenConfig {
+            requests: p.get_u64("requests"),
+            workers: p.get_usize("workers"),
+            max_batch,
+            max_wait_us: p.get_u64("max-wait-us"),
+            max_queue_depth: p.get_usize("depth"),
+            batch_exec_us: sp.batch_us(max_batch as u64),
+            seed: p.get_u64("seed"),
+        };
+        let points = loadgen::sweep(&lg, &loads);
+
+        let arch_name = model::cost_model(cfg.arch).name();
+        let mut t = Table::new(
+            &format!(
+                "serve-sim: {} on {arch_name}, batch {max_batch} x {} \
+                 workers (depth {})",
+                net.name,
+                lg.workers,
+                lg.max_queue_depth
+            ),
+            &["offered", "served", "shed", "shed rate", "req/s",
+              "p50 (ms)", "p95 (ms)", "p99 (ms)", "avg batch"],
+        );
+        for pt in &points {
+            t.cells(vec![
+                Cell::num(pt.offered, format!("{:.2}", pt.offered)),
+                Cell::num(pt.served as f64, pt.served.to_string()),
+                Cell::num(pt.shed as f64, pt.shed.to_string()),
+                Cell::num(pt.shed_rate, format!("{:.3}", pt.shed_rate)),
+                Cell::num(pt.throughput_rps,
+                          format!("{:.0}", pt.throughput_rps)),
+                Cell::num(pt.p50_ms, format!("{:.3}", pt.p50_ms)),
+                Cell::num(pt.p95_ms, format!("{:.3}", pt.p95_ms)),
+                Cell::num(pt.p99_ms, format!("{:.3}", pt.p99_ms)),
+                Cell::num(pt.avg_batch, format!("{:.1}", pt.avg_batch)),
+            ]);
+        }
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(t);
+        o.note(format!(
+            "simulated backend: batch {max_batch} executes in {:.3} ms \
+             (fill {:.3} ms + {} x {:.4} ms bottleneck); no artifacts \
+             required",
+            lg.batch_exec_us as f64 / 1000.0,
+            sp.fill_ps() as f64 / 1e9,
+            max_batch - 1,
+            sp.bottleneck_ps() as f64 / 1e9,
+        ));
+        o.metric("batch_exec_ms", lg.batch_exec_us as f64 / 1000.0, "ms");
+        for pt in &points {
+            let tag = format!("{:.2}", pt.offered);
+            o.metric(format!("throughput_rps@{tag}"), pt.throughput_rps,
+                     "req/s")
+                .metric(format!("p99_ms@{tag}"), pt.p99_ms, "ms")
+                .metric(format!("shed_rate@{tag}"), pt.shed_rate, "");
+        }
+        Ok(o)
+    }
+}
+
+/// Parse the `--loads` list: comma-separated positive finite fractions.
+fn parse_loads(s: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let v: f64 = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--loads: '{part}' is not a \
+                                          number"))?;
+        if !v.is_finite() || v <= 0.0 {
+            bail!("--loads values must be positive and finite (got {v})");
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        bail!("--loads needs at least one offered-load value");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+    use crate::util::json::Json;
+
+    #[test]
+    fn parse_loads_accepts_lists_and_rejects_garbage() {
+        assert_eq!(parse_loads("0.5, 1.0,1.5").unwrap(), vec![0.5, 1.0, 1.5]);
+        assert!(parse_loads("").is_err());
+        assert!(parse_loads("0.5,zoom").is_err());
+        assert!(parse_loads("-1").is_err());
+        assert!(parse_loads("inf").is_err());
+    }
+
+    #[test]
+    fn unknown_backend_suggests_a_registered_one() {
+        let sc = scenario::find("serve").unwrap();
+        let p = scenario::params_from_json(
+            &sc.param_specs(),
+            &Json::parse(r#"{"backend": "simm"}"#).unwrap(),
+        )
+        .unwrap();
+        let err = sc.run(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("did you mean 'sim'"),
+                "{err:#}");
+    }
+}

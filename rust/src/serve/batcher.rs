@@ -47,6 +47,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::util::prop;
+    use crate::util::rng::Pcg;
     use std::sync::{mpsc, Arc, Mutex};
 
     fn req(id: u64) -> Request {
@@ -114,6 +115,75 @@ mod tests {
                 seen == (0..n as u64).collect::<Vec<_>>(),
                 "lost or reordered requests: {:?}", seen
             );
+            Ok(())
+        });
+    }
+
+    /// BatchPolicy invariants under *concurrent* pushers (the satellite
+    /// property suite): `collect` never exceeds `max_batch`, never
+    /// returns an empty batch while the queue is open, loses nothing,
+    /// and preserves each pusher's submission order (the shared queue is
+    /// FIFO in push order, so a pusher's requests fill batches oldest
+    /// first — the `max_wait` window widens a batch, never reorders it).
+    /// Schedules are seeded via `Pcg::fork`, and every asserted property
+    /// is interleaving-independent, so the verdict is identical however
+    /// the threads race (`--threads 1/2/8` alike).
+    #[test]
+    fn property_invariants_hold_under_concurrent_pushers() {
+        prop::check("batcher under concurrent pushers", 12, |g| {
+            let cap = g.usize_in(1, 9);
+            let pushers = g.usize_in(1, 4);
+            let per = g.usize_in(3, 40);
+            let mut root = Pcg::new(g.u64());
+            let q = Arc::new(SharedQueue::new());
+            let mut handles = Vec::new();
+            for pu in 0..pushers {
+                let q = q.clone();
+                let mut rng = root.fork(pu as u64);
+                handles.push(std::thread::spawn(move || {
+                    for k in 0..per {
+                        // id encodes (pusher, sequence) for order checks
+                        let id = (pu * 1_000_000 + k) as u64;
+                        if rng.below(3) == 0 {
+                            std::thread::yield_now();
+                        }
+                        assert!(q.push(req(id)).is_ok(), "queue closed early");
+                    }
+                }));
+            }
+            let b = Batcher::new(BatchPolicy {
+                max_batch: cap,
+                max_wait: Duration::from_millis(1),
+            });
+            let mut seen: Vec<u64> = Vec::new();
+            while seen.len() < pushers * per {
+                // the queue is open, so collect must yield a batch
+                let batch = match b.collect(&q) {
+                    Some(batch) => batch,
+                    None => return Err("collect None on open queue".into()),
+                };
+                crate::prop_assert!(!batch.is_empty(),
+                                    "empty batch from open queue");
+                crate::prop_assert!(batch.len() <= cap, "over capacity");
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            q.close();
+            crate::prop_assert!(seen.len() == pushers * per, "lost requests");
+            for pu in 0..pushers as u64 {
+                let mine: Vec<u64> = seen
+                    .iter()
+                    .copied()
+                    .filter(|id| id / 1_000_000 == pu)
+                    .collect();
+                crate::prop_assert!(
+                    mine == (0..per as u64).map(|k| pu * 1_000_000 + k)
+                        .collect::<Vec<_>>(),
+                    "pusher {pu} reordered: {mine:?}"
+                );
+            }
             Ok(())
         });
     }

@@ -1,0 +1,255 @@
+//! Virtual-time load generator: the serving layer's admission queue +
+//! dynamic batcher + batch engine, simulated deterministically.
+//!
+//! `serve-sim` must be bit-identical at any `--threads` count and replay
+//! byte-identically from the results store, which rules out driving real
+//! worker threads against the wall clock. Instead the generator replays
+//! the serving discipline in integer virtual microseconds: Poisson
+//! arrivals at the offered load, a bounded admission queue that sheds
+//! (the [`super::ServeOptions::max_queue_depth`] semantics), batch
+//! collection with the [`super::BatchPolicy`] fill window, and a padded
+//! batch execution time priced by the same
+//! [`event::service_profile`](crate::event::service_profile) model the
+//! [`super::SimBackend`] reports through. One simplification vs the live
+//! queue: arrivals inside an open fill window stream into that batch
+//! rather than starting a second one on an idle worker — under load the
+//! two disciplines coincide (batches fill instantly), and under light
+//! load the delta is bounded by one fill window.
+//!
+//! Load points are independent — each runs on its own `Pcg::fork` stream
+//! derived sequentially up front — so [`sweep`] fans them out over
+//! `util::pool` with bit-identical results at any thread count (the same
+//! contract as `sim`/`dse`/`noise`/`event`).
+
+use crate::util::pool;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// The serving shape one sweep simulates (shared by every load point).
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// arrivals offered per load point
+    pub requests: u64,
+    pub workers: usize,
+    /// executable batch (padded; the batcher's fill cap)
+    pub max_batch: usize,
+    /// fill window after a batch's first request, virtual µs
+    pub max_wait_us: u64,
+    /// admission bound: an arrival finding this many pending is shed
+    pub max_queue_depth: usize,
+    /// simulated execution time of one padded batch, µs
+    /// (`ServiceProfile::batch_us(max_batch)`)
+    pub batch_exec_us: u64,
+    pub seed: u64,
+}
+
+/// One offered-load point of the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadPoint {
+    /// offered load as a fraction of the padded-batch service rate
+    pub offered: f64,
+    pub served: u64,
+    pub shed: u64,
+    pub shed_rate: f64,
+    pub batches: u64,
+    pub avg_batch: f64,
+    /// served throughput over the virtual makespan
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Run every offered-load point across the worker pool; bit-identical
+/// at any thread count (per-point `Pcg::fork` streams derived
+/// sequentially, results reassembled by index).
+pub fn sweep(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<LoadPoint> {
+    let mut root = Pcg::new(cfg.seed);
+    let inputs: Vec<(f64, Pcg)> = loads
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (l, root.fork(i as u64)))
+        .collect();
+    pool::map(&inputs, |(l, rng)| run_point(cfg, *l, rng.clone()))
+}
+
+fn run_point(cfg: &LoadGenConfig, offered: f64, mut rng: Pcg) -> LoadPoint {
+    let load = offered.max(1e-3);
+    // padded-batch service rate across all workers, requests per µs
+    let rate_per_us = cfg.workers.max(1) as f64 * cfg.max_batch.max(1) as f64
+        / cfg.batch_exec_us.max(1) as f64;
+    let mean_gap_us = 1.0 / (load * rate_per_us);
+    let mut arrivals = Vec::with_capacity(cfg.requests as usize);
+    let mut t = 0u64;
+    for _ in 0..cfg.requests {
+        let u = rng.uniform();
+        let gap = (-mean_gap_us * (1.0 - u).max(f64::MIN_POSITIVE).ln())
+            .round() as u64;
+        t += gap;
+        arrivals.push(t);
+    }
+    simulate(cfg, offered, &arrivals)
+}
+
+/// Replay the serving discipline over pre-generated arrivals.
+fn simulate(cfg: &LoadGenConfig, offered: f64,
+            arrivals: &[u64]) -> LoadPoint {
+    let max_batch = cfg.max_batch.max(1);
+    let depth = cfg.max_queue_depth.max(1);
+    let mut free: BinaryHeap<Reverse<u64>> =
+        (0..cfg.workers.max(1)).map(|_| Reverse(0u64)).collect();
+    let mut pending: VecDeque<u64> = VecDeque::new();
+    let mut i = 0usize;
+    let mut shed = 0u64;
+    let mut batches = 0u64;
+    let mut served = 0u64;
+    let mut makespan = 0u64;
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(arrivals.len());
+    loop {
+        if pending.is_empty() {
+            // the next chronological event is an arrival; an empty queue
+            // always admits (every bound is >= 1)
+            let Some(&a) = arrivals.get(i) else { break };
+            pending.push_back(a);
+            i += 1;
+            continue;
+        }
+        // the earliest-free worker opens a batch on the oldest pending
+        let Reverse(f) = free.pop().expect("worker heap never empties");
+        let start = f.max(*pending.front().expect("pending non-empty"));
+        // arrivals up to the collection start join the queue one at a
+        // time against the admission bound
+        while i < arrivals.len() && arrivals[i] <= start {
+            if pending.len() >= depth {
+                shed += 1;
+            } else {
+                pending.push_back(arrivals[i]);
+            }
+            i += 1;
+        }
+        // backlog fills first (FIFO), then the fill window streams
+        // later arrivals straight into the open batch
+        let mut batch: Vec<u64> = Vec::new();
+        while batch.len() < max_batch {
+            match pending.pop_front() {
+                Some(a) => batch.push(a),
+                None => break,
+            }
+        }
+        let mut exec_start = start;
+        if batch.len() < max_batch {
+            let deadline = start + cfg.max_wait_us;
+            while batch.len() < max_batch
+                && i < arrivals.len()
+                && arrivals[i] <= deadline
+            {
+                batch.push(arrivals[i]);
+                i += 1;
+            }
+            exec_start = if batch.len() == max_batch {
+                start.max(*batch.last().expect("full batch"))
+            } else {
+                deadline
+            };
+        }
+        let done = exec_start + cfg.batch_exec_us;
+        batches += 1;
+        served += batch.len() as u64;
+        for &a in &batch {
+            lat_ms.push((done - a) as f64 / 1000.0);
+        }
+        makespan = makespan.max(done);
+        free.push(Reverse(done));
+    }
+    LoadPoint {
+        offered,
+        served,
+        shed,
+        shed_rate: shed as f64 / (served + shed).max(1) as f64,
+        batches,
+        avg_batch: served as f64 / batches.max(1) as f64,
+        throughput_rps: served as f64 / (makespan.max(1) as f64 * 1e-6),
+        mean_ms: stats::mean(&lat_ms),
+        p50_ms: stats::percentile(&lat_ms, 50.0),
+        p95_ms: stats::percentile(&lat_ms, 95.0),
+        p99_ms: stats::percentile(&lat_ms, 99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LoadGenConfig {
+        LoadGenConfig {
+            requests: 512,
+            workers: 2,
+            max_batch: 16,
+            max_wait_us: 200,
+            max_queue_depth: 64,
+            batch_exec_us: 1_000,
+            seed: 42,
+        }
+    }
+
+    fn fingerprint(pts: &[LoadPoint]) -> Vec<(u64, u64, u64, u64)> {
+        pts.iter()
+            .map(|p| {
+                (p.served, p.shed, p.p99_ms.to_bits(),
+                 p.throughput_rps.to_bits())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn conserves_every_arrival_and_respects_the_batch_cap() {
+        for load in [0.2, 0.8, 1.5] {
+            let p = &sweep(&cfg(), &[load])[0];
+            assert_eq!(p.served + p.shed, 512, "load {load}");
+            assert!(p.avg_batch <= 16.0 + 1e-9, "load {load}");
+            assert!(p.batches >= p.served / 16, "load {load}");
+            assert!(p.throughput_rps > 0.0);
+            assert!(p.p50_ms <= p.p95_ms && p.p95_ms <= p.p99_ms);
+            assert!(p.mean_ms >= cfg().batch_exec_us as f64 / 1000.0 - 1e-9,
+                    "sojourn below the batch execution time");
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let loads = [0.5, 0.9, 1.2];
+        assert_eq!(fingerprint(&sweep(&cfg(), &loads)),
+                   fingerprint(&sweep(&cfg(), &loads)));
+        // a different seed is a different experiment
+        let other = LoadGenConfig { seed: 43, ..cfg() };
+        assert_ne!(fingerprint(&sweep(&cfg(), &loads)),
+                   fingerprint(&sweep(&other, &loads)));
+    }
+
+    #[test]
+    fn light_load_never_sheds_and_overload_does() {
+        let light = &sweep(&cfg(), &[0.2])[0];
+        assert_eq!(light.shed, 0, "{light:?}");
+        // a tiny admission bound under 3x overload must shed
+        let tight = LoadGenConfig { max_queue_depth: 4, ..cfg() };
+        let over = &sweep(&tight, &[3.0])[0];
+        assert!(over.shed > 0, "{over:?}");
+        assert!(over.shed_rate > 0.0 && over.shed_rate < 1.0);
+    }
+
+    #[test]
+    fn tail_latency_grows_with_offered_load() {
+        // no shedding (huge bound): an overloaded queue must show up as
+        // a heavier tail, not vanish into rejections
+        let open = LoadGenConfig { max_queue_depth: 1 << 20, ..cfg() };
+        let pts = sweep(&open, &[0.3, 1.4]);
+        assert_eq!(pts[0].shed + pts[1].shed, 0);
+        assert!(
+            pts[1].p99_ms > pts[0].p99_ms,
+            "p99 {} vs {}", pts[0].p99_ms, pts[1].p99_ms
+        );
+    }
+}

@@ -1,0 +1,258 @@
+//! Serving metrics: lock-light atomic counters on the hot path, reduced
+//! on demand into a typed [`MetricsSnapshot`] — counters, batch-fill and
+//! pad fraction, mean exec/queue latency, and p50/p95/p99 over a bounded
+//! latency window — with `Display` (the exact one-line summary the CLI
+//! has always printed) and [`MetricsSnapshot::to_json`] for the scenario
+//! layer's typed outcomes. The old `summary() -> String` API is gone:
+//! renderers format the snapshot, machines read its fields.
+
+use crate::util::json::{self, Json};
+use crate::util::stats;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sliding window of per-request latencies retained for the percentile
+/// summary (bounds memory on long-running deployments).
+pub const LATENCY_WINDOW: usize = 16_384;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    /// requests whose batch execution failed (error responses sent)
+    pub failed: AtomicU64,
+    /// requests refused at admission (bounded queue depth exceeded)
+    pub shed: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub exec_us_total: AtomicU64,
+    pub queue_us_total: AtomicU64,
+    /// most recent per-request total latencies (µs), capped at
+    /// [`LATENCY_WINDOW`]; powers the snapshot percentiles — the same
+    /// `util::stats::percentile` path the event simulator's
+    /// request-level mode reports through
+    pub lat_us: Mutex<VecDeque<u64>>,
+    /// most recent batch-failure cause, surfaced on the snapshot instead
+    /// of an `eprintln!` interleaving with suite/JSON output
+    last_error: Mutex<Option<String>>,
+}
+
+impl Metrics {
+    /// Record one served request's total (queue + exec) latency.
+    pub fn record_latency_us(&self, us: u64) {
+        if let Ok(mut w) = self.lat_us.lock() {
+            if w.len() == LATENCY_WINDOW {
+                w.pop_front();
+            }
+            w.push_back(us);
+        }
+    }
+
+    /// Record a batch-failure cause (kept: the most recent one).
+    pub fn note_error(&self, msg: &str) {
+        if let Ok(mut e) = self.last_error.lock() {
+            *e = Some(msg.to_string());
+        }
+    }
+
+    /// Sorted snapshot of the latency window, in milliseconds (one lock
+    /// acquisition + one sort, however many percentiles are read off it).
+    fn latency_snapshot_ms(&self) -> Vec<f64> {
+        let mut lat: Vec<f64> = match self.lat_us.lock() {
+            Ok(w) => w.iter().map(|&u| u as f64 / 1000.0).collect(),
+            Err(_) => return Vec::new(),
+        };
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat
+    }
+
+    /// Percentile over the retained latency window, in milliseconds.
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        stats::percentile_sorted(&self.latency_snapshot_ms(), p)
+    }
+
+    /// Reduce the live counters into one coherent typed view.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let padded_slots = self.padded_slots.load(Ordering::Relaxed);
+        let slots = requests + padded_slots;
+        let lat = self.latency_snapshot_ms();
+        MetricsSnapshot {
+            requests,
+            failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            batches,
+            padded_slots,
+            avg_batch: requests as f64 / batches.max(1) as f64,
+            pad_frac: if slots == 0 {
+                0.0
+            } else {
+                padded_slots as f64 / slots as f64
+            },
+            avg_exec_ms: self.exec_us_total.load(Ordering::Relaxed) as f64
+                / batches.max(1) as f64
+                / 1000.0,
+            avg_queue_ms: self.queue_us_total.load(Ordering::Relaxed) as f64
+                / requests.max(1) as f64
+                / 1000.0,
+            lat_p50_ms: stats::percentile_sorted(&lat, 50.0),
+            lat_p95_ms: stats::percentile_sorted(&lat, 95.0),
+            lat_p99_ms: stats::percentile_sorted(&lat, 99.0),
+            last_error: self.last_error.lock().ok().and_then(|e| e.clone()),
+        }
+    }
+}
+
+/// One coherent read of the serving metrics. `Display` renders the
+/// historical one-line summary (byte-identical when nothing was shed, so
+/// the PJRT `serve` scenario text stays golden); `to_json` is the typed
+/// form the scenario layer embeds in outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub avg_batch: f64,
+    pub pad_frac: f64,
+    pub avg_exec_ms: f64,
+    pub avg_queue_ms: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p95_ms: f64,
+    pub lat_p99_ms: f64,
+    /// most recent batch-failure cause (JSON/field only — never printed
+    /// by `Display`, so stdout stays renderable)
+    pub last_error: Option<String>,
+}
+
+impl fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "requests={} failed={} batches={} avg_batch={:.1} \
+             pad_frac={:.3} avg_exec={:.2}ms avg_queue={:.2}ms \
+             lat_p50={:.2}ms lat_p99={:.2}ms",
+            self.requests,
+            self.failed,
+            self.batches,
+            self.avg_batch,
+            self.pad_frac,
+            self.avg_exec_ms,
+            self.avg_queue_ms,
+            self.lat_p50_ms,
+            self.lat_p99_ms,
+        )?;
+        if self.shed > 0 {
+            write!(f, " shed={}", self.shed)?;
+        }
+        Ok(())
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("padded_slots", Json::Num(self.padded_slots as f64)),
+            ("avg_batch", Json::Num(self.avg_batch)),
+            ("pad_frac", Json::Num(self.pad_frac)),
+            ("avg_exec_ms", Json::Num(self.avg_exec_ms)),
+            ("avg_queue_ms", Json::Num(self.avg_queue_ms)),
+            ("lat_p50_ms", Json::Num(self.lat_p50_ms)),
+            ("lat_p95_ms", Json::Num(self.lat_p95_ms)),
+            ("lat_p99_ms", Json::Num(self.lat_p99_ms)),
+        ];
+        if let Some(e) = &self.last_error {
+            pairs.push(("last_error", Json::Str(e.clone())));
+        }
+        json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_display_formats_like_the_old_summary() {
+        let m = Metrics::default();
+        m.requests.store(10, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        let s = m.snapshot().to_string();
+        assert!(s.contains("requests=10"));
+        assert!(s.contains("avg_batch=5.0"));
+        assert!(s.contains("failed=0"));
+        // nothing shed, nothing failed: the historical format exactly
+        assert!(!s.contains("shed="), "{s}");
+        assert!(s.ends_with("ms"), "{s}");
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::default();
+        // empty window: percentiles report 0 (callers see an idle server)
+        assert_eq!(m.latency_percentile_ms(50.0), 0.0);
+        for us in [1000u64, 2000, 3000, 4000] {
+            m.record_latency_us(us);
+        }
+        assert!((m.latency_percentile_ms(50.0) - 2.5).abs() < 1e-9);
+        assert!((m.latency_percentile_ms(100.0) - 4.0).abs() < 1e-9);
+        let snap = m.snapshot();
+        assert!((snap.lat_p50_ms - 2.5).abs() < 1e-9);
+        assert!(snap.lat_p50_ms <= snap.lat_p95_ms);
+        assert!(snap.lat_p95_ms <= snap.lat_p99_ms);
+        let s = snap.to_string();
+        assert!(s.contains("lat_p50=2.50ms"), "{s}");
+        assert!(s.contains("lat_p99="), "{s}");
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let m = Metrics::default();
+        for us in 0..(LATENCY_WINDOW as u64 + 100) {
+            m.record_latency_us(us);
+        }
+        let w = m.lat_us.lock().unwrap();
+        assert_eq!(w.len(), LATENCY_WINDOW);
+        // the oldest 100 samples were evicted
+        assert_eq!(*w.front().unwrap(), 100);
+    }
+
+    #[test]
+    fn pad_frac_zero_when_unserved() {
+        // regression: the old max(1) clamp reported a bogus fraction for
+        // an idle coordinator
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().pad_frac, 0.0);
+        m.padded_slots.store(3, Ordering::Relaxed);
+        m.requests.store(1, Ordering::Relaxed);
+        assert!((m.snapshot().pad_frac - 0.75).abs() < 1e-12);
+        assert!(m.snapshot().to_string().contains("pad_frac=0.750"));
+    }
+
+    #[test]
+    fn shed_and_last_error_surface_on_the_snapshot() {
+        let m = Metrics::default();
+        m.shed.store(7, Ordering::Relaxed);
+        m.note_error("boom");
+        let snap = m.snapshot();
+        assert_eq!(snap.shed, 7);
+        assert_eq!(snap.last_error.as_deref(), Some("boom"));
+        // shed shows in Display, the error only in the typed forms
+        let s = snap.to_string();
+        assert!(s.contains("shed=7"), "{s}");
+        assert!(!s.contains("boom"), "{s}");
+        let j = snap.to_json();
+        assert_eq!(j.get("shed").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("last_error").and_then(Json::as_str), Some("boom"));
+        // absent error omits the key (readers ignore unknown keys anyway)
+        assert!(Metrics::default().snapshot().to_json().get("last_error")
+            .is_none());
+    }
+}

@@ -1,0 +1,738 @@
+//! The serving layer: a backend-agnostic inference service.
+//!
+//! Requests (single images) arrive on a shared multi-consumer queue
+//! behind an **admission controller** (bounded queue depth with typed
+//! load-shedding); a dynamic [`batcher`] groups them up to the backend's
+//! fixed batch (padding the tail), worker threads execute the batch on a
+//! pluggable [`InferenceBackend`], and responses fan back out to the
+//! callers. std::thread based (the offline registry has no tokio); the
+//! architecture mirrors a vLLM-style router: admission queue -> batcher
+//! -> execution engine -> response demux.
+//!
+//! **What executes a batch is a trait, not a hard-coded runtime.** The
+//! coordinator used to construct the PJRT runtime inside its worker
+//! threads, welding every serving scenario to compiled XLA artifacts.
+//! Now [`InferenceBackend`] declares the executable's shape (batch /
+//! classes / flattened image length) and a per-worker-thread setup hook,
+//! and two implementations are registered ([`BACKENDS`]):
+//!
+//! - [`pjrt::PjrtBackend`] — the compiled-artifact path (PJRT objects
+//!   are thread-local `Rc`s, so every worker builds its own client +
+//!   executable inside [`InferenceBackend::worker`]);
+//! - [`sim::SimBackend`] — logits synthesized deterministically from the
+//!   image content and per-batch latency priced by
+//!   `model::network_cost` + the `event` pipeline's service-time model,
+//!   so serving runs end-to-end with **zero artifacts** (CI, the suite
+//!   runner, `serve-sim`).
+//!
+//! N workers collect and execute batches concurrently: the queue
+//! releases its lock while a worker waits (see [`queue`]), so one
+//! worker's fill window never blocks the others. [`metrics::Metrics`]
+//! reduces to a typed [`metrics::MetricsSnapshot`] (no stringly
+//! `summary()`), and [`loadgen`] drives the service model in virtual
+//! time for the deterministic `serve-sim` offered-load sweep.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod pjrt;
+pub mod queue;
+pub mod sim;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot, LATENCY_WINDOW};
+pub use pjrt::{open_runtime, ExtraInput, PjrtBackend};
+pub use queue::SharedQueue;
+pub use sim::SimBackend;
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// The registered backends: `(name, description)`. Scenario `--backend`
+/// parsing and help text iterate this list; construction stays with the
+/// caller because each backend has its own inputs (artifact directory
+/// vs network + chip config).
+pub const BACKENDS: [(&str, &str); 2] = [
+    ("pjrt", "compiled XLA artifacts via PJRT (needs `make artifacts`)"),
+    ("sim", "simulated chip: deterministic logits + model/event latency, \
+             zero artifacts"),
+];
+
+/// The registered backend names, in registry order.
+pub fn backend_names() -> Vec<&'static str> {
+    BACKENDS.iter().map(|(n, _)| *n).collect()
+}
+
+/// One inference backend: what executes a padded batch of images. The
+/// object itself is shared across worker threads (`Send + Sync`); all
+/// thread-local execution state lives in the [`BackendWorker`] each
+/// thread builds for itself.
+pub trait InferenceBackend: Send + Sync {
+    /// Registry name ("pjrt", "sim", ...).
+    fn name(&self) -> &'static str;
+
+    /// The executable's fixed batch; partial batches are padded to it.
+    fn batch(&self) -> usize;
+
+    /// Logit classes per image.
+    fn classes(&self) -> usize;
+
+    /// Flattened image length (h * w * c) a request must match.
+    fn image_len(&self) -> usize;
+
+    /// Per-worker-thread setup, called **on the worker thread itself**
+    /// so non-`Send` state (PJRT `Rc`s) never crosses threads. Errors
+    /// surface through the coordinator's ready barrier.
+    fn worker(&self) -> Result<Box<dyn BackendWorker>>;
+}
+
+/// Thread-local execution state of one worker.
+pub trait BackendWorker {
+    /// Execute one padded batch; `input.data` holds `batch * image_len`
+    /// floats (live requests first, tail padded by repetition).
+    fn execute(&mut self, input: &BatchInput) -> Result<BatchResult>;
+}
+
+/// One assembled batch, ready to execute.
+pub struct BatchInput<'a> {
+    /// `batch * image_len` floats
+    pub data: &'a [f32],
+    /// live requests at the front (the rest is padding)
+    pub n: usize,
+    pub image_len: usize,
+}
+
+/// What a backend returns for one batch.
+pub struct BatchResult {
+    /// `batch * classes` logits
+    pub logits: Vec<f32>,
+    /// execution time attributed to the batch, µs — wall-clock for the
+    /// PJRT backend, simulated chip time for [`sim::SimBackend`]
+    pub exec_us: u64,
+}
+
+/// One inference request: a single image (u8-valued f32 HWC).
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub respond: mpsc::Sender<Response>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub exec_us: u64,
+    pub batch_size: usize,
+    /// `Some(cause)` when the batch this request rode in failed; `logits`
+    /// is empty then. Lets callers distinguish batch failure (an error
+    /// response arrives) from shutdown (the response channel disconnects).
+    pub error: Option<String>,
+}
+
+/// The admission controller's typed refusal: the bounded queue was full
+/// at submission time, so the request was shed instead of enqueued.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rejection {
+    /// queue depth observed at admission
+    pub depth: usize,
+    /// the configured [`ServeOptions::max_queue_depth`]
+    pub limit: usize,
+}
+
+/// Outcome of [`Coordinator::submit`]: admitted (await the response on
+/// the receiver) or shed by the admission controller.
+pub enum Submission {
+    Accepted(mpsc::Receiver<Response>),
+    Rejected(Rejection),
+}
+
+impl Submission {
+    /// Unwrap an admission the caller did not configure to shed (no
+    /// `max_queue_depth`): rejection becomes an error.
+    pub fn accepted(self) -> Result<mpsc::Receiver<Response>> {
+        match self {
+            Submission::Accepted(rx) => Ok(rx),
+            Submission::Rejected(r) => Err(anyhow!(
+                "request shed: queue depth {} at limit {}",
+                r.depth,
+                r.limit
+            )),
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, Submission::Rejected(_))
+    }
+}
+
+/// Serving-side knobs, independent of which backend executes batches.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub workers: usize,
+    /// batching window: how long a partial batch waits after its first
+    /// request
+    pub max_wait: Duration,
+    /// batcher fill cap; 0 (the default) = the backend's executable
+    /// batch. A smaller cap trades padding for latency.
+    pub max_batch: usize,
+    /// admission control: shed a submission (typed [`Rejection`]) when
+    /// the shared queue already holds this many pending requests;
+    /// `None` = never shed. The bound is checked against the
+    /// instantaneous depth, so concurrent submitters can overshoot by
+    /// their in-flight count — a safety valve, not an exact semaphore.
+    pub max_queue_depth: Option<usize>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 1,
+            max_wait: Duration::from_millis(5),
+            max_batch: 0,
+            max_queue_depth: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The pluggable batch-policy construction: explicit cap if given,
+    /// else the backend's executable batch (never above it — slots past
+    /// the executable batch could not execute).
+    fn policy_for(&self, backend: &dyn InferenceBackend) -> BatchPolicy {
+        let cap = backend.batch();
+        BatchPolicy {
+            max_batch: if self.max_batch == 0 {
+                cap
+            } else {
+                self.max_batch.min(cap)
+            },
+            max_wait: self.max_wait,
+        }
+    }
+}
+
+/// Handle the caller keeps: submit images, await logits. Generic over
+/// the [`InferenceBackend`] that executes batches.
+pub struct Coordinator {
+    backend: Arc<dyn InferenceBackend>,
+    queue: Arc<SharedQueue<Request>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    max_queue_depth: Option<usize>,
+}
+
+impl Coordinator {
+    /// Start worker threads over an owned backend.
+    pub fn start<B: InferenceBackend + 'static>(
+        backend: B, opts: ServeOptions,
+    ) -> Result<Coordinator> {
+        Self::start_dyn(Arc::new(backend), opts)
+    }
+
+    /// Start worker threads over a shared backend handle.
+    pub fn start_dyn(backend: Arc<dyn InferenceBackend>,
+                     opts: ServeOptions) -> Result<Coordinator> {
+        let queue = Arc::new(SharedQueue::new());
+        let metrics = Arc::new(Metrics::default());
+        let policy = opts.policy_for(backend.as_ref());
+        let (batch, classes) = (backend.batch(), backend.classes());
+        // ready-barrier: surface backend setup errors (missing
+        // artifacts, compile failures) to the caller
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::new();
+        for _ in 0..opts.workers.max(1) {
+            let backend = backend.clone();
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let policy = policy.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                // backend worker state lives and dies on this thread
+                let mut worker = match backend.worker() {
+                    Ok(w) => {
+                        let _ = ready.send(Ok(()));
+                        w
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                let batcher = Batcher::new(policy);
+                loop {
+                    let Some(reqs) = batcher.collect(&queue) else { break };
+                    if reqs.is_empty() {
+                        continue;
+                    }
+                    run_batch(worker.as_mut(), reqs, batch, classes,
+                              &metrics);
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..opts.workers.max(1) {
+            let ready = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker died during setup"))
+                .and_then(|r| r);
+            if let Err(e) = ready {
+                // release the workers that did come up, and join them so
+                // no thread outlives the failed start
+                queue.close();
+                for w in workers {
+                    let _ = w.join();
+                }
+                return Err(e);
+            }
+        }
+        Ok(Coordinator {
+            backend,
+            queue,
+            next_id: AtomicU64::new(0),
+            metrics,
+            workers,
+            max_queue_depth: opts.max_queue_depth,
+        })
+    }
+
+    /// Submit one image. `Ok(Submission::Accepted)` carries the response
+    /// receiver; `Ok(Submission::Rejected)` is the admission controller
+    /// shedding load (counted in [`Metrics::shed`]); `Err` means a
+    /// malformed image or a stopped coordinator.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Submission> {
+        anyhow::ensure!(
+            image.len() == self.backend.image_len(),
+            "bad image size {} (backend wants {})",
+            image.len(),
+            self.backend.image_len()
+        );
+        if let Some(limit) = self.max_queue_depth {
+            let depth = self.queue.len();
+            if depth >= limit {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Ok(Submission::Rejected(Rejection { depth, limit }));
+            }
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue
+            .push(Request { id, image, respond: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(Submission::Accepted(rrx))
+    }
+
+    /// The backend executing batches (shape queries, registry name).
+    pub fn backend(&self) -> &dyn InferenceBackend {
+        self.backend.as_ref()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.backend.classes()
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.backend.image_len()
+    }
+
+    /// Requests admitted but not yet collected into a batch.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Stop accepting work, drain what was admitted, and join every
+    /// worker. Deterministic contract: every in-flight request gets a
+    /// [`Response`] (workers drain the closed queue) or — if its worker
+    /// died — a channel disconnect; a caller blocked on `recv()` never
+    /// hangs past this call returning.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.queue.close();
+        for w in std::mem::take(&mut self.workers) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // same drain-and-join as shutdown(): dropping the handle (e.g. a
+        // panicking test) used to close the queue but leave workers
+        // running, racing pending callers against process teardown
+        self.close_and_join();
+    }
+}
+
+/// Assemble, execute, and demux one batch. Queue time is attributed per
+/// rider as `enqueued -> execution start` — the previous
+/// `total - exec_us` form charged the whole batch execution window to
+/// every rider and saturated to zero for requests that arrived mid-fill
+/// (or whenever a backend reports simulated `exec_us` larger than wall
+/// time). Failures answer every caller with the cause and land on
+/// [`Metrics::note_error`] instead of stderr.
+fn run_batch(worker: &mut dyn BackendWorker, reqs: Vec<Request>,
+             batch: usize, classes: usize, metrics: &Metrics) {
+    let n = reqs.len();
+    let image_len = reqs[0].image.len();
+    let mut data = Vec::with_capacity(batch * image_len);
+    for r in &reqs {
+        data.extend_from_slice(&r.image);
+    }
+    // pad the tail by repeating the last image (results discarded)
+    for _ in n..batch {
+        data.extend_from_slice(&reqs[n - 1].image);
+    }
+    let exec_start = Instant::now();
+    let result = worker
+        .execute(&BatchInput { data: &data, n, image_len })
+        .and_then(|r| {
+            anyhow::ensure!(
+                r.logits.len() == batch * classes,
+                "bad logits size {} (want {})",
+                r.logits.len(),
+                batch * classes
+            );
+            Ok(r)
+        });
+    match result {
+        Ok(BatchResult { logits, exec_us }) => {
+            metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .padded_slots
+                .fetch_add((batch - n) as u64, Ordering::Relaxed);
+            metrics.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+            for (i, r) in reqs.into_iter().enumerate() {
+                let queue_us = exec_start
+                    .saturating_duration_since(r.enqueued)
+                    .as_micros() as u64;
+                metrics.queue_us_total.fetch_add(queue_us, Ordering::Relaxed);
+                metrics.record_latency_us(queue_us + exec_us);
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    queue_us,
+                    exec_us,
+                    batch_size: n,
+                    error: None,
+                });
+            }
+        }
+        Err(e) => {
+            // don't drop the requests: answer every caller with the
+            // cause and count the failures
+            metrics.failed.fetch_add(n as u64, Ordering::Relaxed);
+            let msg = format!("{e:#}");
+            metrics.note_error(&msg);
+            for r in reqs {
+                let queue_us = r.enqueued.elapsed().as_micros() as u64;
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    logits: Vec::new(),
+                    queue_us,
+                    exec_us: 0,
+                    batch_size: n,
+                    error: Some(msg.clone()),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal in-process backend: one-hot logits keyed off each image's
+    /// first value, configurable simulated `exec_us`, wall-clock stall,
+    /// and failure injection.
+    struct TestBackend {
+        batch: usize,
+        classes: usize,
+        image_len: usize,
+        exec_us: u64,
+        stall: Duration,
+        fail: bool,
+    }
+
+    impl TestBackend {
+        fn quick(batch: usize) -> TestBackend {
+            TestBackend {
+                batch,
+                classes: 4,
+                image_len: 3,
+                exec_us: 10,
+                stall: Duration::ZERO,
+                fail: false,
+            }
+        }
+    }
+
+    impl InferenceBackend for TestBackend {
+        fn name(&self) -> &'static str {
+            "test"
+        }
+
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn classes(&self) -> usize {
+            self.classes
+        }
+
+        fn image_len(&self) -> usize {
+            self.image_len
+        }
+
+        fn worker(&self) -> Result<Box<dyn BackendWorker>> {
+            Ok(Box::new(TestWorker {
+                classes: self.classes,
+                exec_us: self.exec_us,
+                stall: self.stall,
+                fail: self.fail,
+            }))
+        }
+    }
+
+    struct TestWorker {
+        classes: usize,
+        exec_us: u64,
+        stall: Duration,
+        fail: bool,
+    }
+
+    impl BackendWorker for TestWorker {
+        fn execute(&mut self, input: &BatchInput) -> Result<BatchResult> {
+            if self.fail {
+                anyhow::bail!("injected failure");
+            }
+            if !self.stall.is_zero() {
+                std::thread::sleep(self.stall);
+            }
+            let slots = input.data.len() / input.image_len;
+            let mut logits = vec![0.0f32; slots * self.classes];
+            for i in 0..slots {
+                let class =
+                    input.data[i * input.image_len] as usize % self.classes;
+                logits[i * self.classes + class] = 1.0;
+            }
+            Ok(BatchResult { logits, exec_us: self.exec_us })
+        }
+    }
+
+    fn image(class: usize) -> Vec<f32> {
+        vec![class as f32, 0.0, 0.0]
+    }
+
+    fn argmax(logits: &[f32]) -> usize {
+        let mut best = 0;
+        for (j, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn serves_demuxed_logits_through_a_test_backend() {
+        let coord = Coordinator::start(
+            TestBackend::quick(4),
+            ServeOptions {
+                workers: 2,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        for i in 0..10usize {
+            let rx = coord.submit(image(i % 4)).unwrap().accepted().unwrap();
+            pending.push((rx, i % 4));
+        }
+        for (rx, want) in pending {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.logits.len(), 4);
+            assert_eq!(argmax(&r.logits), want);
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.requests, 10);
+        assert_eq!(snap.failed, 0);
+        assert!(snap.batches >= 3, "{snap:?}"); // 10 requests, batch cap 4
+        // every batch pads to 4 slots exactly
+        assert_eq!(snap.requests + snap.padded_slots, snap.batches * 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_wrong_image_size() {
+        let coord =
+            Coordinator::start(TestBackend::quick(2), ServeOptions::default())
+                .unwrap();
+        assert!(coord.submit(vec![0.0; 5]).is_err());
+        coord.shutdown();
+    }
+
+    /// Satellite regression: queue time is `enqueued -> exec start`, not
+    /// `total - exec_us`. The backend reports a *simulated* exec_us far
+    /// larger than wall time; the old attribution saturated every
+    /// rider's queue_us to zero and charged followers the full window.
+    #[test]
+    fn queue_time_is_enqueue_to_exec_start() {
+        let backend = TestBackend {
+            exec_us: 1_000_000, // 1 s of simulated chip time, ~0 wall
+            ..TestBackend::quick(2)
+        };
+        let coord = Coordinator::start(
+            backend,
+            ServeOptions {
+                workers: 1,
+                max_wait: Duration::from_secs(5),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx1 = coord.submit(image(0)).unwrap().accepted().unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        let rx2 = coord.submit(image(1)).unwrap().accepted().unwrap();
+        let (r1, r2) = (rx1.recv().unwrap(), rx2.recv().unwrap());
+        assert_eq!(r1.exec_us, 1_000_000);
+        // the first request waited out the fill window (~40 ms); the old
+        // `total - exec_us` form would have reported 0 here
+        assert!(
+            r1.queue_us >= 20_000,
+            "first rider's fill wait lost: queue_us {}",
+            r1.queue_us
+        );
+        // the mid-fill arrival waited less than the batch opener — it
+        // must not be charged the opener's window
+        assert!(
+            r2.queue_us < r1.queue_us,
+            "rider charged the opener's wait: {} vs {}",
+            r2.queue_us,
+            r1.queue_us
+        );
+        // recorded latency is queue + exec, coherently
+        assert_eq!(
+            coord.metrics.queue_us_total.load(Ordering::Relaxed),
+            r1.queue_us + r2.queue_us
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_failure_answers_callers_and_lands_on_the_snapshot() {
+        let backend = TestBackend { fail: true, ..TestBackend::quick(4) };
+        let coord = Coordinator::start(
+            backend,
+            ServeOptions {
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        for i in 0..3usize {
+            pending.push(coord.submit(image(i)).unwrap().accepted().unwrap());
+        }
+        for rx in pending {
+            let r = rx.recv().unwrap();
+            assert!(r.logits.is_empty());
+            assert!(r.error.as_deref().unwrap().contains("injected failure"));
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.failed, 3);
+        assert_eq!(snap.requests, 0);
+        assert!(
+            snap.last_error.as_deref().unwrap().contains("injected failure"),
+            "{snap:?}"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn admission_control_sheds_beyond_the_depth_bound() {
+        // batch 1 + a long stall: the worker takes the first request and
+        // blocks in execute, so subsequent submissions pile up against
+        // the depth bound deterministically
+        let backend = TestBackend {
+            stall: Duration::from_millis(150),
+            ..TestBackend::quick(1)
+        };
+        let coord = Coordinator::start(
+            backend,
+            ServeOptions {
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                max_queue_depth: Some(2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let first = coord.submit(image(0)).unwrap().accepted().unwrap();
+        // wait until the worker has pulled the first request off the
+        // queue and is stalled inside execute
+        while coord.queue_depth() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let a = coord.submit(image(1)).unwrap();
+        let b = coord.submit(image(2)).unwrap();
+        let c = coord.submit(image(3)).unwrap();
+        assert!(!a.is_rejected() && !b.is_rejected());
+        match &c {
+            Submission::Rejected(r) => {
+                assert_eq!((r.depth, r.limit), (2, 2));
+            }
+            Submission::Accepted(_) => panic!("third submission not shed"),
+        }
+        assert_eq!(coord.metrics.shed.load(Ordering::Relaxed), 1);
+        // the admitted requests all complete
+        assert!(first.recv().unwrap().error.is_none());
+        for s in [a, b] {
+            assert!(s.accepted().unwrap().recv().unwrap().error.is_none());
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert!(snap.to_string().contains("shed=1"));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn worker_setup_failure_surfaces_and_joins() {
+        struct BadBackend;
+        impl InferenceBackend for BadBackend {
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+            fn batch(&self) -> usize {
+                1
+            }
+            fn classes(&self) -> usize {
+                1
+            }
+            fn image_len(&self) -> usize {
+                1
+            }
+            fn worker(&self) -> Result<Box<dyn BackendWorker>> {
+                anyhow::bail!("no runtime here")
+            }
+        }
+        let err = Coordinator::start(
+            BadBackend,
+            ServeOptions { workers: 3, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no runtime here"));
+    }
+}

@@ -1,0 +1,194 @@
+//! The simulated backend: serving with **zero artifacts**.
+//!
+//! Mirrors RAPIDNN's decoupling of the neural workload from the
+//! substrate executing it: the serving path talks to the
+//! [`InferenceBackend`] trait, and this implementation stands in for the
+//! analog chip by *pricing* each batch instead of executing it —
+//! per-batch latency comes from the event pipeline's service-time model
+//! ([`event::service_profile`]) over the memoized
+//! [`model::network_cost`] table, and logits are a deterministic hash of
+//! each image's content. Every quantity it reports is simulated chip
+//! time, so serving scenarios (CI, the suite runner, `serve-sim`) run
+//! end-to-end — batching, padding, admission control, metrics — with no
+//! XLA artifacts present and reproduce bit-identically.
+
+use super::{BackendWorker, BatchInput, BatchResult, InferenceBackend};
+use crate::config::AcceleratorConfig;
+use crate::util::num::{fnv1a64_step, FNV1A64_OFFSET};
+use crate::util::rng::Pcg;
+use crate::workloads::Network;
+use crate::{event, model};
+use anyhow::Result;
+
+/// FNV-1a (the store's canonical hash, streamed via
+/// `util::num::fnv1a64_step`) over an image's raw f32 bits, with the
+/// backend seed mixed into the offset basis — the deterministic
+/// identity a simulated inference answers for.
+fn image_hash(img: &[f32], seed: u64) -> u64 {
+    let mut h = FNV1A64_OFFSET ^ seed;
+    for v in img {
+        for b in v.to_bits().to_le_bytes() {
+            h = fnv1a64_step(h, b);
+        }
+    }
+    h
+}
+
+/// The simulated chip backend (shared across worker threads; workers
+/// are stateless copies of the priced shape).
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    network: String,
+    batch: usize,
+    classes: usize,
+    image_len: usize,
+    seed: u64,
+    /// simulated execution time of one (padded) batch, µs
+    exec_us: u64,
+}
+
+impl SimBackend {
+    /// Price a serving backend for `net` on `cfg`: the executable batch
+    /// costs `fill + (batch-1) x bottleneck` of simulated chip time
+    /// (padding executes like the PJRT path — the full batch runs
+    /// regardless of fill). Classes come from the network's final layer.
+    pub fn new(net: &Network, cfg: &AcceleratorConfig, batch: usize,
+               image_len: usize, seed: u64) -> SimBackend {
+        let nc = model::network_cost(net, cfg);
+        let sp = event::service_profile(cfg, &nc);
+        let classes = net
+            .layers
+            .last()
+            .expect("network has no layers")
+            .cout as usize;
+        SimBackend {
+            network: net.name.to_string(),
+            batch: batch.max(1),
+            classes,
+            image_len,
+            seed,
+            exec_us: sp.batch_us(batch.max(1) as u64),
+        }
+    }
+
+    /// The priced per-batch execution time, µs (simulated).
+    pub fn exec_us(&self) -> u64 {
+        self.exec_us
+    }
+
+    /// The network this backend simulates.
+    pub fn network(&self) -> &str {
+        &self.network
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn worker(&self) -> Result<Box<dyn BackendWorker>> {
+        Ok(Box::new(SimWorker {
+            classes: self.classes,
+            seed: self.seed,
+            exec_us: self.exec_us,
+        }))
+    }
+}
+
+struct SimWorker {
+    classes: usize,
+    seed: u64,
+    exec_us: u64,
+}
+
+impl BackendWorker for SimWorker {
+    fn execute(&mut self, input: &BatchInput) -> Result<BatchResult> {
+        let slots = input.data.len() / input.image_len;
+        let mut logits = Vec::with_capacity(slots * self.classes);
+        for img in input.data.chunks_exact(input.image_len) {
+            let mut rng = Pcg::new(image_hash(img, self.seed));
+            for _ in 0..self.classes {
+                logits.push(rng.uniform() as f32);
+            }
+        }
+        Ok(BatchResult { logits, exec_us: self.exec_us })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn backend(batch: usize) -> SimBackend {
+        SimBackend::new(
+            &workloads::synthetic_cnn(),
+            &AcceleratorConfig::neural_pim(),
+            batch,
+            12,
+            42,
+        )
+    }
+
+    #[test]
+    fn declares_the_networks_shape() {
+        let b = backend(64);
+        assert_eq!(b.name(), "sim");
+        assert_eq!(b.batch(), 64);
+        // SyntheticCNN ends in fc -> 10
+        assert_eq!(b.classes(), 10);
+        assert_eq!(b.image_len(), 12);
+        assert!(b.exec_us() >= 1);
+    }
+
+    #[test]
+    fn batch_time_grows_with_batch_and_is_deterministic() {
+        assert!(backend(128).exec_us() > backend(1).exec_us());
+        assert_eq!(backend(64).exec_us(), backend(64).exec_us());
+    }
+
+    #[test]
+    fn logits_are_a_deterministic_function_of_image_and_seed() {
+        let b = backend(2);
+        let mut w = b.worker().unwrap();
+        let data: Vec<f32> = (0..24).map(|i| (i % 7) as f32).collect();
+        let a1 = w.execute(&BatchInput { data: &data, n: 2, image_len: 12 })
+            .unwrap();
+        let a2 = w.execute(&BatchInput { data: &data, n: 2, image_len: 12 })
+            .unwrap();
+        assert_eq!(a1.logits, a2.logits);
+        assert_eq!(a1.logits.len(), 2 * 10);
+        assert_eq!(a1.exec_us, b.exec_us());
+        // a different image produces different logits...
+        let mut other = data.clone();
+        other[0] += 1.0;
+        let a3 = w.execute(&BatchInput { data: &other, n: 2, image_len: 12 })
+            .unwrap();
+        assert_ne!(a1.logits[..10], a3.logits[..10]);
+        // ...and so does a different backend seed
+        let b2 = SimBackend::new(
+            &workloads::synthetic_cnn(),
+            &AcceleratorConfig::neural_pim(),
+            2,
+            12,
+            43,
+        );
+        let a4 = b2.worker().unwrap()
+            .execute(&BatchInput { data: &data, n: 2, image_len: 12 })
+            .unwrap();
+        assert_ne!(a1.logits, a4.logits);
+    }
+}

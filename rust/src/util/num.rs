@@ -15,16 +15,23 @@ pub fn ceil_log2(x: u64) -> u32 {
     }
 }
 
+/// FNV-1a offset basis: the initial state every 64-bit FNV-1a stream
+/// starts from (streaming callers may mix extra entropy into it).
+pub const FNV1A64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One 64-bit FNV-1a step — the single fold both [`fnv1a64`] and
+/// streaming callers (e.g. the serve layer's image hash) share, so the
+/// algorithm can never silently diverge between copies.
+#[inline]
+pub fn fnv1a64_step(h: u64, byte: u8) -> u64 {
+    (h ^ byte as u64).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
 /// 64-bit FNV-1a over raw bytes — deterministic across runs and
 /// platforms (unlike `DefaultHasher`, which is seeded per process), so
 /// it is safe to key on-disk cache entries with.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+    bytes.iter().fold(FNV1A64_OFFSET, |h, &b| fnv1a64_step(h, b))
 }
 
 #[cfg(test)]

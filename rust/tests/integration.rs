@@ -7,16 +7,17 @@
 
 use neural_pim::arch::{self, crossbar::Group};
 use neural_pim::config::{AcceleratorConfig, Architecture, Precision};
-use neural_pim::coordinator::{Coordinator, CoordinatorConfig, ExtraInput};
 use neural_pim::periph::Periph;
 use neural_pim::runtime::{self, Runtime};
+use neural_pim::serve::{open_runtime, Coordinator, ExtraInput, PjrtBackend,
+                        ServeOptions};
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
 use neural_pim::util::stats;
 use neural_pim::{dataflow, dse, event, mapping, noise, sim, workloads};
 
 fn runtime_or_skip() -> Option<Runtime> {
-    match Runtime::new(&neural_pim::artifact_dir()) {
+    match open_runtime(&neural_pim::artifact_dir()) {
         Ok(rt) => Some(rt),
         Err(e) => {
             eprintln!("SKIP (no artifacts): {e:#}");
@@ -159,7 +160,7 @@ fn mc_optimized_beats_naive_sinad() {
 
 #[test]
 fn coordinator_serves_correct_results() {
-    if Runtime::new(&neural_pim::artifact_dir()).is_err() {
+    if open_runtime(&neural_pim::artifact_dir()).is_err() {
         eprintln!("SKIP (no artifacts)");
         return;
     }
@@ -167,12 +168,11 @@ fn coordinator_serves_correct_results() {
     let ts = runtime::TestSet::load(std::path::Path::new(&dir)).unwrap();
     let (h, w, c) = ts.dims;
     let coord = Coordinator::start(
-        CoordinatorConfig {
-            artifact_dir: dir,
+        PjrtBackend::new(dir, "cnn_ideal", h * w * c),
+        ServeOptions {
             max_wait: std::time::Duration::from_millis(1),
             ..Default::default()
         },
-        h * w * c,
     )
     .unwrap();
     let stride = h * w * c;
@@ -183,6 +183,8 @@ fn coordinator_serves_correct_results() {
         pending.push((
             coord
                 .submit(ts.images[idx * stride..(idx + 1) * stride].to_vec())
+                .unwrap()
+                .accepted()
                 .unwrap(),
             ts.labels[idx],
         ));
@@ -201,25 +203,31 @@ fn coordinator_serves_correct_results() {
 
 #[test]
 fn coordinator_with_extra_inputs_noisy_model() {
-    if Runtime::new(&neural_pim::artifact_dir()).is_err() {
+    if open_runtime(&neural_pim::artifact_dir()).is_err() {
         eprintln!("SKIP (no artifacts)");
         return;
     }
     let dir = neural_pim::artifact_dir();
     let ts = runtime::TestSet::load(std::path::Path::new(&dir)).unwrap();
     let (h, w, c) = ts.dims;
+    let backend = PjrtBackend {
+        artifact: "cnn_noisy".into(),
+        extra_inputs: vec![ExtraInput::KeyU32(1), ExtraInput::ScalarF32(60.0)],
+        ..PjrtBackend::new(dir, "", h * w * c)
+    };
     let coord = Coordinator::start(
-        CoordinatorConfig {
-            artifact_dir: dir,
-            artifact: "cnn_noisy".into(),
-            extra_inputs: vec![ExtraInput::KeyU32(1), ExtraInput::ScalarF32(60.0)],
+        backend,
+        ServeOptions {
             max_wait: std::time::Duration::from_millis(1),
             ..Default::default()
         },
-        h * w * c,
     )
     .unwrap();
-    let rx = coord.submit(ts.images[..h * w * c].to_vec()).unwrap();
+    let rx = coord
+        .submit(ts.images[..h * w * c].to_vec())
+        .unwrap()
+        .accepted()
+        .unwrap();
     let r = rx.recv().unwrap();
     assert_eq!(r.logits.len(), 10);
     coord.shutdown();

@@ -96,6 +96,7 @@ fn cheap_params(name: &str) -> &'static str {
                            "replicas": 2}"#,
         "dse" => r#"{"top": 5}"#,
         "noise" => r#"{"samples": 64}"#,
+        "serve-sim" => r#"{"requests": 128, "loads": "0.6,1.1"}"#,
         _ => "{}",
     }
 }
@@ -142,8 +143,8 @@ fn every_scenario_runs_via_generic_json_path() {
             }
         }
     }
-    // the analytical half of the registry must always run
-    assert!(ran >= 8, "only {ran} scenarios ran");
+    // the analytical half of the registry plus serve-sim must always run
+    assert!(ran >= 9, "only {ran} scenarios ran");
 }
 
 #[test]

@@ -1,0 +1,210 @@
+//! Integration gates for the `serve` layer (the api_redesign contract):
+//!
+//! 1. **Shutdown drains deterministically**: after `shutdown()` returns,
+//!    every submitted request has a `Response` or a disconnect — never a
+//!    receiver left hanging (the old `Drop` closed the queue but never
+//!    joined workers).
+//! 2. **Zero-artifact serving**: the full coordinator pipeline
+//!    (admission -> batcher -> backend -> demux) runs end-to-end on the
+//!    simulated backend, deterministically.
+//! 3. **`serve-sim` determinism**: the offered-load sweep is
+//!    bit-identical at `--threads 1/2/8` and replays byte-identically
+//!    from the results store.
+
+use neural_pim::config::AcceleratorConfig;
+use neural_pim::scenario::{self, ExecOptions, Scenario};
+use neural_pim::serve::{BackendWorker, BatchInput, BatchResult, Coordinator,
+                        InferenceBackend, ServeOptions, SimBackend};
+use neural_pim::util::json::Json;
+use neural_pim::util::pool;
+use neural_pim::workloads;
+use std::sync::mpsc::TryRecvError;
+use std::time::Duration;
+
+/// A backend whose execution stalls on the wall clock, so requests are
+/// genuinely in flight when shutdown begins.
+struct SlowBackend;
+
+impl InferenceBackend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+    fn batch(&self) -> usize {
+        4
+    }
+    fn classes(&self) -> usize {
+        2
+    }
+    fn image_len(&self) -> usize {
+        2
+    }
+    fn worker(&self) -> anyhow::Result<Box<dyn BackendWorker>> {
+        Ok(Box::new(SlowWorker))
+    }
+}
+
+struct SlowWorker;
+
+impl BackendWorker for SlowWorker {
+    fn execute(&mut self, input: &BatchInput) -> anyhow::Result<BatchResult> {
+        std::thread::sleep(Duration::from_millis(5));
+        let slots = input.data.len() / input.image_len;
+        Ok(BatchResult { logits: vec![0.5; slots * 2], exec_us: 7 })
+    }
+}
+
+#[test]
+fn shutdown_drains_every_in_flight_request() {
+    let n = 40usize;
+    let coord = Coordinator::start(
+        SlowBackend,
+        ServeOptions {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        pending.push(coord.submit(vec![0.0; 2]).unwrap().accepted().unwrap());
+    }
+    // shutdown must close admission, drain the queue, and join workers;
+    // once it returns, no receiver may still be waiting on anything
+    coord.shutdown();
+    let (mut answered, mut disconnected) = (0usize, 0usize);
+    for rx in pending {
+        match rx.try_recv() {
+            Ok(r) => {
+                assert!(r.error.is_none(), "drained request errored: {r:?}");
+                answered += 1;
+            }
+            Err(TryRecvError::Disconnected) => disconnected += 1,
+            Err(TryRecvError::Empty) => {
+                panic!("receiver left hanging after shutdown")
+            }
+        }
+    }
+    assert_eq!(answered + disconnected, n);
+    // no worker died, so the drain answered everything
+    assert_eq!(disconnected, 0, "requests dropped during drain");
+}
+
+#[test]
+fn simulated_backend_serves_end_to_end_without_artifacts() {
+    let backend = SimBackend::new(
+        &workloads::synthetic_cnn(),
+        &AcceleratorConfig::neural_pim(),
+        8,
+        12,
+        1,
+    );
+    let exec_us = backend.exec_us();
+    let coord = Coordinator::start(
+        backend,
+        ServeOptions {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let image: Vec<f32> = (0..12).map(|i| i as f32).collect();
+    let a = coord.submit(image.clone()).unwrap().accepted().unwrap()
+        .recv().unwrap();
+    let b = coord.submit(image).unwrap().accepted().unwrap().recv().unwrap();
+    assert!(a.error.is_none() && b.error.is_none());
+    // logits are a pure function of image content: same image, same
+    // answer, whatever batch it rode in
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.logits.len(), 10);
+    assert_eq!(a.exec_us, exec_us, "exec time is the priced batch time");
+    let c = coord.submit(vec![9.0; 12]).unwrap().accepted().unwrap()
+        .recv().unwrap();
+    assert_ne!(a.logits, c.logits);
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.requests, 3);
+    assert_eq!(snap.failed + snap.shed, 0);
+    coord.shutdown();
+}
+
+fn serve_sim_outcome(threads: usize) -> String {
+    pool::set_threads(threads);
+    let sc = scenario::find("serve-sim").unwrap();
+    let p = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(
+            r#"{"requests": 512, "loads": "0.4,0.9,1.3", "depth": 64}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let o = sc.run(&p).unwrap();
+    pool::set_threads(0);
+    o.to_json().to_string()
+}
+
+#[test]
+fn serve_sim_is_thread_count_invariant() {
+    // the acceptance bar: the whole rendered outcome — every table cell,
+    // every metric bit — identical at any --threads (same contract as
+    // sim/dse/noise/event)
+    let one = serve_sim_outcome(1);
+    assert_eq!(one, serve_sim_outcome(2), "diverged at 2 threads");
+    assert_eq!(one, serve_sim_outcome(8), "diverged at 8 threads");
+}
+
+#[test]
+fn serve_sim_replays_byte_identical_from_the_store() {
+    let root = std::env::temp_dir()
+        .join(format!("np-serve-sim-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let sc = scenario::find("serve-sim").unwrap();
+    let p = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(r#"{"requests": 256, "loads": "0.6,1.1"}"#).unwrap(),
+    )
+    .unwrap();
+    let opts = ExecOptions {
+        cache: true,
+        results_dir: root.to_string_lossy().into_owned(),
+    };
+    let first = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(!first.cached);
+    let second = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(second.cached, "second run must replay from the store");
+    assert_eq!(second.outcome.to_json().to_string(),
+               first.outcome.to_json().to_string());
+    assert_eq!(second.outcome.render_text(), first.outcome.render_text());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn serve_and_infer_scenarios_run_on_the_sim_backend() {
+    // the serving scenarios work in a bare checkout when --backend sim
+    let sc = scenario::find("serve").unwrap();
+    let p = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(
+            r#"{"backend": "sim", "requests": 96, "workers": 2,
+                "max-wait-ms": 1}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let o = sc.run(&p).unwrap();
+    assert!(o.get_metric("req_per_s").unwrap() > 0.0);
+    assert_eq!(o.get_metric("shed"), Some(0.0));
+    assert!(o.get_metric("latency_p99_ms").unwrap()
+            >= o.get_metric("latency_p50_ms").unwrap());
+
+    let sc = scenario::find("infer").unwrap();
+    let p = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(r#"{"backend": "sim"}"#).unwrap(),
+    )
+    .unwrap();
+    let o = sc.run(&p).unwrap();
+    assert!(o.get_metric("sim_exec_ms").unwrap() > 0.0);
+    assert!(o.notes.iter().any(|n| n.contains("sim first-batch")), "{o:?}");
+}

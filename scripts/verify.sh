@@ -25,6 +25,18 @@ if grep -rn --include='*.rs' -E \
   exit 1
 fi
 
+# Serving open-closed gate: PJRT construction is the serve layer's
+# business — the InferenceBackend trait exists so no other layer welds
+# itself to the XLA artifacts. Everything else opens runtimes through
+# serve::open_runtime (and serving goes through a registered backend).
+if grep -rn --include='*.rs' -E \
+    'Runtime::new\(|PjRtClient::' \
+    rust/src rust/tests rust/benches examples \
+    | grep -vE '^rust/src/(serve|runtime)/'; then
+  echo "FAIL: direct PJRT runtime construction outside rust/src/serve/" >&2
+  exit 1
+fi
+
 # Scenario open-closed gate: main.rs dispatches through the scenario
 # registry only. A literal-command match arm ("simulate" => ...) there
 # reintroduces the hand-rolled per-experiment fan-out the scenario
