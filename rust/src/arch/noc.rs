@@ -45,18 +45,26 @@ impl CMesh {
 
     /// The XY route as a list of routers (inclusive of both endpoints).
     pub fn route(&self, from: u32, to: u32) -> Vec<(u32, u32)> {
+        let mut path = Vec::new();
+        self.route_into(from, to, &mut path);
+        path
+    }
+
+    /// [`CMesh::route`] into a caller-owned buffer (cleared first), so
+    /// per-transfer hot paths can reuse one allocation.
+    pub fn route_into(&self, from: u32, to: u32, out: &mut Vec<(u32, u32)>) {
+        out.clear();
         let (mut x, mut y) = self.router_of(from);
         let (x1, y1) = self.router_of(to);
-        let mut path = vec![(x, y)];
+        out.push((x, y));
         while x != x1 {
             x = if x < x1 { x + 1 } else { x - 1 };
-            path.push((x, y));
+            out.push((x, y));
         }
         while y != y1 {
             y = if y < y1 { y + 1 } else { y - 1 };
-            path.push((x, y));
+            out.push((x, y));
         }
-        path
     }
 
     /// Routers actually occupied by at least one tile (the grid's last

@@ -1,17 +1,27 @@
-//! Deterministic discrete-event core: a binary-heap event queue with
-//! stable FIFO tie-breaking, an integer picosecond clock, and the stats
-//! counters the microarchitectural models hook into.
+//! Deterministic discrete-event core: a two-tier calendar/ladder event
+//! queue with stable FIFO tie-breaking, an integer picosecond clock, a
+//! slab arena for event payloads, and the stats counters the
+//! microarchitectural models hook into.
 //!
 //! Determinism contract: one [`Engine`] is strictly sequential — events
 //! pop in `(time, schedule order)` and the clock never moves backwards —
 //! so any model built on it reproduces bit-identically run to run.
-//! Parallelism happens one level up: *independent* engines (replicas or
-//! scenarios) fan out over `util::pool::map`, which reassembles results
-//! by input index, keeping every aggregate bit-identical at any
-//! `--threads` count (the same contract `sim`/`dse`/`noise` rely on).
+//! Parallelism happens one level up: *independent* engines (replicas,
+//! shards, or scenarios) fan out over `util::pool::map`, which
+//! reassembles results by input index, keeping every aggregate
+//! bit-identical at any `--threads` count (the same contract
+//! `sim`/`dse`/`noise` rely on).
+//!
+//! Queue internals: scheduled entries are `(Time, seq, u32)` triples
+//! ([`Entry`]) — the payload itself lives in a slab and never moves
+//! through the queue. The default backend is [`LadderQueue`] (near-future
+//! circular buckets + an overflow tier, O(1) amortized); the pre-ladder
+//! binary-heap implementation is retained in [`super::refqueue`] as the
+//! differential-testing reference. Both sit behind the [`EventQueue`]
+//! trait, so a test can pin either backend explicitly:
+//! `Engine::<Ev, BinaryHeapQueue>::new()`.
 
-use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use crate::util::num::ceil_log2;
 
 /// Simulation time in integer picoseconds. 2⁶⁴ ps ≈ 213 days of sim
 /// time; an integer clock (not f64) is what makes the tie-breaking —
@@ -21,7 +31,17 @@ pub type Time = u64;
 pub const PS_PER_NS: Time = 1_000;
 
 /// Convert a (fractional) nanosecond quantity to the integer clock.
+///
+/// Rounding is round-half-up on the non-negative domain (`f64::round`
+/// ties away from zero, and valid inputs are `>= 0`): `0.4995 ns` →
+/// `500 ps`. Negative or non-finite inputs are a caller bug — the
+/// `as Time` cast would silently saturate them to 0 — so debug builds
+/// assert; release builds keep the historical saturating behavior.
 pub fn ns_to_ps(ns: f64) -> Time {
+    debug_assert!(
+        ns.is_finite() && ns >= 0.0,
+        "ns_to_ps: non-finite or negative input {ns}"
+    );
     (ns * PS_PER_NS as f64).round() as Time
 }
 
@@ -30,31 +50,305 @@ pub fn ps_to_s(ps: Time) -> f64 {
     ps as f64 * 1e-12
 }
 
-/// Heap entry: ordered by `(time, seq)` so that simultaneous events pop
-/// in the order they were scheduled (stable FIFO tie-breaking).
-struct Scheduled<E> {
-    time: Time,
-    seq: u64,
-    event: E,
+/// A scheduled entry: `(time, seq)` is the total pop order (seq is
+/// unique per engine, so simultaneous events pop in schedule order —
+/// stable FIFO tie-breaking), `idx` is the payload's slab slot. The
+/// derived `Ord` is lexicographic over the field order, and since `seq`
+/// is unique it never reaches `idx`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Entry {
+    pub time: Time,
+    pub seq: u64,
+    pub idx: u32,
 }
 
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+/// Priority-queue backend for [`Engine`]: pops entries in ascending
+/// `(time, seq)` order.
+///
+/// Contract: every `push` carries a `time` no earlier than the last
+/// popped entry's time (the engine clamps to `now`, and the clock is
+/// monotone). [`LadderQueue`] relies on this to keep its bucket window
+/// anchored at the clock.
+pub trait EventQueue {
+    fn push(&mut self, e: Entry);
+    fn pop(&mut self) -> Option<Entry>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
-impl<E> Eq for Scheduled<E> {}
+/// Number of near-future buckets (power of two so bucket→slot is a
+/// mask). 1024 slots × adaptive width keeps the window covering twice
+/// the resident-event span after a rebase.
+const LADDER_BUCKETS: usize = 1024;
+const LADDER_MASK: u64 = LADDER_BUCKETS as u64 - 1;
+/// Occupancy bitmap words (64 slots per word).
+const LADDER_WORDS: usize = LADDER_BUCKETS / 64;
 
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+/// Two-tier calendar/ladder queue: a circular window of
+/// [`LADDER_BUCKETS`] buckets of `2^shift` ps each over the near future,
+/// plus an unsorted overflow tier for entries beyond the window.
+///
+/// * `push` is O(1): append to the bucket (or overflow) the entry's
+///   time falls in; only entries landing in the bucket currently being
+///   drained pay a sorted insert.
+/// * `pop` drains the current bucket (kept sorted descending, so the
+///   minimum pops from the `Vec` tail), then scans the occupancy bitmap
+///   for the next non-empty slot and sorts that bucket once.
+/// * When the window is exhausted but overflow is not, `rebase` picks a
+///   new `shift` so the full overflow span fits in half the window and
+///   re-buckets every overflow entry — overflow drains completely, so
+///   entries are never re-scanned across rebases.
+///
+/// The bucket width adapts upward from the configured floor (see
+/// [`LadderQueue::with_granularity`]) only at rebase; a workload whose
+/// event horizon stays inside the window never rebases again.
+pub struct LadderQueue {
+    /// log2 of the bucket width in ps (bucket index = `time >> shift`)
+    shift: u32,
+    /// lower bound on `shift`, from the configured floor granularity
+    floor_shift: u32,
+    /// absolute index of the bucket currently draining
+    cur_bucket: u64,
+    /// entries of the current bucket, sorted descending so `Vec::pop`
+    /// yields the `(time, seq)` minimum
+    cur: Vec<Entry>,
+    /// circular window; slot = bucket index & mask
+    buckets: Vec<Vec<Entry>>,
+    /// one bit per window slot with pending entries
+    occupied: [u64; LADDER_WORDS],
+    /// entries beyond the window, unsorted until the next rebase
+    overflow: Vec<Entry>,
+    /// time of the last popped entry: the anchor a re-filled empty
+    /// queue restarts its window from (pushes are never earlier)
+    horizon: Time,
+    len: usize,
+}
+
+impl LadderQueue {
+    /// Ladder with the finest bucket floor (1 ps). The width still
+    /// adapts upward at rebase, so this is the right default when the
+    /// event-time scale is unknown.
+    pub fn new() -> LadderQueue {
+        LadderQueue::with_granularity(1)
+    }
+
+    /// Ladder whose bucket width never drops below `floor_ps`
+    /// (rounded up to a power of two). Callers that know their time
+    /// quantum — e.g. a NoC cycle — can skip the fine-granularity
+    /// warm-up before the first rebase adapts the width.
+    pub fn with_granularity(floor_ps: Time) -> LadderQueue {
+        let floor_shift = ceil_log2(floor_ps.max(1)).min(63);
+        LadderQueue {
+            shift: floor_shift,
+            floor_shift,
+            cur_bucket: 0,
+            cur: Vec::new(),
+            buckets: (0..LADDER_BUCKETS).map(|_| Vec::new()).collect(),
+            occupied: [0; LADDER_WORDS],
+            overflow: Vec::new(),
+            horizon: 0,
+            len: 0,
+        }
+    }
+
+    /// Current bucket width in ps (adapts at rebase; for tests).
+    pub fn granularity_ps(&self) -> Time {
+        1u64 << self.shift
+    }
+
+    /// Resident entries in the overflow tier (for tests).
+    pub fn overflow_len(&self) -> usize {
+        self.overflow.len()
+    }
+
+    fn set_bit(&mut self, slot: usize) {
+        self.occupied[slot >> 6] |= 1 << (slot & 63);
+    }
+
+    fn clear_bit(&mut self, slot: usize) {
+        self.occupied[slot >> 6] &= !(1 << (slot & 63));
+    }
+
+    /// Absolute index of the first non-empty window bucket at or after
+    /// `cur_bucket` (wrapped scan of the occupancy bitmap in window
+    /// order, i.e. by increasing distance from `cur_bucket`).
+    fn next_occupied(&self) -> Option<u64> {
+        let s0 = (self.cur_bucket & LADDER_MASK) as usize;
+        let (w0, b0) = (s0 >> 6, s0 & 63);
+        let abs = |slot: usize| {
+            let delta = (slot as u64).wrapping_sub(s0 as u64) & LADDER_MASK;
+            self.cur_bucket + delta
+        };
+        // head of the starting word: slots >= s0
+        let bits = self.occupied[w0] & (!0u64 << b0);
+        if bits != 0 {
+            return Some(abs((w0 << 6) + bits.trailing_zeros() as usize));
+        }
+        // remaining words in wrap order
+        for i in 1..LADDER_WORDS {
+            let w = (w0 + i) % LADDER_WORDS;
+            let bits = self.occupied[w];
+            if bits != 0 {
+                return Some(abs((w << 6) + bits.trailing_zeros() as usize));
+            }
+        }
+        // wrapped tail of the starting word: slots < s0
+        let bits = self.occupied[w0] & !(!0u64 << b0);
+        if bits != 0 {
+            return Some(abs((w0 << 6) + bits.trailing_zeros() as usize));
+        }
+        None
+    }
+
+    /// Re-anchor the window on the overflow tier. Preconditions (both
+    /// held at the single call site in `pop`): the window and current
+    /// bucket are empty, and overflow is not — every resident entry is
+    /// in `overflow`, so `shift` may be re-derived freely.
+    ///
+    /// The new width makes the overflow span fit in half the window,
+    /// so *every* overflow entry re-buckets here (overflow drains to
+    /// empty) and the remaining half-window absorbs near-future pushes
+    /// without an immediate follow-up rebase.
+    fn rebase(&mut self) {
+        debug_assert!(!self.overflow.is_empty());
+        debug_assert!(self.cur.is_empty());
+        debug_assert!(self.occupied.iter().all(|w| *w == 0));
+        let mut min_t = Time::MAX;
+        let mut max_t = 0;
+        for e in &self.overflow {
+            min_t = min_t.min(e.time);
+            max_t = max_t.max(e.time);
+        }
+        let span_per_bucket = (max_t - min_t) / (LADDER_BUCKETS as u64 / 2) + 1;
+        self.shift = ceil_log2(span_per_bucket).max(self.floor_shift);
+        self.cur_bucket = min_t >> self.shift;
+        for e in std::mem::take(&mut self.overflow) {
+            let b = e.time >> self.shift;
+            debug_assert!(b.wrapping_sub(self.cur_bucket) < LADDER_BUCKETS as u64);
+            let slot = (b & LADDER_MASK) as usize;
+            self.buckets[slot].push(e);
+            self.set_bit(slot);
+        }
     }
 }
 
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
+impl Default for LadderQueue {
+    fn default() -> Self {
+        LadderQueue::new()
+    }
+}
+
+impl EventQueue for LadderQueue {
+    fn push(&mut self, e: Entry) {
+        if self.len == 0 {
+            // Re-anchor an emptied queue at the clock horizon, NOT at
+            // the pushed entry: a later push may carry a time >= the
+            // horizon but < this entry's, and must not land behind the
+            // window.
+            debug_assert!(self.cur.is_empty() && self.overflow.is_empty());
+            self.cur_bucket = self.horizon >> self.shift;
+        }
+        self.len += 1;
+        let b = e.time >> self.shift;
+        if b <= self.cur_bucket {
+            // Lands in (or, on a contract violation, behind) the bucket
+            // being drained: sorted insert into the descending drain
+            // list. `partition_point` keeps entries > e in front.
+            let pos = self.cur.partition_point(|p| *p > e);
+            self.cur.insert(pos, e);
+        } else if b - self.cur_bucket < LADDER_BUCKETS as u64 {
+            let slot = (b & LADDER_MASK) as usize;
+            self.buckets[slot].push(e);
+            self.set_bit(slot);
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        loop {
+            if let Some(e) = self.cur.pop() {
+                self.len -= 1;
+                self.horizon = e.time;
+                return Some(e);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            if let Some(b) = self.next_occupied() {
+                self.cur_bucket = b;
+                let slot = (b & LADDER_MASK) as usize;
+                self.cur = std::mem::take(&mut self.buckets[slot]);
+                self.clear_bit(slot);
+                // seq is unique, so the (time, seq) key is total and
+                // an unstable sort is still deterministic
+                self.cur.sort_unstable_by(|a, b| b.cmp(a));
+            } else {
+                self.rebase();
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+/// Slab slot: vacant slots form an intrusive free list.
+enum Slot<E> {
+    Vacant { next: u32 },
+    Occupied { seq: u64, ev: E },
+}
+
+const SLAB_NIL: u32 = u32::MAX;
+
+/// Payload arena: events live here while scheduled, addressed by the
+/// `u32` slot index carried in [`Entry`]. The schedule `seq` doubles as
+/// the generation tag — it is unique per engine, so a stale index can
+/// never alias a recycled slot undetected (checked in debug builds).
+struct Slab<E> {
+    slots: Vec<Slot<E>>,
+    free_head: u32,
+}
+
+impl<E> Slab<E> {
+    fn new() -> Slab<E> {
+        Slab { slots: Vec::new(), free_head: SLAB_NIL }
+    }
+
+    fn insert(&mut self, seq: u64, ev: E) -> u32 {
+        if self.free_head != SLAB_NIL {
+            let idx = self.free_head;
+            match std::mem::replace(
+                &mut self.slots[idx as usize],
+                Slot::Occupied { seq, ev },
+            ) {
+                Slot::Vacant { next } => self.free_head = next,
+                Slot::Occupied { .. } => unreachable!("free list hit a live slot"),
+            }
+            idx
+        } else {
+            debug_assert!(self.slots.len() < SLAB_NIL as usize);
+            self.slots.push(Slot::Occupied { seq, ev });
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    fn remove(&mut self, idx: u32, seq: u64) -> E {
+        let slot = std::mem::replace(
+            &mut self.slots[idx as usize],
+            Slot::Vacant { next: self.free_head },
+        );
+        match slot {
+            Slot::Occupied { seq: tag, ev } => {
+                debug_assert_eq!(tag, seq, "slab generation mismatch");
+                self.free_head = idx;
+                ev
+            }
+            Slot::Vacant { .. } => panic!("slab remove of a vacant slot"),
+        }
     }
 }
 
@@ -63,28 +357,46 @@ impl<E> Ord for Scheduled<E> {
 pub struct EngineStats {
     pub scheduled: u64,
     pub processed: u64,
-    /// high-water mark of the pending-event queue
+    /// high-water mark of resident events across every queue tier
+    /// (current bucket + window + overflow)
     pub peak_queue: usize,
+    /// events whose `schedule_at` time lay in the past and was clamped
+    /// to `now` — tolerated (the clock never moves backwards) but
+    /// counted, so scenarios can surface model bugs instead of hiding
+    /// them in release builds
+    pub clamped: u64,
 }
 
-/// The event queue + clock. `E` is the model's event payload.
-pub struct Engine<E> {
-    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+/// The event queue + clock. `E` is the model's event payload, `Q` the
+/// queue backend (default: [`LadderQueue`]; tests pin
+/// [`super::refqueue::BinaryHeapQueue`] for differential runs).
+pub struct Engine<E, Q: EventQueue = LadderQueue> {
+    queue: Q,
+    slab: Slab<E>,
     now: Time,
     seq: u64,
     pub stats: EngineStats,
 }
 
-impl<E> Default for Engine<E> {
+impl<E, Q: EventQueue + Default> Default for Engine<E, Q> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<E> Engine<E> {
-    pub fn new() -> Engine<E> {
+impl<E, Q: EventQueue + Default> Engine<E, Q> {
+    pub fn new() -> Engine<E, Q> {
+        Engine::with_queue(Q::default())
+    }
+}
+
+impl<E, Q: EventQueue> Engine<E, Q> {
+    /// Engine over an explicitly configured queue backend (e.g.
+    /// `LadderQueue::with_granularity(NOC_CYCLE_PS)`).
+    pub fn with_queue(queue: Q) -> Engine<E, Q> {
         Engine {
-            heap: BinaryHeap::new(),
+            queue,
+            slab: Slab::new(),
             now: 0,
             seq: 0,
             stats: EngineStats::default(),
@@ -96,21 +408,25 @@ impl<E> Engine<E> {
     }
 
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.queue.len()
     }
 
-    /// Schedule `event` at absolute sim time `at` (clamped to `now`:
-    /// scheduling into the past is a model bug, caught in debug builds).
+    /// Schedule `event` at absolute sim time `at`. Scheduling into the
+    /// past is clamped to `now` (the clock never moves backwards) and
+    /// counted in [`EngineStats::clamped`] rather than asserted, so the
+    /// rate is observable in release runs too.
     pub fn schedule_at(&mut self, at: Time, event: E) {
-        debug_assert!(at >= self.now, "event scheduled into the past");
-        self.heap.push(Reverse(Scheduled {
-            time: at.max(self.now),
-            seq: self.seq,
-            event,
-        }));
+        let at = if at < self.now {
+            self.stats.clamped += 1;
+            self.now
+        } else {
+            at
+        };
+        let idx = self.slab.insert(self.seq, event);
+        self.queue.push(Entry { time: at, seq: self.seq, idx });
         self.seq += 1;
         self.stats.scheduled += 1;
-        self.stats.peak_queue = self.stats.peak_queue.max(self.heap.len());
+        self.stats.peak_queue = self.stats.peak_queue.max(self.queue.len());
     }
 
     /// Schedule `event` `delay` picoseconds from now.
@@ -120,15 +436,15 @@ impl<E> Engine<E> {
 
     /// Pop the earliest event and advance the clock to it.
     pub fn pop(&mut self) -> Option<(Time, E)> {
-        let Reverse(s) = self.heap.pop()?;
-        self.now = s.time;
+        let e = self.queue.pop()?;
+        self.now = e.time;
         self.stats.processed += 1;
-        Some((s.time, s.event))
+        Some((e.time, self.slab.remove(e.idx, e.seq)))
     }
 
     /// Drain the queue, handing each event (and the engine, so handlers
     /// can schedule follow-ups) to `handler`.
-    pub fn run<F: FnMut(&mut Engine<E>, Time, E)>(&mut self, mut handler: F) {
+    pub fn run<F: FnMut(&mut Engine<E, Q>, Time, E)>(&mut self, mut handler: F) {
         while let Some((t, e)) = self.pop() {
             handler(self, t, e);
         }
@@ -138,6 +454,7 @@ impl<E> Engine<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     #[test]
     fn pops_in_time_order_with_fifo_ties() {
@@ -194,10 +511,114 @@ mod tests {
     }
 
     #[test]
+    fn peak_queue_counts_residents_across_all_tiers() {
+        // Spread entries over the current bucket, the window, and the
+        // far-future overflow tier; the high-water mark must count all
+        // of them, not just one bucket.
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(0, 0); // current bucket
+        e.schedule_at(3, 1); // window
+        e.schedule_at(u32::MAX as Time * 1_000, 2); // overflow tier
+        assert_eq!(e.stats.peak_queue, 3);
+        assert_eq!(e.pending(), 3);
+        let mut n = 0;
+        while e.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn past_scheduling_is_clamped_and_counted() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(100, 1);
+        assert_eq!(e.pop(), Some((100, 1)));
+        e.schedule_at(40, 2); // past: clamps to now = 100
+        e.schedule_at(100, 3); // exactly now: not a clamp
+        assert_eq!(e.stats.clamped, 1);
+        assert_eq!(e.pop(), Some((100, 2)));
+        assert_eq!(e.pop(), Some((100, 3)));
+        assert_eq!(e.now(), 100);
+    }
+
+    #[test]
+    fn ladder_pops_across_window_wrap_and_rebase() {
+        // Forces every queue path: current-bucket insert, window slots,
+        // a window wrap, and an overflow rebase with shift adaptation.
+        let mut q = LadderQueue::with_granularity(1);
+        let times = [
+            0u64,
+            1,
+            LADDER_BUCKETS as u64 / 2,
+            LADDER_BUCKETS as u64 + 5, // beyond the window -> overflow
+            1 << 40,                   // far tail -> coarse rebase
+            (1 << 40) + 1,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(Entry { time: t, seq: i as u64, idx: i as u32 });
+        }
+        assert!(q.overflow_len() > 0);
+        let mut sorted = times;
+        sorted.sort_unstable();
+        let got: Vec<Time> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(got, sorted);
+        assert!(q.granularity_ps() > 1, "rebase should have coarsened the width");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ladder_window_wraps_around_the_slot_ring() {
+        let mut q = LadderQueue::with_granularity(1);
+        q.push(Entry { time: 1000, seq: 0, idx: 0 });
+        assert_eq!(q.pop().map(|e| e.time), Some(1000));
+        // slot(1500) = 476 sits behind slot(1000) in the ring: the
+        // bitmap scan must map it back to absolute bucket 1500 via the
+        // wrap, not surface it before bucket 1001
+        q.push(Entry { time: 1500, seq: 1, idx: 1 });
+        q.push(Entry { time: 1001, seq: 2, idx: 2 });
+        assert_eq!(q.pop().map(|e| e.time), Some(1001));
+        assert_eq!(q.pop().map(|e| e.time), Some(1500));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ladder_granularity_floor_is_honored() {
+        let q = LadderQueue::with_granularity(1_000);
+        assert_eq!(q.granularity_ps(), 1_024); // rounded up to a power of two
+        let q = LadderQueue::with_granularity(1);
+        assert_eq!(q.granularity_ps(), 1);
+    }
+
+    #[test]
     fn time_conversions_round_trip() {
         assert_eq!(ns_to_ps(100.0), 100_000);
         assert_eq!(ns_to_ps(50.0), 50_000);
         assert_eq!(ns_to_ps(0.5), 500);
         assert!((ps_to_s(1_000_000) - 1e-6).abs() < 1e-20);
+    }
+
+    #[test]
+    fn prop_ns_to_ps_round_trips_against_the_f64_path() {
+        // Forward: the integer result stays within half a picosecond of
+        // the exact f64 product (round-half-up). Backward: an integer
+        // picosecond count survives ps -> ns -> ps exactly while the
+        // product is exactly representable (< 2^53 fits f64's mantissa).
+        prop::check("ns_to_ps round-trips vs f64", 300, |g| {
+            let ns = g.f64_in(0.0, 1e9);
+            let ps = ns_to_ps(ns);
+            let exact = ns * PS_PER_NS as f64;
+            crate::prop_assert!(
+                (ps as f64 - exact).abs() <= 0.5,
+                "ns_to_ps({ns}) = {ps}, off from exact {exact}"
+            );
+            let ps_int = g.u64() % (1 << 40);
+            let ns_back = ps_to_s(ps_int) * 1e9;
+            crate::prop_assert!(
+                ns_to_ps(ns_back) == ps_int,
+                "{ps_int} ps -> {ns_back} ns -> {} ps",
+                ns_to_ps(ns_back)
+            );
+            Ok(())
+        });
     }
 }

@@ -8,11 +8,14 @@
 //! distribution. This subsystem rebuilds the same microarchitecture as
 //! a deterministic discrete-event simulation:
 //!
-//! - [`engine`]: binary-heap event queue, stable FIFO tie-breaking,
-//!   integer picosecond clock.
+//! - [`engine`]: two-tier ladder event queue with slab-allocated
+//!   payloads, stable FIFO tie-breaking, integer picosecond clock.
+//! - [`refqueue`]: the pre-ladder binary-heap queue, retained as the
+//!   differential-testing oracle behind the same [`EventQueue`] trait.
 //! - [`noc`]: per-router/per-link occupancy on `arch::CMesh` XY routes
 //!   (queueing instead of `transfer_latency_ns`'s contention-free
-//!   formula; reduces to it exactly on an idle mesh).
+//!   formula; reduces to it exactly on an idle mesh, where a
+//!   reservation fast path skips the route walk entirely).
 //! - [`pipeline`]: tile-stage pipelines with finite IR/OR buffers and
 //!   back-pressure from `mapping::NetworkMapping`, charging per-event
 //!   energy from `energy::constants`.
@@ -27,15 +30,19 @@
 //! 2. **Request-level** ([`request_profile`]): Poisson request arrivals
 //!    against replicated chip instances, yielding per-inference latency
 //!    samples and p50/p95/p99 via `util::stats::percentile`. Replicas
-//!    fan out over `util::pool` on per-replica `Pcg::fork` streams
-//!    derived sequentially up front, so every percentile is
+//!    (optionally split further into engine shards — see
+//!    [`RequestLoad::shards`]) fan out over `util::pool` on `Pcg::fork`
+//!    streams derived sequentially up front, so every percentile is
 //!    bit-identical at any `--threads` count.
 
 pub mod engine;
 pub mod noc;
 pub mod pipeline;
+pub mod refqueue;
 
-pub use engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Time};
+pub use engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Entry, EventQueue,
+                 LadderQueue, Time};
+pub use refqueue::BinaryHeapQueue;
 pub use noc::{Delivery, NocModel, NocStats};
 pub use pipeline::{service_profile, PipelineRun, PipelineSim, ServiceProfile,
                    MAX_BUF_INFS};
@@ -148,11 +155,28 @@ pub struct RequestLoad {
     /// [`RequestLoad::utilization_clamped`] for the simulated range
     pub utilization: f64,
     pub seed: u64,
+    /// engine shards per replica (min 1). Each shard is an independent
+    /// pipeline instance of the same chip taking an equal slice of the
+    /// replica's request stream, so one replica's simulation can spread
+    /// over `shards` pool workers. Shard streams use the same
+    /// sequential-up-front `Pcg::fork` discipline (fork index =
+    /// `replica * shards + shard`), so any shard count is bit-identical
+    /// at any `--threads`; `shards = 1` reproduces the unsharded
+    /// numbers exactly. Sharding > 1 is a modeling choice — per-shard
+    /// Poisson arrivals instead of one per-replica stream — not a pure
+    /// reimplementation of it.
+    pub shards: usize,
 }
 
 impl Default for RequestLoad {
     fn default() -> Self {
-        RequestLoad { requests: 256, replicas: 4, utilization: 0.8, seed: 42 }
+        RequestLoad {
+            requests: 256,
+            replicas: 4,
+            utilization: 0.8,
+            seed: 42,
+            shards: 1,
+        }
     }
 }
 
@@ -183,21 +207,41 @@ pub struct LatencyProfile {
     /// start attempts deferred by finite-buffer back-pressure
     pub blocked_starts: u64,
     pub events: u64,
+    /// past-scheduled events clamped to `now` across all engines
+    /// (see [`EngineStats::clamped`]) — nonzero means a model bug
+    pub clamped: u64,
+    /// max resident-event high-water mark over all engines
+    pub peak_queue: usize,
 }
 
-/// Per-replica work descriptors: `Pcg` streams forked sequentially up
-/// front (the fork order, not the execution order, defines the streams
-/// — same discipline as the noise MC) and job counts that distribute
-/// `load.requests` exactly (the first `requests % replicas` replicas
-/// take one extra job, so the served total always equals the ask).
+/// Per-(replica, shard) work descriptors: `Pcg` streams forked
+/// sequentially up front (the fork order, not the execution order,
+/// defines the streams — same discipline as the noise MC) and job
+/// counts that distribute `load.requests` exactly — first across
+/// replicas (the first `requests % replicas` replicas take one extra
+/// job), then each replica's count across its shards the same way —
+/// so the served total always equals the ask at any shard count.
+/// Zero-job shards still fork (stream assignment is positional) and
+/// still run, keeping fork indices stable as counts change.
 fn replica_inputs(load: &RequestLoad) -> Vec<(Pcg, u64)> {
     let replicas = load.replicas.max(1) as u64;
+    let shards = load.shards.max(1) as u64;
     let base = load.requests / replicas;
     let extra = load.requests % replicas;
     let mut root = Pcg::new(load.seed);
-    (0..replicas)
-        .map(|i| (root.fork(i), base + u64::from(i < extra)))
-        .collect()
+    let mut inputs = Vec::with_capacity((replicas * shards) as usize);
+    for r in 0..replicas {
+        let rjobs = base + u64::from(r < extra);
+        let sbase = rjobs / shards;
+        let sextra = rjobs % shards;
+        for s in 0..shards {
+            inputs.push((
+                root.fork(r * shards + s),
+                sbase + u64::from(s < sextra),
+            ));
+        }
+    }
+    inputs
 }
 
 fn run_replica(cfg: &AcceleratorConfig, nc: &model::NetworkCost,
@@ -234,15 +278,17 @@ fn profile_from_runs(net: &Network, cfg: &AcceleratorConfig,
         noc_wait_s: runs.iter().map(|r| r.noc_wait_s).sum(),
         blocked_starts: runs.iter().map(|r| r.blocked_starts).sum(),
         events: runs.iter().map(|r| r.engine.processed).sum(),
+        clamped: runs.iter().map(|r| r.engine.clamped).sum(),
+        peak_queue: runs.iter().map(|r| r.engine.peak_queue).max().unwrap_or(0),
     }
 }
 
 /// Sample per-inference latencies under Poisson arrivals and reduce to
-/// percentiles. Replicas fan out across `util::pool` sharing one
+/// percentiles. Replica shards fan out across `util::pool` sharing one
 /// memoized [`model::network_cost`] table (the hot-path win: layers are
-/// priced once, not once per replica); aggregation is in replica order,
-/// so the profile is bit-identical at `--threads 1/2/8/...`. Serves
-/// exactly `load.requests` inferences.
+/// priced once, not once per replica); aggregation is in (replica,
+/// shard) order, so the profile is bit-identical at `--threads
+/// 1/2/8/...`. Serves exactly `load.requests` inferences.
 pub fn request_profile(net: &Network, cfg: &AcceleratorConfig,
                        load: &RequestLoad) -> LatencyProfile {
     let nc = model::network_cost(net, cfg);
@@ -321,15 +367,57 @@ mod tests {
         let net = workloads::alexnet();
         let cfg = AcceleratorConfig::neural_pim();
         let lo = request_profile(&net, &cfg, &RequestLoad {
-            requests: 64, replicas: 2, utilization: 0.3, seed: 5,
+            requests: 64, replicas: 2, utilization: 0.3, seed: 5, shards: 1,
         });
         let hi = request_profile(&net, &cfg, &RequestLoad {
-            requests: 64, replicas: 2, utilization: 1.2, seed: 5,
+            requests: 64, replicas: 2, utilization: 1.2, seed: 5, shards: 1,
         });
         // an overloaded pipeline must queue: p99 grows
         assert!(
             hi.p99_s > lo.p99_s,
             "p99 lo {} vs hi {}", lo.p99_s, hi.p99_s
         );
+    }
+
+    #[test]
+    fn sharded_profile_conserves_requests_and_is_deterministic() {
+        let net = workloads::alexnet();
+        let cfg = AcceleratorConfig::neural_pim();
+        // 50 jobs over 3 replicas x 4 shards: uneven at both levels
+        let load = RequestLoad {
+            requests: 50, replicas: 3, shards: 4, ..Default::default()
+        };
+        let a = request_profile(&net, &cfg, &load);
+        assert_eq!(a.requests, 50, "sharding must not drop or invent jobs");
+        assert!(a.p50_s > 0.0 && a.p50_s <= a.p99_s);
+        assert_eq!(a.clamped, 0, "pipeline never schedules into the past");
+        assert!(a.peak_queue > 0);
+        let b = request_profile_sequential(&net, &cfg, &load);
+        // pooled and sequential fan-outs share the contract: identical
+        assert_eq!(a.p99_s.to_bits(), b.p99_s.to_bits());
+        assert_eq!(a.energy_j_per_inference.to_bits(),
+                   b.energy_j_per_inference.to_bits());
+    }
+
+    #[test]
+    fn shard_job_split_is_exact_and_fork_stable() {
+        let inputs = replica_inputs(&RequestLoad {
+            requests: 11, replicas: 2, shards: 3, ..Default::default()
+        });
+        assert_eq!(inputs.len(), 6);
+        let jobs: Vec<u64> = inputs.iter().map(|(_, j)| *j).collect();
+        // replica 0 takes 6 (2+2+2), replica 1 takes 5 (2+2+1)
+        assert_eq!(jobs, vec![2, 2, 2, 2, 2, 1]);
+        // shards = 1 consumes the root fork stream exactly as the
+        // pre-sharding code did (fork indices 0..replicas)
+        let unsharded = replica_inputs(&RequestLoad {
+            requests: 11, replicas: 2, shards: 1, ..Default::default()
+        });
+        let mut root = Pcg::new(RequestLoad::default().seed);
+        for (i, (rng, _)) in unsharded.iter().enumerate() {
+            let mut want = root.fork(i as u64);
+            let mut got = rng.clone();
+            assert_eq!(want.next_u64(), got.next_u64());
+        }
     }
 }

@@ -17,6 +17,18 @@
 //! Destination ejection contention is folded into the last link
 //! (wormhole-style), so only same-router transfers touch the local port.
 //!
+//! Fast path: when the whole mesh is provably idle for a head flit
+//! starting at `now` (`now + 1 cycle >= max_free`, the high-water mark
+//! of every reservation ever made), the router-by-router walk is
+//! skipped entirely — O(1) per transfer, no route materialization, no
+//! per-port writes. The reservation is kept *pending* and only written
+//! into the port table by the next contended send; a pending
+//! reservation superseded by a later idle send is dropped outright,
+//! which is sound because every one of its port claims is already at or
+//! below `max_free` and therefore below any future head's ready time.
+//! The differential property test pins this against the always-walk
+//! reference.
+//!
 //! Energy reuses [`CMesh::transfer_energy`] (`energy::constants::
 //! NOC_E_BYTE`, min-1-hop convention), charged per delivery.
 
@@ -45,7 +57,7 @@ pub struct NocStats {
 }
 
 /// One completed transfer.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Delivery {
     /// sim time the tail flit reaches the destination
     pub arrive_ps: Time,
@@ -55,11 +67,28 @@ pub struct Delivery {
     pub hops: u32,
 }
 
+/// An idle-mesh transfer whose port claims have not been written into
+/// the busy-until table yet (see the fast-path note in the module doc).
+#[derive(Debug, Clone, Copy)]
+struct Reservation {
+    from: u32,
+    to: u32,
+    start: Time,
+    hold: Time,
+}
+
 /// Per-port occupancy state for one mesh.
 pub struct NocModel {
     pub mesh: CMesh,
     /// busy-until per (router, port); router index = y * side + x
     port_free: Vec<Time>,
+    /// max busy-until over every reservation ever made, materialized or
+    /// pending — the idle-mesh witness for the fast path
+    max_free: Time,
+    /// the one fast-path reservation not yet in `port_free`
+    pending: Option<Reservation>,
+    /// scratch route buffer, reused across walks
+    route_buf: Vec<(u32, u32)>,
     pub stats: NocStats,
 }
 
@@ -68,48 +97,47 @@ impl NocModel {
         let slots = (mesh.side as usize) * (mesh.side as usize);
         NocModel {
             port_free: vec![0; slots * PORTS_PER_ROUTER],
+            max_free: 0,
+            pending: None,
+            route_buf: Vec::new(),
             stats: NocStats::default(),
             mesh,
         }
-    }
-
-    fn port(&self, router: (u32, u32), dir: usize) -> usize {
-        ((router.1 * self.mesh.side + router.0) as usize) * PORTS_PER_ROUTER
-            + dir
     }
 
     /// Route a `bytes`-byte packet from tile `from` to tile `to`,
     /// starting at `now`. Mutates the port busy-until state (this IS the
     /// contention) and returns when the packet lands, how long its head
     /// queued, and the energy charged.
+    ///
+    /// Calls must carry non-decreasing `now` (the engine clock, which
+    /// is monotone) — the idle fast path relies on it.
     pub fn send(&mut self, now: Time, from: u32, to: u32, bytes: u64)
                 -> Delivery {
-        let route = self.mesh.route(from, to);
-        let hops = (route.len() - 1) as u32;
+        let hops = self.mesh.hops(from, to);
         let ser = bytes.div_ceil(FLIT_BYTES).max(1);
         let hold = ser * NOC_CYCLE_PS;
-        let mut head = now;
-        let mut queued: Time = 0;
-        let mut claim = |port: usize, head: Time, free: &mut [Time]| -> Time {
-            let ready = head + NOC_CYCLE_PS; // 1-cycle traversal
-            let depart = ready.max(free[port]);
-            free[port] = depart + hold;
-            queued += depart - ready;
-            depart
-        };
-        if hops == 0 {
-            // same-router transfer: one pass through the local crossbar
-            // (the min-1-hop convention of `arch::noc`)
-            let p = self.port(route[0], LOCAL_PORT);
-            head = claim(p, head, &mut self.port_free);
+        let (arrive, queued) = if now + NOC_CYCLE_PS >= self.max_free {
+            // Provably idle: the head is ready at `now + 1 cycle`, at
+            // or after every outstanding claim, so the walk would find
+            // zero queueing at every port — reproduce its result in
+            // O(1). Any previously pending reservation is likewise at
+            // or below `max_free` and can never delay a future head;
+            // drop it instead of materializing.
+            let arrive = now + Time::from(hops.max(1)) * NOC_CYCLE_PS + hold;
+            self.pending = Some(Reservation { from, to, start: now, hold });
+            self.max_free = self.max_free.max(arrive);
+            (arrive, 0)
         } else {
-            for w in route.windows(2) {
-                let p = self.port(w[0], dir_of(w[0], w[1]));
-                head = claim(p, head, &mut self.port_free);
+            if let Some(r) = self.pending.take() {
+                let (_, q) = self.walk(r.start, r.from, r.to, r.hold);
+                debug_assert_eq!(
+                    q, 0,
+                    "pending fast-path reservation must be contention-free"
+                );
             }
-        }
-        drop(claim);
-        let arrive = head + hold; // tail flits stream behind the head
+            self.walk(now, from, to, hold)
+        };
         let energy = self.mesh.transfer_energy(bytes, hops);
         self.stats.packets += 1;
         self.stats.flits += ser;
@@ -119,6 +147,53 @@ impl NocModel {
         self.stats.energy_j += energy;
         Delivery { arrive_ps: arrive, queued_ps: queued, energy_j: energy, hops }
     }
+
+    /// The full router-by-router walk: claim every output port along
+    /// the XY route, accumulating head-flit queueing. Returns
+    /// `(arrive, queued)`.
+    fn walk(&mut self, start: Time, from: u32, to: u32, hold: Time)
+            -> (Time, Time) {
+        let mut route = std::mem::take(&mut self.route_buf);
+        self.mesh.route_into(from, to, &mut route);
+        let side = self.mesh.side;
+        let mut head = start;
+        let mut queued: Time = 0;
+        if route.len() == 1 {
+            // same-router transfer: one pass through the local crossbar
+            // (the min-1-hop convention of `arch::noc`)
+            let p = port_index(side, route[0], LOCAL_PORT);
+            head = claim(&mut self.port_free, p, head, hold, &mut queued);
+        } else {
+            for w in route.windows(2) {
+                let p = port_index(side, w[0], dir_of(w[0], w[1]));
+                head = claim(&mut self.port_free, p, head, hold, &mut queued);
+            }
+        }
+        let arrive = head + hold; // tail flits stream behind the head
+        self.max_free = self.max_free.max(arrive);
+        self.route_buf = route;
+        (arrive, queued)
+    }
+}
+
+fn port_index(side: u32, router: (u32, u32), dir: usize) -> usize {
+    ((router.1 * side + router.0) as usize) * PORTS_PER_ROUTER + dir
+}
+
+/// Claim one output port: 1-cycle traversal, wait for the port to
+/// free, then hold it for the tail's serialization time.
+fn claim(
+    free: &mut [Time],
+    port: usize,
+    head: Time,
+    hold: Time,
+    queued: &mut Time,
+) -> Time {
+    let ready = head + NOC_CYCLE_PS;
+    let depart = ready.max(free[port]);
+    free[port] = depart + hold;
+    *queued += depart - ready;
+    depart
 }
 
 fn dir_of(a: (u32, u32), b: (u32, u32)) -> usize {
@@ -217,5 +292,74 @@ mod tests {
             out
         };
         assert_eq!(run(), run());
+    }
+
+    /// The pre-fast-path algorithm: walk every send unconditionally.
+    /// Kept test-local as the oracle the reservation fast path must be
+    /// indistinguishable from.
+    fn ref_send(
+        mesh: &CMesh,
+        free: &mut [Time],
+        now: Time,
+        from: u32,
+        to: u32,
+        bytes: u64,
+    ) -> (Time, Time) {
+        let route = mesh.route(from, to);
+        let ser = bytes.div_ceil(FLIT_BYTES).max(1);
+        let hold = ser * NOC_CYCLE_PS;
+        let mut head = now;
+        let mut queued: Time = 0;
+        if route.len() == 1 {
+            let p = port_index(mesh.side, route[0], LOCAL_PORT);
+            head = claim(free, p, head, hold, &mut queued);
+        } else {
+            for w in route.windows(2) {
+                let p = port_index(mesh.side, w[0], dir_of(w[0], w[1]));
+                head = claim(free, p, head, hold, &mut queued);
+            }
+        }
+        (head + hold, queued)
+    }
+
+    #[test]
+    fn prop_fast_path_matches_always_walk_reference() {
+        prop::check("fast path == full walk", 80, |g| {
+            let tiles = g.usize_in(2, 256) as u32;
+            let conc = *g.pick(&[1u32, 2, 4]);
+            let mesh = CMesh::new(tiles, conc);
+            let mut noc = NocModel::new(CMesh::new(tiles, conc));
+            let slots =
+                (mesh.side as usize) * (mesh.side as usize) * PORTS_PER_ROUTER;
+            let mut free = vec![0u64; slots];
+            let mut ref_queued_total: Time = 0;
+            let mut now: Time = 0;
+            for _ in 0..g.usize_in(2, 60) {
+                // mix back-to-back sends (contended) with long idle
+                // gaps (fast path re-arms)
+                if g.bool() {
+                    now += g.u64() % 60_000;
+                }
+                let a = g.usize_in(0, tiles as usize - 1) as u32;
+                let b = g.usize_in(0, tiles as usize - 1) as u32;
+                let bytes = g.usize_in(1, 512) as u64;
+                let d = noc.send(now, a, b, bytes);
+                let (arrive, queued) =
+                    ref_send(&mesh, &mut free, now, a, b, bytes);
+                ref_queued_total += queued;
+                crate::prop_assert!(
+                    d.arrive_ps == arrive && d.queued_ps == queued,
+                    "send({now}, {a}->{b}, {bytes}B): fast ({}, {}) vs \
+                     walk ({arrive}, {queued})",
+                    d.arrive_ps, d.queued_ps
+                );
+            }
+            crate::prop_assert!(
+                noc.stats.queued_ps_total == ref_queued_total,
+                "queued totals diverge: {} vs {ref_queued_total}",
+                noc.stats.queued_ps_total
+            );
+            Ok(())
+        });
     }
 }

@@ -24,8 +24,9 @@
 //! replica — the pre-`model` code re-priced all layers per instance on
 //! the request path.
 
-use super::engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Time};
-use super::noc::NocModel;
+use super::engine::{ns_to_ps, ps_to_s, Engine, EngineStats, LadderQueue,
+                    Time};
+use super::noc::{NocModel, NOC_CYCLE_PS};
 use crate::arch::noc::CMesh;
 use crate::config::AcceleratorConfig;
 use crate::energy;
@@ -220,7 +221,12 @@ impl PipelineSim {
             *c = m.buffer_capacity_infs(s, cfg.edram_bytes, MAX_BUF_INFS);
         }
         PipelineSim {
-            engine: Engine::new(),
+            // the NoC cycle is the natural floor for the ladder's
+            // bucket width: no event resolution below it matters, and
+            // the queue skips the fine-granularity warm-up
+            engine: Engine::with_queue(LadderQueue::with_granularity(
+                NOC_CYCLE_PS,
+            )),
             noc: NocModel::new(CMesh::new(cfg.tiles, cfg.noc_concentration)),
             stages,
             credits,

@@ -1,0 +1,186 @@
+//! Reference event-queue backend: the pre-ladder binary heap, retained
+//! verbatim as the differential-testing oracle for [`LadderQueue`].
+//!
+//! This is deliberately the *only* module in `event/` allowed to touch
+//! `std::collections::BinaryHeap` (verify.sh greps for strays): the hot
+//! path must go through the ladder, and any future queue change has to
+//! prove itself against this oracle — identical pop traces, identical
+//! stats (including the multi-tier `peak_queue` high-water mark) — on
+//! Pcg-seeded workloads mixing bursty clusters, same-time storms,
+//! past-clamped pushes, and far-future tails.
+//!
+//! [`LadderQueue`]: super::engine::LadderQueue
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::engine::{Entry, EventQueue};
+
+/// `(time, seq)`-ordered min-heap over [`Entry`]. O(log n) per
+/// operation vs the ladder's amortized O(1), but with no bucketing
+/// assumptions at all — which is exactly what makes it a trustworthy
+/// oracle.
+#[derive(Default)]
+pub struct BinaryHeapQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+}
+
+impl EventQueue for BinaryHeapQueue {
+    fn push(&mut self, e: Entry) {
+        self.heap.push(Reverse(e));
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{Engine, EngineStats, LadderQueue, Time};
+    use super::*;
+    use crate::util::num::{fnv1a64_step, FNV1A64_OFFSET};
+    use crate::util::prop;
+
+    /// One step of a queue workload, relative to the engine clock at
+    /// execution time (so the same script drives any backend).
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        /// schedule `delay` ps from now
+        PushIn(Time),
+        /// schedule `d` ps *behind* now (exercises clamp counting)
+        PushPast(Time),
+        /// pop up to `n` events
+        Pop(u32),
+    }
+
+    fn drive<Q: EventQueue + Default>(ops: &[Op]) -> (Vec<(Time, u32)>, EngineStats) {
+        let mut eng: Engine<u32, Q> = Engine::new();
+        let mut trace = Vec::new();
+        let mut id: u32 = 0;
+        for op in ops {
+            match *op {
+                Op::PushIn(d) => {
+                    eng.schedule_in(d, id);
+                    id += 1;
+                }
+                Op::PushPast(d) => {
+                    eng.schedule_at(eng.now().saturating_sub(d), id);
+                    id += 1;
+                }
+                Op::Pop(n) => {
+                    for _ in 0..n {
+                        if let Some(p) = eng.pop() {
+                            trace.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        while let Some(p) = eng.pop() {
+            trace.push(p);
+        }
+        (trace, eng.stats)
+    }
+
+    #[test]
+    fn prop_ladder_matches_binary_heap_reference() {
+        prop::check("ladder == reference pop trace", 60, |g| {
+            let steps = g.usize_in(20, 120);
+            let mut ops = Vec::new();
+            for _ in 0..steps {
+                match g.usize_in(0, 4) {
+                    0 => {
+                        // bursty near-future cluster
+                        for _ in 0..g.usize_in(1, 40) {
+                            ops.push(Op::PushIn(g.u64() % 4_096));
+                        }
+                    }
+                    1 => {
+                        // same-time storm: FIFO tie-break must hold
+                        let at = g.u64() % 100_000;
+                        for _ in 0..g.usize_in(2, 64) {
+                            ops.push(Op::PushIn(at));
+                        }
+                    }
+                    2 => ops.push(Op::PushIn(g.u64() % (1 << 45))), // far tail
+                    3 => ops.push(Op::PushPast(g.u64() % 1_000)),
+                    _ => ops.push(Op::Pop(g.usize_in(1, 32) as u32)),
+                }
+            }
+            let (lt, ls) = drive::<LadderQueue>(&ops);
+            let (bt, bs) = drive::<BinaryHeapQueue>(&ops);
+            let first_diff = lt.iter().zip(&bt).position(|(a, b)| a != b);
+            crate::prop_assert!(
+                lt == bt,
+                "pop traces diverge (len {} vs {}, first diff at {:?})",
+                lt.len(),
+                bt.len(),
+                first_diff
+            );
+            crate::prop_assert!(ls == bs, "stats diverge: {:?} vs {:?}", ls, bs);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peak_queue_matches_reference_across_tiers() {
+        // Residents spread over current bucket, window, and overflow:
+        // the ladder's high-water mark must equal the reference's
+        // (which trivially counts everything in one heap).
+        let ops = [
+            Op::PushIn(0),
+            Op::PushIn(10),
+            Op::PushIn(5_000),
+            Op::PushIn(1 << 44),
+            Op::Pop(2),
+            Op::PushIn(3),
+            Op::Pop(16),
+        ];
+        let (lt, ls) = drive::<LadderQueue>(&ops);
+        let (bt, bs) = drive::<BinaryHeapQueue>(&ops);
+        assert_eq!(lt, bt);
+        assert_eq!(ls, bs);
+        assert_eq!(ls.peak_queue, 4);
+    }
+
+    /// Golden checksum over a fixed LCG-driven workload's pop trace,
+    /// pinning the `(time, seq)` pop order — FIFO tie-breaks included
+    /// (every 8th event reuses the previous time) — against silent
+    /// reordering in either backend. The constant is FNV-1a over the
+    /// little-endian `(time, payload)` bytes of the full trace.
+    fn trace_checksum<Q: EventQueue + Default>() -> u64 {
+        let mut eng: Engine<u64, Q> = Engine::new();
+        let mut x: u64 = 0x00c0_ffee;
+        let mut t_prev: Time = 0;
+        for i in 0..4_096u64 {
+            x = x
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407);
+            let t = if i % 8 == 7 { t_prev } else { x >> 44 };
+            t_prev = t;
+            eng.schedule_at(t, i);
+        }
+        let mut h = FNV1A64_OFFSET;
+        while let Some((t, ev)) = eng.pop() {
+            for b in t.to_le_bytes() {
+                h = fnv1a64_step(h, b);
+            }
+            for b in ev.to_le_bytes() {
+                h = fnv1a64_step(h, b);
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn golden_trace_checksum_pins_fifo_tie_break_order() {
+        const GOLDEN: u64 = 0x351a_ae04_0f20_962b;
+        assert_eq!(trace_checksum::<LadderQueue>(), GOLDEN);
+        assert_eq!(trace_checksum::<BinaryHeapQueue>(), GOLDEN);
+    }
+}

@@ -24,8 +24,10 @@
 //! register a new architecture by adding an enum variant plus one impl
 //! in `model/archs.rs`), `energy`/`mapping`/`sim` (budgets, replication
 //! allocator, analytical system simulator), `event` (discrete-event
-//! refinement of `sim`: engine, queued NoC, back-pressured pipeline,
-//! cross-validation + request-level latency modes), `dse` (Fig. 11
+//! refinement of `sim`: slab-arena engine over a ladder queue with a
+//! retained binary-heap differential reference, fast-path queued NoC,
+//! back-pressured pipeline, cross-validation + sharded request-level
+//! latency modes), `dse` (Fig. 11
 //! sweep), `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
 //! `runtime` (PJRT execution of the AOT artifacts), `serve` — the
 //! backend-agnostic serving layer: an `InferenceBackend` trait (per-

@@ -463,6 +463,7 @@ pub fn system_report(nets: &[workloads::Network]) -> SystemReport {
         replicas: 3,
         utilization: 0.8,
         seed: 42,
+        shards: 1,
     };
     SystemReport {
         table_energy: te,

@@ -132,6 +132,7 @@ impl EventSim {
             replicas: p.get_usize("replicas"),
             utilization: p.get_f64("load"),
             seed: p.get_u64("seed"),
+            shards: p.get_usize("shards").max(1),
         }
     }
 }
@@ -156,14 +157,18 @@ impl Scenario for EventSim {
         specs.push(ParamSpec::f64("load", 0.8,
                                   "offered load vs bottleneck rate"));
         specs.push(ParamSpec::u64("seed", 42, "PRNG seed"));
+        specs.push(ParamSpec::u64("shards", 1,
+                                  "engine shards per replica"));
         specs
     }
 
     fn run(&self, p: &Params) -> Result<Outcome> {
         let nets = selected_networks(p)?;
+        let started = std::time::Instant::now();
         let rows = event::cross_validate(&nets);
         let load = Self::load_from(p);
         let profiles = report::event_latency_profiles(&nets, &load);
+        let elapsed_s = started.elapsed().as_secs_f64();
         let mut o = Outcome::new(self.name(), p.to_json());
         o.table(report::event_cross_validation_table_from(&rows))
             .table(report::event_latency_table_from(&profiles, &load));
@@ -173,8 +178,17 @@ impl Scenario for EventSim {
             .fold(0.0f64, f64::max);
         let events: u64 = rows.iter().map(|r| r.events).sum::<u64>()
             + profiles.iter().map(|p| p.events).sum::<u64>();
+        // engine health counters (wall-clock rate is informational: the
+        // text rendering excludes metrics, so goldens stay stable)
+        let clamped: u64 = profiles.iter().map(|p| p.clamped).sum();
+        let peak_queue =
+            profiles.iter().map(|p| p.peak_queue).max().unwrap_or(0);
         o.metric("max_energy_rel_err", max_rel_err, "")
-            .metric("events", events as f64, "");
+            .metric("events", events as f64, "")
+            .metric("events_per_sec",
+                    events as f64 / elapsed_s.max(1e-9), "1/s")
+            .metric("clamped", clamped as f64, "")
+            .metric("peak_queue", peak_queue as f64, "");
         for lp in &profiles {
             o.metric(
                 format!("p99_s/{}/{}", lp.network, lp.arch.name()),

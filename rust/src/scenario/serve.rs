@@ -352,6 +352,8 @@ impl Scenario for ServeSim {
                            "batching fill window (virtual µs)"),
             ParamSpec::u64("depth", 256, "admission queue bound"),
             ParamSpec::u64("seed", 42, "PRNG seed"),
+            ParamSpec::u64("shards", 1,
+                           "independent fleet slices per load point"),
         ]
     }
 
@@ -370,6 +372,7 @@ impl Scenario for ServeSim {
             max_queue_depth: p.get_usize("depth"),
             batch_exec_us: sp.batch_us(max_batch as u64),
             seed: p.get_u64("seed"),
+            shards: p.get_usize("shards").max(1),
         };
         let points = loadgen::sweep(&lg, &loads);
 

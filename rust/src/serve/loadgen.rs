@@ -19,7 +19,12 @@
 //! Load points are independent — each runs on its own `Pcg::fork` stream
 //! derived sequentially up front — so [`sweep`] fans them out over
 //! `util::pool` with bit-identical results at any thread count (the same
-//! contract as `sim`/`dse`/`noise`/`event`).
+//! contract as `sim`/`dse`/`noise`/`event`). A load point can further
+//! split into [`LoadGenConfig::shards`] independent fleet slices (each
+//! with its own worker pool and arrival stream at the same offered
+//! utilization), so one point's simulation can occupy several pool
+//! workers; totals sum and percentiles pool across slices, reassembled
+//! in shard order — still bit-identical at any thread count.
 
 use crate::util::pool;
 use crate::util::rng::Pcg;
@@ -43,6 +48,30 @@ pub struct LoadGenConfig {
     /// (`ServiceProfile::batch_us(max_batch)`)
     pub batch_exec_us: u64,
     pub seed: u64,
+    /// independent fleet slices per load point (min 1): each slice gets
+    /// `workers` workers and an equal share of `requests` (the first
+    /// `requests % shards` slices take one extra) on its own fork
+    /// stream (fork index = `point * shards + shard`). `shards = 1`
+    /// reproduces the unsharded sweep exactly; higher counts are a new
+    /// experiment (per-slice arrival streams), deterministic at any
+    /// thread count.
+    pub shards: usize,
+}
+
+impl Default for LoadGenConfig {
+    /// Mirrors the `serve-sim` scenario's defaults.
+    fn default() -> Self {
+        LoadGenConfig {
+            requests: 2_048,
+            workers: 2,
+            max_batch: 64,
+            max_wait_us: 200,
+            max_queue_depth: 256,
+            batch_exec_us: 1_000,
+            seed: 42,
+            shards: 1,
+        }
+    }
 }
 
 /// One offered-load point of the sweep.
@@ -63,40 +92,95 @@ pub struct LoadPoint {
     pub p99_ms: f64,
 }
 
-/// Run every offered-load point across the worker pool; bit-identical
-/// at any thread count (per-point `Pcg::fork` streams derived
-/// sequentially, results reassembled by index).
+/// Run every (offered-load point, shard) across the worker pool;
+/// bit-identical at any thread count (`Pcg::fork` streams derived
+/// sequentially up front, results reassembled by index, shard partials
+/// merged in shard order).
 pub fn sweep(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<LoadPoint> {
+    let shards = cfg.shards.max(1);
+    let base = cfg.requests / shards as u64;
+    let extra = cfg.requests % shards as u64;
     let mut root = Pcg::new(cfg.seed);
-    let inputs: Vec<(f64, Pcg)> = loads
-        .iter()
-        .enumerate()
-        .map(|(i, &l)| (l, root.fork(i as u64)))
-        .collect();
-    pool::map(&inputs, |(l, rng)| run_point(cfg, *l, rng.clone()))
+    let mut inputs: Vec<(f64, u64, Pcg)> =
+        Vec::with_capacity(loads.len() * shards);
+    for (i, &l) in loads.iter().enumerate() {
+        for s in 0..shards as u64 {
+            inputs.push((
+                l,
+                base + u64::from(s < extra),
+                root.fork(i as u64 * shards as u64 + s),
+            ));
+        }
+    }
+    let runs = pool::map(&inputs, |(l, jobs, rng)| {
+        run_shard(cfg, *l, *jobs, rng.clone())
+    });
+    runs.chunks(shards)
+        .zip(loads)
+        .map(|(chunk, &l)| merge(l, chunk))
+        .collect()
 }
 
-fn run_point(cfg: &LoadGenConfig, offered: f64, mut rng: Pcg) -> LoadPoint {
+/// One fleet slice of one load point: `jobs` Poisson arrivals at the
+/// offered utilization, replayed through the serving discipline.
+fn run_shard(cfg: &LoadGenConfig, offered: f64, jobs: u64,
+             mut rng: Pcg) -> ShardRun {
     let load = offered.max(1e-3);
     // padded-batch service rate across all workers, requests per µs
     let rate_per_us = cfg.workers.max(1) as f64 * cfg.max_batch.max(1) as f64
         / cfg.batch_exec_us.max(1) as f64;
     let mean_gap_us = 1.0 / (load * rate_per_us);
-    let mut arrivals = Vec::with_capacity(cfg.requests as usize);
+    let mut arrivals = Vec::with_capacity(jobs as usize);
     let mut t = 0u64;
-    for _ in 0..cfg.requests {
+    for _ in 0..jobs {
         let u = rng.uniform();
         let gap = (-mean_gap_us * (1.0 - u).max(f64::MIN_POSITIVE).ln())
             .round() as u64;
         t += gap;
         arrivals.push(t);
     }
-    simulate(cfg, offered, &arrivals)
+    simulate(cfg, &arrivals)
+}
+
+/// One shard's raw tallies, before cross-shard aggregation.
+struct ShardRun {
+    served: u64,
+    shed: u64,
+    batches: u64,
+    makespan_us: u64,
+    lat_ms: Vec<f64>,
+}
+
+/// Aggregate shard partials into the published load point: counts sum,
+/// the makespan is the slowest slice (slices run concurrently), and
+/// latency samples pool in shard order (percentiles over the union).
+/// With one shard this reproduces the unsharded numbers exactly.
+fn merge(offered: f64, runs: &[ShardRun]) -> LoadPoint {
+    let served: u64 = runs.iter().map(|r| r.served).sum();
+    let shed: u64 = runs.iter().map(|r| r.shed).sum();
+    let batches: u64 = runs.iter().map(|r| r.batches).sum();
+    let makespan = runs.iter().map(|r| r.makespan_us).max().unwrap_or(0);
+    let lat_ms: Vec<f64> = runs
+        .iter()
+        .flat_map(|r| r.lat_ms.iter().copied())
+        .collect();
+    LoadPoint {
+        offered,
+        served,
+        shed,
+        shed_rate: shed as f64 / (served + shed).max(1) as f64,
+        batches,
+        avg_batch: served as f64 / batches.max(1) as f64,
+        throughput_rps: served as f64 / (makespan.max(1) as f64 * 1e-6),
+        mean_ms: stats::mean(&lat_ms),
+        p50_ms: stats::percentile(&lat_ms, 50.0),
+        p95_ms: stats::percentile(&lat_ms, 95.0),
+        p99_ms: stats::percentile(&lat_ms, 99.0),
+    }
 }
 
 /// Replay the serving discipline over pre-generated arrivals.
-fn simulate(cfg: &LoadGenConfig, offered: f64,
-            arrivals: &[u64]) -> LoadPoint {
+fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
     let max_batch = cfg.max_batch.max(1);
     let depth = cfg.max_queue_depth.max(1);
     let mut free: BinaryHeap<Reverse<u64>> =
@@ -164,19 +248,7 @@ fn simulate(cfg: &LoadGenConfig, offered: f64,
         makespan = makespan.max(done);
         free.push(Reverse(done));
     }
-    LoadPoint {
-        offered,
-        served,
-        shed,
-        shed_rate: shed as f64 / (served + shed).max(1) as f64,
-        batches,
-        avg_batch: served as f64 / batches.max(1) as f64,
-        throughput_rps: served as f64 / (makespan.max(1) as f64 * 1e-6),
-        mean_ms: stats::mean(&lat_ms),
-        p50_ms: stats::percentile(&lat_ms, 50.0),
-        p95_ms: stats::percentile(&lat_ms, 95.0),
-        p99_ms: stats::percentile(&lat_ms, 99.0),
-    }
+    ShardRun { served, shed, batches, makespan_us: makespan, lat_ms }
 }
 
 #[cfg(test)]
@@ -192,6 +264,7 @@ mod tests {
             max_queue_depth: 64,
             batch_exec_us: 1_000,
             seed: 42,
+            shards: 1,
         }
     }
 
@@ -238,6 +311,27 @@ mod tests {
         let over = &sweep(&tight, &[3.0])[0];
         assert!(over.shed > 0, "{over:?}");
         assert!(over.shed_rate > 0.0 && over.shed_rate < 1.0);
+    }
+
+    #[test]
+    fn sharded_sweep_conserves_arrivals_and_is_deterministic() {
+        // 512 requests over 4 slices: every arrival is still served or
+        // shed, and the merged point is reproducible
+        let sharded = LoadGenConfig { shards: 4, ..cfg() };
+        let loads = [0.8, 1.2];
+        let pts = sweep(&sharded, &loads);
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert_eq!(p.served + p.shed, 512);
+            assert!(p.avg_batch <= 16.0 + 1e-9);
+            assert!(p.p50_ms <= p.p95_ms && p.p95_ms <= p.p99_ms);
+            assert!(p.throughput_rps > 0.0);
+        }
+        assert_eq!(fingerprint(&sweep(&sharded, &loads)), fingerprint(&pts));
+        // an uneven split (512 = 5*102 + 2) still conserves
+        let uneven = LoadGenConfig { shards: 5, ..cfg() };
+        let p = &sweep(&uneven, &[1.0])[0];
+        assert_eq!(p.served + p.shed, 512);
     }
 
     #[test]

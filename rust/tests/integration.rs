@@ -325,19 +325,27 @@ fn event_percentiles_are_thread_count_invariant() {
         replicas: 8,
         utilization: 0.9,
         seed: 7,
+        shards: 1,
     };
-    let mut base: Option<(u64, u64, u64, u64, u64)> = None;
+    // and the same bar with per-replica engine sharding engaged: shard
+    // fork streams are also derived sequentially up front
+    let sharded = event::RequestLoad { shards: 3, ..load.clone() };
+    let mut base: Option<[(u64, u64, u64, u64, u64); 2]> = None;
     for t in [1usize, 2, 8] {
         pool::set_threads(t);
         let p = event::request_profile(&net, &cfg, &load);
+        let s = event::request_profile(&net, &cfg, &sharded);
         pool::set_threads(0);
-        let fp = (
-            p.p50_s.to_bits(),
-            p.p95_s.to_bits(),
-            p.p99_s.to_bits(),
-            p.mean_s.to_bits(),
-            p.energy_j_per_inference.to_bits(),
-        );
+        let fp_of = |p: &event::LatencyProfile| {
+            (
+                p.p50_s.to_bits(),
+                p.p95_s.to_bits(),
+                p.p99_s.to_bits(),
+                p.mean_s.to_bits(),
+                p.energy_j_per_inference.to_bits(),
+            )
+        };
+        let fp = [fp_of(&p), fp_of(&s)];
         match &base {
             None => base = Some(fp),
             Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),

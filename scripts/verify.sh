@@ -37,6 +37,20 @@ if grep -rn --include='*.rs' -E \
   exit 1
 fi
 
+# Event-core gate: the ladder queue is the production scheduler; the
+# std BinaryHeap lives on only as the differential-testing reference in
+# event/refqueue.rs. A heap anywhere else in event/ means the hot path
+# regressed to O(log n) scattered sift-downs. (Matches real uses —
+# `BinaryHeap<..>` / `collections::BinaryHeap` — not doc mentions of
+# the BinaryHeapQueue reference type.)
+if grep -rn --include='*.rs' -E \
+    'collections::BinaryHeap|BinaryHeap<|BinaryHeap::' \
+    rust/src/event \
+    | grep -v '^rust/src/event/refqueue.rs'; then
+  echo "FAIL: BinaryHeap in rust/src/event/ outside refqueue.rs" >&2
+  exit 1
+fi
+
 # Scenario open-closed gate: main.rs dispatches through the scenario
 # registry only. A literal-command match arm ("simulate" => ...) there
 # reintroduces the hand-rolled per-experiment fan-out the scenario
