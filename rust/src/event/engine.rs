@@ -90,6 +90,13 @@ const LADDER_WORDS: usize = LADDER_BUCKETS / 64;
 /// [`LADDER_BUCKETS`] buckets of `2^shift` ps each over the near future,
 /// plus an unsorted overflow tier for entries beyond the window.
 ///
+/// Ordering invariant: the window/overflow boundary is the *fixed*
+/// `(window_start + LADDER_BUCKETS) << shift` — anchored when the
+/// window is (re)based, not tracking the draining cursor — so every
+/// overflow resident's time is strictly greater than every window
+/// resident's and the window can always drain to empty before overflow
+/// is consulted.
+///
 /// * `push` is O(1): append to the bucket (or overflow) the entry's
 ///   time falls in; only entries landing in the bucket currently being
 ///   drained pay a sorted insert.
@@ -109,7 +116,17 @@ pub struct LadderQueue {
     shift: u32,
     /// lower bound on `shift`, from the configured floor granularity
     floor_shift: u32,
-    /// absolute index of the bucket currently draining
+    /// absolute index of the window's base bucket: the window covers
+    /// `[window_start, window_start + LADDER_BUCKETS)` and this base is
+    /// FIXED between re-anchors/rebases. The window/overflow routing
+    /// boundary hangs off this base, never off the advancing
+    /// `cur_bucket` — otherwise a later push could land in the window
+    /// *ahead* of an earlier-timed entry already parked in overflow and
+    /// pop out of time order (the clock would move backwards).
+    window_start: u64,
+    /// absolute index of the bucket currently draining (advances within
+    /// the window: `window_start <= cur_bucket < window_start +
+    /// LADDER_BUCKETS`)
     cur_bucket: u64,
     /// entries of the current bucket, sorted descending so `Vec::pop`
     /// yields the `(time, seq)` minimum
@@ -143,6 +160,7 @@ impl LadderQueue {
         LadderQueue {
             shift: floor_shift,
             floor_shift,
+            window_start: 0,
             cur_bucket: 0,
             cur: Vec::new(),
             buckets: (0..LADDER_BUCKETS).map(|_| Vec::new()).collect(),
@@ -224,9 +242,10 @@ impl LadderQueue {
         let span_per_bucket = (max_t - min_t) / (LADDER_BUCKETS as u64 / 2) + 1;
         self.shift = ceil_log2(span_per_bucket).max(self.floor_shift);
         self.cur_bucket = min_t >> self.shift;
+        self.window_start = self.cur_bucket;
         for e in std::mem::take(&mut self.overflow) {
             let b = e.time >> self.shift;
-            debug_assert!(b.wrapping_sub(self.cur_bucket) < LADDER_BUCKETS as u64);
+            debug_assert!(b.wrapping_sub(self.window_start) < LADDER_BUCKETS as u64);
             let slot = (b & LADDER_MASK) as usize;
             self.buckets[slot].push(e);
             self.set_bit(slot);
@@ -249,6 +268,7 @@ impl EventQueue for LadderQueue {
             // window.
             debug_assert!(self.cur.is_empty() && self.overflow.is_empty());
             self.cur_bucket = self.horizon >> self.shift;
+            self.window_start = self.cur_bucket;
         }
         self.len += 1;
         let b = e.time >> self.shift;
@@ -258,11 +278,16 @@ impl EventQueue for LadderQueue {
             // list. `partition_point` keeps entries > e in front.
             let pos = self.cur.partition_point(|p| *p > e);
             self.cur.insert(pos, e);
-        } else if b - self.cur_bucket < LADDER_BUCKETS as u64 {
+        } else if b - self.window_start < LADDER_BUCKETS as u64 {
             let slot = (b & LADDER_MASK) as usize;
             self.buckets[slot].push(e);
             self.set_bit(slot);
         } else {
+            // At or past the window's FIXED far edge. Every overflow
+            // entry's time is >= `(window_start + LADDER_BUCKETS) <<
+            // shift`, strictly above every window resident's, so pop
+            // may fully drain the window before consulting overflow
+            // (via rebase) without reordering.
             self.overflow.push(e);
         }
     }
@@ -564,6 +589,26 @@ mod tests {
         assert_eq!(got, sorted);
         assert!(q.granularity_ps() > 1, "rebase should have coarsened the width");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ladder_overflow_boundary_is_fixed_not_cursor_relative() {
+        // Regression: when the overflow boundary hung off the advancing
+        // cur_bucket, t=1600 (pushed after popping 600 moved the
+        // cursor) landed in the window while the earlier t=1500 sat in
+        // overflow, so the drain yielded 600, 1600, 1500 — time order
+        // violated. With the boundary fixed at window_start both far
+        // pushes route to overflow and rebase restores order.
+        let mut q = LadderQueue::with_granularity(1);
+        q.push(Entry { time: 600, seq: 0, idx: 0 });
+        q.push(Entry { time: 1500, seq: 1, idx: 1 });
+        assert_eq!(q.overflow_len(), 1);
+        assert_eq!(q.pop().map(|e| e.time), Some(600));
+        q.push(Entry { time: 1600, seq: 2, idx: 2 });
+        assert_eq!(q.overflow_len(), 2, "1600 must join 1500 in overflow");
+        assert_eq!(q.pop().map(|e| e.time), Some(1500));
+        assert_eq!(q.pop().map(|e| e.time), Some(1600));
+        assert!(q.pop().is_none());
     }
 
     #[test]

@@ -179,7 +179,7 @@ mod tests {
 
     #[test]
     fn golden_trace_checksum_pins_fifo_tie_break_order() {
-        const GOLDEN: u64 = 0x351a_ae04_0f20_962b;
+        const GOLDEN: u64 = 0x99ec_1704_0f20_962b;
         assert_eq!(trace_checksum::<LadderQueue>(), GOLDEN);
         assert_eq!(trace_checksum::<BinaryHeapQueue>(), GOLDEN);
     }
