@@ -11,6 +11,7 @@ use bench_util::{bench, try_or_skip};
 use neural_pim::arch::crossbar::Group;
 use neural_pim::config::AcceleratorConfig;
 use neural_pim::event::{self, Engine};
+use neural_pim::obs::{NullRecorder, Recorder, TraceRecorder};
 use neural_pim::runtime;
 use neural_pim::scenario::{self, suite};
 use neural_pim::serve::{loadgen, open_runtime, Coordinator, PjrtBackend,
@@ -63,6 +64,35 @@ fn churn<Q: event::EventQueue + Default>(resident: u64, total: u64) -> u64 {
     let mut done = 0u64;
     while let Some((t, ev)) = eng.pop() {
         done += 1;
+        if done + eng.pending() as u64 >= total {
+            continue; // drain the rest without refilling
+        }
+        let off = 1 + ((ev ^ t).wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 44);
+        eng.schedule_at(t + off, ev.wrapping_mul(31).wrapping_add(1));
+    }
+    done
+}
+
+/// [`churn`] with the observability hooks the pipeline run loop uses:
+/// a queue-depth sample every 64 pops and a guarded per-pop instant.
+/// With [`NullRecorder`] every recorder call monomorphizes to nothing —
+/// the residue is the stride check and the `is_enabled()` branch, which
+/// is exactly the off-path cost `BENCH_obs.json` budgets at <= 2%.
+fn churn_obs<Q: event::EventQueue + Default, R: Recorder>(
+    resident: u64, total: u64, rec: &mut R) -> u64 {
+    let mut eng: Engine<u64, Q> = Engine::new();
+    for i in 0..resident {
+        eng.schedule_at(i.wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 44, i);
+    }
+    let mut done = 0u64;
+    while let Some((t, ev)) = eng.pop() {
+        done += 1;
+        if done % 64 == 0 {
+            rec.sample(t, "engine.queue_depth", eng.pending() as f64);
+        }
+        if rec.is_enabled() {
+            rec.instant(t, "engine", "churn.pop");
+        }
         if done + eng.pending() as u64 >= total {
             continue; // drain the rest without refilling
         }
@@ -204,11 +234,78 @@ fn event_suite() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The observability-overhead suite (the ISSUE 7 acceptance artifact):
+/// the 1M-resident churn bench plain (pre-obs code), with the hooks
+/// compiled in but NullRecorder'd off (budget: <= 2% regression), and
+/// with a live filtered TraceRecorder — written to `BENCH_obs.json`.
+/// The budget is *recorded*, not asserted: a loaded CI runner must not
+/// fail the build on a noisy timing, the trajectory file is the judge.
+fn obs_suite() -> anyhow::Result<()> {
+    println!("### observability overhead suite\n");
+    let resident = 1u64 << 20;
+    let total = 3_000_000u64;
+
+    let t0 = Instant::now();
+    let done_plain = churn::<event::LadderQueue>(resident, total);
+    let plain_eps = done_plain as f64 / t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let done_null = churn_obs::<event::LadderQueue, _>(
+        resident, total, &mut NullRecorder);
+    let null_eps = done_null as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(done_plain, done_null, "recorder hooks changed the schedule");
+
+    // live recorder, filtered to the stride samples so the trace stays
+    // ~total/64 events instead of one allocation per pop
+    let mut rec = TraceRecorder::with_filter(Some("engine.queue_depth"));
+    let t0 = Instant::now();
+    let done_traced =
+        churn_obs::<event::LadderQueue, _>(resident, total, &mut rec);
+    let traced_eps = done_traced as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(done_plain, done_traced, "tracing changed the schedule");
+    assert!(!rec.is_empty(), "live recorder captured nothing");
+
+    let budget_frac = 0.02;
+    let overhead = 1.0 - null_eps / plain_eps.max(1.0);
+    println!(
+        "[bench] obs churn ({}k resident): plain {:.2}M ev/s, null-recorder \
+         {:.2}M ev/s ({:+.2}% overhead, budget {:.0}%), traced {:.2}M ev/s \
+         ({} trace events)",
+        resident >> 10,
+        plain_eps / 1e6,
+        null_eps / 1e6,
+        overhead * 100.0,
+        budget_frac * 100.0,
+        traced_eps / 1e6,
+        rec.len()
+    );
+
+    let pairs: Vec<(String, Json)> = vec![
+        ("obs.plain_events_per_sec".into(), Json::Num(plain_eps)),
+        ("obs.null_events_per_sec".into(), Json::Num(null_eps)),
+        ("obs.null_overhead_frac".into(), Json::Num(overhead)),
+        ("obs.traced_events_per_sec".into(), Json::Num(traced_eps)),
+        ("obs.trace_events".into(), Json::Num(rec.len() as f64)),
+        ("obs.budget_frac".into(), Json::Num(budget_frac)),
+        ("obs.within_budget".into(), Json::Bool(overhead <= budget_frac)),
+    ];
+    let mut bench_json =
+        Json::Obj(pairs.into_iter().collect()).to_pretty_string();
+    bench_json.push('\n');
+    std::fs::write("BENCH_obs.json", bench_json)?;
+    println!("[bench] wrote BENCH_obs.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    // CI runs `-- --only-event` to produce BENCH_event.json without the
-    // rest of the suite (and without needing PJRT artifacts)
+    // CI runs `-- --only-event` / `-- --only-obs` to produce
+    // BENCH_event.json / BENCH_obs.json without the rest of the suite
+    // (and without needing PJRT artifacts)
     if std::env::args().any(|a| a == "--only-event") {
         return event_suite();
+    }
+    if std::env::args().any(|a| a == "--only-obs") {
+        return obs_suite();
     }
     println!("### §Perf hot paths\n");
 
@@ -236,6 +333,7 @@ fn main() -> anyhow::Result<()> {
     // BENCH_event.json as the artifact (also reachable standalone via
     // `-- --only-event`)
     event_suite()?;
+    obs_suite()?;
     // pool scaling of the request sim (replicas fan out across threads)
     let alex = workloads::alexnet();
     let load = event::RequestLoad {

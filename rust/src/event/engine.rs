@@ -76,6 +76,21 @@ pub trait EventQueue {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Backend-internal structural counters (ladder rebases etc.).
+    /// Defaults to all-zero for backends with nothing to report.
+    fn stats(&self) -> QueueStats {
+        QueueStats::default()
+    }
+}
+
+/// Structural counters a queue backend may expose — observability only,
+/// never consulted by the simulation itself.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct QueueStats {
+    /// window re-anchors onto the overflow tier ([`LadderQueue::rebase`])
+    pub rebases: u64,
+    /// entries migrated out of overflow across all rebases
+    pub overflow_migrated: u64,
 }
 
 /// Number of near-future buckets (power of two so bucket→slot is a
@@ -141,6 +156,7 @@ pub struct LadderQueue {
     /// queue restarts its window from (pushes are never earlier)
     horizon: Time,
     len: usize,
+    qstats: QueueStats,
 }
 
 impl LadderQueue {
@@ -168,6 +184,7 @@ impl LadderQueue {
             overflow: Vec::new(),
             horizon: 0,
             len: 0,
+            qstats: QueueStats::default(),
         }
     }
 
@@ -239,6 +256,8 @@ impl LadderQueue {
             min_t = min_t.min(e.time);
             max_t = max_t.max(e.time);
         }
+        self.qstats.rebases += 1;
+        self.qstats.overflow_migrated += self.overflow.len() as u64;
         let span_per_bucket = (max_t - min_t) / (LADDER_BUCKETS as u64 / 2) + 1;
         self.shift = ceil_log2(span_per_bucket).max(self.floor_shift);
         self.cur_bucket = min_t >> self.shift;
@@ -318,6 +337,10 @@ impl EventQueue for LadderQueue {
 
     fn len(&self) -> usize {
         self.len
+    }
+
+    fn stats(&self) -> QueueStats {
+        self.qstats
     }
 }
 
@@ -434,6 +457,11 @@ impl<E, Q: EventQueue> Engine<E, Q> {
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Structural counters from the queue backend (see [`QueueStats`]).
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
     }
 
     /// Schedule `event` at absolute sim time `at`. Scheduling into the
@@ -609,6 +637,23 @@ mod tests {
         assert_eq!(q.pop().map(|e| e.time), Some(1500));
         assert_eq!(q.pop().map(|e| e.time), Some(1600));
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_stats_count_rebases_and_overflow_migration() {
+        let mut e: Engine<u32> = Engine::new();
+        assert_eq!(e.queue_stats(), QueueStats::default());
+        e.schedule_at(0, 0);
+        e.schedule_at(1 << 40, 1); // far past the window -> overflow
+        e.schedule_at((1 << 40) + 1, 2);
+        while e.pop().is_some() {}
+        let qs = e.queue_stats();
+        assert_eq!(qs.rebases, 1);
+        assert_eq!(qs.overflow_migrated, 2);
+        // the reference backend reports the zero default
+        let mut r: Engine<u32, crate::event::BinaryHeapQueue> = Engine::new();
+        r.schedule_at(1 << 40, 1);
+        assert_eq!(r.queue_stats(), QueueStats::default());
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub mod pipeline;
 pub mod refqueue;
 
 pub use engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Entry, EventQueue,
-                 LadderQueue, Time};
+                 LadderQueue, QueueStats, Time};
 pub use refqueue::BinaryHeapQueue;
 pub use noc::{Delivery, NocModel, NocStats};
 pub use pipeline::{service_profile, PipelineRun, PipelineSim, ServiceProfile,
@@ -49,6 +49,7 @@ pub use pipeline::{service_profile, PipelineRun, PipelineSim, ServiceProfile,
 
 use crate::config::{AcceleratorConfig, Architecture};
 use crate::model;
+use crate::obs::{NullRecorder, Recorder, Registry, TraceRecorder};
 use crate::sim;
 use crate::util::pool;
 use crate::util::rng::Pcg;
@@ -212,6 +213,25 @@ pub struct LatencyProfile {
     pub clamped: u64,
     /// max resident-event high-water mark over all engines
     pub peak_queue: usize,
+    /// per-run observability counters merged across replicas in
+    /// (replica, shard) order — bit-identical at any `--threads`
+    pub registry: Registry,
+}
+
+/// The warning surfaced when a profile reports clamped schedules.
+/// Clamping exists as an engine-level guard (`Engine::schedule` refuses
+/// to move time backwards); the pipeline model never triggers it, so a
+/// nonzero count in a profile means a model bug, and every consumer
+/// (event-sim's Outcome note, diagnostics) prints this one string.
+pub fn clamped_warning(clamped: u64) -> Option<String> {
+    if clamped == 0 {
+        return None;
+    }
+    Some(format!(
+        "WARNING: {clamped} event(s) scheduled into the past were clamped \
+         to the current virtual time; latency percentiles may be skewed \
+         (model bug — see EngineStats::clamped)"
+    ))
 }
 
 /// Per-(replica, shard) work descriptors: `Pcg` streams forked
@@ -244,15 +264,16 @@ fn replica_inputs(load: &RequestLoad) -> Vec<(Pcg, u64)> {
     inputs
 }
 
-fn run_replica(cfg: &AcceleratorConfig, nc: &model::NetworkCost,
-               load: &RequestLoad, input: &(Pcg, u64)) -> PipelineRun {
+fn run_replica<R: Recorder>(cfg: &AcceleratorConfig, nc: &model::NetworkCost,
+                            load: &RequestLoad, input: &(Pcg, u64),
+                            rec: R) -> (PipelineRun, R) {
     let (rng, jobs) = input;
     let mut rng = rng.clone();
-    let mut ps = PipelineSim::with_costs(cfg, nc);
+    let mut ps = PipelineSim::with_costs(cfg, nc).with_recorder(rec);
     let mean_gap = ps.bottleneck_period_ps().max(1) as f64
         / load.utilization_clamped();
     ps.inject_poisson(*jobs, mean_gap, &mut rng);
-    ps.run()
+    ps.run_traced()
 }
 
 fn profile_from_runs(net: &Network, cfg: &AcceleratorConfig,
@@ -263,6 +284,11 @@ fn profile_from_runs(net: &Network, cfg: &AcceleratorConfig,
         .collect();
     let total_jobs: u64 = runs.iter().map(|r| r.completed).sum();
     let total_energy: f64 = runs.iter().map(|r| r.energy_j_total).sum();
+    // (replica, shard) order is the merge order — determinism contract
+    let mut registry = Registry::new();
+    for r in runs {
+        registry.merge(&r.registry);
+    }
     LatencyProfile {
         network: net.name.clone(),
         arch: cfg.arch,
@@ -280,6 +306,7 @@ fn profile_from_runs(net: &Network, cfg: &AcceleratorConfig,
         events: runs.iter().map(|r| r.engine.processed).sum(),
         clamped: runs.iter().map(|r| r.engine.clamped).sum(),
         peak_queue: runs.iter().map(|r| r.engine.peak_queue).max().unwrap_or(0),
+        registry,
     }
 }
 
@@ -293,7 +320,9 @@ pub fn request_profile(net: &Network, cfg: &AcceleratorConfig,
                        load: &RequestLoad) -> LatencyProfile {
     let nc = model::network_cost(net, cfg);
     let inputs = replica_inputs(load);
-    let runs = pool::map(&inputs, |input| run_replica(cfg, &nc, load, input));
+    let runs = pool::map(&inputs, |input| {
+        run_replica(cfg, &nc, load, input, NullRecorder).0
+    });
     profile_from_runs(net, cfg, &runs)
 }
 
@@ -308,9 +337,58 @@ pub fn request_profile_sequential(net: &Network, cfg: &AcceleratorConfig,
     let inputs = replica_inputs(load);
     // map_with(1, ..) short-circuits to an inline sequential map — one
     // shared body with the pooled variant, same results by contract
-    let runs =
-        pool::map_with(1, &inputs, |input| run_replica(cfg, &nc, load, input));
+    let runs = pool::map_with(1, &inputs, |input| {
+        run_replica(cfg, &nc, load, input, NullRecorder).0
+    });
     profile_from_runs(net, cfg, &runs)
+}
+
+/// [`request_profile`] with a live [`TraceRecorder`] per (replica,
+/// shard), absorbed into one combined trace in fork order under
+/// `r{replica}s{shard}/` track prefixes. Results (and the absorbed
+/// trace, and the merged registry) are bit-identical at any
+/// `--threads`: each shard records only its own virtual timeline and
+/// the absorb order is the input order, not the completion order.
+/// Tracing forces the NoC route walk (see `NocModel::send_rec`), which
+/// is result-identical to the idle fast path by construction — only
+/// `NocStats::fast_path_hits` differs from an untraced run.
+pub fn request_profile_traced(net: &Network, cfg: &AcceleratorConfig,
+                              load: &RequestLoad, filter: Option<&str>)
+                              -> (LatencyProfile, TraceRecorder) {
+    let nc = model::network_cost(net, cfg);
+    let inputs = replica_inputs(load);
+    let traced = pool::map(&inputs, |input| {
+        run_replica(cfg, &nc, load, input, TraceRecorder::with_filter(filter))
+    });
+    assemble_traced(net, cfg, load, traced)
+}
+
+/// [`request_profile_traced`] run on the calling thread — same results
+/// by the `pool::map_with(1, ..)` contract; the determinism tests pin
+/// the two against each other byte-for-byte.
+pub fn request_profile_traced_sequential(
+    net: &Network, cfg: &AcceleratorConfig, load: &RequestLoad,
+    filter: Option<&str>) -> (LatencyProfile, TraceRecorder) {
+    let nc = model::network_cost(net, cfg);
+    let inputs = replica_inputs(load);
+    let traced = pool::map_with(1, &inputs, |input| {
+        run_replica(cfg, &nc, load, input, TraceRecorder::with_filter(filter))
+    });
+    assemble_traced(net, cfg, load, traced)
+}
+
+fn assemble_traced(net: &Network, cfg: &AcceleratorConfig,
+                   load: &RequestLoad,
+                   traced: Vec<(PipelineRun, TraceRecorder)>)
+                   -> (LatencyProfile, TraceRecorder) {
+    let shards = load.shards.max(1);
+    let mut combined = TraceRecorder::new();
+    let mut runs = Vec::with_capacity(traced.len());
+    for (i, (run, rec)) in traced.into_iter().enumerate() {
+        combined.absorb(&format!("r{}s{}/", i / shards, i % shards), rec);
+        runs.push(run);
+    }
+    (profile_from_runs(net, cfg, &runs), combined)
 }
 
 #[cfg(test)]
@@ -397,6 +475,48 @@ mod tests {
         assert_eq!(a.p99_s.to_bits(), b.p99_s.to_bits());
         assert_eq!(a.energy_j_per_inference.to_bits(),
                    b.energy_j_per_inference.to_bits());
+    }
+
+    #[test]
+    fn clamped_warning_fires_only_on_nonzero_counts() {
+        assert_eq!(clamped_warning(0), None);
+        let w = clamped_warning(3).expect("nonzero count must warn");
+        assert!(w.contains("WARNING") && w.contains('3'), "{w}");
+    }
+
+    #[test]
+    fn traced_profile_matches_plain_and_carries_a_registry() {
+        let net = workloads::alexnet();
+        let cfg = AcceleratorConfig::neural_pim();
+        let load = RequestLoad {
+            requests: 12, replicas: 2, shards: 2, ..Default::default()
+        };
+        let plain = request_profile(&net, &cfg, &load);
+        let (traced, trace) = request_profile_traced(&net, &cfg, &load, None);
+        // tracing must not perturb results (bit-identical latencies)
+        assert_eq!(plain.p99_s.to_bits(), traced.p99_s.to_bits());
+        assert_eq!(plain.energy_j_per_inference.to_bits(),
+                   traced.energy_j_per_inference.to_bits());
+        assert_eq!(plain.events, traced.events);
+        // every (replica, shard) contributes under its own prefix
+        assert!(!trace.is_empty());
+        for prefix in ["r0s0/", "r0s1/", "r1s0/", "r1s1/"] {
+            assert!(
+                trace.tracks().iter().any(|t| t.starts_with(prefix)),
+                "missing {prefix} tracks in {:?}", trace.tracks()
+            );
+        }
+        // the registry rides along on both paths, identically — except
+        // the documented fast-path counter, which tracing suppresses
+        // (live recorders force the route walk, so traced hits are 0)
+        assert!(!plain.registry.is_empty());
+        assert_eq!(traced.registry.counter("noc.fast_path_hits"), 0);
+        let mut traced_reg = traced.registry.clone();
+        traced_reg.add("noc.fast_path_hits",
+                       plain.registry.counter("noc.fast_path_hits"));
+        assert_eq!(traced_reg.snapshot_string(),
+                   plain.registry.snapshot_string());
+        assert_eq!(plain.registry.counter("pipeline.completed"), 12);
     }
 
     #[test]

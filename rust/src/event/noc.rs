@@ -34,6 +34,7 @@
 
 use super::engine::{Time, PS_PER_NS};
 use crate::arch::noc::CMesh;
+use crate::obs::{NullRecorder, Recorder};
 
 /// 1 GHz NoC clock — the unit `CMesh::transfer_latency_ns` counts in.
 pub const NOC_CYCLE_PS: Time = PS_PER_NS;
@@ -44,6 +45,8 @@ pub const FLIT_BYTES: u64 = 32;
 /// E, W, S, N output links + the local ejection port.
 const PORTS_PER_ROUTER: usize = 5;
 const LOCAL_PORT: usize = 4;
+/// Port-direction suffixes for trace track names (indexOf = dir).
+const DIR_NAMES: [&str; PORTS_PER_ROUTER] = ["e", "w", "s", "n", "l"];
 
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct NocStats {
@@ -54,6 +57,11 @@ pub struct NocStats {
     pub queued_ps_total: u64,
     pub queued_ps_max: Time,
     pub energy_j: f64,
+    /// packets that resolved via the O(1) idle-mesh fast path (always 0
+    /// when a live recorder forces the walk — see [`NocModel::send_rec`])
+    pub fast_path_hits: u64,
+    /// packets whose head flit queued at least one cycle (contention)
+    pub stalled_packets: u64,
 }
 
 /// One completed transfer.
@@ -114,10 +122,30 @@ impl NocModel {
     /// is monotone) — the idle fast path relies on it.
     pub fn send(&mut self, now: Time, from: u32, to: u32, bytes: u64)
                 -> Delivery {
+        self.send_rec(now, from, to, bytes, &mut NullRecorder)
+    }
+
+    /// [`NocModel::send`] with a tracing hook. A live recorder
+    /// (`rec.is_enabled()`) forces the full walk so every per-link
+    /// reservation becomes a span on its port's track — the walk is
+    /// result-identical to the fast path (pinned by
+    /// `prop_fast_path_matches_always_walk_reference`), so timing and
+    /// energy stay bit-identical; only `NocStats::fast_path_hits`
+    /// differs between traced and untraced runs.
+    pub fn send_rec<R: Recorder>(
+        &mut self,
+        now: Time,
+        from: u32,
+        to: u32,
+        bytes: u64,
+        rec: &mut R,
+    ) -> Delivery {
         let hops = self.mesh.hops(from, to);
         let ser = bytes.div_ceil(FLIT_BYTES).max(1);
         let hold = ser * NOC_CYCLE_PS;
-        let (arrive, queued) = if now + NOC_CYCLE_PS >= self.max_free {
+        let (arrive, queued) = if !rec.is_enabled()
+            && now + NOC_CYCLE_PS >= self.max_free
+        {
             // Provably idle: the head is ready at `now + 1 cycle`, at
             // or after every outstanding claim, so the walk would find
             // zero queueing at every port — reproduce its result in
@@ -127,16 +155,20 @@ impl NocModel {
             let arrive = now + Time::from(hops.max(1)) * NOC_CYCLE_PS + hold;
             self.pending = Some(Reservation { from, to, start: now, hold });
             self.max_free = self.max_free.max(arrive);
+            self.stats.fast_path_hits += 1;
             (arrive, 0)
         } else {
             if let Some(r) = self.pending.take() {
-                let (_, q) = self.walk(r.start, r.from, r.to, r.hold);
+                // a pending reservation only exists after a fast-path
+                // send, i.e. never under a live recorder — no spans lost
+                let (_, q) =
+                    self.walk(r.start, r.from, r.to, r.hold, &mut NullRecorder);
                 debug_assert_eq!(
                     q, 0,
                     "pending fast-path reservation must be contention-free"
                 );
             }
-            self.walk(now, from, to, hold)
+            self.walk(now, from, to, hold, rec)
         };
         let energy = self.mesh.transfer_energy(bytes, hops);
         self.stats.packets += 1;
@@ -145,14 +177,25 @@ impl NocModel {
         self.stats.queued_ps_total += queued;
         self.stats.queued_ps_max = self.stats.queued_ps_max.max(queued);
         self.stats.energy_j += energy;
+        if queued > 0 {
+            self.stats.stalled_packets += 1;
+        }
         Delivery { arrive_ps: arrive, queued_ps: queued, energy_j: energy, hops }
     }
 
     /// The full router-by-router walk: claim every output port along
     /// the XY route, accumulating head-flit queueing. Returns
-    /// `(arrive, queued)`.
-    fn walk(&mut self, start: Time, from: u32, to: u32, hold: Time)
-            -> (Time, Time) {
+    /// `(arrive, queued)`. A live recorder gets one reservation span
+    /// per claimed port: `[depart, depart + hold]` on track
+    /// `noc.r<router>.<dir>`.
+    fn walk<R: Recorder>(
+        &mut self,
+        start: Time,
+        from: u32,
+        to: u32,
+        hold: Time,
+        rec: &mut R,
+    ) -> (Time, Time) {
         let mut route = std::mem::take(&mut self.route_buf);
         self.mesh.route_into(from, to, &mut route);
         let side = self.mesh.side;
@@ -163,10 +206,19 @@ impl NocModel {
             // (the min-1-hop convention of `arch::noc`)
             let p = port_index(side, route[0], LOCAL_PORT);
             head = claim(&mut self.port_free, p, head, hold, &mut queued);
+            if rec.is_enabled() {
+                rec.span(head, hold, &port_track(side, route[0], LOCAL_PORT),
+                         "noc.link");
+            }
         } else {
             for w in route.windows(2) {
-                let p = port_index(side, w[0], dir_of(w[0], w[1]));
+                let dir = dir_of(w[0], w[1]);
+                let p = port_index(side, w[0], dir);
                 head = claim(&mut self.port_free, p, head, hold, &mut queued);
+                if rec.is_enabled() {
+                    rec.span(head, hold, &port_track(side, w[0], dir),
+                             "noc.link");
+                }
             }
         }
         let arrive = head + hold; // tail flits stream behind the head
@@ -178,6 +230,11 @@ impl NocModel {
 
 fn port_index(side: u32, router: (u32, u32), dir: usize) -> usize {
     ((router.1 * side + router.0) as usize) * PORTS_PER_ROUTER + dir
+}
+
+/// Trace track name for a router output port, e.g. `noc.r5.e`.
+fn port_track(side: u32, router: (u32, u32), dir: usize) -> String {
+    format!("noc.r{}.{}", router.1 * side + router.0, DIR_NAMES[dir])
 }
 
 /// Claim one output port: 1-cycle traversal, wait for the port to
@@ -292,6 +349,40 @@ mod tests {
             out
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fast_path_and_stall_counters_track_their_paths() {
+        let mut noc = NocModel::new(CMesh::new(64, 4));
+        let d1 = noc.send(0, 0, 32, 64); // idle mesh -> fast path
+        let d2 = noc.send(0, 0, 32, 64); // contended -> walk, stalls
+        assert_eq!(noc.stats.fast_path_hits, 1);
+        assert_eq!(noc.stats.stalled_packets, 1);
+        assert_eq!(d1.queued_ps, 0);
+        assert!(d2.queued_ps > 0);
+    }
+
+    #[test]
+    fn traced_send_matches_untraced_and_records_per_link_spans() {
+        use crate::obs::{Recorder, TraceRecorder};
+        let mut plain = NocModel::new(CMesh::new(64, 4));
+        let mut traced = NocModel::new(CMesh::new(64, 4));
+        let mut rec = TraceRecorder::new();
+        assert!(rec.is_enabled());
+        for (t, a, b) in [(0u64, 0u32, 32u32), (0, 0, 32), (90_000, 5, 60)] {
+            let d1 = plain.send(t, a, b, 64);
+            let d2 = traced.send_rec(t, a, b, 64, &mut rec);
+            assert_eq!(d1, d2, "traced delivery diverged");
+        }
+        // one reservation span per hop of every send
+        let hops: u64 = plain.stats.hops_total;
+        assert_eq!(rec.len() as u64, hops);
+        assert!(rec.tracks().iter().all(|t| t.starts_with("noc.r")), "{:?}",
+                rec.tracks());
+        // the recorder forces the walk: no fast-path hits on that side
+        assert_eq!(traced.stats.fast_path_hits, 0);
+        assert_eq!(plain.stats.fast_path_hits, 2);
+        assert_eq!(traced.stats.queued_ps_total, plain.stats.queued_ps_total);
     }
 
     /// The pre-fast-path algorithm: walk every send unconditionally.

@@ -28,13 +28,19 @@ use super::engine::{ns_to_ps, ps_to_s, Engine, EngineStats, LadderQueue,
                     Time};
 use super::noc::{NocModel, NOC_CYCLE_PS};
 use crate::arch::noc::CMesh;
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, Architecture};
 use crate::energy;
 use crate::mapping::{LayerMapping, NetworkMapping};
 use crate::model::{self, LayerCost, NetworkCost};
+use crate::obs::{Hist, NullRecorder, Recorder, Registry};
 use crate::util::rng::Pcg;
 use crate::workloads::Network;
 use std::collections::VecDeque;
+
+/// Queue-depth counter sampling stride under a live recorder: one
+/// `engine.queue_depth` sample every this many pops keeps traces small
+/// while still showing the depth timeline.
+const QUEUE_SAMPLE_STRIDE: u64 = 64;
 
 /// Upper clamp on inter-stage buffer depth, in whole inferences: the
 /// IR/OR SRAMs stage only a handful of inference outputs even when a
@@ -120,13 +126,21 @@ struct Stage {
     /// per-transfer HyperTransport charge on multi-chip mappings
     noc_e_extra: f64,
     out_bytes: u64,
+    /// scheduled A/D conversions per job (`LayerCost::adc_convs`, the
+    /// Eq. 5/6/7 dataflow count for this layer)
+    adc_convs: u64,
+    /// shift-and-add operations per job (`LayerCost::sa_ops`)
+    sa_ops: u64,
     /// jobs delivered and waiting for service (FIFO); length ≤ capacity
     queue: VecDeque<u32>,
     busy: bool,
 }
 
-/// One simulated chip instance.
-pub struct PipelineSim {
+/// One simulated chip instance, generic over the tracing hook: the
+/// default [`NullRecorder`] monomorphizes every `rec.is_enabled()`
+/// guard to a constant `false`, so the untraced pipeline compiles to
+/// the pre-observability code (budgeted in `perf_hotpath --only-obs`).
+pub struct PipelineSim<R: Recorder = NullRecorder> {
     engine: Engine<Ev>,
     noc: NocModel,
     stages: Vec<Stage>,
@@ -140,6 +154,15 @@ pub struct PipelineSim {
     energy_j: f64,
     blocked_starts: u64,
     egress_tile: u32,
+    /// which cost model priced the stages — keys the per-arch
+    /// conversion counters in the registry
+    arch: Architecture,
+    /// running totals across completed stage services
+    adc_convs: u64,
+    sa_ops: u64,
+    /// per-delivery head-flit queueing distribution (ps, log2 buckets)
+    queued_hist: Hist,
+    rec: R,
 }
 
 /// Everything a finished run reports.
@@ -158,9 +181,17 @@ pub struct PipelineRun {
     pub blocked_starts: u64,
     /// total head-flit NoC queueing across the run
     pub noc_wait_s: f64,
+    /// total scheduled A/D conversions (per-arch dataflow count × jobs)
+    pub adc_convs: u64,
+    /// total shift-and-add operations
+    pub sa_ops: u64,
+    /// every counter/gauge/histogram of the run, keyed
+    /// `engine.*`/`noc.*`/`pipeline.*`/`adc.*`/`sa.*` — per-arch
+    /// conversion counters carry the architecture name
+    pub registry: Registry,
 }
 
-impl PipelineSim {
+impl PipelineSim<NullRecorder> {
     /// Map `net` on `cfg` and build the event model from the memoized
     /// [`model::network_cost`] table — replicas and repeated runs of the
     /// same `(network, config)` pair share one layer-cost table instead
@@ -211,6 +242,8 @@ impl PipelineSim {
                     compute_e: cost.compute_e,
                     noc_e_extra: cost.noc_e_extra,
                     out_bytes: lm.out_bytes(),
+                    adc_convs: cost.adc_convs,
+                    sa_ops: cost.sa_ops,
                     queue: VecDeque::new(),
                     busy: false,
                 }
@@ -235,6 +268,35 @@ impl PipelineSim {
             energy_j: 0.0,
             blocked_starts: 0,
             egress_tile: 0,
+            arch: cfg.arch,
+            adc_convs: 0,
+            sa_ops: 0,
+            queued_hist: Hist::new(),
+            rec: NullRecorder,
+        }
+    }
+}
+
+impl<R: Recorder> PipelineSim<R> {
+    /// Swap in a tracing recorder (typically an
+    /// `obs::TraceRecorder`) — builders stay on the null path, so the
+    /// traced pipeline is opted into per run.
+    pub fn with_recorder<R2: Recorder>(self, rec: R2) -> PipelineSim<R2> {
+        PipelineSim {
+            engine: self.engine,
+            noc: self.noc,
+            stages: self.stages,
+            credits: self.credits,
+            arrival_ps: self.arrival_ps,
+            done_ps: self.done_ps,
+            energy_j: self.energy_j,
+            blocked_starts: self.blocked_starts,
+            egress_tile: self.egress_tile,
+            arch: self.arch,
+            adc_convs: self.adc_convs,
+            sa_ops: self.sa_ops,
+            queued_hist: self.queued_hist,
+            rec,
         }
     }
 
@@ -282,6 +344,13 @@ impl PipelineSim {
         }
         if s + 1 < self.stages.len() && self.credits[s + 1] == 0 {
             self.blocked_starts += 1;
+            if self.rec.is_enabled() {
+                self.rec.instant(
+                    self.engine.now(),
+                    &stage_track(s, self.stages[s].tile),
+                    "stage.blocked",
+                );
+            }
             return;
         }
         let job = self.stages[s].queue.pop_front().unwrap();
@@ -312,6 +381,8 @@ impl PipelineSim {
                 let s = stage as usize;
                 self.stages[s].busy = false;
                 self.energy_j += self.stages[s].compute_e;
+                self.adc_convs += self.stages[s].adc_convs;
+                self.sa_ops += self.stages[s].sa_ops;
                 let from = self.stages[s].tile;
                 let bytes = self.stages[s].out_bytes;
                 let last = s + 1 >= self.stages.len();
@@ -320,8 +391,19 @@ impl PipelineSim {
                 } else {
                     self.stages[s + 1].tile
                 };
-                let d = self.noc.send(now, from, to, bytes);
+                if self.rec.is_enabled() {
+                    // the service that just ended: occupancy span
+                    let service = self.stages[s].service_ps;
+                    self.rec.span(
+                        now - service,
+                        service,
+                        &stage_track(s, from),
+                        "stage.serve",
+                    );
+                }
+                let d = self.noc.send_rec(now, from, to, bytes, &mut self.rec);
                 self.energy_j += d.energy_j + self.stages[s].noc_e_extra;
+                self.queued_hist.observe(d.queued_ps);
                 if last {
                     self.done_ps[job as usize] = d.arrive_ps;
                 } else {
@@ -338,8 +420,32 @@ impl PipelineSim {
     /// Drain every event and summarize. All injected jobs complete (the
     /// credit scheme cannot deadlock: the last stage never blocks, so
     /// every blocked chain unwinds from the back).
-    pub fn run(mut self) -> PipelineRun {
+    pub fn run(self) -> PipelineRun {
+        self.run_traced().0
+    }
+
+    /// [`PipelineSim::run`] returning the recorder too, for callers
+    /// that merge per-replica traces (`event::request_profile_traced`).
+    pub fn run_traced(mut self) -> (PipelineRun, R) {
+        let tracing = self.rec.is_enabled();
+        let mut pops: u64 = 0;
+        let mut rebases_seen: u64 = 0;
         while let Some((t, ev)) = self.engine.pop() {
+            if tracing {
+                pops += 1;
+                if pops % QUEUE_SAMPLE_STRIDE == 0 {
+                    self.rec.sample(
+                        t,
+                        "engine.queue_depth",
+                        self.engine.pending() as f64,
+                    );
+                }
+                let rebases = self.engine.queue_stats().rebases;
+                if rebases > rebases_seen {
+                    rebases_seen = rebases;
+                    self.rec.instant(t, "engine", "engine.ladder.rebase");
+                }
+            }
             self.handle(t, ev);
         }
         debug_assert!(
@@ -354,7 +460,8 @@ impl PipelineSim {
             .zip(&self.done_ps)
             .map(|(&a, &d)| ps_to_s(d.saturating_sub(a)))
             .collect();
-        PipelineRun {
+        let registry = self.fill_registry(completed);
+        let run = PipelineRun {
             completed,
             makespan_s: ps_to_s(makespan),
             energy_j_total: self.energy_j,
@@ -364,8 +471,45 @@ impl PipelineSim {
             engine: self.engine.stats,
             blocked_starts: self.blocked_starts,
             noc_wait_s: ps_to_s(self.noc.stats.queued_ps_total),
-        }
+            adc_convs: self.adc_convs,
+            sa_ops: self.sa_ops,
+            registry,
+        };
+        (run, self.rec)
     }
+
+    /// Fold this run's plain counters into a [`Registry`] (the hot path
+    /// never touches the maps — this runs once, after the drain).
+    fn fill_registry(&self, completed: u64) -> Registry {
+        let mut reg = Registry::new();
+        let es = self.engine.stats;
+        reg.add("engine.scheduled", es.scheduled);
+        reg.add("engine.processed", es.processed);
+        reg.add("engine.clamped", es.clamped);
+        reg.gauge_max("engine.peak_queue", es.peak_queue as u64);
+        let qs = self.engine.queue_stats();
+        reg.add("engine.ladder.rebases", qs.rebases);
+        reg.add("engine.ladder.overflow_migrated", qs.overflow_migrated);
+        let ns = &self.noc.stats;
+        reg.add("noc.packets", ns.packets);
+        reg.add("noc.flits", ns.flits);
+        reg.add("noc.hops", ns.hops_total);
+        reg.add("noc.stalled_packets", ns.stalled_packets);
+        reg.add("noc.fast_path_hits", ns.fast_path_hits);
+        reg.add("noc.queued_ps", ns.queued_ps_total);
+        reg.gauge_max("noc.queued_ps_max", ns.queued_ps_max);
+        reg.merge_hist("noc.queued_ps", &self.queued_hist);
+        reg.add("pipeline.completed", completed);
+        reg.add("pipeline.blocked_starts", self.blocked_starts);
+        reg.add(&format!("adc.convs.{}", self.arch.name()), self.adc_convs);
+        reg.add(&format!("sa.ops.{}", self.arch.name()), self.sa_ops);
+        reg
+    }
+}
+
+/// Trace track name of a pipeline stage, e.g. `stage3.tile17`.
+fn stage_track(stage: usize, tile: u32) -> String {
+    format!("stage{stage}.tile{tile}")
 }
 
 #[cfg(test)]
@@ -488,6 +632,47 @@ mod tests {
         );
         assert!(sp.batch_us(5) >= sp.batch_us(1));
         assert!(sp.batch_us(1) >= 1);
+    }
+
+    #[test]
+    fn traced_run_is_result_identical_and_fills_the_registry() {
+        let cfg = AcceleratorConfig::neural_pim();
+        let layers = vec![Layer::conv("x", 3, 4, 8, 6, 1),
+                          Layer::fc("y", 288, 10)];
+        let m = bare_mapping(&cfg, &layers);
+        let mut plain = PipelineSim::with_mapping(&cfg, &m);
+        plain.inject_paced(3, 1);
+        let plain = plain.run();
+        let mut traced = PipelineSim::with_mapping(&cfg, &m)
+            .with_recorder(crate::obs::TraceRecorder::new());
+        traced.inject_paced(3, 1);
+        let (traced, rec) = traced.run_traced();
+        // tracing must not perturb the simulation
+        assert_eq!(plain.energy_j_total.to_bits(),
+                   traced.energy_j_total.to_bits());
+        assert_eq!(
+            plain.latency_s.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            traced.latency_s.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(plain.adc_convs, traced.adc_convs);
+        assert_eq!(plain.sa_ops, traced.sa_ops);
+        assert!(plain.adc_convs > 0);
+        // registry totals key off the architecture name
+        let key = format!("adc.convs.{}", cfg.arch.name());
+        assert_eq!(plain.registry.counter(&key), plain.adc_convs);
+        assert_eq!(plain.registry.counter("pipeline.completed"), 3);
+        assert_eq!(plain.registry.counter("engine.processed"),
+                   plain.engine.processed);
+        // and the trace captured stage occupancy + NoC link spans
+        assert!(rec.events().iter().any(|e| e.name == "stage.serve"));
+        assert!(rec.events().iter().any(|e| e.name == "noc.link"));
+        // per-job conversion totals: every job crosses every stage once
+        let per_inf: u64 = m
+            .layers
+            .iter()
+            .map(|lm| crate::model::layer_cost(lm, &cfg, false).adc_convs)
+            .sum();
+        assert_eq!(plain.adc_convs, 3 * per_inf);
     }
 
     #[test]

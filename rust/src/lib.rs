@@ -29,6 +29,12 @@
 //! back-pressured pipeline, cross-validation + sharded request-level
 //! latency modes), `dse` (Fig. 11
 //! sweep), `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
+//! `obs` (observability: the `Recorder` trait the event/serve hot
+//! layers are generic over — zero-cost `NullRecorder` off-path, a
+//! `TraceRecorder` exporting Perfetto-loadable Chrome trace JSON in
+//! virtual picoseconds via `--trace` — plus the deterministic
+//! counter/gauge/histogram `Registry` folded into every `event-sim`/
+//! `serve-sim` outcome, and the leveled `diag!` stderr macro),
 //! `runtime` (PJRT execution of the AOT artifacts), `serve` — the
 //! backend-agnostic serving layer: an `InferenceBackend` trait (per-
 //! worker-thread setup, `execute(batch) -> BatchResult`, declared
@@ -65,6 +71,7 @@ pub mod event;
 pub mod mapping;
 pub mod model;
 pub mod noise;
+pub mod obs;
 pub mod periph;
 pub mod report;
 pub mod runtime;

@@ -305,10 +305,16 @@ impl CostModel for NeuralPimModel {
         dataflow::conversions_c()
     }
 
+    fn sa_ops(&self, ctx: &LayerCtx) -> u64 {
+        // analog accumulation: the NNS+A clocks once per input cycle of
+        // every group-chunk (the same count interface_energy prices)
+        ctx.group_chunks * ctx.cycles
+    }
+
     fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy {
         // one NNS+A op per group-chunk per cycle; 1 conversion per
         // group-chunk; inter-chunk combine is a cheap digital add
-        let sa_ops = ctx.group_chunks * ctx.cycles;
+        let sa_ops = self.sa_ops(ctx);
         InterfaceEnergy {
             sa: sa_ops as f64 * (k::NNSA_E_OP + 2.0 * k::SH_E_OP),
             adc: ctx.group_chunks as f64 * k::NNADC_E_CONV,

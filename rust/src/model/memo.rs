@@ -36,6 +36,13 @@ pub struct LayerCost {
     pub compute_e: f64,
     /// per-transfer HyperTransport surcharge on multi-chip mappings
     pub noc_e_extra: f64,
+    /// scheduled A/D conversions per inference: the pure Eq. 5/6/7
+    /// dataflow count, `group_chunks x conversions_per_group` (NOT the
+    /// W+/W- differential ×2 some energy models charge — this is the
+    /// conversion *count* the paper's §3.1 comparison argues about)
+    pub adc_convs: u64,
+    /// shift-and-add ops per inference ([`super::CostModel::sa_ops`])
+    pub sa_ops: u64,
 }
 
 /// The memoized cost table for one `(network, config)` pair: the mapping
@@ -78,7 +85,7 @@ pub fn layer_cost(lm: &LayerMapping, cfg: &AcceleratorConfig,
     let xbar = array_cycles as f64 * k::xbar_e_cycle(cfg.xbar_size, p.p_d)
         * (k_dim.min(rows) as f64 / rows as f64);
 
-    let iface = model.interface_energy(&LayerCtx {
+    let ctx = LayerCtx {
         cfg,
         p,
         n,
@@ -87,7 +94,10 @@ pub fn layer_cost(lm: &LayerMapping, cfg: &AcceleratorConfig,
         cout: l.cout as u64,
         group_chunks,
         array_cycles,
-    });
+    };
+    let iface = model.interface_energy(&ctx);
+    let adc_convs = group_chunks * model.conversions_per_group(p);
+    let sa_ops = model.sa_ops(&ctx);
     let mut e = EnergyBreakdown {
         adc: iface.adc,
         dac,
@@ -127,6 +137,8 @@ pub fn layer_cost(lm: &LayerMapping, cfg: &AcceleratorConfig,
         } else {
             0.0
         },
+        adc_convs,
+        sa_ops,
         energy: e,
     }
 }
@@ -245,6 +257,8 @@ mod tests {
                 assert_eq!(a.energy, b.energy);
                 assert_eq!(a.compute_e.to_bits(), b.compute_e.to_bits());
                 assert_eq!(a.noc_e_extra.to_bits(), b.noc_e_extra.to_bits());
+                assert_eq!(a.adc_convs, b.adc_convs);
+                assert_eq!(a.sa_ops, b.sa_ops);
             }
         }
     }
@@ -272,6 +286,40 @@ mod tests {
         let d = network_cost(&other, &np);
         assert!(!Arc::ptr_eq(&a, &d));
         assert_eq!(d.layers.len(), a.layers.len() - 1);
+    }
+
+    #[test]
+    fn conversion_counts_follow_the_dataflow_equations() {
+        use crate::config::Architecture;
+        let net = workloads::alexnet();
+        let per_net = |arch: Architecture| -> (u64, u64) {
+            let cfg = AcceleratorConfig::for_arch(arch);
+            let nc = network_cost(&net, &cfg);
+            let model = super::super::cost_model(arch);
+            let mut convs = 0u64;
+            let mut sa = 0u64;
+            for (lm, cost) in nc.mapping.layers.iter().zip(&nc.layers) {
+                // the count is exactly group_chunks x Eq. 5/6/7
+                let groups = lm.layer.positions()
+                    * lm.layer.cout as u64
+                    * lm.k_chunks;
+                assert_eq!(
+                    cost.adc_convs,
+                    groups * model.conversions_per_group(&cfg.precision),
+                    "{arch:?}/{}", lm.layer.name
+                );
+                convs += cost.adc_convs;
+                sa += cost.sa_ops;
+            }
+            (convs, sa)
+        };
+        let (isaac, _) = per_net(Architecture::IsaacLike);
+        let (cascade, _) = per_net(Architecture::CascadeLike);
+        let (pim, pim_sa) = per_net(Architecture::NeuralPim);
+        // §3.1 ordering: Neural-PIM converts once per group
+        assert!(pim < cascade && cascade < isaac, "{pim} {cascade} {isaac}");
+        // analog accumulation still clocks the NNS+A every input cycle
+        assert!(pim_sa > pim);
     }
 
     #[test]

@@ -153,6 +153,19 @@ pub trait CostModel: Sync {
     /// A/D conversions per dot-product group (Eq. 5/6/7 class).
     fn conversions_per_group(&self, p: &Precision) -> u64;
 
+    /// Shift-and-add operations scheduled per inference of one mapped
+    /// layer — the op count the observability counters report (the
+    /// energy charged per op is the model's own business in
+    /// [`CostModel::interface_energy`]). Default: one digital S+A per
+    /// scheduled conversion, which is exact for the ISAAC-like and
+    /// RAELLA-like dataflows; CASCADE's buffer-write accumulation is
+    /// charged at the same per-conversion granularity. Analog-
+    /// accumulation models override (Neural-PIM clocks its NNS+A every
+    /// input cycle of every group-chunk).
+    fn sa_ops(&self, ctx: &LayerCtx) -> u64 {
+        ctx.group_chunks * self.conversions_per_group(ctx.p)
+    }
+
     /// The architecture-specific slice of one mapped layer's energy.
     fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy;
 

@@ -1,0 +1,81 @@
+//! Leveled stderr diagnostics: the `crate::diag!` macro and its
+//! verbosity state.
+//!
+//! Levels: **0** = warning (always printed), **1** = informational
+//! (printed with `--verbose` or `NEURAL_PIM_LOG=1`), **2+** = debug.
+//! The verbosity is read from `NEURAL_PIM_LOG` on first use and raised
+//! by `scenario::dispatch` when `--verbose` is passed. Stderr is used
+//! so stdout stays a clean, renderable outcome stream (tables or JSON);
+//! `verify.sh` bans raw `eprintln!` everywhere else in `rust/src`
+//! except `main.rs`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Sentinel: verbosity not yet initialized from the environment.
+const UNINIT: u8 = u8::MAX;
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// Current verbosity, initializing from `NEURAL_PIM_LOG` on first read.
+pub fn verbosity() -> u8 {
+    let v = VERBOSITY.load(Ordering::Relaxed);
+    if v != UNINIT {
+        return v;
+    }
+    let env = std::env::var("NEURAL_PIM_LOG")
+        .ok()
+        .and_then(|s| s.trim().parse::<u8>().ok())
+        .unwrap_or(0)
+        .min(UNINIT - 1);
+    VERBOSITY.store(env, Ordering::Relaxed);
+    env
+}
+
+/// Set the verbosity explicitly (e.g. from `--verbose`).
+pub fn set_verbosity(v: u8) {
+    VERBOSITY.store(v.min(UNINIT - 1), Ordering::Relaxed);
+}
+
+/// Raise verbosity to at least `v`, keeping a higher `NEURAL_PIM_LOG`.
+pub fn raise_verbosity(v: u8) {
+    set_verbosity(verbosity().max(v));
+}
+
+/// Would a `diag!` at this level print?
+pub fn enabled(level: u8) -> bool {
+    verbosity() >= level
+}
+
+/// Leveled stderr diagnostic. Level 0 always prints (warnings); level 1
+/// needs `--verbose` / `NEURAL_PIM_LOG=1`; higher levels are debug.
+///
+/// ```ignore
+/// crate::diag!(1, "event-sim: {n} events in {s:.3}s");
+/// ```
+#[macro_export]
+macro_rules! diag {
+    ($lvl:expr, $($arg:tt)*) => {
+        if $crate::obs::diag::enabled($lvl) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_gate_as_documented() {
+        // note: global state — keep this the only test mutating it
+        set_verbosity(0);
+        assert!(enabled(0));
+        assert!(!enabled(1));
+        raise_verbosity(1);
+        assert!(enabled(1));
+        assert!(!enabled(2));
+        raise_verbosity(0); // raise never lowers
+        assert!(enabled(1));
+        set_verbosity(0);
+    }
+}

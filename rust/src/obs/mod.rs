@@ -1,0 +1,128 @@
+//! Observability substrate: virtual-time tracing, deterministic named
+//! counters/gauges/histograms, and leveled stderr diagnostics.
+//!
+//! Three pieces, all stamped in **virtual picoseconds** (the event
+//! engine's clock — never wall time, so instrumented runs stay
+//! bit-identical at any `--threads`/`--shards`):
+//!
+//! - [`Recorder`] — the tracing hook the hot layers (`event::engine`,
+//!   `event::noc`, `event::pipeline`, `serve::loadgen`) are generic
+//!   over. The default impl on every method is a no-op and
+//!   [`NullRecorder`] overrides nothing, so the off-path monomorphizes
+//!   to exactly the un-instrumented code (`is_enabled()` is a constant
+//!   `false` the optimizer folds; see `benches/perf_hotpath.rs`
+//!   `--only-obs` for the ≤2% budget proof). [`TraceRecorder`] captures
+//!   spans/instants/counter-samples and exports Chrome trace-event JSON
+//!   loadable in Perfetto ([`trace`]).
+//! - [`Registry`] — named monotonic counters, max-gauges, and log2
+//!   histograms ([`Hist`]). Aggregation-time only: hot paths keep plain
+//!   `u64` fields in their stats structs and dump them into a registry
+//!   when a run finishes; per-shard registries merge in shard order
+//!   (commutative ops, deterministic `BTreeMap` iteration), so
+//!   snapshots are byte-identical regardless of worker scheduling.
+//! - [`diag`] + the crate-root `diag!` macro — leveled stderr
+//!   diagnostics gated by `--verbose`/`NEURAL_PIM_LOG`. Level 0 is for
+//!   warnings (always printed), level 1+ is informational chatter.
+//!   `verify.sh` bans raw `eprintln!` outside this module and
+//!   `main.rs`.
+//!
+//! The `--trace <path>`/`--trace-filter <prefix>` CLI options arrive
+//! here as a [`TraceSpec`] (thread-local, set by `scenario::dispatch`
+//! on the dispatching thread — scenarios read it with [`trace_spec`];
+//! worker threads never consult the global, they receive recorders
+//! explicitly).
+
+pub mod diag;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Hist, Registry};
+pub use trace::TraceRecorder;
+
+/// Tracing hook for the virtual-time hot layers. All timestamps are
+/// virtual picoseconds. `track` names a timeline row (a stage, a NoC
+/// port, a shard); `name` is the event label `--trace-filter` matches
+/// against (use dotted `subsystem.detail` names).
+///
+/// Every method defaults to a no-op so [`NullRecorder`] costs nothing;
+/// implementors override what they capture. Callers guard any
+/// formatting work behind `is_enabled()`.
+pub trait Recorder {
+    /// `true` only when recording actually happens — lets call sites
+    /// skip `format!` and sampling work on the null path.
+    #[inline(always)]
+    fn is_enabled(&self) -> bool {
+        false
+    }
+
+    /// A duration on a track: `[ts_ps, ts_ps + dur_ps]`.
+    #[inline(always)]
+    fn span(&mut self, _ts_ps: u64, _dur_ps: u64, _track: &str, _name: &str) {}
+
+    /// A point event on a track.
+    #[inline(always)]
+    fn instant(&mut self, _ts_ps: u64, _track: &str, _name: &str) {}
+
+    /// One sample of a named counter series (a timeline, not a total —
+    /// totals belong in a [`Registry`]).
+    #[inline(always)]
+    fn sample(&mut self, _ts_ps: u64, _series: &str, _value: f64) {}
+}
+
+/// The zero-cost default recorder: records nothing, inlines to nothing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {}
+
+/// Where (and what) to trace, as parsed from `--trace <path>` and
+/// `--trace-filter <prefix>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSpec {
+    pub path: String,
+    /// event-name prefix filter; `None` records everything
+    pub filter: Option<String>,
+}
+
+thread_local! {
+    static TRACE_SPEC: std::cell::RefCell<Option<TraceSpec>> =
+        std::cell::RefCell::new(None);
+}
+
+/// Install (or clear, with `None`) the trace request for scenarios run
+/// on this thread. Thread-local on purpose: concurrent in-process
+/// dispatches (tests) cannot contaminate each other, and `--trace` is
+/// an execution option like `--out` — it never enters the scenario
+/// fingerprint, so cached replays simply skip trace generation.
+pub fn set_trace_spec(spec: Option<TraceSpec>) {
+    TRACE_SPEC.with(|s| *s.borrow_mut() = spec);
+}
+
+/// The trace request installed on this thread, if any.
+pub fn trace_spec() -> Option<TraceSpec> {
+    TRACE_SPEC.with(|s| s.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_recorder_is_disabled_and_inert() {
+        let mut r = NullRecorder;
+        assert!(!r.is_enabled());
+        r.span(0, 10, "t", "a");
+        r.instant(5, "t", "b");
+        r.sample(7, "s", 1.0);
+    }
+
+    #[test]
+    fn trace_spec_is_thread_local() {
+        set_trace_spec(Some(TraceSpec { path: "x.json".into(), filter: None }));
+        assert_eq!(trace_spec().unwrap().path, "x.json");
+        let other = std::thread::spawn(trace_spec).join().unwrap();
+        assert!(other.is_none(), "spec leaked across threads");
+        set_trace_spec(None);
+        assert!(trace_spec().is_none());
+    }
+}

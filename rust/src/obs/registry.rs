@@ -1,0 +1,264 @@
+//! Named counters, max-gauges, and fixed-bucket log2 histograms with a
+//! deterministic merge.
+//!
+//! The registry is an *aggregation-time* structure: hot loops keep
+//! plain `u64` fields (or a local [`Hist`]) and fold them in when a run
+//! finishes, so instrumentation never touches a map on the event path.
+//! Merging is commutative (counter add, gauge max, bucket add) and the
+//! key space comes from the instrumentation sites — not the data — so
+//! per-shard registries merged in shard order produce byte-identical
+//! [`Registry::snapshot_string`] output at any `--threads`/`--shards`.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// log2 buckets: index 0 holds value 0, index `b` (1..=64) holds values
+/// with bit length `b`, i.e. `2^(b-1) ..= 2^b - 1`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-size log2 histogram, cheap enough to live inline in a stats
+/// struct (`observe` is a shift + two adds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hist {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Bucket index for a value: its bit length (0 for 0).
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// `{count, sum, buckets: [[index, count], ...]}` — only non-zero
+    /// buckets, in index order (canonical).
+    pub fn to_json(&self) -> Json {
+        let nz: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)])
+            })
+            .collect();
+        json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("buckets", Json::Arr(nz)),
+        ])
+    }
+}
+
+/// Named counters (monotonic adds), gauges (running max), and log2
+/// histograms. `BTreeMap` keys make every iteration order — and the
+/// JSON snapshot — deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add to a counter. Zero deltas still materialize the key, so the
+    /// snapshot key set reflects the instrumentation, not the data.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Raise a gauge to at least `v` (running maximum).
+    pub fn gauge_max(&mut self, name: &str, v: u64) {
+        let g = self.gauges.entry(name.to_string()).or_insert(0);
+        *g = (*g).max(v);
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Fold a locally-accumulated [`Hist`] into the named histogram.
+    pub fn merge_hist(&mut self, name: &str, h: &Hist) {
+        self.hists.entry(name.to_string()).or_default().merge(h);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+            && self.hists.is_empty()
+    }
+
+    /// Merge another registry in: counters add, gauges max, histograms
+    /// bucket-add. Commutative, so any merge order yields the same
+    /// totals — merge in shard order anyway for a stable convention.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, &v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, &v) in &other.gauges {
+            let g = self.gauges.entry(k.clone()).or_insert(0);
+            *g = (*g).max(v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "hists",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Canonical one-line snapshot — the byte-identity anchor the
+    /// determinism tests compare.
+    pub fn snapshot_string(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_are_bit_lengths() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(2), 2);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 3);
+        assert_eq!(Hist::bucket_of(1023), 10);
+        assert_eq!(Hist::bucket_of(1024), 11);
+        assert_eq!(Hist::bucket_of(u64::MAX), 64);
+        let mut h = Hist::new();
+        for v in [0u64, 1, 3, 1024, u64::MAX] {
+            h.observe(v);
+        }
+        assert_eq!(h.count, 5);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[2], 1);
+        assert_eq!(h.buckets[64], 1);
+        assert_eq!(h.sum, u64::MAX); // saturated
+    }
+
+    #[test]
+    fn registry_ops_and_merge_are_order_independent() {
+        let mut a = Registry::new();
+        a.add("c.x", 2);
+        a.gauge_max("g.y", 5);
+        a.observe("h.z", 7);
+        let mut b = Registry::new();
+        b.add("c.x", 3);
+        b.add("c.only_b", 0); // zero delta still creates the key
+        b.gauge_max("g.y", 4);
+        b.observe("h.z", 9);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.snapshot_string(), ba.snapshot_string());
+        assert_eq!(ab.counter("c.x"), 5);
+        assert_eq!(ab.counter("c.only_b"), 0);
+        assert!(ab.snapshot_string().contains("c.only_b"));
+        assert_eq!(ab.gauge("g.y"), 5);
+        assert_eq!(ab.hist("h.z").unwrap().count, 2);
+        assert_eq!(ab.hist("h.z").unwrap().sum, 16);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json_parse() {
+        let mut r = Registry::new();
+        r.add("a", 1);
+        r.gauge_max("b", 2);
+        r.observe("c", 300);
+        let s = r.snapshot_string();
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.to_string(), s);
+        assert_eq!(
+            j.get("counters").unwrap().get("a").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+}

@@ -1,0 +1,300 @@
+//! [`TraceRecorder`]: captures virtual-time spans/instants/counter
+//! samples and exports Chrome trace-event JSON that Perfetto
+//! (<https://ui.perfetto.dev>) loads directly.
+//!
+//! Timestamps are virtual picoseconds; the Chrome format wants
+//! microsecond `ts`/`dur`, so export divides by 1e6 (a sub-cycle event
+//! at 1 GHz still lands at distinct fractional µs). Tracks become
+//! threads of one synthetic process, named via `thread_name` metadata.
+//! Shard/replica recorders are merged with [`TraceRecorder::absorb`] in
+//! shard order, which prefixes track and counter-series names — so the
+//! merged trace is byte-identical no matter how worker threads
+//! interleaved.
+
+use super::Recorder;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+
+/// Track index meaning "no track" (counter samples — Chrome counters
+/// attach to the process, not a thread).
+const NO_TRACK: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Span,
+    Instant,
+    Counter,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub ph: Phase,
+    pub ts_ps: u64,
+    /// spans only; 0 otherwise
+    pub dur_ps: u64,
+    /// index into [`TraceRecorder::tracks`], or `u32::MAX` for counters
+    pub track: u32,
+    /// event label (spans/instants) or counter series name
+    pub name: String,
+    /// counters only; 0.0 otherwise
+    pub value: f64,
+}
+
+/// A [`Recorder`] that keeps everything in memory, in emission order
+/// (deterministic: each recorder is driven by exactly one virtual-time
+/// simulation).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceRecorder {
+    tracks: Vec<String>,
+    events: Vec<TraceEvent>,
+    filter: Option<String>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::default()
+    }
+
+    /// Recorder that only keeps events whose name starts with `prefix`
+    /// (the `--trace-filter` behaviour).
+    pub fn with_filter(prefix: Option<&str>) -> TraceRecorder {
+        TraceRecorder { filter: prefix.map(str::to_string), ..Default::default() }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn tracks(&self) -> &[String] {
+        &self.tracks
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn passes(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.starts_with(f.as_str()),
+            None => true,
+        }
+    }
+
+    fn track_id(&mut self, name: &str) -> u32 {
+        // linear scan: track counts are small (stages, ports, shards)
+        if let Some(i) = self.tracks.iter().position(|t| t == name) {
+            return i as u32;
+        }
+        self.tracks.push(name.to_string());
+        (self.tracks.len() - 1) as u32
+    }
+
+    /// Append another recorder's events, prefixing its track and
+    /// counter-series names with `prefix` (e.g. `"AlexNet/ISAAC/r0s1/"`).
+    /// Call in shard order for the canonical merged trace.
+    pub fn absorb(&mut self, prefix: &str, other: TraceRecorder) {
+        let map: Vec<u32> = other
+            .tracks
+            .iter()
+            .map(|t| self.track_id(&format!("{prefix}{t}")))
+            .collect();
+        for mut e in other.events {
+            if e.track == NO_TRACK {
+                e.name = format!("{prefix}{}", e.name);
+            } else {
+                e.track = map[e.track as usize];
+            }
+            self.events.push(e);
+        }
+    }
+
+    /// The full Chrome trace-event document:
+    /// `{"displayTimeUnit": "ms", "traceEvents": [...]}`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut evs: Vec<Json> =
+            Vec::with_capacity(self.tracks.len() + self.events.len());
+        for (i, t) in self.tracks.iter().enumerate() {
+            evs.push(json::obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("thread_name".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(i as f64)),
+                ("args", json::obj(vec![("name", Json::Str(t.clone()))])),
+            ]));
+        }
+        for e in &self.events {
+            let ts = Json::Num(e.ts_ps as f64 / 1e6);
+            evs.push(match e.ph {
+                Phase::Span => json::obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("cat", Json::Str("sim".into())),
+                    ("ph", Json::Str("X".into())),
+                    ("ts", ts),
+                    ("dur", Json::Num(e.dur_ps as f64 / 1e6)),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(e.track as f64)),
+                ]),
+                Phase::Instant => json::obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("cat", Json::Str("sim".into())),
+                    ("ph", Json::Str("i".into())),
+                    ("s", Json::Str("t".into())),
+                    ("ts", ts),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(e.track as f64)),
+                ]),
+                Phase::Counter => json::obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("ph", Json::Str("C".into())),
+                    ("ts", ts),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(0.0)),
+                    ("args", json::obj(vec![("value", Json::Num(e.value))])),
+                ]),
+            });
+        }
+        json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("traceEvents", Json::Arr(evs)),
+        ])
+    }
+
+    /// Compact single-line JSON + trailing newline — what `--trace`
+    /// writes and the byte-identity tests compare.
+    pub fn to_chrome_string(&self) -> String {
+        let mut s = self.to_chrome_json().to_string();
+        s.push('\n');
+        s
+    }
+
+    pub fn write_file(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_chrome_string())
+            .with_context(|| format!("writing trace to {path}"))
+    }
+}
+
+impl Recorder for TraceRecorder {
+    #[inline]
+    fn is_enabled(&self) -> bool {
+        true
+    }
+
+    fn span(&mut self, ts_ps: u64, dur_ps: u64, track: &str, name: &str) {
+        if !self.passes(name) {
+            return;
+        }
+        let track = self.track_id(track);
+        self.events.push(TraceEvent {
+            ph: Phase::Span,
+            ts_ps,
+            dur_ps,
+            track,
+            name: name.to_string(),
+            value: 0.0,
+        });
+    }
+
+    fn instant(&mut self, ts_ps: u64, track: &str, name: &str) {
+        if !self.passes(name) {
+            return;
+        }
+        let track = self.track_id(track);
+        self.events.push(TraceEvent {
+            ph: Phase::Instant,
+            ts_ps,
+            dur_ps: 0,
+            track,
+            name: name.to_string(),
+            value: 0.0,
+        });
+    }
+
+    fn sample(&mut self, ts_ps: u64, series: &str, value: f64) {
+        if !self.passes(series) {
+            return;
+        }
+        self.events.push(TraceEvent {
+            ph: Phase::Counter,
+            ts_ps,
+            dur_ps: 0,
+            track: NO_TRACK,
+            name: series.to_string(),
+            value,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_all_three_phases_and_exports_chrome_json() {
+        let mut r = TraceRecorder::new();
+        assert!(r.is_enabled());
+        r.span(1_000_000, 2_000_000, "stage0", "stage.serve");
+        r.instant(3_000_000, "stage0", "stage.blocked");
+        r.sample(4_000_000, "engine.queue_depth", 7.0);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.tracks(), ["stage0"]);
+
+        let j = r.to_chrome_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 thread_name metadata + 3 events
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[1].get("ts").unwrap().as_f64(), Some(1.0)); // µs
+        assert_eq!(evs[1].get("dur").unwrap().as_f64(), Some(2.0));
+        assert_eq!(evs[3].get("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(
+            evs[3].get("args").unwrap().get("value").unwrap().as_f64(),
+            Some(7.0)
+        );
+    }
+
+    #[test]
+    fn filter_keeps_only_matching_names() {
+        let mut r = TraceRecorder::with_filter(Some("noc."));
+        r.span(0, 1, "t", "noc.xfer");
+        r.instant(0, "t", "stage.blocked");
+        r.sample(0, "noc.depth", 1.0);
+        r.sample(0, "engine.queue_depth", 1.0);
+        let names: Vec<&str> =
+            r.events().iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, ["noc.xfer", "noc.depth"]);
+    }
+
+    #[test]
+    fn absorb_prefixes_tracks_and_series_in_order() {
+        let mut a = TraceRecorder::new();
+        a.span(0, 1, "stage0", "stage.serve");
+        a.sample(2, "depth", 1.0);
+        let mut b = TraceRecorder::new();
+        b.span(5, 1, "stage0", "stage.serve");
+
+        let mut merged = TraceRecorder::new();
+        merged.absorb("s0/", a.clone());
+        merged.absorb("s1/", b.clone());
+        assert_eq!(merged.tracks(), ["s0/stage0", "s1/stage0"]);
+        assert_eq!(merged.events()[1].name, "s0/depth");
+        // same inputs, same order -> byte-identical export
+        let mut again = TraceRecorder::new();
+        again.absorb("s0/", a);
+        again.absorb("s1/", b);
+        assert_eq!(merged.to_chrome_string(), again.to_chrome_string());
+    }
+
+    #[test]
+    fn chrome_string_round_trips_through_json_parse() {
+        let mut r = TraceRecorder::new();
+        r.span(1, 2, "t", "a");
+        r.sample(3, "s", 0.5);
+        let s = r.to_chrome_string();
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.to_string() + "\n", s);
+    }
+}

@@ -298,6 +298,37 @@ pub fn event_latency_profiles(nets: &[workloads::Network],
     })
 }
 
+/// [`event_latency_profiles`] with a live trace: each (network, arch)
+/// scenario records into its own `TraceRecorder` (replicas sequential
+/// inside the item, so per-scenario traces are self-consistent), and
+/// the scenario traces are absorbed in scenario order under
+/// `{network}/{arch}/` prefixes. Profile numbers are bit-identical to
+/// the untraced fan-out — the determinism tests pin this.
+pub fn event_latency_profiles_traced(
+    nets: &[workloads::Network], load: &event::RequestLoad,
+    filter: Option<&str>)
+    -> (Vec<event::LatencyProfile>, crate::obs::TraceRecorder) {
+    let np = AcceleratorConfig::neural_pim();
+    let reference_area = energy::chip_budget(&np).area();
+    let scenarios: Vec<(&workloads::Network, Architecture)> = nets
+        .iter()
+        .flat_map(|net| model::archs().into_iter().map(move |a| (net, a)))
+        .collect();
+    let traced = crate::util::pool::map(&scenarios, |&(net, arch)| {
+        let cfg = sim::iso_area_config(arch, reference_area);
+        event::request_profile_traced_sequential(net, &cfg, load, filter)
+    });
+    let mut combined = crate::obs::TraceRecorder::new();
+    let mut profiles = Vec::with_capacity(traced.len());
+    for ((net, arch), (profile, rec)) in
+        scenarios.iter().zip(traced.into_iter())
+    {
+        combined.absorb(&format!("{}/{}/", net.name, arch.name()), rec);
+        profiles.push(profile);
+    }
+    (profiles, combined)
+}
+
 /// [`event_latency_table`] over already-computed profiles.
 pub fn event_latency_table_from(profiles: &[event::LatencyProfile],
                                 load: &event::RequestLoad) -> Table {

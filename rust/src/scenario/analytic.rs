@@ -167,7 +167,26 @@ impl Scenario for EventSim {
         let started = std::time::Instant::now();
         let rows = event::cross_validate(&nets);
         let load = Self::load_from(p);
-        let profiles = report::event_latency_profiles(&nets, &load);
+        // `--trace` arms the thread-local spec (dispatch wires it):
+        // profile numbers are bit-identical on both paths, the traced
+        // one additionally emits the Perfetto-loadable virtual-time
+        // trace. On a `--cache` hit run() never executes, so no trace
+        // is produced — rerun without --cache to record one.
+        let spec = crate::obs::trace_spec();
+        let profiles = match &spec {
+            Some(spec) => {
+                let (profiles, trace) = report::event_latency_profiles_traced(
+                    &nets, &load, spec.filter.as_deref());
+                trace.write_file(&spec.path)?;
+                crate::diag!(
+                    1,
+                    "event-sim: wrote {} trace events to {}",
+                    trace.len(), spec.path
+                );
+                profiles
+            }
+            None => report::event_latency_profiles(&nets, &load),
+        };
         let elapsed_s = started.elapsed().as_secs_f64();
         let mut o = Outcome::new(self.name(), p.to_json());
         o.table(report::event_cross_validation_table_from(&rows))
@@ -180,14 +199,20 @@ impl Scenario for EventSim {
             + profiles.iter().map(|p| p.events).sum::<u64>();
         // The Outcome (and therefore the stored/cached JSON) carries
         // only run-to-run-stable quantities; the wall-clock event rate
-        // goes to stderr, where operational chatter lives (same channel
-        // the serve scenario uses), so cached replays and any golden
-        // over metrics stay byte-identical.
-        eprintln!(
+        // goes to stderr behind --verbose, where operational chatter
+        // lives, so cached replays and any golden over metrics stay
+        // byte-identical.
+        crate::diag!(
+            1,
             "event-sim: {events} events in {elapsed_s:.3}s ({:.0} events/s)",
             events as f64 / elapsed_s.max(1e-9)
         );
         let clamped: u64 = profiles.iter().map(|p| p.clamped).sum();
+        if let Some(w) = event::clamped_warning(clamped) {
+            // never fires on a healthy model (the pipeline cannot
+            // schedule into the past), so golden text is unaffected
+            o.note(w);
+        }
         let peak_queue =
             profiles.iter().map(|p| p.peak_queue).max().unwrap_or(0);
         o.metric("max_energy_rel_err", max_rel_err, "")
@@ -200,6 +225,19 @@ impl Scenario for EventSim {
                 lp.p99_s,
                 "s",
             );
+        }
+        // registry totals (merged in profile order) ride along as
+        // namespaced metric records — JSON-only surface, the text
+        // rendering prints tables and notes exclusively
+        let mut registry = crate::obs::Registry::new();
+        for lp in &profiles {
+            registry.merge(&lp.registry);
+        }
+        for (name, v) in registry.counters() {
+            o.metric(format!("obs/{name}"), v as f64, "");
+        }
+        for (name, v) in registry.gauges() {
+            o.metric(format!("obs/{name}"), v as f64, "");
         }
         Ok(o)
     }

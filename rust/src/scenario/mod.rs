@@ -366,7 +366,10 @@ pub fn execute(sc: &dyn Scenario, p: &Params,
                         cached: true,
                     });
                 }
-                Err(e) => eprintln!(
+                // level 0: a corrupt store entry is worth a warning
+                // even without --verbose
+                Err(e) => crate::diag!(
+                    0,
                     "[cache] ignoring undecodable {}: {e:#}",
                     st.path_for(sc.name(), &fp).display()
                 ),
@@ -385,8 +388,13 @@ pub fn execute(sc: &dyn Scenario, p: &Params,
 // ------------------------------------------------------------ dispatch --
 
 /// Options every invocation understands, beyond the scenario's own.
-const GLOBAL_OPTIONS: [&str; 5] =
-    ["threads", "format", "out", "cache", "results-dir"];
+/// Like `--out`, the observability options (`trace`, `trace-filter`,
+/// `verbose`) are not fingerprinted: they change what gets *recorded*,
+/// never what gets *computed* (tracing is result-identical by the
+/// recorder contract in `obs/`).
+const GLOBAL_OPTIONS: [&str; 8] =
+    ["threads", "format", "out", "cache", "results-dir", "trace",
+     "trace-filter", "verbose"];
 
 /// The CLI entry point `main.rs` delegates to: resolve the command
 /// against the registry, validate flags, parse params, execute through
@@ -476,16 +484,42 @@ pub fn dispatch(args: &Args) -> Result<()> {
     let mut known: Vec<&str> = GLOBAL_OPTIONS.to_vec();
     known.extend(specs.iter().map(|s| s.name));
     args.reject_unknown(&known).map_err(|e| anyhow!("{e}"))?;
-    reject_valueless(args, &["format", "out", "results-dir", "threads"])?;
+    reject_valueless(args, &["format", "out", "results-dir", "threads",
+                             "trace", "trace-filter"])?;
     let format = args.get_or("format", "text");
     if format != "text" && format != "json" {
         bail!("--format must be text or json (got '{format}')");
     }
+    // observability wiring: `--verbose` raises the diag level (also
+    // settable via NEURAL_PIM_LOG), `--trace` arms the thread-local
+    // trace spec the tracing-aware scenarios consult. Both are
+    // deliberately set on every dispatch — clearing the spec when the
+    // flag is absent keeps repeated in-process dispatches independent.
+    if args.flag("verbose")
+        || args
+            .get("verbose")
+            .map(|v| parse_bool("verbose", v))
+            .transpose()?
+            .unwrap_or(false)
+    {
+        crate::obs::diag::raise_verbosity(1);
+    }
+    if args.get("trace-filter").is_some() && args.get("trace").is_none() {
+        bail!("--trace-filter requires --trace <path>");
+    }
+    crate::obs::set_trace_spec(args.get("trace").map(|p| {
+        crate::obs::TraceSpec {
+            path: p.to_string(),
+            filter: args.get("trace-filter").map(str::to_string),
+        }
+    }));
     let p = params_from_args(&specs, args)?;
     let ex = execute(sc, &p, &ExecOptions::from_args(args))?;
     if ex.cached {
-        // stderr, so text output stays byte-identical to an uncached run
-        eprintln!(
+        // stderr (and --verbose-gated), so text output stays
+        // byte-identical to an uncached run
+        crate::diag!(
+            1,
             "[cache] {} served from {}",
             sc.name(),
             ex.stored.as_ref().expect("cached implies stored").display()
@@ -559,7 +593,14 @@ pub fn usage() -> String {
          \x20                    store (results/<scenario>/<fingerprint>.json)\n  \
          --results-dir DIR    store root (default: results, or\n  \
          \x20                    $NEURAL_PIM_RESULTS)\n  \
-         --threads N          worker threads for the parallel sweeps\n\n\
+         --threads N          worker threads for the parallel sweeps\n  \
+         --trace FILE         write a Chrome trace-event JSON of the run\n  \
+         \x20                    (virtual time; open in Perfetto) — honored\n  \
+         \x20                    by event-sim and serve-sim\n  \
+         --trace-filter PFX   keep only trace events whose name starts\n  \
+         \x20                    with PFX\n  \
+         --verbose            print informational diagnostics to stderr\n  \
+         \x20                    (also: NEURAL_PIM_LOG=1)\n\n\
          `neural-pim help <scenario>` lists a scenario's parameters.\n",
     );
     out
@@ -704,6 +745,35 @@ mod tests {
         // a trailing bare word after --cache is equally rejected
         let err = dispatch(&argv(&["dse", "--cache", "extra"])).unwrap_err();
         assert!(format!("{err:#}").contains("swallowed 'extra'"), "{err:#}");
+    }
+
+    #[test]
+    fn trace_filter_without_trace_is_an_error() {
+        let err =
+            dispatch(&argv(&["table2", "--trace-filter", "noc."])).unwrap_err();
+        assert!(format!("{err:#}").contains("--trace-filter requires"),
+                "{err:#}");
+        // and the value-typed observability options reject bare use
+        let err = dispatch(&argv(&["table2", "--trace"])).unwrap_err();
+        assert!(format!("{err:#}").contains("--trace needs a value"),
+                "{err:#}");
+    }
+
+    #[test]
+    fn dispatch_arms_and_clears_the_trace_spec() {
+        // scenarios that ignore tracing still leave the spec armed
+        // during their run; a later dispatch without --trace must clear
+        // it (thread-local, so this test is race-free under the
+        // parallel test harness)
+        let tmp = std::env::temp_dir().join("np_spec_probe.json");
+        let tmp = tmp.to_string_lossy().to_string();
+        dispatch(&argv(&["table2", "--trace", &tmp, "--out",
+                         &format!("{tmp}.txt")]))
+            .unwrap();
+        dispatch(&argv(&["table2", "--out", &format!("{tmp}.txt")])).unwrap();
+        assert!(crate::obs::trace_spec().is_none(),
+                "spec must clear on a traceless dispatch");
+        let _ = std::fs::remove_file(format!("{tmp}.txt"));
     }
 
     #[test]

@@ -152,8 +152,9 @@ impl Scenario for Serve {
             other => bail!("backend '{other}' has no construction path in \
                             the serve scenario"),
         };
-        // progress on stderr: stdout carries only the rendered outcome
-        eprintln!("coordinator up — driving {n_req} requests");
+        // progress on stderr (behind --verbose): stdout carries only
+        // the rendered outcome
+        crate::diag!(1, "coordinator up — driving {n_req} requests");
 
         let t0 = Instant::now();
         let mut pending = Vec::new();
@@ -200,15 +201,22 @@ impl Scenario for Serve {
                  limit {depth})"
             ));
         }
+        let snapshot = coord.metrics.snapshot();
         o.note(format!(
-            "latency p50 {p50:.1} ms, p99 {p99:.1} ms | {}",
-            coord.metrics.snapshot()
+            "latency p50 {p50:.1} ms, p99 {p99:.1} ms | {snapshot}"
         ));
         o.metric("req_per_s", served as f64 / dt, "req/s")
             .metric("accuracy", acc, "")
             .metric("latency_p50_ms", p50, "ms")
             .metric("latency_p99_ms", p99, "ms")
             .metric("shed", shed as f64, "");
+        // the coordinator's live tallies, in registry form (JSON-only
+        // metric records; text rendering is tables + notes)
+        let mut registry = crate::obs::Registry::new();
+        snapshot.fill_registry(&mut registry);
+        for (name, v) in registry.counters() {
+            o.metric(format!("obs/{name}"), v as f64, "");
+        }
         coord.shutdown();
         Ok(o)
     }
@@ -374,7 +382,24 @@ impl Scenario for ServeSim {
             seed: p.get_u64("seed"),
             shards: p.get_usize("shards").max(1),
         };
-        let points = loadgen::sweep(&lg, &loads);
+        // `--trace` (dispatch-armed thread-local spec): the traced
+        // sweep emits admission/batch/queue-depth events in virtual
+        // picoseconds; point numbers are bit-identical on both paths
+        let spec = crate::obs::trace_spec();
+        let points = match &spec {
+            Some(spec) => {
+                let (points, trace) =
+                    loadgen::sweep_traced(&lg, &loads, spec.filter.as_deref());
+                trace.write_file(&spec.path)?;
+                crate::diag!(
+                    1,
+                    "serve-sim: wrote {} trace events to {}",
+                    trace.len(), spec.path
+                );
+                points
+            }
+            None => loadgen::sweep(&lg, &loads),
+        };
 
         let arch_name = model::cost_model(cfg.arch).name();
         let mut t = Table::new(
@@ -420,6 +445,18 @@ impl Scenario for ServeSim {
                      "req/s")
                 .metric(format!("p99_ms@{tag}"), pt.p99_ms, "ms")
                 .metric(format!("shed_rate@{tag}"), pt.shed_rate, "");
+        }
+        // registry totals across load points (merged in point order) as
+        // namespaced metric records — JSON-only surface
+        let mut registry = crate::obs::Registry::new();
+        for pt in &points {
+            registry.merge(&pt.registry);
+        }
+        for (name, v) in registry.counters() {
+            o.metric(format!("obs/{name}"), v as f64, "");
+        }
+        for (name, v) in registry.gauges() {
+            o.metric(format!("obs/{name}"), v as f64, "");
         }
         Ok(o)
     }

@@ -26,11 +26,16 @@
 //! workers; totals sum and percentiles pool across slices, reassembled
 //! in shard order — still bit-identical at any thread count.
 
+use crate::obs::{Hist, NullRecorder, Recorder, Registry, TraceRecorder};
 use crate::util::pool;
 use crate::util::rng::Pcg;
 use crate::util::stats;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+
+/// Trace timestamps are virtual picoseconds everywhere in the crate;
+/// the load generator's clock is virtual microseconds.
+const US_TO_PS: u64 = 1_000_000;
 
 /// The serving shape one sweep simulates (shared by every load point).
 #[derive(Debug, Clone)]
@@ -90,6 +95,9 @@ pub struct LoadPoint {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// observability tallies for this point, merged in shard order
+    /// (admission counts, peak pending depth, sojourn histogram)
+    pub registry: Registry,
 }
 
 /// Run every (offered-load point, shard) across the worker pool;
@@ -97,6 +105,52 @@ pub struct LoadPoint {
 /// sequentially up front, results reassembled by index, shard partials
 /// merged in shard order).
 pub fn sweep(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<LoadPoint> {
+    let shards = cfg.shards.max(1);
+    let inputs = sweep_inputs(cfg, loads);
+    let runs = pool::map(&inputs, |(l, jobs, rng)| {
+        run_shard(cfg, *l, *jobs, rng.clone(), &mut NullRecorder)
+    });
+    runs.chunks(shards)
+        .zip(loads)
+        .map(|(chunk, &l)| merge(l, chunk))
+        .collect()
+}
+
+/// [`sweep`] with a live [`TraceRecorder`] per (load point, shard):
+/// admission/shed instants, batch fill/exec spans and queue-depth
+/// samples stamped in virtual picoseconds (µs x 10⁶), absorbed in
+/// input order under `load{offered}/s{shard}/` prefixes. Load-point
+/// numbers are bit-identical to the untraced sweep: the recorder only
+/// observes the replay, it never steers it.
+pub fn sweep_traced(cfg: &LoadGenConfig, loads: &[f64],
+                    filter: Option<&str>)
+                    -> (Vec<LoadPoint>, TraceRecorder) {
+    let shards = cfg.shards.max(1);
+    let inputs = sweep_inputs(cfg, loads);
+    let traced = pool::map(&inputs, |(l, jobs, rng)| {
+        let mut rec = TraceRecorder::with_filter(filter);
+        let run = run_shard(cfg, *l, *jobs, rng.clone(), &mut rec);
+        (run, rec)
+    });
+    let mut combined = TraceRecorder::new();
+    let mut runs = Vec::with_capacity(traced.len());
+    for (idx, (run, rec)) in traced.into_iter().enumerate() {
+        let (l, _, _) = &inputs[idx];
+        combined.absorb(&format!("load{l:.2}/s{}/", idx % shards), rec);
+        runs.push(run);
+    }
+    let pts = runs
+        .chunks(shards)
+        .zip(loads)
+        .map(|(chunk, &l)| merge(l, chunk))
+        .collect();
+    (pts, combined)
+}
+
+/// The (offered load, job count, fork stream) grid both sweep variants
+/// run: streams forked sequentially up front (fork index =
+/// `point * shards + shard`), job counts splitting `requests` exactly.
+fn sweep_inputs(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<(f64, u64, Pcg)> {
     let shards = cfg.shards.max(1);
     let base = cfg.requests / shards as u64;
     let extra = cfg.requests % shards as u64;
@@ -112,19 +166,13 @@ pub fn sweep(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<LoadPoint> {
             ));
         }
     }
-    let runs = pool::map(&inputs, |(l, jobs, rng)| {
-        run_shard(cfg, *l, *jobs, rng.clone())
-    });
-    runs.chunks(shards)
-        .zip(loads)
-        .map(|(chunk, &l)| merge(l, chunk))
-        .collect()
+    inputs
 }
 
 /// One fleet slice of one load point: `jobs` Poisson arrivals at the
 /// offered utilization, replayed through the serving discipline.
-fn run_shard(cfg: &LoadGenConfig, offered: f64, jobs: u64,
-             mut rng: Pcg) -> ShardRun {
+fn run_shard<R: Recorder>(cfg: &LoadGenConfig, offered: f64, jobs: u64,
+                          mut rng: Pcg, rec: &mut R) -> ShardRun {
     let load = offered.max(1e-3);
     // padded-batch service rate across all workers, requests per µs
     let rate_per_us = cfg.workers.max(1) as f64 * cfg.max_batch.max(1) as f64
@@ -139,7 +187,7 @@ fn run_shard(cfg: &LoadGenConfig, offered: f64, jobs: u64,
         t += gap;
         arrivals.push(t);
     }
-    simulate(cfg, &arrivals)
+    simulate(cfg, &arrivals, rec)
 }
 
 /// One shard's raw tallies, before cross-shard aggregation.
@@ -149,6 +197,10 @@ struct ShardRun {
     batches: u64,
     makespan_us: u64,
     lat_ms: Vec<f64>,
+    /// high-water mark of the pending admission queue
+    peak_pending: u64,
+    /// per-request sojourn times in µs (log2 buckets)
+    sojourn_us: Hist,
 }
 
 /// Aggregate shard partials into the published load point: counts sum,
@@ -164,6 +216,16 @@ fn merge(offered: f64, runs: &[ShardRun]) -> LoadPoint {
         .iter()
         .flat_map(|r| r.lat_ms.iter().copied())
         .collect();
+    let mut registry = Registry::new();
+    registry.add("serve.served", served);
+    registry.add("serve.shed", shed);
+    registry.add("serve.batches", batches);
+    let mut sojourn = Hist::new();
+    for r in runs {
+        registry.gauge_max("serve.peak_pending", r.peak_pending);
+        sojourn.merge(&r.sojourn_us);
+    }
+    registry.merge_hist("serve.sojourn_us", &sojourn);
     LoadPoint {
         offered,
         served,
@@ -176,11 +238,17 @@ fn merge(offered: f64, runs: &[ShardRun]) -> LoadPoint {
         p50_ms: stats::percentile(&lat_ms, 50.0),
         p95_ms: stats::percentile(&lat_ms, 95.0),
         p99_ms: stats::percentile(&lat_ms, 99.0),
+        registry,
     }
 }
 
-/// Replay the serving discipline over pre-generated arrivals.
-fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
+/// Replay the serving discipline over pre-generated arrivals. The
+/// recorder sees admission decisions as instants (`serve.admit` /
+/// `serve.shed`), each batch as a fill span + exec span, and the
+/// pending-queue depth as a counter sampled at every batch open — all
+/// stamped in virtual picoseconds.
+fn simulate<R: Recorder>(cfg: &LoadGenConfig, arrivals: &[u64],
+                         rec: &mut R) -> ShardRun {
     let max_batch = cfg.max_batch.max(1);
     let depth = cfg.max_queue_depth.max(1);
     let mut free: BinaryHeap<Reverse<u64>> =
@@ -191,6 +259,8 @@ fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
     let mut batches = 0u64;
     let mut served = 0u64;
     let mut makespan = 0u64;
+    let mut peak_pending = 0u64;
+    let mut sojourn_us = Hist::new();
     let mut lat_ms: Vec<f64> = Vec::with_capacity(arrivals.len());
     loop {
         if pending.is_empty() {
@@ -198,6 +268,7 @@ fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
             // always admits (every bound is >= 1)
             let Some(&a) = arrivals.get(i) else { break };
             pending.push_back(a);
+            rec.instant(a * US_TO_PS, "serve", "serve.admit");
             i += 1;
             continue;
         }
@@ -209,11 +280,16 @@ fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
         while i < arrivals.len() && arrivals[i] <= start {
             if pending.len() >= depth {
                 shed += 1;
+                rec.instant(arrivals[i] * US_TO_PS, "serve", "serve.shed");
             } else {
                 pending.push_back(arrivals[i]);
+                rec.instant(arrivals[i] * US_TO_PS, "serve", "serve.admit");
             }
             i += 1;
         }
+        peak_pending = peak_pending.max(pending.len() as u64);
+        rec.sample(start * US_TO_PS, "serve.queue_depth",
+                   pending.len() as f64);
         // backlog fills first (FIFO), then the fill window streams
         // later arrivals straight into the open batch
         let mut batch: Vec<u64> = Vec::new();
@@ -230,6 +306,9 @@ fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
                 && i < arrivals.len()
                 && arrivals[i] <= deadline
             {
+                // fill-window arrivals stream straight into the open
+                // batch (admitted, never queued)
+                rec.instant(arrivals[i] * US_TO_PS, "serve", "serve.admit");
                 batch.push(arrivals[i]);
                 i += 1;
             }
@@ -240,15 +319,21 @@ fn simulate(cfg: &LoadGenConfig, arrivals: &[u64]) -> ShardRun {
             };
         }
         let done = exec_start + cfg.batch_exec_us;
+        rec.span(start * US_TO_PS, (exec_start - start) * US_TO_PS,
+                 "serve.batch", "serve.batch.fill");
+        rec.span(exec_start * US_TO_PS, cfg.batch_exec_us * US_TO_PS,
+                 "serve.batch", "serve.batch.exec");
         batches += 1;
         served += batch.len() as u64;
         for &a in &batch {
             lat_ms.push((done - a) as f64 / 1000.0);
+            sojourn_us.observe(done - a);
         }
         makespan = makespan.max(done);
         free.push(Reverse(done));
     }
-    ShardRun { served, shed, batches, makespan_us: makespan, lat_ms }
+    ShardRun { served, shed, batches, makespan_us: makespan, lat_ms,
+               peak_pending, sojourn_us }
 }
 
 #[cfg(test)]
@@ -332,6 +417,38 @@ mod tests {
         let uneven = LoadGenConfig { shards: 5, ..cfg() };
         let p = &sweep(&uneven, &[1.0])[0];
         assert_eq!(p.served + p.shed, 512);
+    }
+
+    #[test]
+    fn traced_sweep_matches_plain_and_tallies_every_arrival() {
+        let sharded = LoadGenConfig { shards: 2, ..cfg() };
+        let loads = [0.8, 1.4];
+        let plain = sweep(&sharded, &loads);
+        let (traced, trace) = sweep_traced(&sharded, &loads, None);
+        // the recorder observes, never steers: identical points
+        assert_eq!(fingerprint(&plain), fingerprint(&traced));
+        assert_eq!(plain, traced);
+        // every offered arrival shows up in the registry as served or
+        // shed, and the sojourn histogram counts the served ones
+        for p in &traced {
+            assert_eq!(p.registry.counter("serve.served")
+                           + p.registry.counter("serve.shed"), 512);
+            assert_eq!(p.registry.counter("serve.served"), p.served);
+            let h = p.registry.hist("serve.sojourn_us").expect("hist");
+            assert_eq!(h.count, p.served);
+        }
+        // each (point, shard) traces under its own prefix, and the
+        // trace carries all three phases
+        for prefix in ["load0.80/s0/", "load0.80/s1/", "load1.40/s0/"] {
+            assert!(trace.tracks().iter().any(|t| t.starts_with(prefix)),
+                    "missing {prefix} in {:?}", trace.tracks());
+        }
+        assert!(!trace.is_empty());
+        // a filter narrows the trace to matching event names
+        let (_, filtered) =
+            sweep_traced(&sharded, &loads, Some("serve.batch"));
+        assert!(filtered.len() < trace.len());
+        assert!(!filtered.is_empty());
     }
 
     #[test]

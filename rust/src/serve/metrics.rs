@@ -34,7 +34,7 @@ pub struct Metrics {
     /// request-level mode reports through
     pub lat_us: Mutex<VecDeque<u64>>,
     /// most recent batch-failure cause, surfaced on the snapshot instead
-    /// of an `eprintln!` interleaving with suite/JSON output
+    /// of stderr chatter interleaving with suite/JSON output
     last_error: Mutex<Option<String>>,
 }
 
@@ -153,6 +153,18 @@ impl fmt::Display for MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Fold the snapshot's integer tallies into an observability
+    /// registry under the `serve.live.` namespace (the live
+    /// coordinator's counterpart of the virtual-time load generator's
+    /// `serve.*` keys).
+    pub fn fill_registry(&self, reg: &mut crate::obs::Registry) {
+        reg.add("serve.live.requests", self.requests);
+        reg.add("serve.live.failed", self.failed);
+        reg.add("serve.live.shed", self.shed);
+        reg.add("serve.live.batches", self.batches);
+        reg.add("serve.live.padded_slots", self.padded_slots);
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("requests", Json::Num(self.requests as f64)),
@@ -234,6 +246,22 @@ mod tests {
         m.requests.store(1, Ordering::Relaxed);
         assert!((m.snapshot().pad_frac - 0.75).abs() < 1e-12);
         assert!(m.snapshot().to_string().contains("pad_frac=0.750"));
+    }
+
+    #[test]
+    fn snapshot_folds_into_a_registry() {
+        let m = Metrics::default();
+        m.requests.store(10, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        m.shed.store(1, Ordering::Relaxed);
+        let mut reg = crate::obs::Registry::new();
+        m.snapshot().fill_registry(&mut reg);
+        assert_eq!(reg.counter("serve.live.requests"), 10);
+        assert_eq!(reg.counter("serve.live.batches"), 2);
+        assert_eq!(reg.counter("serve.live.shed"), 1);
+        // zero tallies still materialize (snapshots are comparable)
+        assert_eq!(reg.counter("serve.live.failed"), 0);
+        assert!(reg.counters().any(|(n, _)| n == "serve.live.failed"));
     }
 
     #[test]

@@ -60,4 +60,15 @@ if grep -nE '"[A-Za-z0-9_-]+"[[:space:]]*=>' rust/src/main.rs; then
   exit 1
 fi
 
+# Diagnostics gate: stderr chatter goes through the leveled obs::diag!
+# macro (gated by --verbose / NEURAL_PIM_LOG), never raw eprintln!.
+# Only the macro's own expansion site (obs/) and the CLI's final error
+# reporter (main.rs) may call it directly.
+if grep -rn --include='*.rs' 'eprintln!' rust/src \
+    | grep -vE '^rust/src/(obs/|main\.rs)'; then
+  echo "FAIL: raw eprintln! outside rust/src/obs/ and main.rs —" \
+       "use crate::diag!(level, ...)" >&2
+  exit 1
+fi
+
 echo "verify OK"
