@@ -11,7 +11,7 @@ use bench_util::{bench, try_or_skip};
 use neural_pim::arch::crossbar::Group;
 use neural_pim::config::AcceleratorConfig;
 use neural_pim::event::{self, Engine};
-use neural_pim::obs::{NullRecorder, Recorder, TraceRecorder};
+use neural_pim::obs::{NullRecorder, Recorder, Registry, TraceRecorder};
 use neural_pim::runtime;
 use neural_pim::scenario::{self, suite};
 use neural_pim::serve::{loadgen, open_runtime, Coordinator, PjrtBackend,
@@ -297,15 +297,199 @@ fn obs_suite() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The parallel-runtime suite (ISSUE 8's headline artifact): the
+/// million-point `dse --fine` sweep on the persistent pool vs the
+/// retained spawn-per-call engine, feasible-list byte-identity at 1/2/8
+/// threads, per-call pool overhead, cold-vs-warm `network_cost` through
+/// the sharded cache, and nested suite throughput — written to
+/// `BENCH_pool.json`. Runs standalone via `--only-pool`.
+fn pool_suite() -> anyhow::Result<()> {
+    println!("### parallel-runtime suite\n");
+    let mut pairs: Vec<(String, Json)> = Vec::new();
+    let put = |pairs: &mut Vec<(String, Json)>, k: &str, v: f64| {
+        pairs.push((k.to_string(), Json::Num(v)));
+    };
+
+    // 1. headline: the ~1M-candidate fine DSE sweep at 8 threads,
+    // persistent pool vs spawn-per-call. batch 512 keeps per-submission
+    // overhead in play (~1.9k pool calls over the grid) — the regime the
+    // 19 `pool::map` call sites put the old engine in, where every call
+    // paid thread spawns; the work per point is sub-µs analytic math.
+    pool::set_threads(8);
+    let spec = dse::FineSpec { batch: 512, ..Default::default() };
+    let t0 = Instant::now();
+    let fine = dse::fine_sweep(&spec); // first call also warms the pool
+    let persistent_s = t0.elapsed().as_secs_f64();
+    pool::set_spawn_baseline(true);
+    let t0 = Instant::now();
+    let base = dse::fine_sweep(&spec);
+    let spawn_s = t0.elapsed().as_secs_f64();
+    pool::set_spawn_baseline(false);
+    assert_eq!(fine.feasible_fp, base.feasible_fp,
+               "pool engines diverged on the feasible list");
+    let fine_speedup = spawn_s / persistent_s.max(1e-12);
+    println!(
+        "[bench] fine DSE sweep ({} candidates, {} batches, 8 threads): \
+         persistent {:.2}s vs spawn-per-call {:.2}s -> {:.1}x",
+        fine.candidates, fine.batches, persistent_s, spawn_s, fine_speedup
+    );
+    put(&mut pairs, "pool.fine_sweep_candidates", fine.candidates as f64);
+    put(&mut pairs, "pool.fine_sweep_feasible", fine.feasible as f64);
+    put(&mut pairs, "pool.fine_sweep_batches", fine.batches as f64);
+    put(&mut pairs, "pool.fine_sweep_persistent_s", persistent_s);
+    put(&mut pairs, "pool.fine_sweep_spawn_s", spawn_s);
+    put(&mut pairs, "pool.fine_sweep_speedup_vs_spawn", fine_speedup);
+
+    // 2. the acceptance anchor: the full-grid feasible-point list is
+    // byte-identical at --threads 1/2/8 (FNV-1a over the (index,
+    // eff-bit-pattern) list in index order)
+    let mut fps: Vec<(usize, u64, u64)> = Vec::new();
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let s = dse::fine_sweep(&dse::FineSpec::default());
+        fps.push((t, s.feasible_fp, s.feasible));
+    }
+    assert!(
+        fps.windows(2).all(|w| w[0].1 == w[1].1 && w[0].2 == w[1].2),
+        "fine sweep diverged across thread counts: {fps:?}"
+    );
+    println!(
+        "[bench] fine sweep fp {:016x} byte-identical at threads 1/2/8 \
+         ({} feasible points)",
+        fps[0].1, fps[0].2
+    );
+    pairs.push(("pool.fine_sweep_fp".into(),
+                Json::Str(format!("{:016x}", fps[0].1))));
+    pairs.push(("pool.fine_sweep_fp_threads_invariant".into(),
+                Json::Bool(true)));
+
+    // 3. per-call overhead: a 64-item map whose work is ~free prices the
+    // submission machinery itself (parked-worker wake vs 8 thread spawns)
+    pool::set_threads(8);
+    let items: Vec<u64> = (0..64).collect();
+    let tiny = |x: &u64| x.wrapping_mul(0x9e37_79b9) ^ 7;
+    let call_persistent = time_secs(2_000, || {
+        std::hint::black_box(pool::map(&items, tiny));
+    });
+    pool::set_spawn_baseline(true);
+    let call_spawn = time_secs(200, || {
+        std::hint::black_box(pool::map(&items, tiny));
+    });
+    pool::set_spawn_baseline(false);
+    println!(
+        "[bench] 64-item map call: persistent {:.1} µs vs spawn {:.1} µs \
+         ({:.0}x)",
+        call_persistent * 1e6,
+        call_spawn * 1e6,
+        call_spawn / call_persistent.max(1e-12)
+    );
+    put(&mut pairs, "pool.call_persistent_us", call_persistent * 1e6);
+    put(&mut pairs, "pool.call_spawn_us", call_spawn * 1e6);
+
+    // 4. cold-vs-warm `network_cost` under 8 threads: 64 concurrent
+    // replicas each price all 9 benchmarks; cold pays the compute (one
+    // toucher per key) + write locks, warm is the sharded read-mostly
+    // fast path. Counters come back through the obs Registry export.
+    let nets = workloads::all_benchmarks();
+    let cfg = AcceleratorConfig::neural_pim();
+    let reps: Vec<u32> = (0..64).collect();
+    let price_all = |_: &u32| {
+        let mut acc = 0.0;
+        for n in &nets {
+            acc += model::network_cost(n, &cfg).total.total();
+        }
+        acc
+    };
+    model::clear_cost_cache();
+    let t0 = Instant::now();
+    let cold_sum: f64 = pool::map(&reps, price_all).iter().sum();
+    let cold_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let warm_sum: f64 = pool::map(&reps, price_all).iter().sum();
+    let warm_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold_sum.to_bits(), warm_sum.to_bits(),
+               "cache replay changed the priced costs");
+    let mut reg = Registry::new();
+    model::fill_cache_registry(&mut reg);
+    println!(
+        "[bench] network_cost x64 replicas x{} nets (8 threads): cold \
+         {:.1} ms, warm {:.1} ms ({:.0}x); memo.hits {} memo.misses {} \
+         memo.evictions {} memo.entries {}",
+        nets.len(),
+        cold_s * 1e3,
+        warm_s * 1e3,
+        cold_s / warm_s.max(1e-12),
+        reg.counter("memo.hits"),
+        reg.counter("memo.misses"),
+        reg.counter("memo.evictions"),
+        reg.gauge("memo.entries")
+    );
+    put(&mut pairs, "pool.network_cost_cold_ms", cold_s * 1e3);
+    put(&mut pairs, "pool.network_cost_warm_ms", warm_s * 1e3);
+    put(&mut pairs, "memo.hits", reg.counter("memo.hits") as f64);
+    put(&mut pairs, "memo.misses", reg.counter("memo.misses") as f64);
+    put(&mut pairs, "memo.evictions", reg.counter("memo.evictions") as f64);
+    put(&mut pairs, "memo.entries", reg.gauge("memo.entries") as f64);
+
+    // 5. nested suite throughput: the suite fans scenarios across the
+    // pool and every scenario's own sweeps nest. Persistent engine runs
+    // nested maps inline; the spawn baseline reproduces the old
+    // oversubscription (scoped workers are not flagged in-pool, so inner
+    // maps spawn their own threads under the outer ones).
+    let spec = suite::SuiteSpec::from_json(
+        &Json::parse(
+            r#"{"name": "pool-bench", "scenarios": [
+                {"scenario": "dse"},
+                {"scenario": "characterize"},
+                {"scenario": "table2"},
+                {"scenario": "table3"}]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let opts = scenario::ExecOptions::default(); // cache off: compute every run
+    let suite_persistent = time_secs(3, || {
+        let r = suite::run_spec(&spec, &opts);
+        assert_eq!(r.failures(), 0);
+    });
+    pool::set_spawn_baseline(true);
+    let suite_spawn = time_secs(3, || {
+        let r = suite::run_spec(&spec, &opts);
+        assert_eq!(r.failures(), 0);
+    });
+    pool::set_spawn_baseline(false);
+    println!(
+        "[bench] nested suite (4 scenarios over the pool): persistent \
+         {:.1} ms vs spawn {:.1} ms",
+        suite_persistent * 1e3,
+        suite_spawn * 1e3
+    );
+    put(&mut pairs, "pool.suite_persistent_ms", suite_persistent * 1e3);
+    put(&mut pairs, "pool.suite_spawn_ms", suite_spawn * 1e3);
+    put(&mut pairs, "pool.workers_spawned_total",
+        pool::spawned_workers() as f64);
+    pool::set_threads(0);
+
+    let mut bench_json =
+        Json::Obj(pairs.into_iter().collect()).to_pretty_string();
+    bench_json.push('\n');
+    std::fs::write("BENCH_pool.json", bench_json)?;
+    println!("[bench] wrote BENCH_pool.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    // CI runs `-- --only-event` / `-- --only-obs` to produce
-    // BENCH_event.json / BENCH_obs.json without the rest of the suite
-    // (and without needing PJRT artifacts)
+    // CI runs `-- --only-event` / `-- --only-obs` / `-- --only-pool` to
+    // produce BENCH_event.json / BENCH_obs.json / BENCH_pool.json
+    // without the rest of the suite (and without needing PJRT artifacts)
     if std::env::args().any(|a| a == "--only-event") {
         return event_suite();
     }
     if std::env::args().any(|a| a == "--only-obs") {
         return obs_suite();
+    }
+    if std::env::args().any(|a| a == "--only-pool") {
+        return pool_suite();
     }
     println!("### §Perf hot paths\n");
 
@@ -314,7 +498,7 @@ fn main() -> anyhow::Result<()> {
     speedup("simulate all 9 benchmarks x 3 archs (iso-area)", 5, || {
         let _ = sim::run_system_comparison(&nets);
     });
-    speedup("full DSE sweep (~600 grid points)", 5, || {
+    speedup("full DSE sweep (360 grid points)", 5, || {
         let _ = dse::sweep();
     });
     speedup("strategy-B noise MC (1024 trials)", 3, || {
@@ -334,6 +518,7 @@ fn main() -> anyhow::Result<()> {
     // `-- --only-event`)
     event_suite()?;
     obs_suite()?;
+    pool_suite()?;
     // pool scaling of the request sim (replicas fan out across threads)
     let alex = workloads::alexnet();
     let load = event::RequestLoad {

@@ -1,10 +1,30 @@
 //! §7.1 design-space exploration over the five hyper-parameters
 //! (N, M, A, S, D), regenerating Fig. 11's computation-efficiency sweep
 //! and finding the optimal PE configuration.
+//!
+//! Two grids share one evaluator:
+//!
+//! - the **coarse** Fig. 11 grid ([`sweep`], ~360 points) — materialized
+//!   up front, filtered at construction so every generated point reaches
+//!   the cost-model feasibility stage (the pre-PR-8 grid carried xbar=256
+//!   configs the accuracy cutoff rejected unconditionally);
+//! - the **fine** grid ([`fine_sweep`], ~1M candidates for `dse --fine`)
+//!   — never materialized: points are decoded from a mixed-radix index
+//!   ([`fine_cfg`]) and streamed through the worker pool in fixed-size
+//!   batches, so memory stays flat at any grid size. The summary carries
+//!   a running FNV-1a fingerprint of the feasible-point list
+//!   (index order), the byte-identity anchor the `--threads 1/2/8`
+//!   determinism tests assert on.
+//!
+//! [`evaluate_checked`] reports *why* a candidate fails ([`Rejection`]):
+//! the fine sweep tallies per-guard rejection counts, and the grid
+//! constructors are tested against ever emitting an unconditionally-dead
+//! point (`Invalid` / `XbarTooLarge`).
 
 use crate::config::{AcceleratorConfig, Precision};
 use crate::energy;
 use crate::model;
+use crate::util::num::{fnv1a64_step, FNV1A64_OFFSET};
 use crate::util::pool;
 
 #[derive(Debug, Clone)]
@@ -15,6 +35,25 @@ pub struct DsePoint {
     /// peak GOPS/s/W
     pub energy_efficiency: f64,
     pub label: String,
+}
+
+/// Why [`evaluate_checked`] rejected a candidate. `Invalid` and
+/// `XbarTooLarge` are properties of the config alone (grid constructors
+/// must never emit them); the other three are cost-model feasibility
+/// verdicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// fails `AcceleratorConfig::validate`
+    Invalid,
+    /// groups per input period exceed the shared converters' slots
+    AdcStarved,
+    /// analog accumulator service rate can't cover its array's groups
+    SaStarved,
+    /// IR bus limit: `arrays_per_pe * xbar_size > 8192` wordline bytes
+    IoBandwidth,
+    /// accuracy cutoff: beyond 128 rows the dataflow SINAD drops below
+    /// the Fig.-10 floor (§5.1)
+    XbarTooLarge,
 }
 
 /// Fig. 11's label format: N<size>-D<dac>-A<adcs>-S<sas> M<arrays>.
@@ -29,10 +68,13 @@ fn label(cfg: &AcceleratorConfig) -> String {
     )
 }
 
-/// Peak efficiencies assuming full PE utilization (§7.1: "assumes that
-/// all PEs can be somehow utilized in every cycle").
-pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
-    cfg.validate().ok()?;
+/// The feasibility gauntlet + peak efficiencies, label-free: the fine
+/// sweep scores ~1M candidates and only materializes labels for the
+/// handful it reports.
+fn score(cfg: &AcceleratorConfig) -> Result<(f64, f64), Rejection> {
+    if cfg.validate().is_err() {
+        return Err(Rejection::Invalid);
+    }
     let m = model::cost_model(cfg.arch);
     // the shared converters must keep up: groups needing conversion per
     // input-period <= conversion slots (rate from the cost model)
@@ -41,7 +83,7 @@ pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
         cfg.precision.input_cycles() as f64 * energy::cycle_seconds(cfg);
     let adc_slots = cfg.adcs_per_pe as f64 * m.adc_samples_per_s() * period_s;
     if (groups as f64) > adc_slots {
-        return None; // conversion-starved: not a usable design point
+        return Err(Rejection::AdcStarved);
     }
     // analog accumulator service rate (e.g. each NNS+A serves its
     // array's groups sequentially inside one input cycle at 80 MHz);
@@ -50,7 +92,7 @@ pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
         if (cfg.groups_per_array() as f64)
             > sa_rate * energy::cycle_seconds(cfg) * cfg.sa_per_array as f64
         {
-            return None;
+            return Err(Rejection::SaStarved);
         }
     }
     // I/O bandwidth limit (§7.1: "the I/O bandwidth limits the number of
@@ -58,35 +100,48 @@ pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
     // input cycle per PE — the paper's peak sits exactly at this edge
     // (64 arrays x 128 rows).
     if cfg.arrays_per_pe as u64 * cfg.xbar_size as u64 > 8192 {
-        return None;
+        return Err(Rejection::IoBandwidth);
     }
     // accuracy limit: beyond 128 rows the per-cell analog swing halves
     // while the NeuralPeriph voltage-noise floor stays fixed, pushing the
     // dataflow SINAD ~6 dB/doubling below the Fig.-10 SINAD_min — the
     // reason §5.1 fixes 128x128 despite 256x256 being fabricable (§2.2).
     if cfg.xbar_size > 128 {
-        return None;
+        return Err(Rejection::XbarTooLarge);
     }
 
     let pe = energy::pe_budget(cfg);
     let gops_per_pe = cfg.peak_gops()
         / (cfg.tiles as f64 * cfg.pes_per_tile as f64);
-    Some(DsePoint {
-        compute_efficiency: gops_per_pe / pe.area(),
-        energy_efficiency: gops_per_pe / pe.power(),
+    Ok((gops_per_pe / pe.area(), gops_per_pe / pe.power()))
+}
+
+/// [`evaluate`] with the rejection reason preserved.
+pub fn evaluate_checked(cfg: &AcceleratorConfig)
+                        -> Result<DsePoint, Rejection> {
+    let (ce, ee) = score(cfg)?;
+    Ok(DsePoint {
+        compute_efficiency: ce,
+        energy_efficiency: ee,
         label: label(cfg),
         cfg: cfg.clone(),
     })
 }
 
-/// The Fig. 11 sweep: N in {32..256}, D in {1,2,4}, M in {16..128},
-/// A in {1..8}, S derived (1 NNS+A per array or shared).
-pub fn sweep() -> Vec<DsePoint> {
-    // materialize the ~600-point grid in sequential order, then partition
-    // the evaluations across the worker pool; pool::map preserves index
-    // order, so the feasible-point list is identical at any thread count
+/// Peak efficiencies assuming full PE utilization (§7.1: "assumes that
+/// all PEs can be somehow utilized in every cycle").
+pub fn evaluate(cfg: &AcceleratorConfig) -> Option<DsePoint> {
+    evaluate_checked(cfg).ok()
+}
+
+/// The materialized Fig. 11 grid: N in {32,64,128}, D in {1,2,4}, M in
+/// {16..128}, A in {1..8}, S in {1,2}. Construction-filtered: the axes
+/// contain no config that `validate` or the xbar accuracy cutoff would
+/// reject unconditionally (xbar=256 used to be generated and always
+/// discarded), which the tests assert via [`evaluate_checked`].
+fn coarse_grid() -> Vec<AcceleratorConfig> {
     let mut grid = Vec::new();
-    for &xbar in &[32u32, 64, 128, 256] {
+    for &xbar in &[32u32, 64, 128] {
         for &pd in &[1u32, 2, 4] {
             for &m in &[16u32, 32, 64, 96, 128] {
                 for &a in &[1u32, 2, 4, 8] {
@@ -103,7 +158,184 @@ pub fn sweep() -> Vec<DsePoint> {
             }
         }
     }
-    pool::map(&grid, evaluate).into_iter().flatten().collect()
+    grid
+}
+
+/// The Fig. 11 sweep over [`coarse_grid`]; `pool::map` preserves index
+/// order, so the feasible-point list is identical at any thread count.
+pub fn sweep() -> Vec<DsePoint> {
+    pool::map(&coarse_grid(), evaluate).into_iter().flatten().collect()
+}
+
+// ----------------------------------------------------- fine-grained DSE --
+
+/// Fine-grid axes (mixed radix, fastest axis last in [`fine_cfg`]):
+/// N {32,64,128} x D 1..=8 x M 1..=160 x A 1..=32 x S {1,2,4,8}
+/// = 983,040 candidates. Every combination passes `validate` and the
+/// xbar accuracy cutoff by construction; ADC/SA/IO feasibility is the
+/// sweep's business.
+const FINE_XBAR: [u32; 3] = [32, 64, 128];
+const FINE_PD: u64 = 8;
+const FINE_ARRAYS: u64 = 160;
+const FINE_ADCS: u64 = 32;
+const FINE_SA: [u32; 4] = [1, 2, 4, 8];
+
+/// Number of candidate configs in the fine grid (~1M).
+pub fn fine_grid_len() -> u64 {
+    FINE_XBAR.len() as u64
+        * FINE_PD
+        * FINE_ARRAYS
+        * FINE_ADCS
+        * FINE_SA.len() as u64
+}
+
+/// Decode candidate `i` (row-major over the axes above). The grid is
+/// never materialized: batches of indices stream through the pool and
+/// each worker decodes its own configs, keeping the sweep's memory flat
+/// at any grid size.
+pub fn fine_cfg(i: u64) -> AcceleratorConfig {
+    debug_assert!(i < fine_grid_len());
+    let sa = FINE_SA[(i % FINE_SA.len() as u64) as usize];
+    let i = i / FINE_SA.len() as u64;
+    let adcs = (i % FINE_ADCS) as u32 + 1;
+    let i = i / FINE_ADCS;
+    let arrays = (i % FINE_ARRAYS) as u32 + 1;
+    let i = i / FINE_ARRAYS;
+    let pd = (i % FINE_PD) as u32 + 1;
+    let i = i / FINE_PD;
+    let xbar = FINE_XBAR[i as usize];
+    let mut cfg = AcceleratorConfig::neural_pim();
+    cfg.xbar_size = xbar;
+    cfg.precision = Precision { p_d: pd, ..Default::default() };
+    cfg.arrays_per_pe = arrays;
+    cfg.adcs_per_pe = adcs;
+    cfg.sa_per_array = sa;
+    cfg
+}
+
+/// Parameters of the streamed fine sweep. `batch` and the thread count
+/// are pure scheduling knobs — every field of the summary except
+/// `batches` is invariant to them; `stride > 1` subsamples the grid
+/// (index 0, stride, 2*stride, ...) so tests can exercise the full
+/// machinery in milliseconds.
+#[derive(Debug, Clone)]
+pub struct FineSpec {
+    /// indices evaluated per pool submission (memory high-water mark)
+    pub batch: usize,
+    /// grid subsampling step (1 = the full grid)
+    pub stride: usize,
+    /// feasible points to materialize as labeled [`DsePoint`]s
+    pub top: usize,
+}
+
+impl Default for FineSpec {
+    fn default() -> Self {
+        FineSpec { batch: 4096, stride: 1, top: 12 }
+    }
+}
+
+/// What a fine sweep returns: tallies, the top-K points, and the
+/// feasible-list fingerprint (FNV-1a over `(index, eff-bit-patterns)` in
+/// index order — byte-identical across thread counts and batch sizes).
+#[derive(Debug, Clone)]
+pub struct FineSummary {
+    /// candidates evaluated (grid length / stride, rounded up)
+    pub candidates: u64,
+    pub feasible: u64,
+    pub rejected_adc: u64,
+    pub rejected_sa: u64,
+    pub rejected_io: u64,
+    /// FNV-1a over every feasible `(index, compute-eff bits,
+    /// energy-eff bits)` triple in index order
+    pub feasible_fp: u64,
+    /// pool submissions issued (the only batch-dependent field)
+    pub batches: u64,
+    /// best-first by compute efficiency (ties: lower index)
+    pub top: Vec<DsePoint>,
+}
+
+/// Insert `(idx, ce, ee)` into the running top-K (descending compute
+/// efficiency, ties broken toward the lower index so the result is a
+/// pure function of the feasible set).
+fn push_top(top: &mut Vec<(u64, f64, f64)>, k: usize, cand: (u64, f64, f64)) {
+    if k == 0 {
+        return;
+    }
+    let pos = top
+        .iter()
+        .position(|&(idx, ce, _)| {
+            cand.1 > ce || (cand.1 == ce && cand.0 < idx)
+        })
+        .unwrap_or(top.len());
+    if pos < k {
+        top.insert(pos, cand);
+        top.truncate(k);
+    }
+}
+
+/// The streamed fine sweep: decode-evaluate batches of indices across
+/// the pool, folding tallies, the top-K, and the feasible fingerprint in
+/// index order. Memory stays at O(batch) regardless of grid size.
+pub fn fine_sweep(spec: &FineSpec) -> FineSummary {
+    let stride = spec.stride.max(1) as u64;
+    let batch = spec.batch.max(1);
+    let len = fine_grid_len();
+    let mut s = FineSummary {
+        candidates: 0,
+        feasible: 0,
+        rejected_adc: 0,
+        rejected_sa: 0,
+        rejected_io: 0,
+        feasible_fp: FNV1A64_OFFSET,
+        batches: 0,
+        top: Vec::new(),
+    };
+    let mut top: Vec<(u64, f64, f64)> = Vec::new();
+    let mut idx: Vec<u64> = Vec::with_capacity(batch);
+    let mut next = 0u64;
+    while next < len {
+        idx.clear();
+        while next < len && idx.len() < batch {
+            idx.push(next);
+            next += stride;
+        }
+        let scored = pool::map(&idx, |&i| score(&fine_cfg(i)));
+        s.batches += 1;
+        s.candidates += idx.len() as u64;
+        for (&i, r) in idx.iter().zip(&scored) {
+            match r {
+                Ok((ce, ee)) => {
+                    s.feasible += 1;
+                    let mut h = s.feasible_fp;
+                    for b in i
+                        .to_le_bytes()
+                        .into_iter()
+                        .chain(ce.to_bits().to_le_bytes())
+                        .chain(ee.to_bits().to_le_bytes())
+                    {
+                        h = fnv1a64_step(h, b);
+                    }
+                    s.feasible_fp = h;
+                    push_top(&mut top, spec.top, (i, *ce, *ee));
+                }
+                Err(Rejection::AdcStarved) => s.rejected_adc += 1,
+                Err(Rejection::SaStarved) => s.rejected_sa += 1,
+                Err(Rejection::IoBandwidth) => s.rejected_io += 1,
+                // construction invariant (tested): the fine grid holds
+                // no unconditionally-dead candidate
+                Err(r) => unreachable!(
+                    "fine grid emitted a dead point {i}: {r:?}"
+                ),
+            }
+        }
+    }
+    s.top = top
+        .into_iter()
+        .map(|(i, _, _)| {
+            evaluate(&fine_cfg(i)).expect("top point must re-evaluate")
+        })
+        .collect();
+    s
 }
 
 /// Best point among already-computed sweep results (callers that also
@@ -136,6 +368,24 @@ mod tests {
         for p in &pts {
             assert!(p.compute_efficiency.is_finite()
                 && p.compute_efficiency > 0.0);
+        }
+    }
+
+    #[test]
+    fn every_coarse_point_reaches_the_cost_model_stage() {
+        // the grid must carry no unconditionally-dead candidate: any
+        // rejection has to be a cost-model feasibility verdict, never
+        // validate() or the config-only accuracy cutoff
+        let grid = coarse_grid();
+        assert_eq!(grid.len(), 3 * 3 * 5 * 4 * 2);
+        for cfg in &grid {
+            match evaluate_checked(cfg) {
+                Ok(_)
+                | Err(Rejection::AdcStarved)
+                | Err(Rejection::SaStarved)
+                | Err(Rejection::IoBandwidth) => {}
+                Err(r) => panic!("dead grid point {}: {r:?}", label(cfg)),
+            }
         }
     }
 
@@ -174,6 +424,102 @@ mod tests {
         cfg.arrays_per_pe = 128;
         cfg.precision.p_d = 8; // one-cycle inputs: 1024 groups / period
         // 1 NNADC at 1.2 GS/s in a 100 ns period = 120 slots < 1024 groups
-        assert!(evaluate(&cfg).is_none());
+        assert_eq!(evaluate_checked(&cfg).unwrap_err(),
+                   Rejection::AdcStarved);
+    }
+
+    #[test]
+    fn rejection_reasons_name_the_failing_guard() {
+        let mut cfg = AcceleratorConfig::neural_pim();
+        cfg.xbar_size = 33; // not a power of two
+        assert_eq!(evaluate_checked(&cfg).unwrap_err(), Rejection::Invalid);
+        let mut cfg = AcceleratorConfig::neural_pim();
+        cfg.xbar_size = 256; // doubles groups_per_array to 16...
+        cfg.sa_per_array = 2; // ...so 2 NNS+As keep the SA guard happy
+        cfg.arrays_per_pe = 16; // under the IO limit, over the accuracy one
+        assert_eq!(evaluate_checked(&cfg).unwrap_err(),
+                   Rejection::XbarTooLarge);
+        let mut cfg = AcceleratorConfig::neural_pim();
+        cfg.arrays_per_pe = 128; // 128 * 128 rows > 8192 wordline bytes
+        cfg.adcs_per_pe = 32;
+        assert_eq!(evaluate_checked(&cfg).unwrap_err(),
+                   Rejection::IoBandwidth);
+    }
+
+    #[test]
+    fn fine_grid_decodes_to_valid_candidates() {
+        let len = fine_grid_len();
+        assert_eq!(len, 983_040);
+        // distinct indices decode to distinct configs at the corners
+        // and a pseudo-random sample never yields a dead point
+        assert_ne!(fine_cfg(0), fine_cfg(len - 1));
+        for i in (0..len).step_by(9973) {
+            let cfg = fine_cfg(i);
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("index {i} invalid: {e}"));
+            assert!(cfg.xbar_size <= 128, "index {i} past accuracy cutoff");
+        }
+    }
+
+    #[test]
+    fn fine_cfg_is_a_bijection_on_a_sample() {
+        // re-encode by scanning the axes: every sampled config must
+        // round-trip through its own index (guards radix-order bugs)
+        for i in (0..fine_grid_len()).step_by(12_007) {
+            let cfg = fine_cfg(i);
+            let sa_i = FINE_SA.iter().position(|&s| s == cfg.sa_per_array)
+                .unwrap() as u64;
+            let xbar_i = FINE_XBAR.iter().position(|&x| x == cfg.xbar_size)
+                .unwrap() as u64;
+            let enc = (((xbar_i * FINE_PD + (cfg.precision.p_d as u64 - 1))
+                * FINE_ARRAYS
+                + (cfg.arrays_per_pe as u64 - 1))
+                * FINE_ADCS
+                + (cfg.adcs_per_pe as u64 - 1))
+                * FINE_SA.len() as u64
+                + sa_i;
+            assert_eq!(enc, i);
+        }
+    }
+
+    #[test]
+    fn fine_sweep_summary_is_batch_invariant() {
+        // batch size (and the thread count, covered by the integration
+        // suite) is a scheduling knob: every summary field except
+        // `batches` must be identical
+        let spec = FineSpec { stride: 1009, batch: 64, top: 5 };
+        let a = fine_sweep(&spec);
+        let b = fine_sweep(&FineSpec { batch: 251, ..spec.clone() });
+        assert_eq!(a.candidates, b.candidates);
+        assert_eq!(a.feasible, b.feasible);
+        assert_eq!(a.feasible_fp, b.feasible_fp);
+        assert_eq!(a.rejected_adc, b.rejected_adc);
+        assert_eq!(a.rejected_sa, b.rejected_sa);
+        assert_eq!(a.rejected_io, b.rejected_io);
+        assert!(a.batches > b.batches);
+        assert_eq!(a.top.len(), b.top.len());
+        for (x, y) in a.top.iter().zip(&b.top) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.compute_efficiency.to_bits(),
+                       y.compute_efficiency.to_bits());
+        }
+        // tallies cover every candidate
+        assert_eq!(
+            a.feasible + a.rejected_adc + a.rejected_sa + a.rejected_io,
+            a.candidates
+        );
+        assert!(a.feasible > 0, "sampled grid found no feasible point");
+    }
+
+    #[test]
+    fn fine_sweep_top_is_sorted_and_labeled() {
+        let s = fine_sweep(&FineSpec { stride: 2003, batch: 512, top: 8 });
+        assert!(!s.top.is_empty());
+        for w in s.top.windows(2) {
+            assert!(w[0].compute_efficiency >= w[1].compute_efficiency);
+        }
+        for p in &s.top {
+            assert!(p.label.starts_with('N'), "unlabeled point {:?}", p.label);
+        }
     }
 }

@@ -329,8 +329,10 @@ pub fn request_profile(net: &Network, cfg: &AcceleratorConfig,
 /// [`request_profile`] with the replicas run on the calling thread —
 /// bit-identical to the pooled version (the pool reassembles by index).
 /// For callers that are themselves items of a `pool::map` fan-out
-/// (e.g. the per-scenario latency table), where parallelizing at the
-/// scenario level uses the cores without nested thread spawns.
+/// (e.g. the per-scenario latency table). The persistent pool would
+/// inline a nested `map` anyway (`pool::on_worker`); `map_with(1, ..)`
+/// states the sequential intent explicitly and holds on callers that
+/// are not pool tasks.
 pub fn request_profile_sequential(net: &Network, cfg: &AcceleratorConfig,
                                   load: &RequestLoad) -> LatencyProfile {
     let nc = model::network_cost(net, cfg);

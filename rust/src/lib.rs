@@ -21,14 +21,17 @@
 //! layer: one `CostModel` impl per architecture, the `ArchRegistry`
 //! every comparison iterates, and the memoized per-`(network, config)`
 //! `LayerCost` tables shared by the analytical and event simulators —
-//! register a new architecture by adding an enum variant plus one impl
+//! a hash-sharded, LRU-evicting cache with `memo.*` counters exported
+//! into the `obs` Registry; register a new architecture by adding an
+//! enum variant plus one impl
 //! in `model/archs.rs`), `energy`/`mapping`/`sim` (budgets, replication
 //! allocator, analytical system simulator), `event` (discrete-event
 //! refinement of `sim`: slab-arena engine over a ladder queue with a
 //! retained binary-heap differential reference, fast-path queued NoC,
 //! back-pressured pipeline, cross-validation + sharded request-level
-//! latency modes), `dse` (Fig. 11
-//! sweep), `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
+//! latency modes), `dse` (Fig. 11 sweep plus the streamed
+//! ~1M-candidate fine grid behind `dse --fine`),
+//! `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
 //! `obs` (observability: the `Recorder` trait the event/serve hot
 //! layers are generic over — zero-cost `NullRecorder` off-path, a
 //! `TraceRecorder` exporting Perfetto-loadable Chrome trace JSON in
@@ -48,7 +51,11 @@
 //! string, and a virtual-time load generator for the deterministic
 //! `serve-sim` offered-load sweep; register a backend by implementing
 //! the trait and listing it in `serve::BACKENDS` — `baselines`,
-//! `config`, `report`, `workloads`, the `util` substrate, and
+//! `config`, `report`, `workloads`, the `util` substrate (home of
+//! `util::pool`, the persistent chunk-scheduling worker pool every
+//! parallel sweep fans out over — nested maps run inline, results are
+//! bit-identical at any `--threads`, and it is the crate's only thread
+//! factory outside `serve/`), and
 //! `scenario` — the
 //! unified experiment layer: every CLI subcommand is a registered
 //! `scenario::Scenario` with typed params and a typed `Outcome`

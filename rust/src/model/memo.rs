@@ -15,6 +15,19 @@
 //! The cache is process-global and thread-safe; entries are immutable
 //! `Arc`s, so a race between two computing threads just inserts the same
 //! deterministic value once.
+//!
+//! Since the PR-8 runtime overhaul the table is **sharded**: the key
+//! hash picks one of [`SHARDS`] independent `RwLock<HashMap>` shards, so
+//! the read-mostly warm path (every replica of an 8-thread serving sweep
+//! hitting the same few tables) takes a shared lock on 1/16th of the
+//! keyspace instead of serializing on one `Mutex`. Overflowing a shard
+//! evicts its least-recently-touched entry (replacing the old engine's
+//! blunt full-cache clear at `CACHE_CAP`), and `memo.hits` /
+//! `memo.misses` / `memo.evictions` counters are exported into the
+//! `obs` [`Registry`](crate::obs::Registry) via [`fill_cache_registry`].
+//! Counters are exact under `--threads 1`; under contention a duplicate
+//! computation can add an extra miss, but cached *values* are
+//! deterministic either way (eviction only ever costs a recompute).
 
 use super::{cost_model, EnergyBreakdown, LayerCtx};
 use crate::config::AcceleratorConfig;
@@ -24,7 +37,8 @@ use crate::workloads::Network;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Everything the simulators charge for one mapped layer, priced once.
 #[derive(Debug, Clone)]
@@ -200,14 +214,113 @@ fn cost_key(net: &Network, cfg: &AcceleratorConfig) -> CostKey {
     }
 }
 
-/// Soft bound on cached tables; a DSE-style sweep over thousands of
-/// configs resets the cache instead of growing without limit.
+/// Lock shards: the key hash fans lookups across this many independent
+/// `RwLock`ed maps. 16 keeps per-shard scans trivial while making
+/// 8-thread warm-path contention statistically negligible.
+const SHARDS: usize = 16;
+
+/// Soft bound on cached tables across all shards; a DSE-style sweep over
+/// thousands of configs recycles least-recently-touched entries instead
+/// of growing without limit (or, as the pre-shard cache did, clearing
+/// everything on overflow).
 const CACHE_CAP: usize = 512;
 
-fn cache() -> &'static Mutex<HashMap<CostKey, Arc<NetworkCost>>> {
-    static CACHE: OnceLock<Mutex<HashMap<CostKey, Arc<NetworkCost>>>> =
-        OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+/// One cached table plus its last-touch tick (the eviction key).
+struct CacheSlot {
+    val: Arc<NetworkCost>,
+    touched: AtomicU64,
+}
+
+/// The sharded, LRU-ish table. A private instance is constructible for
+/// tests (the process-global one lives behind [`cache`]).
+struct CostCache {
+    shards: Vec<RwLock<HashMap<CostKey, CacheSlot>>>,
+    per_shard_cap: usize,
+    /// global touch clock; orders evictions, never values
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl CostCache {
+    fn new(per_shard_cap: usize) -> CostCache {
+        CostCache {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            per_shard_cap: per_shard_cap.max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &CostKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    fn touch(&self, slot: &CacheSlot) {
+        slot.touched
+            .store(self.tick.fetch_add(1, Ordering::Relaxed) + 1,
+                   Ordering::Relaxed);
+    }
+
+    /// The read-mostly fast path: a shared lock, a hit bump, done. On a
+    /// miss, `compute` runs with **no lock held** (tables take far
+    /// longer than the map ops, and a duplicate computation under
+    /// contention is deterministic); the write lock then re-checks so a
+    /// racing duplicate collapses onto whichever insert won.
+    fn lookup_or(&self, key: CostKey,
+                 compute: impl FnOnce() -> Arc<NetworkCost>)
+                 -> Arc<NetworkCost> {
+        let shard = &self.shards[self.shard_of(&key)];
+        if let Some(slot) = shard.read().unwrap().get(&key) {
+            self.touch(slot);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return slot.val.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = compute();
+        let mut g = shard.write().unwrap();
+        if let Some(slot) = g.get(&key) {
+            self.touch(slot);
+            return slot.val.clone();
+        }
+        if g.len() >= self.per_shard_cap {
+            // evict the least-recently-touched entry of this shard (a
+            // full scan: per-shard maps are at most CACHE_CAP/SHARDS
+            // entries, far cheaper than recomputing one table)
+            if let Some(victim) = g
+                .iter()
+                .min_by_key(|(_, s)| s.touched.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone())
+            {
+                g.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let slot = CacheSlot { val: fresh.clone(), touched: AtomicU64::new(0) };
+        self.touch(&slot);
+        g.insert(key, slot);
+        fresh
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+    }
+}
+
+fn cache() -> &'static CostCache {
+    static CACHE: OnceLock<CostCache> = OnceLock::new();
+    CACHE.get_or_init(|| CostCache::new(CACHE_CAP / SHARDS))
 }
 
 /// The memoized cost table for `(net, cfg)`: computed once per distinct
@@ -216,27 +329,41 @@ fn cache() -> &'static Mutex<HashMap<CostKey, Arc<NetworkCost>>> {
 pub fn network_cost(net: &Network, cfg: &AcceleratorConfig)
                     -> Arc<NetworkCost> {
     let key = cost_key(net, cfg);
-    if let Some(hit) = cache().lock().unwrap().get(&key) {
-        return hit.clone();
-    }
-    // compute outside the lock: tables take far longer than the map ops,
-    // and a duplicate computation under contention is deterministic
-    let fresh = Arc::new(compute_network_cost(net, cfg));
-    let mut g = cache().lock().unwrap();
-    if g.len() >= CACHE_CAP {
-        g.clear();
-    }
-    g.entry(key).or_insert(fresh).clone()
+    cache().lookup_or(key, || Arc::new(compute_network_cost(net, cfg)))
 }
 
 /// Drop every cached table (benchmarks use this to time the cold path).
+/// Counters are monotonic and survive a clear.
 pub fn clear_cost_cache() {
-    cache().lock().unwrap().clear();
+    cache().clear();
 }
 
-/// Number of cached `(network, config)` tables.
+/// Number of cached `(network, config)` tables across all shards.
 pub fn cost_cache_len() -> usize {
-    cache().lock().unwrap().len()
+    cache().len()
+}
+
+/// Lifetime `(hits, misses, evictions)` of the process-global cache.
+pub fn cost_cache_counters() -> (u64, u64, u64) {
+    let c = cache();
+    (
+        c.hits.load(Ordering::Relaxed),
+        c.misses.load(Ordering::Relaxed),
+        c.evictions.load(Ordering::Relaxed),
+    )
+}
+
+/// Export the cache counters into an `obs` registry (`memo.hits`,
+/// `memo.misses`, `memo.evictions`, plus a `memo.entries` gauge).
+/// Consumed by `perf_hotpath --only-pool` and `--verbose` diagnostics —
+/// never folded into scenario outcomes, whose stored JSON must not
+/// depend on process-global cache history.
+pub fn fill_cache_registry(reg: &mut crate::obs::Registry) {
+    let (h, m, e) = cost_cache_counters();
+    reg.add("memo.hits", h);
+    reg.add("memo.misses", m);
+    reg.add("memo.evictions", e);
+    reg.gauge_max("memo.entries", cost_cache_len() as u64);
 }
 
 #[cfg(test)]
@@ -320,6 +447,78 @@ mod tests {
         assert!(pim < cascade && cascade < isaac, "{pim} {cascade} {isaac}");
         // analog accumulation still clocks the NNS+A every input cycle
         assert!(pim_sa > pim);
+    }
+
+    /// Synthetic key `i` (distinct hash, cheap to mint in bulk).
+    fn key(i: u64) -> CostKey {
+        CostKey {
+            cfg: [i, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+            net_name: format!("synthetic-{i}").into(),
+            net_layers: 1,
+            net_fp: i.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        }
+    }
+
+    #[test]
+    fn shard_overflow_evicts_least_recently_touched() {
+        // private instance: the process-global cache is shared by
+        // concurrently-running tests and must never be force-evicted
+        let c = CostCache::new(2);
+        let table =
+            Arc::new(compute_network_cost(&workloads::synthetic_cnn(),
+                                          &AcceleratorConfig::neural_pim()));
+        // three keys landing in one shard
+        let mut same: Vec<u64> = vec![0];
+        let shard0 = c.shard_of(&key(0));
+        let mut i = 1;
+        while same.len() < 3 {
+            if c.shard_of(&key(i)) == shard0 {
+                same.push(i);
+            }
+            i += 1;
+        }
+        let (a, b, d) = (same[0], same[1], same[2]);
+        c.lookup_or(key(a), || table.clone());
+        c.lookup_or(key(b), || table.clone());
+        // touch `a` so `b` is now the least-recently-used entry
+        c.lookup_or(key(a), || unreachable!("a must hit"));
+        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
+        // inserting a third key overflows the 2-entry shard: `b` goes
+        c.lookup_or(key(d), || table.clone());
+        assert_eq!(c.evictions.load(Ordering::Relaxed), 1);
+        c.lookup_or(key(a), || unreachable!("touched entry evicted"));
+        let misses_before = c.misses.load(Ordering::Relaxed);
+        c.lookup_or(key(b), || table.clone()); // recomputed: was evicted
+        assert_eq!(c.misses.load(Ordering::Relaxed), misses_before + 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded_per_shard() {
+        let c = CostCache::new(1);
+        let table =
+            Arc::new(compute_network_cost(&workloads::synthetic_cnn(),
+                                          &AcceleratorConfig::neural_pim()));
+        for i in 0..200 {
+            c.lookup_or(key(i), || table.clone());
+        }
+        assert!(c.len() <= SHARDS, "len {} exceeds 1-per-shard cap", c.len());
+        assert!(c.evictions.load(Ordering::Relaxed) >= 200 - SHARDS as u64);
+    }
+
+    #[test]
+    fn global_counters_are_monotonic_and_hits_grow_on_reuse() {
+        let net = workloads::googlenet();
+        let cfg = AcceleratorConfig::neural_pim();
+        let _ = network_cost(&net, &cfg);
+        let (h0, m0, _) = cost_cache_counters();
+        let _ = network_cost(&net, &cfg);
+        let (h1, m1, _) = cost_cache_counters();
+        assert!(h1 > h0, "warm lookup must count a hit ({h0} -> {h1})");
+        assert!(m1 >= m0);
+        let mut reg = crate::obs::Registry::default();
+        fill_cache_registry(&mut reg);
+        assert!(reg.counter("memo.hits") >= h1);
+        assert!(reg.counter("memo.misses") >= 1);
     }
 
     #[test]

@@ -28,8 +28,9 @@
 pub mod archs;
 mod memo;
 
-pub use memo::{clear_cost_cache, cost_cache_len, layer_cost, network_cost,
-               LayerCost, NetworkCost};
+pub use memo::{clear_cost_cache, cost_cache_counters, cost_cache_len,
+               fill_cache_registry, layer_cost, network_cost, LayerCost,
+               NetworkCost};
 
 use crate::config::{AcceleratorConfig, Architecture, Precision};
 use crate::energy::ComponentBudget;

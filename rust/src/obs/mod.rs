@@ -120,7 +120,7 @@ mod tests {
     fn trace_spec_is_thread_local() {
         set_trace_spec(Some(TraceSpec { path: "x.json".into(), filter: None }));
         assert_eq!(trace_spec().unwrap().path, "x.json");
-        let other = std::thread::spawn(trace_spec).join().unwrap();
+        let other = crate::util::pool::on_fresh_thread(trace_spec);
         assert!(other.is_none(), "spec leaked across threads");
         set_trace_spec(None);
         assert!(trace_spec().is_none());

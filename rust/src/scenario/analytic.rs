@@ -261,11 +261,24 @@ impl Scenario for Dse {
     }
 
     fn param_specs(&self) -> Vec<ParamSpec> {
-        vec![ParamSpec::u64("top", 12, "design points to list")]
+        vec![
+            ParamSpec::u64("top", 12, "design points to list"),
+            ParamSpec::flag("fine",
+                            "stream the ~1M-candidate fine grid instead \
+                             of the ~360-point Fig. 11 grid"),
+            ParamSpec::u64("batch", 4096,
+                           "fine-grid indices per pool submission \
+                            (memory knob; never changes results)"),
+            ParamSpec::u64("stride", 1,
+                           "fine-grid subsampling step (1 = full grid)"),
+        ]
     }
 
     fn run(&self, p: &Params) -> Result<Outcome> {
         let top = p.get_usize("top");
+        if p.get_bool("fine") {
+            return run_fine(p, top);
+        }
         // one sweep shared by the table and the best-point metrics (the
         // old CLI arm ran it twice)
         let pts = dse::sweep();
@@ -282,6 +295,48 @@ impl Scenario for Dse {
                     "GOPS/s/W");
         Ok(o)
     }
+}
+
+/// `dse --fine`: the streamed million-point sweep. Every value in the
+/// outcome — tallies, top table, the feasible-list fingerprint — is
+/// invariant to `--threads` and `--batch` (asserted by the integration
+/// suite); only `--stride` changes what is explored.
+fn run_fine(p: &Params, top: usize) -> Result<Outcome> {
+    let spec = dse::FineSpec {
+        batch: p.get_usize("batch").max(1),
+        stride: p.get_usize("stride").max(1),
+        top,
+    };
+    let s = dse::fine_sweep(&spec);
+    let mut o = Outcome::new("dse", p.to_json());
+    o.table(report::fig11_table_from(&s.top, top)).note(format!(
+        "fine sweep: {} candidates ({} feasible; rejected: {} \
+         ADC-starved, {} SA-starved, {} I/O-bound), feasible-list \
+         fingerprint {:016x}",
+        s.candidates,
+        s.feasible,
+        s.rejected_adc,
+        s.rejected_sa,
+        s.rejected_io,
+        s.feasible_fp
+    ));
+    if let Some(best) = s.top.first() {
+        o.note(format!(
+            "best: {} at {:.1} GOPS/s/mm² (paper: N128-D4-A4-S64 M64 at \
+             1904.0)",
+            best.label, best.compute_efficiency
+        ));
+        o.metric("best_compute_efficiency", best.compute_efficiency,
+                 "GOPS/s/mm²")
+            .metric("best_energy_efficiency", best.energy_efficiency,
+                    "GOPS/s/W");
+    }
+    o.metric("candidates", s.candidates as f64, "")
+        .metric("feasible", s.feasible as f64, "")
+        .metric("rejected_adc_starved", s.rejected_adc as f64, "")
+        .metric("rejected_sa_starved", s.rejected_sa as f64, "")
+        .metric("rejected_io_bound", s.rejected_io as f64, "");
+    Ok(o)
 }
 
 // -------------------------------------------------------- table2/table3 --

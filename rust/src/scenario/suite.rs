@@ -91,10 +91,11 @@ pub struct EntryResult {
     pub fingerprint: String,
     pub cached: bool,
     /// Wall-clock of this entry *under suite-level concurrency*:
-    /// entries fan out across the pool while scenarios also parallelize
-    /// internally, so absolute values include contention — compare
-    /// wall_ms within like suites (cold vs cached, PR vs PR on the same
-    /// spec), not across suite compositions.
+    /// entries fan out across the pool (each scenario's own `pool::map`
+    /// calls nest inline on the participant running it), so absolute
+    /// values include suite contention — compare wall_ms within like
+    /// suites (cold vs cached, PR vs PR on the same spec), not across
+    /// suite compositions.
     pub wall_ms: f64,
     pub result: Result<Outcome, String>,
 }

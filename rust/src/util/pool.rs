@@ -1,36 +1,132 @@
-//! Dependency-free scoped worker pool (the offline registry has no
-//! `rayon`/`tokio`): `std::thread::scope` workers pulling indices from a
-//! shared atomic counter (work stealing at item granularity).
+//! Dependency-free persistent worker pool (the offline registry has no
+//! `rayon`/`tokio`): a lazily-initialized set of parked OS threads that
+//! claim fixed, index-ordered chunks of each submitted map.
 //!
 //! The contract every caller relies on: **results are bit-identical to a
-//! sequential run regardless of thread count**. `map` reassembles results
-//! by input index, so any per-item computation that is itself
-//! deterministic (e.g. a Monte-Carlo trial on a pre-forked `Pcg` stream)
-//! yields the same output at `--threads 1` and `--threads 8`.
+//! sequential run regardless of thread count**. [`map`] writes each
+//! result into its input's slot, so any per-item computation that is
+//! itself deterministic (e.g. a Monte-Carlo trial on a pre-forked `Pcg`
+//! stream) yields the same output at `--threads 1` and `--threads 8`.
+//! Chunking changes *where* an item runs, never its inputs or its slot.
 //!
-//! The pool size is process-global, defaulting to the machine's available
-//! parallelism, and is wired to the `--threads` CLI flag by `main.rs`.
+//! Scheduling model (the PR-8 overhaul; the previous engine spawned
+//! fresh `std::thread::scope` workers per call and stole work one item
+//! at a time off a single contended counter):
+//!
+//! - **Persistent workers** — `pool()` owns N-1 parked threads (the
+//!   submitting thread is the Nth participant); a map call publishes one
+//!   job, wakes them, and parks them again when the job drains. Pool
+//!   size follows [`set_threads`]; a size change is applied lazily at
+//!   the next submission (threads are spawned or retired then, never
+//!   mid-job).
+//! - **Deterministic chunked claiming** — the item range is cut into
+//!   fixed chunks ([`chunk_size`]: adaptive to the item count, ~8 chunks
+//!   per participant, capped so huge inputs still rebalance). Workers
+//!   claim whole chunks off one atomic cursor; each index is written by
+//!   exactly one claimant, so reassembly is by-index exactly as before.
+//! - **Nested calls run inline** — a `map`/`for_each_indexed` issued
+//!   from inside a pool task (worker thread *or* the participating
+//!   submitter) detects it is [`on_worker`] and degrades to the
+//!   sequential loop. The suite runner can fan scenarios across the pool
+//!   while every scenario's own sweeps nest harmlessly, where the old
+//!   engine oversubscribed the machine with scope-spawned threads.
+//! - **Panic transparency** — a panicking task poisons nothing: the
+//!   first payload is captured and re-thrown on the submitting thread
+//!   after the job drains (the remaining chunks still run, keeping the
+//!   pool state trivial).
+//!
+//! The pool size is process-global, defaulting to the machine's
+//! available parallelism (resolved once), and is wired to the
+//! `--threads` CLI flag by `main.rs`.
+//!
+//! This module is the crate's only thread factory outside `serve/`
+//! (grep-enforced by `scripts/verify.sh`); [`on_fresh_thread`] exists
+//! for the few tests that need a provably-distinct thread, and
+//! [`set_spawn_baseline`] re-enables the old spawn-per-call engine so
+//! `perf_hotpath --only-pool` can price exactly what persistence buys.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::cell::{Cell, UnsafeCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Configured thread count; 0 means "auto" (available parallelism).
 static THREADS: AtomicUsize = AtomicUsize::new(0);
 
+/// Bench-only escape hatch: route `map`/`for_each_indexed` through the
+/// pre-PR-8 spawn-per-call scheduler (see [`set_spawn_baseline`]).
+static SPAWN_BASELINE: AtomicBool = AtomicBool::new(false);
+
+/// OS threads ever created by the persistent pool (monotonic; the
+/// nested-map tests assert a warm pool stops growing).
+static SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// True on pool worker threads, and on the submitting thread while
+    /// it is executing chunks of its own job.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
 /// Override the pool size for subsequent `map`/`for_each_indexed` calls.
-/// `0` restores the default (all available cores).
+/// `0` restores the default (all available cores). Applied lazily: the
+/// next submission resizes the worker set.
 pub fn set_threads(n: usize) {
     THREADS.store(n, Ordering::Relaxed);
 }
 
-/// The pool size `map` will use: the `set_threads` override, or the
-/// machine's available parallelism (at least 1).
+/// The participant count `map` will use: the `set_threads` override, or
+/// the machine's available parallelism (at least 1, resolved once — the
+/// OS query is not re-issued per call).
 pub fn threads() -> usize {
     match THREADS.load(Ordering::Relaxed) {
-        0 => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1),
+        0 => auto_threads(),
         n => n,
     }
+}
+
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// True when the current thread is executing a pool task — the nesting
+/// guard: a `map` issued here runs inline instead of re-entering the
+/// pool (re-entry from a worker would deadlock on the submission lock;
+/// re-entry from the old engine oversubscribed the machine).
+pub fn on_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Total OS threads the persistent pool has ever spawned. Monotonic;
+/// test-support (a warm pool serving nested suites must not grow).
+pub fn spawned_workers() -> u64 {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Route subsequent calls through the retained spawn-per-call baseline
+/// engine (scoped threads + item-granularity stealing) instead of the
+/// persistent pool. **Benchmark-only**: `perf_hotpath --only-pool` uses
+/// it to price per-call spawn overhead and nested oversubscription;
+/// results are bit-identical on either engine.
+pub fn set_spawn_baseline(on: bool) {
+    SPAWN_BASELINE.store(on, Ordering::Relaxed);
+}
+
+/// Run `f` on a brand-new OS thread and return its result. Test-support
+/// utility: this module is the only sanctioned thread factory outside
+/// `serve/`, and thread-locality tests need a thread that is provably
+/// not the caller (a pool worker may *be* the caller via participation).
+pub fn on_fresh_thread<R, F>(f: F) -> R
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    std::thread::scope(|s| {
+        s.spawn(f).join().expect("on_fresh_thread task panicked")
+    })
 }
 
 /// Parallel map preserving input order: `out[i] == f(&items[i])`.
@@ -43,9 +139,90 @@ where
     map_with(threads(), items, f)
 }
 
-/// [`map`] with an explicit worker count (used by the determinism tests
-/// and the sequential-vs-parallel benches; does not touch the global).
+/// [`map`] with an explicit participant count (used by the determinism
+/// tests and the sequential-vs-parallel benches). Does not change the
+/// configured global count, but does resize the shared worker set for
+/// the duration of the call; `map_with(1, ..)` is the guaranteed-inline
+/// spelling some sequential paths rely on.
 pub fn map_with<T, R, F>(n_threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let parts = n_threads.max(1).min(items.len());
+    if parts <= 1 || on_worker() {
+        return items.iter().map(&f).collect();
+    }
+    if SPAWN_BASELINE.load(Ordering::Relaxed) {
+        return map_spawn(parts, items, f);
+    }
+    // one write slot per item; each index belongs to exactly one chunk
+    // and each chunk to exactly one claimant, so the unsynchronized
+    // writes never alias (see OutSlot)
+    let out: Vec<OutSlot<R>> = (0..items.len()).map(|_| OutSlot::new()).collect();
+    let chunk = chunk_size(items.len(), parts);
+    let n_chunks = items.len().div_ceil(chunk);
+    let run_chunk = |c: usize| {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(items.len());
+        for i in lo..hi {
+            out[i].set(f(&items[i]));
+        }
+    };
+    pool().run(parts - 1, n_chunks, &run_chunk);
+    out.into_iter()
+        .map(|s| s.take().expect("pool lost a result"))
+        .collect()
+}
+
+/// Run `f(i, &items[i])` for every index across the pool. No result
+/// collection; use for side-effecting sweeps (e.g. filling a pre-sized
+/// output buffer through interior mutability or per-index files).
+pub fn for_each_indexed<T, F>(items: &[T], f: F)
+where
+    T: Sync,
+    F: Fn(usize, &T) + Sync,
+{
+    let parts = threads().max(1).min(items.len());
+    if parts <= 1 || on_worker() {
+        for (i, t) in items.iter().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    if SPAWN_BASELINE.load(Ordering::Relaxed) {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..parts {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    f(i, &items[i]);
+                });
+            }
+        });
+        return;
+    }
+    let chunk = chunk_size(items.len(), parts);
+    let n_chunks = items.len().div_ceil(chunk);
+    let run_chunk = |c: usize| {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(items.len());
+        for i in lo..hi {
+            f(i, &items[i]);
+        }
+    };
+    pool().run(parts - 1, n_chunks, &run_chunk);
+}
+
+/// The retained pre-PR-8 engine: scoped threads spawned per call,
+/// stealing single items off one shared counter. Kept as the priced
+/// baseline for `BENCH_pool.json` (and as the simplest possible
+/// reference the persistent pool's tests compare against).
+pub fn map_spawn<T, R, F>(n_threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
@@ -87,33 +264,268 @@ where
         .collect()
 }
 
-/// Run `f(i, &items[i])` for every index across the pool. No result
-/// collection; use for side-effecting sweeps (e.g. filling a pre-sized
-/// output buffer through interior mutability or per-index files).
-pub fn for_each_indexed<T, F>(items: &[T], f: F)
-where
-    T: Sync,
-    F: Fn(usize, &T) + Sync,
-{
-    let n_threads = threads().max(1).min(items.len());
-    if n_threads <= 1 {
-        for (i, t) in items.iter().enumerate() {
-            f(i, t);
-        }
-        return;
+/// Chunk width for `len` items across `parts` participants: ~8 chunks
+/// per participant so a slow chunk rebalances, capped at 1024 so very
+/// large inputs still interleave, floored at 1. Purely a scheduling
+/// knob — results never depend on it (by-index reassembly).
+fn chunk_size(len: usize, parts: usize) -> usize {
+    len.div_ceil(parts * 8).clamp(1, 1024)
+}
+
+// ------------------------------------------------------ the pool itself --
+
+/// One write-once result slot. Safety contract: `set(i)` is called at
+/// most once per slot (each index belongs to exactly one claimed chunk),
+/// and `take` only after the job fully drains — so the unsynchronized
+/// interior writes never alias and are published to the submitter by the
+/// job's release/acquire drain counter.
+struct OutSlot<R>(UnsafeCell<Option<R>>);
+
+unsafe impl<R: Send> Sync for OutSlot<R> {}
+
+impl<R> OutSlot<R> {
+    fn new() -> Self {
+        OutSlot(UnsafeCell::new(None))
     }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..n_threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                f(i, &items[i]);
-            });
+
+    fn set(&self, v: R) {
+        // SAFETY: sole writer for this slot (one chunk, one claimant).
+        unsafe { *self.0.get() = Some(v) }
+    }
+
+    fn take(self) -> Option<R> {
+        self.0.into_inner()
+    }
+}
+
+/// One submitted map: a lifetime-erased chunk runner plus the claim and
+/// drain cursors. Lives in an `Arc` so a late-waking worker can still
+/// inspect it safely after completion (it only ever *runs* chunks it
+/// claimed before the drain hit zero, and the submitter does not return
+/// — i.e. the borrowed stack frame stays alive — until the drain hits
+/// zero).
+struct Job {
+    /// chunk runner borrowed from the submitting `map` frame; valid
+    /// until `remaining` reaches 0 (the submitter blocks until then)
+    task: *const (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    /// claim cursor: `fetch_add` hands out chunk indices
+    next: AtomicUsize,
+    /// drain counter: chunks fully executed; 0 = job complete
+    remaining: AtomicUsize,
+    /// first panic payload from any chunk, re-thrown by the submitter
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+// SAFETY: the raw task pointer is only dereferenced for chunks claimed
+// while `remaining > 0`, and the submitting frame it points into blocks
+// until `remaining == 0`; all other fields are Sync.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct State {
+    /// the in-flight job, if any (at most one; submissions serialize)
+    job: Option<Arc<Job>>,
+    /// bumped per publish so a worker never re-enters a job it finished
+    epoch: u64,
+    /// workers currently alive (parked or running)
+    live: usize,
+    /// workers that must exit (shrink protocol; drained before publish)
+    excess: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here waiting for a job or an exit request
+    work: Condvar,
+    /// the submitter (and the shrink path) wait here
+    done: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// serializes submissions: at most one job in flight, which keeps
+    /// the worker protocol trivial (parked -> run -> parked)
+    submit: Mutex<()>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        shared: Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                live: 0,
+                excess: 0,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        }),
+        submit: Mutex::new(()),
+    })
+}
+
+/// Restores the caller's previous [`on_worker`] flag even on unwind, so
+/// a panicking task cannot leave the submitting thread marked in-pool.
+struct InPoolGuard(bool);
+
+impl InPoolGuard {
+    fn enter() -> InPoolGuard {
+        InPoolGuard(IN_POOL.with(|c| c.replace(true)))
+    }
+}
+
+impl Drop for InPoolGuard {
+    fn drop(&mut self) {
+        let prev = self.0;
+        IN_POOL.with(|c| c.set(prev));
+    }
+}
+
+/// Claim and run chunks until the cursor runs out. Every participant —
+/// workers and the submitter alike — executes this same loop; whoever
+/// drains the last chunk clears the published job and wakes the
+/// submitter.
+fn run_job(shared: &Shared, job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.n_chunks {
+            return;
         }
-    });
+        // SAFETY: c < n_chunks implies remaining > 0, so the submitting
+        // frame (and the closure it owns) is still alive.
+        let task = unsafe { &*job.task };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(c))) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        // AcqRel chain: every participant's slot writes happen-before
+        // its decrement, and the submitter's acquire read of 0 sees all
+        // of them
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut st = shared.state.lock().unwrap();
+            if st
+                .job
+                .as_ref()
+                .is_some_and(|j| std::ptr::eq(Arc::as_ptr(j), job))
+            {
+                st.job = None;
+            }
+            drop(st);
+            shared.done.notify_all();
+            return;
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.excess > 0 {
+                    st.excess -= 1;
+                    st.live -= 1;
+                    drop(st);
+                    shared.done.notify_all();
+                    return;
+                }
+                if let Some(j) = &st.job {
+                    if st.epoch != seen_epoch {
+                        seen_epoch = st.epoch;
+                        break j.clone();
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        run_job(&shared, &job);
+    }
+}
+
+impl Pool {
+    /// Submit one job: resize the worker set to `want`, publish the
+    /// chunk runner, participate, and block until every chunk has
+    /// executed. Panics from chunks are re-thrown here.
+    fn run(&self, want: usize, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        let _submit = self.submit.lock().unwrap();
+        self.resize_locked(want);
+        // SAFETY: lifetime erasure only — the pointee outlives the job
+        // because this frame blocks until the drain counter hits zero.
+        let task = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync),
+            >(task)
+        };
+        let job = Arc::new(Job {
+            task,
+            n_chunks,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n_chunks),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job.clone());
+            st.epoch = st.epoch.wrapping_add(1);
+        }
+        self.shared.work.notify_all();
+        {
+            let _g = InPoolGuard::enter();
+            run_job(&self.shared, &job);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while job.remaining.load(Ordering::Acquire) > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        // normally cleared by whoever drained the last chunk; belt and
+        // braces in case that was us
+        if st
+            .job
+            .as_ref()
+            .is_some_and(|j| Arc::ptr_eq(j, &job))
+        {
+            st.job = None;
+        }
+        drop(st);
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+
+    /// Bring the worker set to exactly `want` threads. Called with the
+    /// submission lock held and no job in flight, so every live worker
+    /// is parked (or en route to parking) and the shrink handshake
+    /// settles before any job publishes.
+    fn resize_locked(&self, want: usize) {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.live > want {
+            st.excess = st.live - want;
+            self.shared.work.notify_all();
+            while st.live > want {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.excess = 0;
+        }
+        while st.live < want {
+            let sh = self.shared.clone();
+            std::thread::Builder::new()
+                .name("np-pool".into())
+                .spawn(move || worker(sh))
+                .expect("spawning pool worker");
+            SPAWNED.fetch_add(1, Ordering::Relaxed);
+            st.live += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +566,14 @@ mod tests {
     }
 
     #[test]
+    fn spawn_baseline_matches_persistent_engine() {
+        let items: Vec<u64> = (0..333).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x.wrapping_mul(7) ^ 3).collect();
+        assert_eq!(map_spawn(8, &items, |x| x.wrapping_mul(7) ^ 3), seq);
+        assert_eq!(map_with(8, &items, |x| x.wrapping_mul(7) ^ 3), seq);
+    }
+
+    #[test]
     fn for_each_indexed_visits_every_index_once() {
         let items: Vec<usize> = (0..301).collect();
         let seen = Mutex::new(vec![0u32; items.len()]);
@@ -166,10 +586,78 @@ mod tests {
 
     #[test]
     fn thread_count_configuration() {
+        // NOTE: lib tests run concurrently and THREADS is process-global,
+        // so this test (the only mutator in the lib suite) restores auto
+        // mode on exit; every map result is thread-count-invariant, so
+        // the transient override cannot change any other test's output.
         assert!(threads() >= 1);
         set_threads(3);
         assert_eq!(threads(), 3);
         set_threads(0);
         assert!(threads() >= 1);
+        // auto mode resolves available_parallelism once and keeps
+        // serving it from the cached value
+        assert_eq!(threads(), auto_threads());
+    }
+
+    #[test]
+    fn nested_map_runs_inline_on_a_participant() {
+        // every item observes on_worker() == true (workers and the
+        // participating submitter), so its own map degrades to the
+        // sequential loop — and the result is still correct
+        let outer: Vec<u64> = (0..64).collect();
+        let got = map_with(4, &outer, |&x| {
+            assert!(on_worker(), "pool task not flagged in-pool");
+            let inner: Vec<u64> = (0..8).collect();
+            map_with(4, &inner, |&y| x * 10 + y).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = outer
+            .iter()
+            .map(|&x| (0..8).map(|y| x * 10 + y).sum())
+            .collect();
+        assert_eq!(got, want);
+        assert!(!on_worker(), "in-pool flag leaked past map return");
+    }
+
+    #[test]
+    fn chunk_size_is_sane() {
+        assert_eq!(chunk_size(1, 8), 1);
+        assert_eq!(chunk_size(64, 8), 1);
+        assert_eq!(chunk_size(6400, 8), 100);
+        assert_eq!(chunk_size(10_000_000, 8), 1024);
+        for (len, parts) in [(257usize, 3usize), (64, 64), (1000, 7)] {
+            let c = chunk_size(len, parts);
+            assert!(c >= 1 && len.div_ceil(c) >= 1);
+        }
+    }
+
+    #[test]
+    fn panics_propagate_to_the_submitter() {
+        let items: Vec<u32> = (0..128).collect();
+        let r = std::panic::catch_unwind(|| {
+            map_with(4, &items, |&x| {
+                if x == 77 {
+                    panic!("item 77 exploded");
+                }
+                x
+            })
+        });
+        let err = r.expect_err("panic must cross the pool");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("item 77"), "lost the original payload: {msg}");
+        assert!(!on_worker(), "panic left the submitter flagged in-pool");
+        // the pool is still usable afterwards
+        assert_eq!(map_with(4, &[1u32, 2, 3], |x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn pool_resizes_between_calls() {
+        let items: Vec<u64> = (0..500).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x + 1).collect();
+        // grow, shrink, regrow — each call resizes the shared worker
+        // set; results must be identical throughout
+        for t in [2usize, 16, 2, 8, 3] {
+            assert_eq!(map_with(t, &items, |x| x + 1), seq, "threads = {t}");
+        }
     }
 }

@@ -443,6 +443,31 @@ fn dse_sweep_is_thread_count_invariant() {
 }
 
 #[test]
+fn dse_fine_sweep_is_thread_count_invariant() {
+    // the streamed fine grid's acceptance anchor: the feasible-point
+    // fingerprint (FNV-1a over the (index, eff-bits) list in index
+    // order) is byte-identical at any thread count; a stride subsamples
+    // the ~1M grid so the test stays fast while batching still spans
+    // many pool submissions
+    let spec = dse::FineSpec { stride: 487, batch: 128, top: 6 };
+    let mut base: Option<(u64, u64, Vec<String>)> = None;
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let s = dse::fine_sweep(&spec);
+        pool::set_threads(0);
+        let labels = s.top.iter().map(|p| p.label.clone()).collect();
+        let fp = (s.feasible_fp, s.feasible, labels);
+        match &base {
+            None => {
+                assert!(s.feasible > 0, "no feasible point in the sample");
+                base = Some(fp);
+            }
+            Some(b) => assert_eq!(&fp, b, "diverged at {t} threads"),
+        }
+    }
+}
+
+#[test]
 fn noise_mc_is_thread_count_invariant() {
     let mut base = None;
     for t in [1usize, 2, 8] {

@@ -1,0 +1,73 @@
+//! Nested `pool::map` semantics, end to end: the suite runner fans
+//! scenarios across the worker pool while every scenario's own sweeps
+//! (`dse::sweep`, the characterization tables) issue their own
+//! `pool::map` calls from inside pool tasks. The persistent-pool
+//! contract says those inner calls run inline on the participant — so a
+//! nested suite is (a) bit-identical to a sequential run at any thread
+//! count and (b) never spawns workers beyond the pool's configured size.
+//!
+//! This lives in its own integration binary with a single #[test] so the
+//! `spawned_workers()` bookkeeping can't race a concurrently-running
+//! test's pool resize.
+
+use neural_pim::scenario::{self, suite};
+use neural_pim::util::json::Json;
+use neural_pim::util::pool;
+
+fn spec() -> suite::SuiteSpec {
+    suite::SuiteSpec::from_json(
+        &Json::parse(
+            r#"{"name": "nested", "scenarios": [
+                {"scenario": "dse"},
+                {"scenario": "characterize"},
+                {"scenario": "table2"},
+                {"scenario": "table3"}]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// Scenario name + rendered text of every entry: the byte-identity
+/// anchor (render_text covers tables, notes, and metric formatting).
+fn render(r: &suite::SuiteReport) -> Vec<(String, String)> {
+    r.entries
+        .iter()
+        .map(|e| {
+            let body = match &e.result {
+                Ok(o) => o.render_text(),
+                Err(err) => format!("FAILED: {err}"),
+            };
+            (e.scenario.clone(), body)
+        })
+        .collect()
+}
+
+#[test]
+fn nested_suite_is_deterministic_and_spawns_no_nested_workers() {
+    let spec = spec();
+    let opts = scenario::ExecOptions::default(); // no store: compute live
+
+    // sequential baseline: pool fully bypassed
+    pool::set_threads(1);
+    let seq = suite::run_spec(&spec, &opts);
+    assert_eq!(seq.failures(), 0, "sequential suite failed");
+    let baseline = render(&seq);
+
+    for t in [2usize, 8] {
+        pool::set_threads(t);
+        // warm the pool to its size for this thread count, so any
+        // further spawn during the nested suite would be a nested worker
+        let warm: Vec<u64> = (0..64).collect();
+        let _ = pool::map(&warm, |&x| x + 1);
+        let before = pool::spawned_workers();
+        let got = render(&suite::run_spec(&spec, &opts));
+        let after = pool::spawned_workers();
+        assert_eq!(got, baseline, "suite output diverged at {t} threads");
+        assert_eq!(
+            after, before,
+            "nested suite spawned extra workers at {t} threads"
+        );
+    }
+    pool::set_threads(0);
+}

@@ -60,6 +60,21 @@ if grep -nE '"[A-Za-z0-9_-]+"[[:space:]]*=>' rust/src/main.rs; then
   exit 1
 fi
 
+# Thread-factory gate: util/pool.rs is the crate's only thread factory
+# (persistent workers, the spawn-per-call baseline, on_fresh_thread);
+# the serve layer keeps its long-lived coordinator/batcher threads. A
+# thread::spawn / thread::scope anywhere else bypasses the pool's
+# nesting guard and determinism contract — route the work through
+# pool::map / for_each_indexed / on_fresh_thread instead.
+if grep -rn --include='*.rs' -E \
+    'thread::spawn|thread::scope' \
+    rust/src rust/tests rust/benches examples \
+    | grep -vE '^rust/src/(util/pool\.rs|serve/)'; then
+  echo "FAIL: thread::spawn/thread::scope outside rust/src/util/pool.rs" \
+       "and rust/src/serve/ — use util::pool" >&2
+  exit 1
+fi
+
 # Diagnostics gate: stderr chatter goes through the leveled obs::diag!
 # macro (gated by --verbose / NEURAL_PIM_LOG), never raw eprintln!.
 # Only the macro's own expansion site (obs/) and the CLI's final error
