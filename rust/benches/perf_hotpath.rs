@@ -14,8 +14,8 @@ use neural_pim::event::{self, Engine};
 use neural_pim::obs::{NullRecorder, Recorder, Registry, TraceRecorder};
 use neural_pim::runtime;
 use neural_pim::scenario::{self, suite};
-use neural_pim::serve::{loadgen, open_runtime, Coordinator, PjrtBackend,
-                        ServeOptions};
+use neural_pim::serve::{fleet, loadgen, open_runtime, Coordinator,
+                        PjrtBackend, ServeOptions};
 use neural_pim::util::json::Json;
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
@@ -205,7 +205,7 @@ fn event_suite() -> anyhow::Result<()> {
     };
     let loads = [0.7, 1.0, 1.3];
     let t0 = Instant::now();
-    let pts = loadgen::sweep(&lg, &loads);
+    let pts = loadgen::sweep(&lg, &loads).unwrap();
     let dt = t0.elapsed().as_secs_f64();
     let arrivals = (lg.requests * loads.len() as u64) as f64;
     println!(
@@ -217,7 +217,7 @@ fn event_suite() -> anyhow::Result<()> {
     put(&mut pairs, "event.loadgen_arrivals_per_sec", arrivals / dt);
     let sharded = loadgen::LoadGenConfig { shards: 8, ..lg };
     let t0 = Instant::now();
-    let _ = loadgen::sweep(&sharded, &loads);
+    let _ = loadgen::sweep(&sharded, &loads).unwrap();
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "[bench] loadgen sweep, 8 shards: {:.2}M arrivals/s",
@@ -478,6 +478,93 @@ fn pool_suite() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The fleet-serving suite (ISSUE 9's headline artifact): 1M+ virtual
+/// arrivals routed across a 16-chip heterogeneous fleet, sequential vs
+/// 8-thread wall clock (simulated-arrivals/sec and the parallel
+/// speedup), plus the bit-identity fingerprint at threads 1/2/8 —
+/// written to `BENCH_fleet.json`. Runs standalone via `--only-fleet`.
+fn fleet_suite() -> anyhow::Result<()> {
+    println!("### fleet-serving suite\n");
+    let mut pairs: Vec<(String, Json)> = Vec::new();
+    let put = |pairs: &mut Vec<(String, Json)>, k: &str, v: f64| {
+        pairs.push((k.to_string(), Json::Num(v)));
+    };
+
+    let net = workloads::synthetic_cnn();
+    let mix = fleet::parse_fleet("neural-pim:8,isaac:4,cascade:2,lowres:2")
+        .expect("bench fleet spec");
+    let classes = fleet::build_classes(&net, &mix, 64);
+    let chips: usize = classes.iter().map(|c| c.count).sum();
+    let cfg = fleet::FleetConfig {
+        arrivals: 1 << 20,
+        policy: fleet::RouterPolicy::LatencyAware,
+        ..Default::default()
+    };
+
+    // 1. headline: simulated-arrivals/sec, sequential vs 8 threads (the
+    // detail pass fans per-chip replays over the pool; routing is the
+    // sequential fraction)
+    pool::set_threads(1);
+    let t0 = Instant::now();
+    let seq = fleet::run_fleet(&cfg, &classes);
+    let seq_s = t0.elapsed().as_secs_f64();
+    pool::set_threads(8);
+    let t0 = Instant::now();
+    let par = fleet::run_fleet(&cfg, &classes);
+    let par_s = t0.elapsed().as_secs_f64();
+    let speedup_par8 = seq_s / par_s.max(1e-12);
+    println!(
+        "[bench] fleet {} arrivals x {chips} chips ({}): seq {:.2}s \
+         ({:.2}M arrivals/s) vs 8 threads {:.2}s ({:.2}M arrivals/s) -> \
+         {:.2}x",
+        cfg.arrivals,
+        cfg.policy.name(),
+        seq_s,
+        cfg.arrivals as f64 / seq_s / 1e6,
+        par_s,
+        cfg.arrivals as f64 / par_s / 1e6,
+        speedup_par8
+    );
+    put(&mut pairs, "fleet.arrivals", cfg.arrivals as f64);
+    put(&mut pairs, "fleet.chips", chips as f64);
+    put(&mut pairs, "fleet.arrivals_per_s_seq",
+        cfg.arrivals as f64 / seq_s.max(1e-12));
+    put(&mut pairs, "fleet.arrivals_per_s_par8",
+        cfg.arrivals as f64 / par_s.max(1e-12));
+    put(&mut pairs, "fleet.speedup_par8", speedup_par8);
+    put(&mut pairs, "fleet.p99_ms", par.p99_ms);
+    put(&mut pairs, "fleet.shed_rate", par.shed_rate);
+
+    // 2. the acceptance anchor: bit-identical per-chip tallies at
+    // --threads 1/2/8 (seq/par runs above cover 1 and 8; 2 runs here)
+    pool::set_threads(2);
+    let two = fleet::run_fleet(&cfg, &classes);
+    let fps = [
+        (1usize, fleet::fingerprint(&seq)),
+        (2, fleet::fingerprint(&two)),
+        (8, fleet::fingerprint(&par)),
+    ];
+    assert!(
+        fps.windows(2).all(|w| w[0].1 == w[1].1),
+        "fleet run diverged across thread counts: {fps:?}"
+    );
+    println!(
+        "[bench] fleet fingerprint {:016x} bit-identical at threads 1/2/8",
+        fps[0].1
+    );
+    pairs.push(("fleet.fingerprint".into(),
+                Json::Str(format!("{:016x}", fps[0].1))));
+    pairs.push(("fleet.fp_threads_invariant".into(), Json::Bool(true)));
+    pool::set_threads(0);
+
+    let mut bench_json =
+        Json::Obj(pairs.into_iter().collect()).to_pretty_string();
+    bench_json.push('\n');
+    std::fs::write("BENCH_fleet.json", bench_json)?;
+    println!("[bench] wrote BENCH_fleet.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     // CI runs `-- --only-event` / `-- --only-obs` / `-- --only-pool` to
     // produce BENCH_event.json / BENCH_obs.json / BENCH_pool.json
@@ -490,6 +577,9 @@ fn main() -> anyhow::Result<()> {
     }
     if std::env::args().any(|a| a == "--only-pool") {
         return pool_suite();
+    }
+    if std::env::args().any(|a| a == "--only-fleet") {
+        return fleet_suite();
     }
     println!("### §Perf hot paths\n");
 
@@ -519,6 +609,7 @@ fn main() -> anyhow::Result<()> {
     event_suite()?;
     obs_suite()?;
     pool_suite()?;
+    fleet_suite()?;
     // pool scaling of the request sim (replicas fan out across threads)
     let alex = workloads::alexnet();
     let load = event::RequestLoad {
@@ -620,9 +711,9 @@ fn main() -> anyhow::Result<()> {
     };
     let lg_loads = [0.5, 0.8, 1.0, 1.2];
     bench("serve loadgen sweep (4 loads x 8192 arrivals)", 2, 10, || {
-        let _ = loadgen::sweep(&lg, &lg_loads);
+        let _ = loadgen::sweep(&lg, &lg_loads).unwrap();
     });
-    let pts = loadgen::sweep(&lg, &lg_loads);
+    let pts = loadgen::sweep(&lg, &lg_loads).unwrap();
     let mut bench_pairs: Vec<(String, Json)> = Vec::new();
     for pt in &pts {
         let tag = format!("{:.2}", pt.offered);

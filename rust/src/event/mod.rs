@@ -52,7 +52,7 @@ use crate::model;
 use crate::obs::{NullRecorder, Recorder, Registry, TraceRecorder};
 use crate::sim;
 use crate::util::pool;
-use crate::util::rng::Pcg;
+use crate::util::rng::{self, Pcg};
 use crate::util::stats;
 use crate::workloads::Network;
 use std::sync::Arc;
@@ -161,7 +161,8 @@ pub struct RequestLoad {
     /// replica's request stream, so one replica's simulation can spread
     /// over `shards` pool workers. Shard streams use the same
     /// sequential-up-front `Pcg::fork` discipline (fork index =
-    /// `replica * shards + shard`), so any shard count is bit-identical
+    /// `replica * shards + shard` inside `rng::FORK_NS_EVENT`), so any
+    /// shard count is bit-identical
     /// at any `--threads`; `shards = 1` reproduces the unsharded
     /// numbers exactly. Sharding > 1 is a modeling choice — per-shard
     /// Poisson arrivals instead of one per-replica stream — not a pure
@@ -256,7 +257,7 @@ fn replica_inputs(load: &RequestLoad) -> Vec<(Pcg, u64)> {
         let sextra = rjobs % shards;
         for s in 0..shards {
             inputs.push((
-                root.fork(r * shards + s),
+                root.fork(rng::fork_idx(rng::FORK_NS_EVENT, r * shards + s)),
                 sbase + u64::from(s < sextra),
             ));
         }
@@ -530,15 +531,16 @@ mod tests {
         let jobs: Vec<u64> = inputs.iter().map(|(_, j)| *j).collect();
         // replica 0 takes 6 (2+2+2), replica 1 takes 5 (2+2+1)
         assert_eq!(jobs, vec![2, 2, 2, 2, 2, 1]);
-        // shards = 1 consumes the root fork stream exactly as the
-        // pre-sharding code did (fork indices 0..replicas)
+        // shards = 1 walks the namespaced fork indices 0..replicas in
+        // order inside the event window
         let unsharded = replica_inputs(&RequestLoad {
             requests: 11, replicas: 2, shards: 1, ..Default::default()
         });
         let mut root = Pcg::new(RequestLoad::default().seed);
-        for (i, (rng, _)) in unsharded.iter().enumerate() {
-            let mut want = root.fork(i as u64);
-            let mut got = rng.clone();
+        for (i, (stream, _)) in unsharded.iter().enumerate() {
+            let mut want =
+                root.fork(rng::fork_idx(rng::FORK_NS_EVENT, i as u64));
+            let mut got = stream.clone();
             assert_eq!(want.next_u64(), got.next_u64());
         }
     }

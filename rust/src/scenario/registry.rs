@@ -10,7 +10,7 @@
 use super::{analytic, pjrt, serve, Scenario};
 
 /// Every registered scenario, in help/report order.
-static SCENARIOS: [&dyn Scenario; 14] = [
+static SCENARIOS: [&dyn Scenario; 15] = [
     &analytic::Characterize,
     &analytic::Simulate,
     &analytic::EventSim,
@@ -20,6 +20,7 @@ static SCENARIOS: [&dyn Scenario; 14] = [
     &analytic::Budget,
     &analytic::Noise,
     &serve::ServeSim,
+    &serve::FleetSim,
     &pjrt::Accuracy,
     &pjrt::Mc,
     &pjrt::PeriphTable,

@@ -13,8 +13,8 @@
 use super::pjrt::{artifacts_dir, artifacts_extra, artifacts_spec};
 use super::{Outcome, ParamSpec, Params, Scenario};
 use crate::config::{AcceleratorConfig, Architecture};
-use crate::serve::{self, loadgen, Coordinator, PjrtBackend, ServeOptions,
-                   SimBackend, Submission};
+use crate::serve::{self, fleet, loadgen, Coordinator, PjrtBackend,
+                   ServeOptions, SimBackend, Submission};
 use crate::util::cli;
 use crate::util::rng::Pcg;
 use crate::util::stats;
@@ -389,7 +389,8 @@ impl Scenario for ServeSim {
         let points = match &spec {
             Some(spec) => {
                 let (points, trace) =
-                    loadgen::sweep_traced(&lg, &loads, spec.filter.as_deref());
+                    loadgen::sweep_traced(&lg, &loads,
+                                          spec.filter.as_deref())?;
                 trace.write_file(&spec.path)?;
                 crate::diag!(
                     1,
@@ -398,7 +399,7 @@ impl Scenario for ServeSim {
                 );
                 points
             }
-            None => loadgen::sweep(&lg, &loads),
+            None => loadgen::sweep(&lg, &loads)?,
         };
 
         let arch_name = model::cost_model(cfg.arch).name();
@@ -438,6 +439,22 @@ impl Scenario for ServeSim {
             max_batch - 1,
             sp.bottleneck_ps() as f64 / 1e9,
         ));
+        // the typed-rejection satellite's runtime half: a load point
+        // where every arrival was shed is a saturated (degenerate)
+        // operating point, not a latency measurement
+        let saturated: Vec<String> = points
+            .iter()
+            .filter(|pt| pt.shed_rate >= 1.0)
+            .map(|pt| format!("{:.2}", pt.offered))
+            .collect();
+        if !saturated.is_empty() {
+            o.note(format!(
+                "warning: offered load(s) {} saturated the admission \
+                 queue (shed rate 1.0) — latency columns there describe \
+                 no served traffic",
+                saturated.join(", ")
+            ));
+        }
         o.metric("batch_exec_ms", lg.batch_exec_us as f64 / 1000.0, "ms");
         for pt in &points {
             let tag = format!("{:.2}", pt.offered);
@@ -445,6 +462,9 @@ impl Scenario for ServeSim {
                      "req/s")
                 .metric(format!("p99_ms@{tag}"), pt.p99_ms, "ms")
                 .metric(format!("shed_rate@{tag}"), pt.shed_rate, "");
+            if let Some(p999) = pt.p999_ms {
+                o.metric(format!("p999_ms@{tag}"), p999, "ms");
+            }
         }
         // registry totals across load points (merged in point order) as
         // namespaced metric records — JSON-only surface
@@ -456,6 +476,190 @@ impl Scenario for ServeSim {
             o.metric(format!("obs/{name}"), v as f64, "");
         }
         for (name, v) in registry.gauges() {
+            o.metric(format!("obs/{name}"), v as f64, "");
+        }
+        Ok(o)
+    }
+}
+
+// ----------------------------------------------------------- fleet-sim --
+
+pub struct FleetSim;
+
+impl Scenario for FleetSim {
+    fn name(&self) -> &'static str {
+        "fleet-sim"
+    }
+
+    fn description(&self) -> &'static str {
+        "virtual datacenter: route a diurnal/bursty arrival stream \
+         across a heterogeneous fleet of priced PIM chips"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::str("network", "SyntheticCNN", "simulated network"),
+            ParamSpec::str("fleet", "neural-pim:8,isaac:4,cascade:2,lowres:2",
+                           "chip mix as arch:count (model registry names)"),
+            ParamSpec::str("policy", "latency-aware",
+                           "router policy: round-robin | \
+                            join-shortest-queue | latency-aware"),
+            ParamSpec::u64("arrivals", 1 << 20,
+                           "virtual arrivals to stream through the router"),
+            ParamSpec::f64("offered", 0.9,
+                           "diurnal-average offered load vs fleet capacity"),
+            ParamSpec::u64("max-batch", 64, "executable batch per chip"),
+            ParamSpec::u64("depth", 256, "per-chip admission queue bound"),
+            ParamSpec::u64("seed", 42, "PRNG seed"),
+            ParamSpec::f64("diurnal", 0.3,
+                           "diurnal amplitude in [0, 0.95]; 0 disables"),
+            ParamSpec::u64("diurnal-period-us", 200_000,
+                           "diurnal period (virtual µs)"),
+            ParamSpec::f64("burst-mult", 3.0,
+                           "burst rate multiplier (1 disables bursts)"),
+            ParamSpec::f64("burst-enter", 0.0005,
+                           "per-candidate burst entry probability"),
+            ParamSpec::f64("burst-exit", 0.02,
+                           "per-candidate burst exit probability"),
+            ParamSpec::u64("sweep-arrivals", 1 << 18,
+                           "arrivals per chip-count sweep point; 0 skips \
+                            the knee sweep"),
+        ]
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        let net = sim_network(p)?;
+        let mix = fleet::parse_fleet(p.get_str("fleet"))?;
+        let policy = fleet::RouterPolicy::parse(p.get_str("policy"))?;
+        let offered = p.get_f64("offered");
+        if !offered.is_finite() || offered <= 0.0 {
+            bail!("--offered must be positive and finite (got {offered})");
+        }
+        let max_batch = p.get_usize("max-batch").max(1);
+        let classes = fleet::build_classes(&net, &mix, max_batch);
+        let cfg = fleet::FleetConfig {
+            arrivals: p.get_u64("arrivals"),
+            offered,
+            policy,
+            max_queue_depth: p.get_usize("depth").max(1),
+            seed: p.get_u64("seed"),
+            diurnal_amp: p.get_f64("diurnal"),
+            diurnal_period_us: p.get_u64("diurnal-period-us").max(1),
+            burst_mult: p.get_f64("burst-mult"),
+            burst_enter: p.get_f64("burst-enter"),
+            burst_exit: p.get_f64("burst-exit"),
+        };
+        crate::diag!(
+            1,
+            "fleet-sim: {} arrivals over {} chips ({})",
+            cfg.arrivals,
+            classes.iter().map(|c| c.count).sum::<usize>(),
+            fleet::mix_string(&mix)
+        );
+        // `--trace`: per-chip track prefixes (`chip{i}/{class}/...`),
+        // absorbed in chip order; numbers identical on both paths
+        let spec = crate::obs::trace_spec();
+        let r = match &spec {
+            Some(spec) => {
+                let (r, trace) = fleet::run_fleet_traced(
+                    &cfg, &classes, spec.filter.as_deref());
+                trace.write_file(&spec.path)?;
+                crate::diag!(
+                    1,
+                    "fleet-sim: wrote {} trace events to {}",
+                    trace.len(), spec.path
+                );
+                r
+            }
+            None => fleet::run_fleet(&cfg, &classes),
+        };
+
+        let mut t = Table::new(
+            &format!(
+                "fleet-sim: {} arrivals on {} ({} policy, depth {})",
+                r.arrivals, net.name, policy.name(), cfg.max_queue_depth
+            ),
+            &["class", "chips", "served", "shed", "avg batch", "p99 (ms)",
+              "energy/inf (uJ)", "energy (J)"],
+        );
+        for c in &r.per_class {
+            t.cells(vec![
+                Cell::s(c.name),
+                Cell::num(c.chips as f64, c.chips.to_string()),
+                Cell::num(c.served as f64, c.served.to_string()),
+                Cell::num(c.shed as f64, c.shed.to_string()),
+                Cell::num(c.avg_batch, format!("{:.1}", c.avg_batch)),
+                Cell::num(c.p99_ms, format!("{:.3}", c.p99_ms)),
+                Cell::num(c.energy_j_per_inf * 1e6,
+                          format!("{:.2}", c.energy_j_per_inf * 1e6)),
+                Cell::num(c.energy_j_total,
+                          format!("{:.3}", c.energy_j_total)),
+            ]);
+        }
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(t);
+        let p999 = match r.p999_ms {
+            Some(v) => format!("{v:.3} ms"),
+            None => "n/a (under the 1000-sample guard)".to_string(),
+        };
+        o.note(format!(
+            "fleet served {} of {} arrivals ({:.0} req/s virtual), p50 \
+             {:.3} ms, p99 {:.3} ms, p99.9 {p999}, shed rate {:.4}",
+            r.served, r.arrivals, r.throughput_rps, r.p50_ms, r.p99_ms,
+            r.shed_rate
+        ));
+        if r.shed_rate >= 1.0 {
+            o.note("warning: the fleet saturated (shed rate 1.0) — \
+                    latency numbers describe no served traffic"
+                .to_string());
+        }
+        o.metric("chips", r.chips as f64, "")
+            .metric("throughput_rps", r.throughput_rps, "req/s")
+            .metric("p50_ms", r.p50_ms, "ms")
+            .metric("p99_ms", r.p99_ms, "ms")
+            .metric("shed_rate", r.shed_rate, "");
+        if let Some(v) = r.p999_ms {
+            o.metric("p999_ms", v, "ms");
+        }
+        for c in &r.per_class {
+            o.metric(format!("energy_uj_per_inf@{}", c.name),
+                     c.energy_j_per_inf * 1e6, "uJ");
+        }
+
+        // chip-count sweep at the same absolute arrival rate: where
+        // does adding chips stop buying tail latency?
+        let sweep_arrivals = p.get_u64("sweep-arrivals");
+        if sweep_arrivals > 0 {
+            let (points, knee) = fleet::knee_sweep(
+                &cfg, &net, &mix, max_batch, sweep_arrivals);
+            let mut ts = Table::new(
+                "chip-count sweep (fixed absolute arrival rate)",
+                &["chips", "mix scale", "offered", "p99 (ms)",
+                  "shed rate"],
+            );
+            for kp in &points {
+                ts.cells(vec![
+                    Cell::num(kp.chips as f64, kp.chips.to_string()),
+                    Cell::num(kp.scale, format!("{:.2}", kp.scale)),
+                    Cell::num(kp.offered, format!("{:.2}", kp.offered)),
+                    Cell::num(kp.p99_ms, format!("{:.3}", kp.p99_ms)),
+                    Cell::num(kp.shed_rate, format!("{:.4}", kp.shed_rate)),
+                ]);
+            }
+            o.table(ts);
+            o.note(format!(
+                "knee at {knee} chips: the smallest fleet within 5% of \
+                 the largest fleet's p99 at this arrival rate"
+            ));
+            o.metric("knee_chips", knee as f64, "");
+        }
+
+        // registry totals (typed per-class shed counters included) as
+        // namespaced metric records — JSON-only surface
+        for (name, v) in r.registry.counters() {
+            o.metric(format!("obs/{name}"), v as f64, "");
+        }
+        for (name, v) in r.registry.gauges() {
             o.metric(format!("obs/{name}"), v as f64, "");
         }
         Ok(o)

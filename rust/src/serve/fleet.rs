@@ -1,0 +1,1139 @@
+//! Fleet-scale serving simulator: a virtual datacenter of PIM chips.
+//!
+//! `serve::loadgen` simulates one coordinator; this module simulates N
+//! priced chips behind a router. Each chip class comes from the `model`
+//! registry (heterogeneous mixes via a `--fleet` spec such as
+//! `neural-pim:8,isaac:4`), priced by the same
+//! [`event::service_profile`](crate::event::service_profile) batch
+//! table the single-chip paths use, so fleet numbers are commensurable
+//! with `serve-sim` and the event scenarios. The router is pluggable
+//! ([`RouterPolicy`]): round-robin, join-shortest-queue, or
+//! latency-aware (per-chip EWMA sojourn plus queued work). Each chip
+//! has a bounded admission queue; an arrival routed to a full chip is
+//! shed and tallied per chip class.
+//!
+//! Arrivals go beyond homogeneous Poisson: a deterministic
+//! diurnal/bursty generator ([`ArrivalGen`]) thins a peak-rate Poisson
+//! stream against a piecewise-constant diurnal profile times a
+//! two-state Markov burst chain, all on `Pcg` fork streams in the
+//! `FORK_NS_FLEET` namespace. Arrivals stream one at a time — millions
+//! of virtual users never materialize as an event vector.
+//!
+//! # Determinism and the two-pass chunk discipline
+//!
+//! Routing is inherently global (JSQ reads every queue), so the router
+//! pass is sequential: it advances every chip's [`ChipCore`] state
+//! machine to each arrival, picks a chip, and applies bounded
+//! admission, appending admitted arrivals to per-chip chunk buffers
+//! (bounded by [`CHUNK`] — the streaming guarantee). The expensive
+//! per-request accounting (sojourn histograms, latency samples, trace
+//! spans) happens in a second pass that replays each chip's admitted
+//! stream through an identical `ChipCore`, fanned out over the
+//! persistent `util::pool` — each chip's evolution depends only on its
+//! own stream, so any thread count produces bit-identical results, and
+//! per-chip partials merge in chip-index order. The two passes run the
+//! same machine; [`run_fleet`] asserts their per-chip served/batch
+//! counts agree exactly.
+
+use crate::config::{AcceleratorConfig, Architecture};
+use crate::event;
+use crate::model;
+use crate::obs::{Hist, Recorder, Registry, TraceRecorder};
+use crate::util::pool;
+use crate::util::rng::{self, Pcg};
+use crate::util::stats;
+use crate::util::{cli, json};
+use crate::workloads::Network;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Trace timestamps are virtual picoseconds; the fleet clock is
+/// virtual microseconds (same convention as `serve::loadgen`).
+const US_TO_PS: u64 = 1_000_000;
+
+/// Router-pass arrivals per parallel detail flush: bounds per-chip
+/// buffer memory no matter how many arrivals stream through, and sets
+/// the fan-out granularity of the detail pass.
+const CHUNK: usize = 32_768;
+
+/// EWMA smoothing for the latency-aware policy's per-chip sojourn
+/// estimate.
+const EWMA_ALPHA: f64 = 0.2;
+
+// ------------------------------------------------------------ fleet spec --
+
+/// Parse a `--fleet` spec: comma-separated `arch:count` entries against
+/// the `model` registry (names and aliases), e.g. `neural-pim:8,isaac:4`.
+pub fn parse_fleet(spec: &str) -> Result<Vec<(Architecture, usize)>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, count) = match part.split_once(':') {
+            Some((n, c)) => {
+                let count: usize = c.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("--fleet: '{c}' is not a chip count \
+                                     (in '{part}')")
+                })?;
+                (n.trim(), count)
+            }
+            None => (part, 1),
+        };
+        if count == 0 {
+            bail!("--fleet: '{part}' asks for zero chips");
+        }
+        let arch = model::parse_arch(name).map_err(|e| {
+            let known: Vec<&str> = model::models()
+                .iter()
+                .flat_map(|m| {
+                    std::iter::once(m.name()).chain(m.aliases().iter().copied())
+                })
+                .collect();
+            match cli::suggest(name, &known) {
+                Some(s) => anyhow::anyhow!("{e} (did you mean '{s}'?)"),
+                None => e,
+            }
+        })?;
+        mix.push((arch, count));
+    }
+    if mix.is_empty() {
+        bail!("--fleet needs at least one arch:count entry");
+    }
+    Ok(mix)
+}
+
+/// One chip class of the fleet: an architecture priced for `net`, its
+/// batch service-time table and per-inference energy shared by every
+/// chip of the class.
+#[derive(Debug, Clone)]
+pub struct ChipClass {
+    pub arch: Architecture,
+    /// registry display name (`model::cost_model(arch).name()`)
+    pub name: &'static str,
+    pub count: usize,
+    /// service time of a batch of `n`, µs, at index `n - 1`
+    pub batch_us: Vec<u64>,
+    /// per-inference energy, joules (`model::network_cost` total)
+    pub energy_j_per_inf: f64,
+    /// steady-state per-request service time at full batch, µs — the
+    /// latency-aware policy's queued-work estimate
+    pub svc_per_req_us: f64,
+}
+
+/// Price a fleet mix for one network: per class, the batch table from
+/// the service profile and the energy from the memoized cost table.
+pub fn build_classes(net: &Network, mix: &[(Architecture, usize)],
+                     max_batch: usize) -> Vec<ChipClass> {
+    let max_batch = max_batch.max(1);
+    mix.iter()
+        .map(|&(arch, count)| {
+            let cfg = AcceleratorConfig::for_arch(arch);
+            let nc = model::network_cost(net, &cfg);
+            let sp = event::service_profile(&cfg, &nc);
+            let batch_us: Vec<u64> =
+                (1..=max_batch as u64).map(|n| sp.batch_us(n)).collect();
+            let full = batch_us[max_batch - 1];
+            ChipClass {
+                arch,
+                name: model::cost_model(arch).name(),
+                count,
+                svc_per_req_us: full as f64 / max_batch as f64,
+                energy_j_per_inf: nc.total.total(),
+                batch_us,
+            }
+        })
+        .collect()
+}
+
+/// Fleet service capacity, requests per virtual µs, at full batches —
+/// the rate the offered load is expressed against.
+pub fn capacity_per_us(classes: &[ChipClass]) -> f64 {
+    classes
+        .iter()
+        .map(|c| {
+            let full = *c.batch_us.last().expect("non-empty batch table");
+            c.count as f64 * c.batch_us.len() as f64 / full.max(1) as f64
+        })
+        .sum()
+}
+
+// --------------------------------------------------------------- router --
+
+/// Chip-selection policy. All selection logic lives here (verify.sh
+/// gates `RouterPolicy::` match arms to this file): scenarios and
+/// benches only name a policy, they never route.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// cycle through chips in index order (exactly fair per cycle)
+    RoundRobin,
+    /// least work-in-system (queued + in-flight), ties to lowest index
+    JoinShortestQueue,
+    /// least estimated sojourn: per-chip EWMA of batch sojourn plus
+    /// queued work times the class service rate
+    LatencyAware,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Result<RouterPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Ok(RouterPolicy::RoundRobin),
+            "join-shortest-queue" | "jsq" => Ok(RouterPolicy::JoinShortestQueue),
+            "latency-aware" | "ewma" => Ok(RouterPolicy::LatencyAware),
+            other => {
+                let known = ["round-robin", "join-shortest-queue",
+                             "latency-aware"];
+                match cli::suggest(other, &known) {
+                    Some(sug) => bail!("unknown router policy '{other}' \
+                                        (did you mean '{sug}'?)"),
+                    None => bail!("unknown router policy '{other}'"),
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::JoinShortestQueue => "join-shortest-queue",
+            RouterPolicy::LatencyAware => "latency-aware",
+        }
+    }
+}
+
+/// JSQ selection: the first index of minimum depth. Pure so the
+/// property tests can drive it directly.
+pub fn pick_shortest(depths: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &d) in depths.iter().enumerate().skip(1) {
+        if d < depths[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Latency-aware selection: the first index of minimum estimated
+/// sojourn. Pure for the same reason.
+pub fn pick_cheapest(est_us: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &e) in est_us.iter().enumerate().skip(1) {
+        if e < est_us[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ------------------------------------------------------------- arrivals --
+
+/// Streaming diurnal/bursty arrival generator: a peak-rate exponential
+/// clock thinned against `rate(t) = base x diurnal(t) x burst(t)`.
+///
+/// The diurnal profile is a fixed 16-slot piecewise-constant shape
+/// scaled by `diurnal_amp` over `diurnal_period_us`; the burst factor
+/// is a two-state Markov chain (enter/exit probabilities clocked per
+/// candidate event) multiplying the rate by `burst_mult` while on.
+/// Three `Pcg` streams (gaps, thinning, bursts) are forked in the
+/// `FORK_NS_FLEET` namespace, so the process is deterministic per seed
+/// and never collides with loadgen/event streams sharing the seed.
+pub struct ArrivalGen {
+    t_us: f64,
+    base_rate_per_us: f64,
+    peak_rate_per_us: f64,
+    diurnal_amp: f64,
+    diurnal_period_us: f64,
+    burst_mult: f64,
+    burst_enter: f64,
+    burst_exit: f64,
+    bursting: bool,
+    gap_rng: Pcg,
+    thin_rng: Pcg,
+    burst_rng: Pcg,
+}
+
+/// Zero-ish-mean day shape sampled at 16 slots (trough, ramp, double
+/// peak, decay) — multiplied by `diurnal_amp` and shifted around 1.
+const DIURNAL_SHAPE: [f64; 16] = [
+    -1.0, -0.9, -0.75, -0.45, -0.1, 0.3, 0.6, 0.85,
+    1.0, 0.9, 0.7, 0.8, 0.5, 0.1, -0.4, -0.8,
+];
+
+impl ArrivalGen {
+    /// `base_rate_per_us` is the diurnal-average arrival rate (offered
+    /// load times fleet capacity). `diurnal_amp` is clamped to
+    /// `[0, 0.95]` so the rate stays positive; `burst_mult < 1` is
+    /// clamped to 1 (bursts only ever add load).
+    pub fn new(seed: u64, base_rate_per_us: f64, diurnal_amp: f64,
+               diurnal_period_us: u64, burst_mult: f64, burst_enter: f64,
+               burst_exit: f64) -> ArrivalGen {
+        let amp = diurnal_amp.clamp(0.0, 0.95);
+        let mult = burst_mult.max(1.0);
+        let mut root = Pcg::new(seed);
+        ArrivalGen {
+            t_us: 0.0,
+            base_rate_per_us,
+            peak_rate_per_us: base_rate_per_us * (1.0 + amp) * mult,
+            diurnal_amp: amp,
+            diurnal_period_us: diurnal_period_us.max(1) as f64,
+            burst_mult: mult,
+            burst_enter: burst_enter.clamp(0.0, 1.0),
+            burst_exit: burst_exit.clamp(0.0, 1.0),
+            bursting: false,
+            gap_rng: root.fork(rng::fork_idx(rng::FORK_NS_FLEET, 0)),
+            thin_rng: root.fork(rng::fork_idx(rng::FORK_NS_FLEET, 1)),
+            burst_rng: root.fork(rng::fork_idx(rng::FORK_NS_FLEET, 2)),
+        }
+    }
+
+    /// Instantaneous rate multiplier from the diurnal profile at `t`.
+    fn diurnal(&self, t_us: f64) -> f64 {
+        let phase = (t_us / self.diurnal_period_us).fract();
+        let slot = ((phase * DIURNAL_SHAPE.len() as f64) as usize)
+            .min(DIURNAL_SHAPE.len() - 1);
+        1.0 + self.diurnal_amp * DIURNAL_SHAPE[slot]
+    }
+
+    /// Next arrival time, virtual µs (non-decreasing). Streaming: O(1)
+    /// state regardless of how many arrivals have been drawn.
+    pub fn next(&mut self) -> u64 {
+        loop {
+            // candidate from the peak-rate Poisson clock
+            let u = self.gap_rng.uniform();
+            let gap = -(1.0 - u).max(f64::MIN_POSITIVE).ln()
+                / self.peak_rate_per_us;
+            self.t_us += gap;
+            // burst chain clocks on candidates, so dwell times scale
+            // with the peak rate, not the accepted rate
+            self.bursting = if self.bursting {
+                self.burst_rng.uniform() >= self.burst_exit
+            } else {
+                self.burst_rng.uniform() < self.burst_enter
+            };
+            let rate = self.base_rate_per_us
+                * self.diurnal(self.t_us)
+                * if self.bursting { self.burst_mult } else { 1.0 };
+            if self.thin_rng.uniform() < rate / self.peak_rate_per_us {
+                return self.t_us as u64;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ chip core --
+
+/// One chip's serving state machine, shared verbatim by the router pass
+/// and the detail replay so the two cannot drift.
+///
+/// Discipline: an idle chip starts a batch of 1 the instant an arrival
+/// is admitted (no fill window — fleet chips are assumed saturated
+/// enough that waiting buys nothing; the single-coordinator fill-window
+/// dynamics stay in `serve::loadgen`); on completion it drains up to
+/// `max_batch` pending arrivals into the next batch. Admission is
+/// bounded: an arrival finding `depth` pending is shed by the caller.
+struct ChipCore {
+    max_batch: usize,
+    depth: usize,
+    /// service time of a batch of `n` at index `n - 1`, µs
+    batch_us: Vec<u64>,
+    /// admitted arrival times waiting for a batch slot
+    pending: VecDeque<u64>,
+    /// arrival times of the in-flight batch (empty when idle)
+    busy_arr: Vec<u64>,
+    /// completion time of the in-flight batch
+    busy_done: Option<u64>,
+}
+
+impl ChipCore {
+    fn new(class: &ChipClass, depth: usize) -> ChipCore {
+        ChipCore {
+            max_batch: class.batch_us.len(),
+            depth: depth.max(1),
+            batch_us: class.batch_us.clone(),
+            pending: VecDeque::new(),
+            busy_arr: Vec::new(),
+            busy_done: None,
+        }
+    }
+
+    /// Work in system: queued plus in-flight requests (the JSQ depth).
+    fn depth_now(&self) -> usize {
+        self.pending.len() + self.busy_arr.len()
+    }
+
+    fn service_us(&self, n: usize) -> u64 {
+        self.batch_us[n - 1]
+    }
+
+    /// Retire every batch completing at or before `now`, reporting each
+    /// as `(arrivals, exec_start, done)` to `on_batch`, and start the
+    /// next batch from the backlog.
+    fn advance<F: FnMut(&[u64], u64, u64)>(&mut self, now: u64,
+                                           on_batch: &mut F) {
+        while let Some(done) = self.busy_done {
+            if done > now {
+                return;
+            }
+            let finished = std::mem::take(&mut self.busy_arr);
+            let start = done - self.service_us(finished.len());
+            on_batch(&finished, start, done);
+            if self.pending.is_empty() {
+                self.busy_done = None;
+            } else {
+                let n = self.pending.len().min(self.max_batch);
+                self.busy_arr.extend(self.pending.drain(..n));
+                self.busy_done = Some(done + self.service_us(n));
+            }
+        }
+    }
+
+    /// Bounded admission at time `t` (callers advance to `t` first).
+    /// An idle chip starts a batch of 1 immediately; a busy chip queues
+    /// up to `depth`; beyond that the arrival is shed (`false`).
+    fn try_admit(&mut self, t: u64) -> bool {
+        if self.busy_done.is_none() {
+            debug_assert!(self.pending.is_empty(),
+                          "idle chip with a backlog");
+            self.busy_arr.push(t);
+            self.busy_done = Some(t + self.service_us(1));
+            true
+        } else if self.pending.len() < self.depth {
+            self.pending.push_back(t);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ----------------------------------------------------------- detail pass --
+
+/// One chip's replay state for the parallel detail pass: the same core
+/// machine plus the per-request accounting the router pass skips.
+struct ChipDetail {
+    core: ChipCore,
+    class: usize,
+    served: u64,
+    batches: u64,
+    makespan_us: u64,
+    peak_pending: u64,
+    sojourn_us: Hist,
+    lat_ms: Vec<f64>,
+    trace: Option<TraceRecorder>,
+}
+
+impl ChipDetail {
+    /// Replay one chunk of this chip's admitted arrivals. Every arrival
+    /// was admitted by the router pass running the identical machine,
+    /// so admission cannot fail here.
+    fn replay(&mut self, arrivals: &[u64]) {
+        let Self { core, served, batches, makespan_us, peak_pending,
+                   sojourn_us, lat_ms, trace, .. } = self;
+        for &t in arrivals {
+            core.advance(t, &mut |batch, start, done| {
+                *batches += 1;
+                *served += batch.len() as u64;
+                *makespan_us = (*makespan_us).max(done);
+                for &a in batch {
+                    sojourn_us.observe(done - a);
+                    lat_ms.push((done - a) as f64 / 1000.0);
+                }
+                if let Some(rec) = trace.as_mut() {
+                    rec.span(start * US_TO_PS, (done - start) * US_TO_PS,
+                             "chip", "fleet.batch.exec");
+                }
+            });
+            let admitted = core.try_admit(t);
+            debug_assert!(admitted, "router admitted, replay must too");
+            if let Some(rec) = trace.as_mut() {
+                rec.instant(t * US_TO_PS, "chip", "fleet.admit");
+                rec.sample(t * US_TO_PS, "fleet.queue_depth",
+                           core.pending.len() as f64);
+            }
+            *peak_pending = (*peak_pending).max(core.pending.len() as u64);
+        }
+    }
+
+    /// Drain every remaining in-flight/pending batch (replaying past
+    /// the end of time with no further arrivals).
+    fn flush(&mut self) {
+        let Self { core, served, batches, makespan_us, sojourn_us, lat_ms,
+                   trace, .. } = self;
+        core.advance(u64::MAX, &mut |batch, start, done| {
+            *batches += 1;
+            *served += batch.len() as u64;
+            *makespan_us = (*makespan_us).max(done);
+            for &a in batch {
+                sojourn_us.observe(done - a);
+                lat_ms.push((done - a) as f64 / 1000.0);
+            }
+            if let Some(rec) = trace {
+                rec.span(start * US_TO_PS, (done - start) * US_TO_PS,
+                         "chip", "fleet.batch.exec");
+            }
+        });
+    }
+}
+
+// --------------------------------------------------------------- results --
+
+/// Per-class aggregation of the fleet run (merged in class order).
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    pub name: &'static str,
+    pub chips: usize,
+    pub served: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub avg_batch: f64,
+    pub p99_ms: f64,
+    /// per-inference energy of this class, joules
+    pub energy_j_per_inf: f64,
+    /// `served x energy_j_per_inf`, joules
+    pub energy_j_total: f64,
+}
+
+/// One fleet simulation's typed outcome.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub policy: RouterPolicy,
+    pub chips: usize,
+    pub arrivals: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub shed_rate: f64,
+    pub makespan_us: u64,
+    /// served throughput over the virtual makespan
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// nearest-rank tail; `None` below the 1000-sample guard
+    pub p999_ms: Option<f64>,
+    pub per_class: Vec<ClassStats>,
+    /// per-chip (served, shed, batches, peak_pending) in chip order —
+    /// the determinism fingerprint material
+    pub per_chip: Vec<(u64, u64, u64, u64)>,
+    pub registry: Registry,
+}
+
+/// Order- and thread-invariant digest of a fleet run: fold the exact
+/// integer per-chip tallies in chip order. Equal fingerprints at
+/// different `--threads` counts is the determinism contract.
+pub fn fingerprint(r: &FleetResult) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(r.arrivals);
+    mix(r.served);
+    mix(r.shed);
+    mix(r.batches);
+    mix(r.makespan_us);
+    for &(served, shed, batches, peak) in &r.per_chip {
+        mix(served);
+        mix(shed);
+        mix(batches);
+        mix(peak);
+    }
+    h
+}
+
+/// Fleet run shape (the chip mix is priced separately by
+/// [`build_classes`] so sweeps can re-scale it).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// virtual arrivals to stream through the router
+    pub arrivals: u64,
+    /// diurnal-average offered load as a fraction of fleet capacity
+    pub offered: f64,
+    pub policy: RouterPolicy,
+    /// per-chip admission bound (pending requests)
+    pub max_queue_depth: usize,
+    pub seed: u64,
+    /// diurnal amplitude in [0, 0.95]; 0 disables the profile
+    pub diurnal_amp: f64,
+    pub diurnal_period_us: u64,
+    /// burst rate multiplier (>= 1; 1 disables bursts)
+    pub burst_mult: f64,
+    /// per-candidate probability of entering a burst
+    pub burst_enter: f64,
+    /// per-candidate probability of leaving a burst
+    pub burst_exit: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            arrivals: 1 << 20,
+            offered: 0.9,
+            policy: RouterPolicy::LatencyAware,
+            max_queue_depth: 256,
+            seed: 42,
+            diurnal_amp: 0.3,
+            diurnal_period_us: 200_000,
+            burst_mult: 3.0,
+            burst_enter: 0.0005,
+            burst_exit: 0.02,
+        }
+    }
+}
+
+/// Simulate the fleet (untraced). See [`run_fleet_traced`] for the
+/// recorded variant; both produce identical numbers.
+pub fn run_fleet(cfg: &FleetConfig, classes: &[ChipClass]) -> FleetResult {
+    run_fleet_inner(cfg, classes, None).0
+}
+
+/// [`run_fleet`] with per-chip trace recording: each chip's admission
+/// instants, batch spans and queue-depth samples land on its own
+/// `chip{i}/{class}/` track prefix, absorbed in chip order (canonical
+/// merged trace at any thread count).
+pub fn run_fleet_traced(cfg: &FleetConfig, classes: &[ChipClass],
+                        filter: Option<&str>)
+                        -> (FleetResult, TraceRecorder) {
+    let (r, t) = run_fleet_inner(cfg, classes, Some(filter));
+    (r, t.expect("traced run returns a recorder"))
+}
+
+fn run_fleet_inner(cfg: &FleetConfig, classes: &[ChipClass],
+                   trace: Option<Option<&str>>)
+                   -> (FleetResult, Option<TraceRecorder>) {
+    assert!(cfg.offered.is_finite() && cfg.offered > 0.0,
+            "offered load must be positive and finite (got {})",
+            cfg.offered);
+    assert!(!classes.is_empty(), "fleet needs at least one chip class");
+    // chips laid out class-major: chip index -> class index
+    let chip_class: Vec<usize> = classes
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, c)| std::iter::repeat_n(ci, c.count))
+        .collect();
+    let n_chips = chip_class.len();
+
+    // router-pass state: one core per chip + the EWMA sojourn estimate
+    // the latency-aware policy reads (initialized to the class's
+    // batch-of-1 latency so cold chips look fast, not free)
+    let mut cores: Vec<ChipCore> = chip_class
+        .iter()
+        .map(|&ci| ChipCore::new(&classes[ci], cfg.max_queue_depth))
+        .collect();
+    let mut ewma_us: Vec<f64> = chip_class
+        .iter()
+        .map(|&ci| classes[ci].batch_us[0] as f64)
+        .collect();
+    let mut router_served = vec![0u64; n_chips];
+    let mut router_batches = vec![0u64; n_chips];
+    let mut shed = vec![0u64; n_chips];
+
+    // detail-pass state: one replay slot per chip, locked only at chunk
+    // granularity (each index is touched by exactly one pool closure)
+    let details: Vec<Mutex<ChipDetail>> = chip_class
+        .iter()
+        .map(|&ci| {
+            Mutex::new(ChipDetail {
+                core: ChipCore::new(&classes[ci], cfg.max_queue_depth),
+                class: ci,
+                served: 0,
+                batches: 0,
+                makespan_us: 0,
+                peak_pending: 0,
+                sojourn_us: Hist::new(),
+                lat_ms: Vec::new(),
+                trace: trace.map(TraceRecorder::with_filter),
+            })
+        })
+        .collect();
+
+    let mut gen = ArrivalGen::new(
+        cfg.seed,
+        cfg.offered * capacity_per_us(classes),
+        cfg.diurnal_amp,
+        cfg.diurnal_period_us,
+        cfg.burst_mult,
+        cfg.burst_enter,
+        cfg.burst_exit,
+    );
+
+    let mut bufs: Vec<Vec<u64>> = vec![Vec::new(); n_chips];
+    let mut scratch = Vec::with_capacity(n_chips);
+    let mut rr: u64 = 0;
+    let mut produced = 0u64;
+    while produced < cfg.arrivals {
+        let n = CHUNK.min((cfg.arrivals - produced) as usize);
+        for _ in 0..n {
+            let t = gen.next();
+            // advance every chip so queue depths and EWMAs are current
+            // at the routing instant
+            for (i, core) in cores.iter_mut().enumerate() {
+                core.advance(t, &mut |batch, _start, done| {
+                    router_batches[i] += 1;
+                    router_served[i] += batch.len() as u64;
+                    let mean_arr = batch.iter().sum::<u64>() as f64
+                        / batch.len() as f64;
+                    ewma_us[i] = EWMA_ALPHA * (done as f64 - mean_arr)
+                        + (1.0 - EWMA_ALPHA) * ewma_us[i];
+                });
+            }
+            let pick = match cfg.policy {
+                RouterPolicy::RoundRobin => {
+                    let p = (rr % n_chips as u64) as usize;
+                    rr += 1;
+                    p
+                }
+                RouterPolicy::JoinShortestQueue => {
+                    scratch.clear();
+                    scratch.extend(cores.iter().map(|c| c.depth_now() as f64));
+                    pick_shortest_f64(&scratch)
+                }
+                RouterPolicy::LatencyAware => {
+                    scratch.clear();
+                    scratch.extend(cores.iter().enumerate().map(|(i, c)| {
+                        ewma_us[i]
+                            + c.depth_now() as f64
+                                * classes[chip_class[i]].svc_per_req_us
+                    }));
+                    pick_cheapest(&scratch)
+                }
+            };
+            if cores[pick].try_admit(t) {
+                bufs[pick].push(t);
+            } else {
+                shed[pick] += 1;
+            }
+        }
+        produced += n as u64;
+        // fan the chunk out: chip i replays only its own stream, so any
+        // thread count produces the same per-chip evolution
+        pool::for_each_indexed(&details, |i, slot| {
+            let mut d = slot.lock().expect("chip slot poisoned");
+            d.replay(&bufs[i]);
+        });
+        for b in &mut bufs {
+            b.clear();
+        }
+    }
+    // drain the routers' in-flight work so both passes end at the same
+    // final state, then flush the replays
+    for (i, core) in cores.iter_mut().enumerate() {
+        core.advance(u64::MAX, &mut |batch, _s, _d| {
+            router_batches[i] += 1;
+            router_served[i] += batch.len() as u64;
+        });
+    }
+    pool::for_each_indexed(&details, |_i, slot| {
+        slot.lock().expect("chip slot poisoned").flush();
+    });
+
+    merge(cfg, classes, &chip_class, details, &router_served,
+          &router_batches, &shed, trace.is_some())
+}
+
+/// JSQ over f64 depths (shares the scratch buffer with latency-aware);
+/// semantics match [`pick_shortest`].
+fn pick_shortest_f64(depths: &[f64]) -> usize {
+    pick_cheapest(depths)
+}
+
+/// Merge per-chip partials in chip order and cross-check the router
+/// pass against the replay (the two ran the same machine; any drift is
+/// a bug, not noise).
+#[allow(clippy::too_many_arguments)]
+fn merge(cfg: &FleetConfig, classes: &[ChipClass], chip_class: &[usize],
+         details: Vec<Mutex<ChipDetail>>, router_served: &[u64],
+         router_batches: &[u64], shed: &[u64], traced: bool)
+         -> (FleetResult, Option<TraceRecorder>) {
+    let mut per_chip = Vec::with_capacity(details.len());
+    let mut class_served = vec![0u64; classes.len()];
+    let mut class_shed = vec![0u64; classes.len()];
+    let mut class_batches = vec![0u64; classes.len()];
+    let mut class_lat: Vec<Vec<f64>> = vec![Vec::new(); classes.len()];
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let mut sojourn = Hist::new();
+    let mut makespan = 0u64;
+    let mut combined = traced.then(TraceRecorder::new);
+    for (i, slot) in details.into_iter().enumerate() {
+        let mut d = slot.into_inner().expect("chip slot poisoned");
+        assert_eq!(
+            (d.served, d.batches), (router_served[i], router_batches[i]),
+            "chip {i}: replay diverged from the router pass"
+        );
+        let ci = d.class;
+        class_served[ci] += d.served;
+        class_shed[ci] += shed[i];
+        class_batches[ci] += d.batches;
+        class_lat[ci].extend_from_slice(&d.lat_ms);
+        lat_ms.append(&mut d.lat_ms);
+        sojourn.merge(&d.sojourn_us);
+        makespan = makespan.max(d.makespan_us);
+        per_chip.push((d.served, shed[i], d.batches, d.peak_pending));
+        if let (Some(acc), Some(rec)) = (&mut combined, d.trace.take()) {
+            acc.absorb(&format!("chip{i}/{}/", classes[ci].name), rec);
+        }
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let served: u64 = per_chip.iter().map(|c| c.0).sum();
+    let shed_total: u64 = shed.iter().sum();
+    let batches: u64 = per_chip.iter().map(|c| c.2).sum();
+
+    let mut registry = Registry::new();
+    registry.add("fleet.served", served);
+    registry.add("fleet.shed", shed_total);
+    registry.add("fleet.batches", batches);
+    registry.merge_hist("fleet.sojourn_us", &sojourn);
+    for &(_, _, _, peak) in &per_chip {
+        registry.gauge_max("fleet.peak_pending", peak);
+    }
+    let per_class: Vec<ClassStats> = classes
+        .iter()
+        .enumerate()
+        .map(|(ci, c)| {
+            // typed per-class shed counters (the admission metrics the
+            // router's bounded queues produce)
+            registry.add(&format!("fleet.shed.{}", c.name), class_shed[ci]);
+            let mut l = std::mem::take(&mut class_lat[ci]);
+            l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ClassStats {
+                name: c.name,
+                chips: c.count,
+                served: class_served[ci],
+                shed: class_shed[ci],
+                batches: class_batches[ci],
+                avg_batch: class_served[ci] as f64
+                    / class_batches[ci].max(1) as f64,
+                p99_ms: stats::percentile_sorted(&l, 99.0),
+                energy_j_per_inf: c.energy_j_per_inf,
+                energy_j_total: class_served[ci] as f64 * c.energy_j_per_inf,
+            }
+        })
+        .collect();
+    let result = FleetResult {
+        policy: cfg.policy,
+        chips: chip_class.len(),
+        arrivals: cfg.arrivals,
+        served,
+        shed: shed_total,
+        batches,
+        shed_rate: shed_total as f64 / (served + shed_total).max(1) as f64,
+        makespan_us: makespan,
+        throughput_rps: served as f64 / (makespan.max(1) as f64 * 1e-6),
+        mean_ms: stats::mean(&lat_ms),
+        p50_ms: stats::percentile_sorted(&lat_ms, 50.0),
+        p99_ms: stats::percentile_sorted(&lat_ms, 99.0),
+        p999_ms: stats::tail_percentile_sorted(&lat_ms, 99.9),
+        per_class,
+        per_chip,
+        registry,
+    };
+    (result, combined)
+}
+
+// ------------------------------------------------------------ knee sweep --
+
+/// One point of the chip-count sweep.
+#[derive(Debug, Clone)]
+pub struct KneePoint {
+    /// total chips at this scale
+    pub chips: usize,
+    /// mix scale factor applied to the base fleet
+    pub scale: f64,
+    /// offered load rescaled so the absolute arrival rate matches the
+    /// base fleet's
+    pub offered: f64,
+    pub p99_ms: f64,
+    pub shed_rate: f64,
+}
+
+/// Sweep the fleet size at a fixed absolute arrival rate (the base
+/// mix's `offered x capacity`), scaling every class count by the fixed
+/// factors below, and report the knee: the smallest fleet whose p99 is
+/// within 5% of the largest fleet's. Adding chips past the knee stops
+/// buying tail latency.
+pub fn knee_sweep(cfg: &FleetConfig, net: &Network,
+                  mix: &[(Architecture, usize)], max_batch: usize,
+                  arrivals: u64) -> (Vec<KneePoint>, usize) {
+    const SCALES: [f64; 6] = [0.25, 0.5, 0.75, 1.0, 1.25, 1.5];
+    let base = build_classes(net, mix, max_batch);
+    let base_rate = cfg.offered * capacity_per_us(&base);
+    let mut points: Vec<KneePoint> = SCALES
+        .iter()
+        .map(|&scale| {
+            let scaled: Vec<(Architecture, usize)> = mix
+                .iter()
+                .map(|&(a, c)| {
+                    (a, ((c as f64 * scale).round() as usize).max(1))
+                })
+                .collect();
+            let classes = build_classes(net, &scaled, max_batch);
+            let offered = base_rate / capacity_per_us(&classes);
+            let r = run_fleet(
+                &FleetConfig { arrivals, offered, ..cfg.clone() },
+                &classes,
+            );
+            KneePoint {
+                chips: r.chips,
+                scale,
+                offered,
+                p99_ms: r.p99_ms,
+                shed_rate: r.shed_rate,
+            }
+        })
+        .collect();
+    points.sort_by_key(|p| p.chips);
+    points.dedup_by_key(|p| p.chips);
+    let floor = points.last().expect("non-empty sweep").p99_ms;
+    let knee = points
+        .iter()
+        .find(|p| p.p99_ms <= floor * 1.05)
+        .expect("the largest fleet is within 5% of itself")
+        .chips;
+    (points, knee)
+}
+
+/// The `--fleet` spec rendered back in registry names (stable JSON
+/// surface for outcomes and benches).
+pub fn mix_string(mix: &[(Architecture, usize)]) -> String {
+    mix.iter()
+        .map(|&(a, c)| format!("{}:{c}", model::cost_model(a).name()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// `BENCH_fleet.json`-shaped summary of one run (shared by the bench
+/// and ad-hoc tooling).
+pub fn result_json(r: &FleetResult) -> json::Json {
+    json::obj(vec![
+        ("policy", json::Json::Str(r.policy.name().into())),
+        ("chips", json::Json::Num(r.chips as f64)),
+        ("arrivals", json::Json::Num(r.arrivals as f64)),
+        ("served", json::Json::Num(r.served as f64)),
+        ("shed", json::Json::Num(r.shed as f64)),
+        ("shed_rate", json::Json::Num(r.shed_rate)),
+        ("throughput_rps", json::Json::Num(r.throughput_rps)),
+        ("p50_ms", json::Json::Num(r.p50_ms)),
+        ("p99_ms", json::Json::Num(r.p99_ms)),
+        ("p999_ms", match r.p999_ms {
+            Some(v) => json::Json::Num(v),
+            None => json::Json::Null,
+        }),
+        ("fingerprint", json::Json::Str(format!("{:016x}", fingerprint(r)))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::workloads;
+
+    fn mix() -> Vec<(Architecture, usize)> {
+        parse_fleet("neural-pim:2,isaac:1").unwrap()
+    }
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig { arrivals: 4_096, ..Default::default() }
+    }
+
+    #[test]
+    fn parse_fleet_accepts_aliases_and_rejects_garbage() {
+        let m = parse_fleet("neural-pim:8, isaac:4,cascade:2,lowres:2")
+            .unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[0], (Architecture::NeuralPim, 8));
+        assert_eq!(m[1], (Architecture::IsaacLike, 4));
+        // a bare name means one chip
+        assert_eq!(parse_fleet("pim").unwrap(),
+                   vec![(Architecture::NeuralPim, 1)]);
+        assert!(parse_fleet("").is_err());
+        assert!(parse_fleet("neural-pim:0").is_err());
+        assert!(parse_fleet("neural-pim:x").is_err());
+        let err = parse_fleet("isac:4").unwrap_err().to_string();
+        assert!(err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn router_policy_parses_names_and_aliases() {
+        assert_eq!(RouterPolicy::parse("rr").unwrap(),
+                   RouterPolicy::RoundRobin);
+        assert_eq!(RouterPolicy::parse("JSQ").unwrap(),
+                   RouterPolicy::JoinShortestQueue);
+        assert_eq!(RouterPolicy::parse("latency-aware").unwrap(),
+                   RouterPolicy::LatencyAware);
+        let err = RouterPolicy::parse("latency-awar").unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn jsq_never_picks_deeper_than_the_minimum() {
+        prop::check("jsq_picks_a_minimum", 500, |g| {
+            let n = g.usize_in(1, 32);
+            let depths = g.vec_usize(n, 0, 512);
+            let pick = pick_shortest(&depths);
+            let min = *depths.iter().min().unwrap();
+            crate::prop_assert!(
+                depths[pick] == min,
+                "picked depth {} but the minimum is {min} ({depths:?})",
+                depths[pick]
+            );
+            // ties break to the lowest index (determinism, not luck)
+            crate::prop_assert!(
+                depths[..pick].iter().all(|&d| d > min),
+                "skipped an earlier minimum in {depths:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cheapest_pick_is_a_minimum_with_low_index_ties() {
+        prop::check("cheapest_picks_a_minimum", 500, |g| {
+            let n = g.usize_in(1, 32);
+            let est = g.vec_f64(n, 0.0, 1e6);
+            let pick = pick_cheapest(&est);
+            crate::prop_assert!(
+                est.iter().all(|&e| e >= est[pick]),
+                "pick {pick} is not a minimum of {est:?}"
+            );
+            crate::prop_assert!(
+                est[..pick].iter().all(|&e| e > est[pick]),
+                "pick {pick} skipped an earlier minimum in {est:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn round_robin_is_exactly_fair_over_full_cycles() {
+        // huge depth: nothing sheds, so assignment counts are pure
+        // policy behaviour; arrivals = k x chips for whole cycles
+        let net = workloads::synthetic_cnn();
+        let classes = build_classes(&net, &mix(), 8);
+        let chips: usize = classes.iter().map(|c| c.count).sum();
+        let cfg = FleetConfig {
+            arrivals: (chips * 64) as u64,
+            policy: RouterPolicy::RoundRobin,
+            max_queue_depth: 1 << 20,
+            ..small_cfg()
+        };
+        let r = run_fleet(&cfg, &classes);
+        assert_eq!(r.shed, 0);
+        for &(served, _, _, _) in &r.per_chip {
+            assert_eq!(served, 64, "round-robin skew: {:?}", r.per_chip);
+        }
+    }
+
+    #[test]
+    fn fleet_conserves_every_arrival() {
+        for policy in [RouterPolicy::RoundRobin,
+                       RouterPolicy::JoinShortestQueue,
+                       RouterPolicy::LatencyAware] {
+            let net = workloads::synthetic_cnn();
+            let classes = build_classes(&net, &mix(), 16);
+            let cfg = FleetConfig { policy, ..small_cfg() };
+            let r = run_fleet(&cfg, &classes);
+            assert_eq!(r.served + r.shed, r.arrivals, "{policy:?}");
+            let chip_served: u64 = r.per_chip.iter().map(|c| c.0).sum();
+            assert_eq!(chip_served, r.served, "{policy:?}");
+            let class_served: u64 =
+                r.per_class.iter().map(|c| c.served).sum();
+            assert_eq!(class_served, r.served, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn identical_chips_match_independent_single_chip_runs() {
+        // N identical chips under round-robin at offered load L vs one
+        // chip at L: per-chip behaviour must agree within tolerance
+        // (streams differ, physics must not)
+        let net = workloads::synthetic_cnn();
+        let n = 4;
+        let one = build_classes(
+            &net, &[(Architecture::NeuralPim, 1)], 16);
+        let many = build_classes(
+            &net, &[(Architecture::NeuralPim, n)], 16);
+        let cfg = FleetConfig {
+            arrivals: 8_192,
+            offered: 0.7,
+            policy: RouterPolicy::RoundRobin,
+            diurnal_amp: 0.0,
+            burst_mult: 1.0,
+            ..small_cfg()
+        };
+        let rn = run_fleet(&cfg, &many);
+        let r1 = run_fleet(
+            &FleetConfig { arrivals: cfg.arrivals / n as u64, ..cfg },
+            &one,
+        );
+        // same offered utilization per chip: mean sojourn within 20%
+        let rel = (rn.mean_ms - r1.mean_ms).abs() / r1.mean_ms.max(1e-9);
+        assert!(rel < 0.2,
+                "fleet mean {} vs single-chip mean {} ({rel:.3} apart)",
+                rn.mean_ms, r1.mean_ms);
+        // and per-chip served counts split evenly under round-robin
+        for &(served, _, _, _) in &rn.per_chip {
+            let want = rn.served as f64 / n as f64;
+            assert!((served as f64 - want).abs() <= want * 0.01 + 1.0,
+                    "uneven split: {:?}", rn.per_chip);
+        }
+    }
+
+    #[test]
+    fn traced_run_matches_plain_and_prefixes_per_chip_tracks() {
+        let net = workloads::synthetic_cnn();
+        let classes = build_classes(&net, &mix(), 8);
+        let cfg = small_cfg();
+        let plain = run_fleet(&cfg, &classes);
+        let (traced, trace) = run_fleet_traced(&cfg, &classes, None);
+        assert_eq!(fingerprint(&plain), fingerprint(&traced));
+        assert!(!trace.is_empty());
+        assert!(trace.tracks().iter().any(|t| t.starts_with("chip0/")),
+                "{:?}", trace.tracks());
+        // filtered tracing also leaves numbers untouched
+        let (filtered, ft) =
+            run_fleet_traced(&cfg, &classes, Some("fleet.batch"));
+        assert_eq!(fingerprint(&plain), fingerprint(&filtered));
+        assert!(ft.len() < trace.len());
+        assert!(!ft.is_empty());
+    }
+
+    #[test]
+    fn arrival_gen_is_deterministic_and_monotonic() {
+        let mut a = ArrivalGen::new(7, 0.01, 0.3, 200_000, 3.0, 0.001, 0.02);
+        let mut b = ArrivalGen::new(7, 0.01, 0.3, 200_000, 3.0, 0.001, 0.02);
+        let mut last = 0;
+        for _ in 0..2_000 {
+            let t = a.next();
+            assert_eq!(t, b.next());
+            assert!(t >= last, "arrivals went backwards");
+            last = t;
+        }
+        // a different seed is a different trace
+        let mut c = ArrivalGen::new(8, 0.01, 0.3, 200_000, 3.0, 0.001, 0.02);
+        let same = (0..64).all(|_| {
+            ArrivalGen::next(&mut c) == ArrivalGen::next(&mut a)
+        });
+        assert!(!same);
+    }
+
+    #[test]
+    fn knee_sweep_reports_a_knee_inside_the_sweep() {
+        let net = workloads::synthetic_cnn();
+        let cfg = FleetConfig { arrivals: 2_048, ..small_cfg() };
+        let (points, knee) = knee_sweep(&cfg, &net, &mix(), 8, 2_048);
+        assert!(points.len() >= 3, "degenerate sweep: {points:?}");
+        assert!(points.windows(2).all(|w| w[0].chips < w[1].chips));
+        assert!(points.iter().any(|p| p.chips == knee),
+                "knee {knee} not a sweep point: {points:?}");
+        // more chips at a fixed absolute rate never raises the shed
+        // rate beyond noise at the small end
+        let first = points.first().unwrap();
+        let last = points.last().unwrap();
+        assert!(last.shed_rate <= first.shed_rate + 1e-9,
+                "shedding grew with fleet size: {points:?}");
+    }
+}

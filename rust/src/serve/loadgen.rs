@@ -28,10 +28,11 @@
 
 use crate::obs::{Hist, NullRecorder, Recorder, Registry, TraceRecorder};
 use crate::util::pool;
-use crate::util::rng::Pcg;
+use crate::util::rng::{self, Pcg};
 use crate::util::stats;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::fmt;
 
 /// Trace timestamps are virtual picoseconds everywhere in the crate;
 /// the load generator's clock is virtual microseconds.
@@ -79,6 +80,31 @@ impl Default for LoadGenConfig {
     }
 }
 
+/// A sweep input the generator refuses to simulate. Offered loads are
+/// fractions of the service rate; a non-finite or non-positive value
+/// used to be silently clamped to `1e-3` deep in the shard runner,
+/// which turned caller bugs (NaN from a bad division, a negated load)
+/// into a plausible-looking near-idle load point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoadGenError {
+    /// `loads[index]` is NaN, infinite, or `<= 0`.
+    BadOffered { index: usize, value: f64 },
+}
+
+impl fmt::Display for LoadGenError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LoadGenError::BadOffered { index, value } => write!(
+                f,
+                "offered load [{index}] = {value} is not a positive finite \
+                 fraction of the service rate"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LoadGenError {}
+
 /// One offered-load point of the sweep.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LoadPoint {
@@ -95,25 +121,43 @@ pub struct LoadPoint {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// nearest-rank tail percentile (`stats::tail_percentile`); `None`
+    /// below the 1000-sample guard rather than the max dressed up as a
+    /// tail
+    pub p999_ms: Option<f64>,
     /// observability tallies for this point, merged in shard order
     /// (admission counts, peak pending depth, sojourn histogram)
     pub registry: Registry,
+}
+
+/// Validate a sweep's offered loads up front — the typed rejection that
+/// replaced the silent `max(1e-3)` clamp in the shard runner.
+fn validate_loads(loads: &[f64]) -> Result<(), LoadGenError> {
+    for (index, &value) in loads.iter().enumerate() {
+        if !value.is_finite() || value <= 0.0 {
+            return Err(LoadGenError::BadOffered { index, value });
+        }
+    }
+    Ok(())
 }
 
 /// Run every (offered-load point, shard) across the worker pool;
 /// bit-identical at any thread count (`Pcg::fork` streams derived
 /// sequentially up front, results reassembled by index, shard partials
 /// merged in shard order).
-pub fn sweep(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<LoadPoint> {
+pub fn sweep(cfg: &LoadGenConfig, loads: &[f64])
+             -> Result<Vec<LoadPoint>, LoadGenError> {
+    validate_loads(loads)?;
     let shards = cfg.shards.max(1);
     let inputs = sweep_inputs(cfg, loads);
     let runs = pool::map(&inputs, |(l, jobs, rng)| {
         run_shard(cfg, *l, *jobs, rng.clone(), &mut NullRecorder)
     });
-    runs.chunks(shards)
+    Ok(runs
+        .chunks(shards)
         .zip(loads)
         .map(|(chunk, &l)| merge(l, chunk))
-        .collect()
+        .collect())
 }
 
 /// [`sweep`] with a live [`TraceRecorder`] per (load point, shard):
@@ -124,7 +168,8 @@ pub fn sweep(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<LoadPoint> {
 /// observes the replay, it never steers it.
 pub fn sweep_traced(cfg: &LoadGenConfig, loads: &[f64],
                     filter: Option<&str>)
-                    -> (Vec<LoadPoint>, TraceRecorder) {
+                    -> Result<(Vec<LoadPoint>, TraceRecorder), LoadGenError> {
+    validate_loads(loads)?;
     let shards = cfg.shards.max(1);
     let inputs = sweep_inputs(cfg, loads);
     let traced = pool::map(&inputs, |(l, jobs, rng)| {
@@ -144,12 +189,14 @@ pub fn sweep_traced(cfg: &LoadGenConfig, loads: &[f64],
         .zip(loads)
         .map(|(chunk, &l)| merge(l, chunk))
         .collect();
-    (pts, combined)
+    Ok((pts, combined))
 }
 
 /// The (offered load, job count, fork stream) grid both sweep variants
-/// run: streams forked sequentially up front (fork index =
-/// `point * shards + shard`), job counts splitting `requests` exactly.
+/// run: streams forked sequentially up front in the loadgen namespace
+/// (fork index = `FORK_NS_LOADGEN | (point * shards + shard)` — see
+/// `util::rng` for the cross-subsystem disjointness contract), job
+/// counts splitting `requests` exactly.
 fn sweep_inputs(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<(f64, u64, Pcg)> {
     let shards = cfg.shards.max(1);
     let base = cfg.requests / shards as u64;
@@ -159,10 +206,11 @@ fn sweep_inputs(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<(f64, u64, Pcg)> {
         Vec::with_capacity(loads.len() * shards);
     for (i, &l) in loads.iter().enumerate() {
         for s in 0..shards as u64 {
+            let local = i as u64 * shards as u64 + s;
             inputs.push((
                 l,
                 base + u64::from(s < extra),
-                root.fork(i as u64 * shards as u64 + s),
+                root.fork(rng::fork_idx(rng::FORK_NS_LOADGEN, local)),
             ));
         }
     }
@@ -173,11 +221,13 @@ fn sweep_inputs(cfg: &LoadGenConfig, loads: &[f64]) -> Vec<(f64, u64, Pcg)> {
 /// offered utilization, replayed through the serving discipline.
 fn run_shard<R: Recorder>(cfg: &LoadGenConfig, offered: f64, jobs: u64,
                           mut rng: Pcg, rec: &mut R) -> ShardRun {
-    let load = offered.max(1e-3);
+    // `offered` is validated positive and finite at sweep entry
+    // (`validate_loads`) — no silent clamp here
+    debug_assert!(offered.is_finite() && offered > 0.0);
     // padded-batch service rate across all workers, requests per µs
     let rate_per_us = cfg.workers.max(1) as f64 * cfg.max_batch.max(1) as f64
         / cfg.batch_exec_us.max(1) as f64;
-    let mean_gap_us = 1.0 / (load * rate_per_us);
+    let mean_gap_us = 1.0 / (offered * rate_per_us);
     let mut arrivals = Vec::with_capacity(jobs as usize);
     let mut t = 0u64;
     for _ in 0..jobs {
@@ -212,10 +262,12 @@ fn merge(offered: f64, runs: &[ShardRun]) -> LoadPoint {
     let shed: u64 = runs.iter().map(|r| r.shed).sum();
     let batches: u64 = runs.iter().map(|r| r.batches).sum();
     let makespan = runs.iter().map(|r| r.makespan_us).max().unwrap_or(0);
-    let lat_ms: Vec<f64> = runs
+    let mut lat_ms: Vec<f64> = runs
         .iter()
         .flat_map(|r| r.lat_ms.iter().copied())
         .collect();
+    // one sort for every percentile read below (incl. the tail)
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mut registry = Registry::new();
     registry.add("serve.served", served);
     registry.add("serve.shed", shed);
@@ -235,9 +287,10 @@ fn merge(offered: f64, runs: &[ShardRun]) -> LoadPoint {
         avg_batch: served as f64 / batches.max(1) as f64,
         throughput_rps: served as f64 / (makespan.max(1) as f64 * 1e-6),
         mean_ms: stats::mean(&lat_ms),
-        p50_ms: stats::percentile(&lat_ms, 50.0),
-        p95_ms: stats::percentile(&lat_ms, 95.0),
-        p99_ms: stats::percentile(&lat_ms, 99.0),
+        p50_ms: stats::percentile_sorted(&lat_ms, 50.0),
+        p95_ms: stats::percentile_sorted(&lat_ms, 95.0),
+        p99_ms: stats::percentile_sorted(&lat_ms, 99.0),
+        p999_ms: stats::tail_percentile_sorted(&lat_ms, 99.9),
         registry,
     }
 }
@@ -365,7 +418,7 @@ mod tests {
     #[test]
     fn conserves_every_arrival_and_respects_the_batch_cap() {
         for load in [0.2, 0.8, 1.5] {
-            let p = &sweep(&cfg(), &[load])[0];
+            let p = &sweep(&cfg(), &[load]).unwrap()[0];
             assert_eq!(p.served + p.shed, 512, "load {load}");
             assert!(p.avg_batch <= 16.0 + 1e-9, "load {load}");
             assert!(p.batches >= p.served / 16, "load {load}");
@@ -379,21 +432,21 @@ mod tests {
     #[test]
     fn sweep_is_deterministic() {
         let loads = [0.5, 0.9, 1.2];
-        assert_eq!(fingerprint(&sweep(&cfg(), &loads)),
-                   fingerprint(&sweep(&cfg(), &loads)));
+        assert_eq!(fingerprint(&sweep(&cfg(), &loads).unwrap()),
+                   fingerprint(&sweep(&cfg(), &loads).unwrap()));
         // a different seed is a different experiment
         let other = LoadGenConfig { seed: 43, ..cfg() };
-        assert_ne!(fingerprint(&sweep(&cfg(), &loads)),
-                   fingerprint(&sweep(&other, &loads)));
+        assert_ne!(fingerprint(&sweep(&cfg(), &loads).unwrap()),
+                   fingerprint(&sweep(&other, &loads).unwrap()));
     }
 
     #[test]
     fn light_load_never_sheds_and_overload_does() {
-        let light = &sweep(&cfg(), &[0.2])[0];
+        let light = &sweep(&cfg(), &[0.2]).unwrap()[0];
         assert_eq!(light.shed, 0, "{light:?}");
         // a tiny admission bound under 3x overload must shed
         let tight = LoadGenConfig { max_queue_depth: 4, ..cfg() };
-        let over = &sweep(&tight, &[3.0])[0];
+        let over = &sweep(&tight, &[3.0]).unwrap()[0];
         assert!(over.shed > 0, "{over:?}");
         assert!(over.shed_rate > 0.0 && over.shed_rate < 1.0);
     }
@@ -404,7 +457,7 @@ mod tests {
         // shed, and the merged point is reproducible
         let sharded = LoadGenConfig { shards: 4, ..cfg() };
         let loads = [0.8, 1.2];
-        let pts = sweep(&sharded, &loads);
+        let pts = sweep(&sharded, &loads).unwrap();
         assert_eq!(pts.len(), 2);
         for p in &pts {
             assert_eq!(p.served + p.shed, 512);
@@ -412,10 +465,11 @@ mod tests {
             assert!(p.p50_ms <= p.p95_ms && p.p95_ms <= p.p99_ms);
             assert!(p.throughput_rps > 0.0);
         }
-        assert_eq!(fingerprint(&sweep(&sharded, &loads)), fingerprint(&pts));
+        assert_eq!(fingerprint(&sweep(&sharded, &loads).unwrap()),
+                   fingerprint(&pts));
         // an uneven split (512 = 5*102 + 2) still conserves
         let uneven = LoadGenConfig { shards: 5, ..cfg() };
-        let p = &sweep(&uneven, &[1.0])[0];
+        let p = &sweep(&uneven, &[1.0]).unwrap()[0];
         assert_eq!(p.served + p.shed, 512);
     }
 
@@ -423,8 +477,9 @@ mod tests {
     fn traced_sweep_matches_plain_and_tallies_every_arrival() {
         let sharded = LoadGenConfig { shards: 2, ..cfg() };
         let loads = [0.8, 1.4];
-        let plain = sweep(&sharded, &loads);
-        let (traced, trace) = sweep_traced(&sharded, &loads, None);
+        let plain = sweep(&sharded, &loads).unwrap();
+        let (traced, trace) =
+            sweep_traced(&sharded, &loads, None).unwrap();
         // the recorder observes, never steers: identical points
         assert_eq!(fingerprint(&plain), fingerprint(&traced));
         assert_eq!(plain, traced);
@@ -446,7 +501,7 @@ mod tests {
         assert!(!trace.is_empty());
         // a filter narrows the trace to matching event names
         let (_, filtered) =
-            sweep_traced(&sharded, &loads, Some("serve.batch"));
+            sweep_traced(&sharded, &loads, Some("serve.batch")).unwrap();
         assert!(filtered.len() < trace.len());
         assert!(!filtered.is_empty());
     }
@@ -456,11 +511,46 @@ mod tests {
         // no shedding (huge bound): an overloaded queue must show up as
         // a heavier tail, not vanish into rejections
         let open = LoadGenConfig { max_queue_depth: 1 << 20, ..cfg() };
-        let pts = sweep(&open, &[0.3, 1.4]);
+        let pts = sweep(&open, &[0.3, 1.4]).unwrap();
         assert_eq!(pts[0].shed + pts[1].shed, 0);
         assert!(
             pts[1].p99_ms > pts[0].p99_ms,
             "p99 {} vs {}", pts[0].p99_ms, pts[1].p99_ms
         );
+    }
+
+    #[test]
+    fn bad_offered_loads_are_rejected_up_front() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+            let err = sweep(&cfg(), &[0.5, bad]).unwrap_err();
+            assert_eq!(
+                err,
+                LoadGenError::BadOffered { index: 1, value: bad },
+                "{bad} not rejected"
+            );
+        }
+        // the traced variant shares the same entry gate
+        assert!(sweep_traced(&cfg(), &[-0.25], None).is_err());
+        // the index and value show up in the message
+        let msg = sweep(&cfg(), &[0.0]).unwrap_err().to_string();
+        assert!(msg.contains("[0]") && msg.contains("0"), "{msg}");
+    }
+
+    #[test]
+    fn p999_respects_the_sample_guard_and_orders_after_p99() {
+        // 512 requests < the 1000-sample guard: the tail must be absent,
+        // not the max dressed up as a p99.9
+        let small = LoadGenConfig { requests: 512, ..cfg() };
+        assert_eq!(sweep(&small, &[0.8]).unwrap()[0].p999_ms, None);
+        // 4096 served samples clear the guard; nearest-rank tails nest
+        let big = LoadGenConfig {
+            requests: 4_096,
+            max_queue_depth: 1 << 20,
+            ..cfg()
+        };
+        let p = &sweep(&big, &[0.9]).unwrap()[0];
+        assert_eq!(p.served, 4_096);
+        let p999 = p.p999_ms.expect("guard cleared");
+        assert!(p999 >= p.p99_ms, "p99.9 {} < p99 {}", p999, p.p99_ms);
     }
 }

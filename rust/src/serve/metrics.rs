@@ -100,6 +100,7 @@ impl Metrics {
             lat_p50_ms: stats::percentile_sorted(&lat, 50.0),
             lat_p95_ms: stats::percentile_sorted(&lat, 95.0),
             lat_p99_ms: stats::percentile_sorted(&lat, 99.0),
+            lat_p999_ms: stats::tail_percentile_sorted(&lat, 99.9),
             last_error: self.last_error.lock().ok().and_then(|e| e.clone()),
         }
     }
@@ -123,6 +124,10 @@ pub struct MetricsSnapshot {
     pub lat_p50_ms: f64,
     pub lat_p95_ms: f64,
     pub lat_p99_ms: f64,
+    /// nearest-rank p99.9 over the latency window; `None` below the
+    /// `stats::tail_min_samples` guard (JSON/field only — `Display`
+    /// keeps the historical line)
+    pub lat_p999_ms: Option<f64>,
     /// most recent batch-failure cause (JSON/field only — never printed
     /// by `Display`, so stdout stays renderable)
     pub last_error: Option<String>,
@@ -180,6 +185,9 @@ impl MetricsSnapshot {
             ("lat_p95_ms", Json::Num(self.lat_p95_ms)),
             ("lat_p99_ms", Json::Num(self.lat_p99_ms)),
         ];
+        if let Some(p) = self.lat_p999_ms {
+            pairs.push(("lat_p999_ms", Json::Num(p)));
+        }
         if let Some(e) = &self.last_error {
             pairs.push(("last_error", Json::Str(e.clone())));
         }

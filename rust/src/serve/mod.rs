@@ -31,8 +31,11 @@
 //! reduces to a typed [`metrics::MetricsSnapshot`] (no stringly
 //! `summary()`), and [`loadgen`] drives the service model in virtual
 //! time for the deterministic `serve-sim` offered-load sweep.
+//! [`fleet`] scales that to a routed datacenter of priced chips (the
+//! `fleet-sim` scenario).
 
 pub mod batcher;
+pub mod fleet;
 pub mod loadgen;
 pub mod metrics;
 pub mod pjrt;

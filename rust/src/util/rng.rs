@@ -4,6 +4,37 @@
 //! output. Deterministic per seed — every simulation result in
 //! EXPERIMENTS.md is reproducible from its seed.
 
+/// Fork-index namespaces: every subsystem that derives [`Pcg::fork`]
+/// streams from a user seed owns one disjoint window of fork indices.
+///
+/// Before these existed, `serve::loadgen` forked at
+/// `point * shards + shard` and `event` at `replica * shards + shard` —
+/// both small dense integers starting at 0 — so two subsystems sharing a
+/// root seed (the default is 42 everywhere) drew the *same* derived
+/// streams for their first inputs. Each consumer now ORs its namespace
+/// constant over its local index via [`fork_idx`]; local indices stay
+/// dense and small, the high bits keep the windows pairwise disjoint
+/// (asserted by `fork_namespaces_are_pairwise_disjoint`). Adding a new
+/// forking subsystem means claiming the next constant here — never
+/// reusing raw small indices.
+pub const FORK_NS_BITS: u32 = 40;
+/// `serve::loadgen` sweep inputs: local index `point * shards + shard`.
+pub const FORK_NS_LOADGEN: u64 = 1 << FORK_NS_BITS;
+/// `event` request profiles: local index `replica * shards + shard`.
+pub const FORK_NS_EVENT: u64 = 2 << FORK_NS_BITS;
+/// `serve::fleet` arrival-process streams (gap / thinning / burst).
+pub const FORK_NS_FLEET: u64 = 3 << FORK_NS_BITS;
+
+/// Compose a namespaced fork index: `ns` is one of the `FORK_NS_*`
+/// constants, `idx` the subsystem-local dense index (must fit below the
+/// namespace bits so windows cannot collide).
+#[inline]
+pub fn fork_idx(ns: u64, idx: u64) -> u64 {
+    debug_assert!(idx < (1u64 << FORK_NS_BITS),
+                  "fork index {idx} overflows its namespace window");
+    ns | idx
+}
+
 #[derive(Clone, Debug)]
 pub struct Pcg {
     state: u64,
@@ -194,6 +225,33 @@ mod tests {
         let mut f1 = a.fork(1);
         let mut f2 = a.fork(2);
         assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn fork_namespaces_are_pairwise_disjoint() {
+        // the windows [ns, ns + 2^FORK_NS_BITS) must not overlap for any
+        // local index a subsystem can legally use
+        let spans = [FORK_NS_LOADGEN, FORK_NS_EVENT, FORK_NS_FLEET];
+        let width = 1u64 << FORK_NS_BITS;
+        for (i, &a) in spans.iter().enumerate() {
+            assert_eq!(a % width, 0, "namespace {a:#x} misaligned");
+            for &b in &spans[i + 1..] {
+                let (lo, hi) = (a.min(b), a.max(b));
+                assert!(lo + width <= hi,
+                        "windows {lo:#x} and {hi:#x} overlap");
+            }
+        }
+        // and the composed indices land inside their own window
+        assert_eq!(fork_idx(FORK_NS_LOADGEN, 0), FORK_NS_LOADGEN);
+        assert_eq!(fork_idx(FORK_NS_EVENT, width - 1),
+                   FORK_NS_EVENT | (width - 1));
+        // same root seed, same local index, different subsystem:
+        // different stream (the collision the namespaces exist to kill)
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        let mut fa = a.fork(fork_idx(FORK_NS_LOADGEN, 0));
+        let mut fb = b.fork(fork_idx(FORK_NS_EVENT, 0));
+        assert_ne!(fa.next_u64(), fb.next_u64());
     }
 
     #[test]

@@ -52,6 +52,41 @@ pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Smallest sample count at which [`tail_percentile`] reports the p-th
+/// percentile: `ceil(100 / (100 - p))`, i.e. enough samples that at
+/// least one whole sample lies beyond the requested rank (p99.9 needs
+/// 1000). Below it a nearest-rank tail percentile degenerates to the
+/// sample maximum and reports noise, not a tail.
+pub fn tail_min_samples(p: f64) -> usize {
+    debug_assert!((0.0..100.0).contains(&p) && p > 0.0, "tail p {p}");
+    (100.0 / (100.0 - p)).ceil() as usize
+}
+
+/// Tail percentile with **nearest-rank** semantics: the smallest sample
+/// such that at least `p`% of the data is `<=` it — `s[ceil(p/100 * n)
+/// - 1]` of the sorted data, never interpolated (a tail quantile
+/// interpolated between the two largest samples manufactures values no
+/// request ever saw). Returns `None` (never NaN, never the max dressed
+/// up as a tail) below [`tail_min_samples`].
+pub fn tail_percentile(v: &[f64], p: f64) -> Option<f64> {
+    if v.len() < tail_min_samples(p) {
+        return None;
+    }
+    let mut s: Vec<f64> = v.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    tail_percentile_sorted(&s, p)
+}
+
+/// [`tail_percentile`] over an ALREADY-SORTED slice.
+pub fn tail_percentile_sorted(s: &[f64], p: f64) -> Option<f64> {
+    if s.len() < tail_min_samples(p) {
+        return None;
+    }
+    debug_assert!(s.windows(2).all(|w| w[0] <= w[1]), "unsorted input");
+    let rank = (p / 100.0 * s.len() as f64).ceil() as usize;
+    Some(s[rank.clamp(1, s.len()) - 1])
+}
+
 pub fn min(v: &[f64]) -> f64 {
     v.iter().cloned().fold(f64::INFINITY, f64::min)
 }
@@ -215,6 +250,56 @@ mod tests {
                                 "percentile of constant vector");
             Ok(())
         });
+    }
+
+    #[test]
+    fn tail_min_samples_at_the_usual_tails() {
+        assert_eq!(tail_min_samples(50.0), 2);
+        assert_eq!(tail_min_samples(99.0), 100);
+        assert_eq!(tail_min_samples(99.9), 1000);
+    }
+
+    #[test]
+    fn tail_percentile_guards_small_samples() {
+        // 999 samples: p99.9 would just be the max — refuse
+        let v: Vec<f64> = (0..999).map(|i| i as f64).collect();
+        assert_eq!(tail_percentile(&v, 99.9), None);
+        // one more sample crosses the guard
+        let v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert!(tail_percentile(&v, 99.9).is_some());
+        assert_eq!(tail_percentile(&[], 50.0), None);
+        assert_eq!(tail_percentile(&[1.0], 50.0), None);
+    }
+
+    #[test]
+    fn tail_percentile_nearest_rank_at_exact_boundaries() {
+        // n = 1000, values 1..=1000: nearest-rank p99.9 is
+        // s[ceil(0.999 * 1000) - 1] = s[998] = 999 — one whole sample
+        // (the max, 1000) lies beyond it
+        let v: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(tail_percentile(&v, 99.9), Some(999.0));
+        // n = 100: p99 ranks at ceil(99) = 99 -> s[98] = 99
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(tail_percentile(&v, 99.0), Some(99.0));
+        // p50 of [1..=4] nearest-rank: ceil(2) = 2 -> s[1] = 2 (no
+        // interpolation, unlike `percentile` which reports 2.5)
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(tail_percentile(&v, 50.0), Some(2.0));
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        // a tail value is always an actual sample
+        let v: Vec<f64> = (0..2500).map(|i| (i as f64).sqrt()).collect();
+        let t = tail_percentile(&v, 99.9).unwrap();
+        assert!(v.contains(&t));
+    }
+
+    #[test]
+    fn tail_percentile_unsorted_matches_sorted() {
+        let mut v: Vec<f64> = (0..1200).map(|i| ((i * 7919) % 997) as f64)
+            .collect();
+        let a = tail_percentile(&v, 99.9);
+        v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(a, tail_percentile_sorted(&v, 99.9));
+        assert!(a.is_some());
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Integration gates for `serve::fleet` (the fleet-scale serving
+//! simulator):
+//!
+//! 1. **Determinism**: a fleet run — and the whole rendered `fleet-sim`
+//!    outcome — is bit-identical at `--threads 1/2/8` (the chunked
+//!    two-pass merge contract).
+//! 2. **Conservation**: every generated arrival is either served or
+//!    shed, at every router policy.
+//! 3. **Scenario surface**: `fleet-sim` emits the typed knee point and
+//!    the per-class energy metrics through the generic JSON path.
+
+use neural_pim::scenario::{self, Scenario};
+use neural_pim::serve::fleet;
+use neural_pim::util::json::Json;
+use neural_pim::util::pool;
+use neural_pim::workloads;
+
+fn classes() -> Vec<fleet::ChipClass> {
+    let net = workloads::synthetic_cnn();
+    let mix = fleet::parse_fleet("neural-pim:4,isaac:2,cascade:1,lowres:1")
+        .unwrap();
+    fleet::build_classes(&net, &mix, 32)
+}
+
+fn cfg() -> fleet::FleetConfig {
+    fleet::FleetConfig { arrivals: 16_384, ..Default::default() }
+}
+
+#[test]
+fn fleet_run_is_bit_identical_at_threads_1_2_8() {
+    let classes = classes();
+    let mut fps = Vec::new();
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let r = fleet::run_fleet(&cfg(), &classes);
+        fps.push((t, fleet::fingerprint(&r), r.per_chip.clone()));
+        pool::set_threads(0);
+    }
+    assert_eq!(fps[0].1, fps[1].1,
+               "diverged at 2 threads: {:?} vs {:?}", fps[0].2, fps[1].2);
+    assert_eq!(fps[0].1, fps[2].1,
+               "diverged at 8 threads: {:?} vs {:?}", fps[0].2, fps[2].2);
+}
+
+#[test]
+fn fleet_sim_outcome_is_thread_count_invariant() {
+    // the scenario-level bar: every table cell and metric bit of the
+    // rendered outcome identical at any --threads (knee sweep included)
+    let run = |threads: usize| {
+        pool::set_threads(threads);
+        let sc = scenario::find("fleet-sim").unwrap();
+        let p = scenario::params_from_json(
+            &sc.param_specs(),
+            &Json::parse(
+                r#"{"arrivals": 8192, "sweep-arrivals": 2048,
+                    "fleet": "neural-pim:2,isaac:1"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let o = sc.run(&p).unwrap();
+        pool::set_threads(0);
+        o.to_json().to_string()
+    };
+    let one = run(1);
+    assert_eq!(one, run(2), "fleet-sim diverged at 2 threads");
+    assert_eq!(one, run(8), "fleet-sim diverged at 8 threads");
+}
+
+#[test]
+fn every_policy_conserves_arrivals_and_routes_work() {
+    let classes = classes();
+    for policy in ["round-robin", "join-shortest-queue", "latency-aware"] {
+        let cfg = fleet::FleetConfig {
+            policy: fleet::RouterPolicy::parse(policy).unwrap(),
+            ..cfg()
+        };
+        let r = fleet::run_fleet(&cfg, &classes);
+        assert_eq!(r.served + r.shed, r.arrivals, "{policy}");
+        assert!(r.served > 0, "{policy}: nothing served");
+        // at offered 0.9 with balancing policies, every chip does work
+        let idle = r.per_chip.iter().filter(|c| c.0 == 0).count();
+        assert_eq!(idle, 0, "{policy}: {idle} chips never served");
+        assert!(r.p99_ms >= r.p50_ms, "{policy}: percentile order");
+    }
+}
+
+#[test]
+fn fleet_sim_scenario_emits_knee_and_energy_metrics() {
+    let sc = scenario::find("fleet-sim").unwrap();
+    let p = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(
+            r#"{"arrivals": 8192, "sweep-arrivals": 2048,
+                "fleet": "neural-pim:2,isaac:1"}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let o = sc.run(&p).unwrap();
+    // typed knee point from the chip-count sweep
+    let knee = o.get_metric("knee_chips").expect("knee_chips metric");
+    assert!(knee >= 1.0, "degenerate knee {knee}");
+    // per-class energy per inference, priced from the model registry
+    assert!(o.get_metric("energy_uj_per_inf@Neural-PIM").unwrap() > 0.0);
+    assert!(o.get_metric("energy_uj_per_inf@ISAAC-like").unwrap() > 0.0);
+    // conservation through the obs counters
+    let served = o.get_metric("obs/fleet.served").unwrap();
+    let shed = o.get_metric("obs/fleet.shed").unwrap();
+    assert_eq!(served + shed, 8192.0);
+    // two tables: per-class stats + the chip-count sweep
+    assert_eq!(o.tables.len(), 2);
+}
+
+#[test]
+fn bad_fleet_specs_and_policies_fail_loudly() {
+    let sc = scenario::find("fleet-sim").unwrap();
+    let bad_fleet = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(r#"{"fleet": "neural-pimm:2"}"#).unwrap(),
+    )
+    .unwrap();
+    let err = format!("{:#}", sc.run(&bad_fleet).unwrap_err());
+    assert!(err.contains("did you mean"), "{err}");
+    let bad_policy = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(r#"{"policy": "shortest"}"#).unwrap(),
+    )
+    .unwrap();
+    assert!(sc.run(&bad_policy).is_err());
+}

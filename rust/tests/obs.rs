@@ -90,8 +90,8 @@ fn sharded_traces_are_reproducible_at_shards_1_and_8() {
 fn serve_sweep_trace_is_reproducible() {
     let cfg = LoadGenConfig { requests: 256, shards: 2, ..Default::default() };
     let loads = [0.7, 1.3];
-    let (pa, ta) = loadgen::sweep_traced(&cfg, &loads, None);
-    let (pb, tb) = loadgen::sweep_traced(&cfg, &loads, None);
+    let (pa, ta) = loadgen::sweep_traced(&cfg, &loads, None).unwrap();
+    let (pb, tb) = loadgen::sweep_traced(&cfg, &loads, None).unwrap();
     assert_eq!(pa, pb); // LoadPoint includes its registry
     assert_eq!(ta.to_chrome_string(), tb.to_chrome_string());
     // every arrival leaves exactly one admission-decision instant

@@ -97,6 +97,8 @@ fn cheap_params(name: &str) -> &'static str {
         "dse" => r#"{"top": 5}"#,
         "noise" => r#"{"samples": 64}"#,
         "serve-sim" => r#"{"requests": 128, "loads": "0.6,1.1"}"#,
+        "fleet-sim" => r#"{"arrivals": 8192, "sweep-arrivals": 2048,
+                           "fleet": "neural-pim:2,isaac:1"}"#,
         _ => "{}",
     }
 }

@@ -75,6 +75,18 @@ if grep -rn --include='*.rs' -E \
   exit 1
 fi
 
+# Fleet open-closed gate: chip-selection policy dispatch lives in
+# serve/fleet.rs only. A `RouterPolicy::X =>` match arm anywhere else
+# means a caller is special-casing a policy instead of going through
+# run_fleet — new policies register inside the fleet module.
+if grep -rn --include='*.rs' -E \
+    'RouterPolicy::[A-Za-z_]+[[:space:]]*=>' \
+    rust/src rust/tests rust/benches examples \
+    | grep -v '^rust/src/serve/fleet.rs'; then
+  echo "FAIL: router-policy match arm outside rust/src/serve/fleet.rs" >&2
+  exit 1
+fi
+
 # Diagnostics gate: stderr chatter goes through the leveled obs::diag!
 # macro (gated by --verbose / NEURAL_PIM_LOG), never raw eprintln!.
 # Only the macro's own expansion site (obs/) and the CLI's final error
