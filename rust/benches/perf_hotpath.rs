@@ -19,7 +19,7 @@ use neural_pim::serve::{fleet, loadgen, open_runtime, Coordinator,
 use neural_pim::util::json::Json;
 use neural_pim::util::pool;
 use neural_pim::util::rng::Pcg;
-use neural_pim::{dse, mapping, model, noise, sim, workloads};
+use neural_pim::{dse, mapping, model, noise, offload, sim, workloads};
 use std::time::Instant;
 
 /// Mean wall-clock seconds of `iters` runs (1 warmup).
@@ -565,10 +565,119 @@ fn fleet_suite() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The hybrid-placement suite (ISSUE 10's headline artifact): the
+/// exhaustive 2^16 VGG-16 mask sweep sequential vs the pool (masks/sec
+/// and the parallel speedup), the MobileNet-V2 hill-climb and bandit
+/// end-to-end, and the placement bit-identity at threads 1/2/8 —
+/// written to `BENCH_offload.json`. Runs standalone via
+/// `--only-offload`.
+fn offload_suite() -> anyhow::Result<()> {
+    println!("### hybrid-placement suite\n");
+    let mut pairs: Vec<(String, Json)> = Vec::new();
+    let put = |pairs: &mut Vec<(String, Json)>, k: &str, v: f64| {
+        pairs.push((k.to_string(), Json::Num(v)));
+    };
+
+    let cfg_pim = AcceleratorConfig::neural_pim();
+    let cfg_npu = offload::default_npu_config();
+
+    // 1. headline: the exhaustive 2^16-mask VGG-16 sweep, sequential vs
+    // the pool (fixed 4096-mask chunks reduced in index order, so the
+    // winner is bit-identical either way)
+    let vgg = workloads::vgg16();
+    let pim = model::network_cost(&vgg, &cfg_pim);
+    let npu = model::network_cost(&vgg, &cfg_npu);
+    let table = offload::LayerTable::build(&cfg_pim, &pim, &cfg_npu, &npu);
+    pool::set_threads(1);
+    let t0 = Instant::now();
+    let seq = offload::search::run(&table, offload::Strategy::Exhaustive, 42);
+    let seq_s = t0.elapsed().as_secs_f64();
+    pool::set_threads(8);
+    let t0 = Instant::now();
+    let par = offload::search::run(&table, offload::Strategy::Exhaustive, 42);
+    let par_s = t0.elapsed().as_secs_f64();
+    assert_eq!(seq.placement, par.placement,
+               "exhaustive winner diverged across thread counts");
+    assert_eq!(seq.edp.to_bits(), par.edp.to_bits());
+    let speedup_par8 = seq_s / par_s.max(1e-12);
+    println!(
+        "[bench] offload exhaustive (VGG-16, {} masks): seq {:.0} ms \
+         ({:.2}M masks/s) vs 8 threads {:.0} ms ({:.2}M masks/s) -> \
+         {:.2}x",
+        seq.evals,
+        seq_s * 1e3,
+        seq.evals as f64 / seq_s / 1e6,
+        par_s * 1e3,
+        par.evals as f64 / par_s / 1e6,
+        speedup_par8
+    );
+    put(&mut pairs, "offload.exhaustive_masks", seq.evals as f64);
+    put(&mut pairs, "offload.exhaustive_masks_per_s_seq",
+        seq.evals as f64 / seq_s.max(1e-12));
+    put(&mut pairs, "offload.exhaustive_masks_per_s_par8",
+        par.evals as f64 / par_s.max(1e-12));
+    put(&mut pairs, "offload.exhaustive_speedup_par8", speedup_par8);
+    put(&mut pairs, "offload.vgg16_hybrid_edp", seq.edp);
+
+    // 2. the heuristic tier end-to-end on the widest catalog net: the
+    // MobileNet-V2 hill-climb and bandit through `offload::optimize`
+    // (mapping + both cost tables + search), with the EDP win over the
+    // best pure deployment
+    let mob = workloads::by_name("MobileNet-V2").expect("catalog net");
+    for (strategy, tag) in [(offload::Strategy::HillClimb, "hillclimb"),
+                            (offload::Strategy::Bandit, "bandit")] {
+        let t0 = Instant::now();
+        let r = offload::optimize(&mob, &cfg_pim, &cfg_npu, strategy, 42);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "[bench] offload {tag} (MobileNet-V2): {:.1} ms, {} evals, \
+             {} NPU layers, {:.2}% EDP win",
+            dt * 1e3,
+            r.evals,
+            r.npu_layers(),
+            r.edp_win() * 100.0
+        );
+        put(&mut pairs, &format!("offload.{tag}_ms"), dt * 1e3);
+        put(&mut pairs, &format!("offload.{tag}_evals"), r.evals as f64);
+        put(&mut pairs, &format!("offload.{tag}_edp_win"), r.edp_win());
+    }
+
+    // 3. the acceptance anchor: the hill-climb placement and EDP are
+    // bit-identical at --threads 1/2/8 (restart streams are forked
+    // sequentially before the parallel fan-out)
+    let mut picks = Vec::new();
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let r = offload::optimize(&mob, &cfg_pim, &cfg_npu,
+                                  offload::Strategy::HillClimb, 42);
+        picks.push((t, r.placement.clone(), r.hybrid.edp.to_bits()));
+    }
+    assert!(
+        picks.windows(2).all(|w| w[0].1 == w[1].1 && w[0].2 == w[1].2),
+        "hill-climb diverged across thread counts"
+    );
+    println!(
+        "[bench] offload hill-climb placement bit-identical at threads \
+         1/2/8 ({} NPU layers)",
+        picks[0].1.iter().filter(|p| p.is_npu()).count()
+    );
+    pairs.push(("offload.placement_threads_invariant".into(),
+                Json::Bool(true)));
+    pool::set_threads(0);
+
+    let mut bench_json =
+        Json::Obj(pairs.into_iter().collect()).to_pretty_string();
+    bench_json.push('\n');
+    std::fs::write("BENCH_offload.json", bench_json)?;
+    println!("[bench] wrote BENCH_offload.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    // CI runs `-- --only-event` / `-- --only-obs` / `-- --only-pool` to
-    // produce BENCH_event.json / BENCH_obs.json / BENCH_pool.json
-    // without the rest of the suite (and without needing PJRT artifacts)
+    // CI runs `-- --only-event` / `-- --only-obs` / `-- --only-pool` /
+    // `-- --only-fleet` / `-- --only-offload` to produce the matching
+    // BENCH_*.json without the rest of the suite (and without needing
+    // PJRT artifacts)
     if std::env::args().any(|a| a == "--only-event") {
         return event_suite();
     }
@@ -580,6 +689,9 @@ fn main() -> anyhow::Result<()> {
     }
     if std::env::args().any(|a| a == "--only-fleet") {
         return fleet_suite();
+    }
+    if std::env::args().any(|a| a == "--only-offload") {
+        return offload_suite();
     }
     println!("### §Perf hot paths\n");
 
@@ -610,6 +722,7 @@ fn main() -> anyhow::Result<()> {
     obs_suite()?;
     pool_suite()?;
     fleet_suite()?;
+    offload_suite()?;
     // pool scaling of the request sim (replicas fan out across threads)
     let alex = workloads::alexnet();
     let load = event::RequestLoad {

@@ -31,6 +31,9 @@ pub enum Architecture {
     /// RAELLA-style speculative low-resolution conversion
     /// (`model::archs::LowResolutionModel`).
     LowResolution,
+    /// All-digital NPU: SRAM-held weights, MAC lanes, no converters
+    /// (`model::archs::NpuModel`) — the offload target of `offload/`.
+    DigitalNpu,
 }
 
 impl Architecture {

@@ -67,31 +67,38 @@ impl PeBudget {
 }
 
 /// Build the PE-level budget for a configuration: the crossbar + WL-DAC
-/// rows common to every architecture, plus whatever periphery the
+/// rows common to every analog architecture, plus whatever periphery the
 /// architecture's registered cost model declares
-/// ([`crate::model::CostModel::peripheral_components`]).
+/// ([`crate::model::CostModel::peripheral_components`]). Models that
+/// report [`crate::model::CostModel::analog_frontend`] `false` (the
+/// digital NPU) get no crossbar/DAC rows — their compute front-end is
+/// already in their peripheral component list.
 pub fn pe_budget(cfg: &AcceleratorConfig) -> PeBudget {
     let p = &cfg.precision;
     let cyc = cycle_seconds(cfg);
     let m = cfg.arrays_per_pe as u64;
     let size = cfg.xbar_size;
     let wl = size as u64; // wordlines per array
-    let mut comps = vec![
-        ComponentBudget {
-            name: "crossbar",
-            count: m,
-            unit_power: k::xbar_e_cycle(size, p.p_d) / cyc,
-            unit_area: k::xbar_area(size),
-        },
-        ComponentBudget {
-            name: "dac",
-            count: m * wl,
-            unit_power: k::dac_e_cycle(p.p_d) / cyc,
-            unit_area: k::dac_area(p.p_d),
-        },
-    ];
-    comps.extend(crate::model::cost_model(cfg.arch)
-        .peripheral_components(cfg));
+    let model = crate::model::cost_model(cfg.arch);
+    let mut comps = if model.analog_frontend() {
+        vec![
+            ComponentBudget {
+                name: "crossbar",
+                count: m,
+                unit_power: k::xbar_e_cycle(size, p.p_d) / cyc,
+                unit_area: k::xbar_area(size),
+            },
+            ComponentBudget {
+                name: "dac",
+                count: m * wl,
+                unit_power: k::dac_e_cycle(p.p_d) / cyc,
+                unit_area: k::dac_area(p.p_d),
+            },
+        ]
+    } else {
+        Vec::new()
+    };
+    comps.extend(model.peripheral_components(cfg));
     PeBudget { arch: cfg.arch, components: comps }
 }
 

@@ -44,7 +44,8 @@ pub use engine::{ns_to_ps, ps_to_s, Engine, EngineStats, Entry, EventQueue,
                  LadderQueue, QueueStats, Time};
 pub use refqueue::BinaryHeapQueue;
 pub use noc::{Delivery, NocModel, NocStats};
-pub use pipeline::{service_profile, PipelineRun, PipelineSim, ServiceProfile,
+pub use pipeline::{hybrid_service_profile, service_profile, PipelineRun,
+                   PipelineSim, ServiceProfile,
                    MAX_BUF_INFS};
 
 use crate::config::{AcceleratorConfig, Architecture};

@@ -108,6 +108,37 @@ pub fn service_profile(cfg: &AcceleratorConfig,
     }
 }
 
+/// The [`ServiceProfile`] of a PIM + NPU hybrid placement: stage `i`
+/// takes its service time from whichever side `placement[i]` names,
+/// each priced under its own config's pacing (input cycles, cycle time)
+/// and its own pure mapping's replication. The `offload` subsystem
+/// reports pipeline shape through this.
+pub fn hybrid_service_profile(cfg_pim: &AcceleratorConfig,
+                              pim: &NetworkCost,
+                              cfg_npu: &AcceleratorConfig,
+                              npu: &NetworkCost,
+                              placement: &[crate::mapping::Placement])
+                              -> ServiceProfile {
+    assert_eq!(pim.mapping.layers.len(), npu.mapping.layers.len(),
+               "hybrid sides must map the same network");
+    assert_eq!(placement.len(), pim.mapping.layers.len());
+    let sp_pim = service_profile(cfg_pim, pim);
+    let sp_npu = service_profile(cfg_npu, npu);
+    ServiceProfile {
+        stage_ps: placement
+            .iter()
+            .enumerate()
+            .map(|(i, pl)| {
+                if pl.is_npu() {
+                    sp_npu.stage_ps[i]
+                } else {
+                    sp_pim.stage_ps[i]
+                }
+            })
+            .collect(),
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     /// a new inference enters stage 0's admission queue
@@ -527,6 +558,7 @@ mod tests {
                 .map(|l| crate::mapping::map_layer(l, cfg))
                 .collect(),
             chips: 1,
+            placement: vec![crate::mapping::Placement::Pim; layers.len()],
         }
     }
 

@@ -32,6 +32,11 @@
 //! latency modes), `dse` (Fig. 11 sweep plus the streamed
 //! ~1M-candidate fine grid behind `dse --fine`),
 //! `noise`/`periph` (SINAD machinery, NeuralPeriph forwards),
+//! `offload` (PIM + NPU hybrid deployment: a deterministic per-layer
+//! placement search — exhaustive / seeded hill-climb / epsilon-greedy
+//! bandit over the two pure memoized cost tables — minimizing EDP,
+//! never worse than either pure extreme, surfaced as the `offload`
+//! scenario),
 //! `obs` (observability: the `Recorder` trait the event/serve hot
 //! layers are generic over — zero-cost `NullRecorder` off-path, a
 //! `TraceRecorder` exporting Perfetto-loadable Chrome trace JSON in
@@ -79,6 +84,7 @@ pub mod mapping;
 pub mod model;
 pub mod noise;
 pub mod obs;
+pub mod offload;
 pub mod periph;
 pub mod report;
 pub mod runtime;

@@ -45,11 +45,32 @@ impl LayerMapping {
     }
 }
 
+/// Which side of a PIM + NPU hybrid executes one layer. Pure mappings
+/// (everything [`map_network`] builds) are all-PIM; only the `offload`
+/// subsystem's hybrid assembly writes `Npu` entries.
+///
+/// Code outside `offload/` and `model/archs.rs` must not dispatch on
+/// the variants (grep-enforced) — use [`Placement::is_npu`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    Pim,
+    Npu,
+}
+
+impl Placement {
+    pub fn is_npu(self) -> bool {
+        !matches!(self, Placement::Pim)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct NetworkMapping {
     pub layers: Vec<LayerMapping>,
     /// chips needed to hold one copy of all weights
     pub chips: u64,
+    /// per-layer execution side, parallel to `layers`; all-PIM for pure
+    /// mappings
+    pub placement: Vec<Placement>,
 }
 
 impl NetworkMapping {
@@ -146,7 +167,8 @@ pub fn map_network(net: &Network, cfg: &AcceleratorConfig) -> NetworkMapping {
         layers[idx].replication += 1;
         used += cost;
     }
-    NetworkMapping { layers, chips }
+    let placement = vec![Placement::Pim; layers.len()];
+    NetworkMapping { layers, chips, placement }
 }
 
 #[cfg(test)]

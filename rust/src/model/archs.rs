@@ -511,3 +511,239 @@ impl CostModel for LowResolutionModel {
         1.28e9
     }
 }
+
+// ------------------------------------------------------ Digital NPU -------
+
+/// Energy of one 8-bit MAC in the NPU's digital lanes (multiplier +
+/// accumulator register at the 32 nm class the rest of the constants
+/// use). Calibrated so dense crossbar-friendly layers stay cheaper on
+/// Neural-PIM (~0.43 pJ/MAC all-in) while short-K / low-reuse layers
+/// (depthwise, small kernels, 1x1 bottlenecks) flip to the NPU — the
+/// offload search's raison d'etre.
+pub const NPU_E_MAC: f64 = 0.5e-12;
+
+/// Area of one MAC lane (the digital replacement for one crossbar
+/// array's worth of compute: `xbar_size x groups` MACs time-shared over
+/// the input period).
+pub const NPU_MAC_AREA: f64 = 4.5e-4;
+
+/// Area of one lane's weight SRAM (holds `weights_per_array` bytes, the
+/// same capacity a crossbar array holds in RRAM).
+pub const NPU_WSRAM_AREA: f64 = 2.0e-4;
+
+/// Headline parameter block of the digital NPU — what the `offload`
+/// scenario reports and [`NpuModel::price_layer`] charges. Derived from
+/// an [`AcceleratorConfig`] so DSE-style overrides (lane counts, cycle
+/// time) flow through.
+#[derive(Debug, Clone, Copy)]
+pub struct NpuCost {
+    /// peak tera-ops/s of the configured chip (2 ops per MAC, all lanes)
+    pub tops_peak: f64,
+    /// energy per 8-bit MAC, J
+    pub e_mac: f64,
+    /// weight/operand SRAM energy per byte, J (read or write)
+    pub sram_e_byte: f64,
+    /// weight fill + output drain latency for one lane's SRAM swap, ns.
+    /// Weight-stationary execution amortizes this across the inference
+    /// stream, so it is charged as *fill energy* per inference (every
+    /// weight byte written once) and reported as a metric — it does not
+    /// enter the steady-state pipeline bottleneck.
+    pub fill_drain_ns: f64,
+}
+
+impl NpuCost {
+    pub fn of(cfg: &AcceleratorConfig) -> NpuCost {
+        NpuCost {
+            tops_peak: cfg.peak_gops() / 1000.0,
+            e_mac: NPU_E_MAC,
+            sram_e_byte: k::SRAM_E_BYTE,
+            fill_drain_ns: cfg.weights_per_array() as f64
+                / cfg.xbar_size as f64 * cfg.cycle_ns,
+        }
+    }
+
+    /// Full [`super::LayerCost`] of one mapped layer on the NPU. Mirrors
+    /// the crossbar path's common terms exactly (eDRAM/SRAM activation
+    /// traffic, NoC, activation post-op) so hybrid placements compare
+    /// like-for-like; the conversion/crossbar/DAC terms are zero and the
+    /// MAC lanes + per-K-chunk requantization + per-inference weight
+    /// fill take their place.
+    pub fn price_layer(&self, lm: &crate::mapping::LayerMapping,
+                       _cfg: &AcceleratorConfig, multi_chip: bool)
+                       -> super::LayerCost {
+        let l = &lm.layer;
+        let positions = l.positions();
+        let k_dim = l.k_dim();
+        let macs = l.macs();
+        // partial-sum requantization events: one per dot-product group
+        // per K-chunk (the NPU's analogue of a conversion)
+        let group_chunks = positions * l.cout as u64 * lm.k_chunks;
+        let out_bytes = positions as f64 * l.cout as f64;
+
+        let sa = macs as f64 * self.e_mac;
+        let mut digital = group_chunks as f64 * k::SA_DIGITAL_E_OP;
+        digital += out_bytes * k::ACT_E_OP;
+        // common activation traffic, identical to `layer_cost`
+        let unique_in = (positions * l.stride as u64 * l.stride as u64
+            * l.cin as u64) as f64;
+        let replay = positions as f64 * k_dim as f64;
+        let mut memory = (unique_in + out_bytes) * k::EDRAM_E_BYTE
+            + (replay + out_bytes) * k::SRAM_E_BYTE;
+        // weight-stationary fill: every weight byte written to lane
+        // SRAM once per inference stream slot
+        memory += l.weights() as f64 * self.sram_e_byte;
+        let mut noc = out_bytes * k::NOC_E_BYTE;
+        if multi_chip {
+            noc += out_bytes * k::HT_E_BYTE;
+        }
+
+        let energy = super::EnergyBreakdown {
+            adc: 0.0,
+            dac: 0.0,
+            sa,
+            xbar: 0.0,
+            memory,
+            noc,
+            digital,
+        };
+        super::LayerCost {
+            compute_e: energy.total() - energy.noc,
+            noc_e_extra: if multi_chip {
+                lm.out_bytes() as f64 * k::HT_E_BYTE
+            } else {
+                0.0
+            },
+            adc_convs: group_chunks,
+            sa_ops: macs,
+            energy,
+        }
+    }
+}
+
+/// All-digital NPU: weight-stationary MAC lanes over SRAM-held weights,
+/// no converters. Paced identically to Neural-PIM (same input cycle,
+/// same lane shapes) so a hybrid placement's pipeline stages line up —
+/// the offload win is purely an energy trade: the NPU loses the analog
+/// A/D savings on dense layers but skips them entirely where crossbars
+/// waste them (depthwise / short-K / low-reuse layers).
+pub struct NpuModel;
+
+impl CostModel for NpuModel {
+    fn arch(&self) -> Architecture {
+        Architecture::DigitalNpu
+    }
+
+    fn name(&self) -> &'static str {
+        "Digital-NPU"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["npu", "digital-npu", "dnpu", "e"]
+    }
+
+    /// Iso-organization with the Neural-PIM chip: 64 lanes/PE, 4
+    /// PEs/tile, 280 tiles, 100 ns input cycle at `p_d = 4` pacing —
+    /// a placement search then compares layers like-for-like.
+    fn default_config(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            arch: Architecture::DigitalNpu,
+            precision: Precision { p_d: 4, ..Default::default() },
+            xbar_size: 128,
+            arrays_per_pe: 64,
+            adcs_per_pe: 1,
+            sa_per_array: 0,
+            pes_per_tile: 4,
+            tiles: 280,
+            cycle_ns: 100.0,
+            edram_bytes: 64 * 1024,
+            noc_concentration: 4,
+        }
+    }
+
+    fn cycle_ns(&self) -> f64 {
+        k::NEURAL_PIM_CYCLE_NS
+    }
+
+    /// Requantization precision: outputs re-quantize to `p_o` bits.
+    fn adc_resolution(&self, p: &Precision, _n: u32) -> u32 {
+        p.p_o
+    }
+
+    /// One requantization event per dot-product group (the digital
+    /// analogue of Strategy C's single conversion).
+    fn conversions_per_group(&self, _p: &Precision) -> u64 {
+        1
+    }
+
+    /// Not reachable through [`super::layer_cost`] — [`NpuModel`]
+    /// overrides [`CostModel::price_layer`], which owns the whole layer
+    /// cost. This is a best-effort upper bound from the ctx quantities
+    /// (K rounded up to whole chunks) for any direct caller.
+    fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy {
+        let macs_ub = ctx.group_chunks * ctx.cfg.xbar_size as u64;
+        InterfaceEnergy {
+            sa: macs_ub as f64 * NPU_E_MAC,
+            adc: 0.0,
+            digital: ctx.group_chunks as f64 * k::SA_DIGITAL_E_OP,
+            memory: 0.0,
+        }
+    }
+
+    fn price_layer(&self, lm: &crate::mapping::LayerMapping,
+                   cfg: &AcceleratorConfig, multi_chip: bool)
+                   -> Option<super::LayerCost> {
+        Some(NpuCost::of(cfg).price_layer(lm, cfg, multi_chip))
+    }
+
+    /// Digital front-end: no crossbar or DAC rows in the PE budget.
+    fn analog_frontend(&self) -> bool {
+        false
+    }
+
+    fn peripheral_components(&self, cfg: &AcceleratorConfig)
+                             -> Vec<ComponentBudget> {
+        let cyc = self.cycle_ns() * 1e-9;
+        let m = cfg.arrays_per_pe as u64;
+        let ic = cfg.precision.input_cycles().max(1) as u64;
+        // MACs one lane retires per cycle: its array-equivalent's
+        // xbar_size x groups weights, spread over the input period
+        let macs_per_cycle =
+            (cfg.xbar_size as u64 * cfg.groups_per_array() / ic).max(1);
+        vec![
+            ComponentBudget {
+                name: "mac-lane",
+                count: m,
+                unit_power: NPU_E_MAC * macs_per_cycle as f64 / cyc,
+                unit_area: NPU_MAC_AREA,
+            },
+            ComponentBudget {
+                name: "weight-sram",
+                count: m,
+                unit_power: k::SRAM_E_BYTE
+                    * (cfg.xbar_size as u64 / ic) as f64 / cyc,
+                unit_area: NPU_WSRAM_AREA,
+            },
+            ComponentBudget {
+                name: "requant",
+                count: m,
+                unit_power: k::SA_DIGITAL_E_OP
+                    * cfg.groups_per_array() as f64 / cyc,
+                unit_area: k::SA_DIGITAL_AREA,
+            },
+            sar_ir_row(cfg, cyc),
+        ]
+    }
+
+    fn pe_metadata(&self, cfg: &AcceleratorConfig) -> PeMetadata {
+        PeMetadata {
+            accumulation: "Digital (MAC lanes)",
+            interface: "Requantize",
+            adc_bits: cfg.precision.p_o,
+        }
+    }
+
+    /// Requantizer throughput stands in for the converter service rate.
+    fn adc_samples_per_s(&self) -> f64 {
+        1.28e9
+    }
+}

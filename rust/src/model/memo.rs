@@ -76,6 +76,11 @@ pub struct NetworkCost {
 pub fn layer_cost(lm: &LayerMapping, cfg: &AcceleratorConfig,
                   multi_chip: bool) -> LayerCost {
     let model = cost_model(cfg.arch);
+    // non-crossbar architectures (the digital NPU) own the whole layer
+    // cost; the crossbar dataflow below never applies to them
+    if let Some(cost) = model.price_layer(lm, cfg, multi_chip) {
+        return cost;
+    }
     let p = &cfg.precision;
     let n = cfg.n_log2();
     let cycles = p.input_cycles() as u64;
@@ -183,6 +188,10 @@ struct CostKey {
     net_name: Arc<str>,
     net_layers: usize,
     net_fp: u64,
+    /// 0 for pure single-architecture tables; hybrid tables
+    /// ([`network_cost_hybrid`]) fingerprint the NPU config + per-layer
+    /// placement here so they cache alongside the pure entries.
+    placement_fp: u64,
 }
 
 fn cost_key(net: &Network, cfg: &AcceleratorConfig) -> CostKey {
@@ -211,6 +220,7 @@ fn cost_key(net: &Network, cfg: &AcceleratorConfig) -> CostKey {
         net_name: net.name.clone(),
         net_layers: net.layers.len(),
         net_fp: h.finish(),
+        placement_fp: 0,
     }
 }
 
@@ -330,6 +340,54 @@ pub fn network_cost(net: &Network, cfg: &AcceleratorConfig)
                     -> Arc<NetworkCost> {
     let key = cost_key(net, cfg);
     cache().lookup_or(key, || Arc::new(compute_network_cost(net, cfg)))
+}
+
+fn compute_hybrid_cost(net: &Network, cfg_pim: &AcceleratorConfig,
+                       cfg_npu: &AcceleratorConfig,
+                       placement: &[mapping::Placement]) -> NetworkCost {
+    let pim = network_cost(net, cfg_pim);
+    let npu = network_cost(net, cfg_npu);
+    assert_eq!(placement.len(), net.layers.len(),
+               "placement length must match the network");
+    let mut layers = Vec::with_capacity(placement.len());
+    let mut lms = Vec::with_capacity(placement.len());
+    for (i, pl) in placement.iter().enumerate() {
+        let side = if pl.is_npu() { &npu } else { &pim };
+        layers.push(side.layers[i].clone());
+        lms.push(side.mapping.layers[i].clone());
+    }
+    let mut total = EnergyBreakdown::default();
+    for c in &layers {
+        total.add(&c.energy);
+    }
+    let mapping = NetworkMapping {
+        layers: lms,
+        chips: pim.mapping.chips.max(npu.mapping.chips),
+        placement: placement.to_vec(),
+    };
+    NetworkCost { mapping, layers, total }
+}
+
+/// The memoized cost table for a **hybrid** placement: layer `i` is
+/// priced (energy, mapping, stage shape) by whichever side
+/// `placement[i]` names, each side priced under its own pure deployment
+/// (its own mapping, replication and chip count). Cached alongside the
+/// pure tables — the key is the PIM side's, extended with a fingerprint
+/// of the NPU config + placement vector.
+pub fn network_cost_hybrid(net: &Network, cfg_pim: &AcceleratorConfig,
+                           cfg_npu: &AcceleratorConfig,
+                           placement: &[mapping::Placement])
+                           -> Arc<NetworkCost> {
+    let mut key = cost_key(net, cfg_pim);
+    let mut h = DefaultHasher::new();
+    cost_key(net, cfg_npu).cfg.hash(&mut h);
+    for pl in placement {
+        pl.is_npu().hash(&mut h);
+    }
+    key.placement_fp = h.finish() | 1; // never collides with pure (0)
+    cache().lookup_or(key, || {
+        Arc::new(compute_hybrid_cost(net, cfg_pim, cfg_npu, placement))
+    })
 }
 
 /// Drop every cached table (benchmarks use this to time the cold path).
@@ -456,6 +514,7 @@ mod tests {
             net_name: format!("synthetic-{i}").into(),
             net_layers: 1,
             net_fp: i.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            placement_fp: 0,
         }
     }
 

@@ -29,8 +29,8 @@ pub mod archs;
 mod memo;
 
 pub use memo::{clear_cost_cache, cost_cache_counters, cost_cache_len,
-               fill_cache_registry, layer_cost, network_cost, LayerCost,
-               NetworkCost};
+               fill_cache_registry, layer_cost, network_cost,
+               network_cost_hybrid, LayerCost, NetworkCost};
 
 use crate::config::{AcceleratorConfig, Architecture, Precision};
 use crate::energy::ComponentBudget;
@@ -170,6 +170,27 @@ pub trait CostModel: Sync {
     /// The architecture-specific slice of one mapped layer's energy.
     fn interface_energy(&self, ctx: &LayerCtx) -> InterfaceEnergy;
 
+    /// Full-layer pricing override. `None` (the default) means the
+    /// layer is priced by [`layer_cost`]'s crossbar dataflow: the common
+    /// DAC/crossbar/memory/NoC terms plus [`CostModel::interface_energy`].
+    /// A model that is *not* a crossbar VMM (the digital NPU) returns
+    /// `Some` and owns the whole [`LayerCost`]; `layer_cost` consults
+    /// this first, so non-crossbar architectures register without
+    /// leaking their dataflow into the common path.
+    fn price_layer(&self, _lm: &crate::mapping::LayerMapping,
+                   _cfg: &AcceleratorConfig, _multi_chip: bool)
+                   -> Option<LayerCost> {
+        None
+    }
+
+    /// Whether the PE front-end is analog (crossbar + DAC rows in
+    /// [`crate::energy::pe_budget`]). The digital NPU opts out: its MAC
+    /// lanes and weight SRAM are listed via
+    /// [`CostModel::peripheral_components`] instead.
+    fn analog_frontend(&self) -> bool {
+        true
+    }
+
     /// PE periphery beyond the common crossbar + DAC rows
     /// (`energy::pe_budget` appends these).
     fn peripheral_components(&self, cfg: &AcceleratorConfig)
@@ -190,11 +211,12 @@ pub trait CostModel: Sync {
 
 /// The registry: every architecture the toolchain knows, in the order
 /// reports and comparisons iterate them. Append here to register.
-static MODELS: [&dyn CostModel; 4] = [
+static MODELS: [&dyn CostModel; 5] = [
     &archs::IsaacLikeModel,
     &archs::CascadeLikeModel,
     &archs::NeuralPimModel,
     &archs::LowResolutionModel,
+    &archs::NpuModel,
 ];
 
 /// All registered cost models, in registry order.

@@ -1,0 +1,224 @@
+//! PIM + NPU hybrid deployment: deterministic per-layer placement
+//! search between the Neural-PIM crossbar chip and the all-digital
+//! [`model::archs::NpuModel`](crate::model::archs::NpuModel).
+//!
+//! The paper's chip wins on dense crossbar-friendly layers, where the
+//! analog accumulation amortizes conversions over long K dimensions —
+//! but depthwise, short-K and low-reuse layers pay the crossbar's fixed
+//! per-position costs for little reuse, and a plain digital MAC array
+//! prices them lower. This subsystem searches the `2^n` per-layer
+//! splits of a network between the two chips:
+//!
+//! - [`search::LayerTable`] reads per-layer energy and stage time off
+//!   the two **pure** memoized cost tables (`model::network_cost`) —
+//!   each side priced under its own deployment (its own mapping,
+//!   replication, chip count), so a hybrid is assembled from real
+//!   deployable columns rather than re-mapped per candidate.
+//! - [`search::run`] minimizes EDP (energy x bottleneck stage time)
+//!   exhaustively for networks of ≤ [`search::EXHAUSTIVE_MAX`] layers,
+//!   and by seeded hill-climb or epsilon-greedy bandit above that. All
+//!   strategies evaluate both pure extremes, so the result is never
+//!   worse than all-PIM or all-NPU.
+//! - [`optimize`] packages the winner — placement, EDP win, per-layer
+//!   split, search-effort counters — for the `offload` scenario, and
+//!   routes the chosen placement back through
+//!   [`model::network_cost_hybrid`] and
+//!   [`event::hybrid_service_profile`](crate::event::hybrid_service_profile)
+//!   so the reported deployment is the one the rest of the toolchain
+//!   (event pipeline, serving layer) would execute.
+//!
+//! Determinism contract: the search derives all randomness from
+//! `Pcg::fork` under `FORK_NS_OFFLOAD`, fans fixed work decompositions
+//! over `util::pool`, and reduces in index order — byte-identical
+//! results at any `--threads`, pinned by the integration suite.
+
+pub mod search;
+
+pub use search::{LayerTable, SearchOutcome, Strategy, STRATEGY_CHOICES};
+
+use crate::config::{AcceleratorConfig, Architecture};
+use crate::event;
+use crate::mapping::Placement;
+use crate::model;
+use crate::workloads::Network;
+
+/// The NPU side's headline parameter block (defined next to its cost
+/// model; re-exported here as part of the subsystem's surface).
+pub use crate::model::archs::NpuCost;
+
+/// Energy/delay/EDP of one deployment (pure or hybrid), evaluated
+/// through the same [`LayerTable`] arithmetic so the three compare
+/// exactly (no float-reassociation slack between them).
+#[derive(Debug, Clone, Copy)]
+pub struct DeployCost {
+    pub energy_j: f64,
+    /// steady-state bottleneck stage time, s
+    pub delay_s: f64,
+    /// energy-delay product, J·s
+    pub edp: f64,
+    /// chips holding one copy of the deployment's weights
+    pub chips: u64,
+}
+
+/// One layer's row of the placement report.
+#[derive(Debug, Clone)]
+pub struct LayerChoice {
+    pub name: String,
+    /// layer energy priced on each side, J
+    pub pim_e: f64,
+    pub npu_e: f64,
+    pub placement: Placement,
+}
+
+/// Everything the `offload` scenario reports for one network.
+#[derive(Debug, Clone)]
+pub struct OffloadReport {
+    pub network: String,
+    /// the strategy that ran (`auto` resolved to its concrete choice)
+    pub strategy: &'static str,
+    pub placement: Vec<Placement>,
+    pub hybrid: DeployCost,
+    pub all_pim: DeployCost,
+    pub all_npu: DeployCost,
+    pub layers: Vec<LayerChoice>,
+    /// placements evaluated / strictly-improving moves accepted
+    pub evals: u64,
+    pub improved: u64,
+    /// headline parameters of the NPU side
+    pub npu: NpuCost,
+}
+
+impl OffloadReport {
+    /// Layers the search moved onto the NPU.
+    pub fn npu_layers(&self) -> usize {
+        self.placement.iter().filter(|p| p.is_npu()).count()
+    }
+
+    /// EDP of the better pure extreme — the bar the hybrid must meet.
+    pub fn best_pure_edp(&self) -> f64 {
+        self.all_pim.edp.min(self.all_npu.edp)
+    }
+
+    /// Hybrid EDP improvement over the better pure extreme, as a
+    /// fraction in `[0, 1)` (0 when a pure deployment is optimal).
+    pub fn edp_win(&self) -> f64 {
+        let floor = self.best_pure_edp();
+        if floor <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.hybrid.edp / floor).max(0.0)
+    }
+}
+
+/// The default NPU side of a hybrid: the registered
+/// `Architecture::DigitalNpu` chip (iso-organization with Neural-PIM).
+pub fn default_npu_config() -> AcceleratorConfig {
+    AcceleratorConfig::for_arch(Architecture::DigitalNpu)
+}
+
+fn deploy(table: &LayerTable, pl: &[bool], chips: u64) -> DeployCost {
+    let (e, d_ps, edp) = table.eval(pl);
+    DeployCost { energy_j: e, delay_s: d_ps as f64 * 1e-12, edp, chips }
+}
+
+/// Search `net`'s placement space and assemble the full report.
+/// Deterministic per `(net, cfg_pim, cfg_npu, strategy, seed)`.
+pub fn optimize(net: &Network, cfg_pim: &AcceleratorConfig,
+                cfg_npu: &AcceleratorConfig, strategy: Strategy,
+                seed: u64) -> OffloadReport {
+    let pim = model::network_cost(net, cfg_pim);
+    let npu = model::network_cost(net, cfg_npu);
+    let table = LayerTable::build(cfg_pim, &pim, cfg_npu, &npu);
+    let out = search::run(&table, strategy, seed);
+
+    let n = table.len();
+    // the winning placement as the rest of the toolchain would run it:
+    // memoized hybrid table (chip count) + hybrid service profile
+    let hybrid_nc =
+        model::network_cost_hybrid(net, cfg_pim, cfg_npu, &out.placement);
+    let sp = event::hybrid_service_profile(cfg_pim, &pim, cfg_npu, &npu,
+                                           &out.placement);
+    debug_assert_eq!(sp.bottleneck_ps(), out.delay_ps,
+                     "search table and hybrid profile disagree");
+    let hybrid = DeployCost {
+        energy_j: out.energy_j,
+        delay_s: out.delay_ps as f64 * 1e-12,
+        edp: out.edp,
+        chips: hybrid_nc.mapping.chips,
+    };
+    let all_pim = deploy(&table, &vec![false; n], pim.mapping.chips);
+    let all_npu = deploy(&table, &vec![true; n], npu.mapping.chips);
+
+    let layers = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerChoice {
+            name: l.name.clone(),
+            pim_e: table.pim_e[i],
+            npu_e: table.npu_e[i],
+            placement: out.placement[i],
+        })
+        .collect();
+
+    OffloadReport {
+        network: net.name.to_string(),
+        strategy: out.strategy,
+        placement: out.placement,
+        hybrid,
+        all_pim,
+        all_npu,
+        layers,
+        evals: out.evals,
+        improved: out.improved,
+        npu: NpuCost::of(cfg_npu),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn hybrid_never_loses_to_a_pure_extreme() {
+        let net = workloads::alexnet();
+        let r = optimize(&net, &AcceleratorConfig::neural_pim(),
+                         &default_npu_config(), Strategy::Auto, 42);
+        assert_eq!(r.strategy, "exhaustive"); // 8 layers -> auto
+        assert!(r.hybrid.edp <= r.best_pure_edp() * (1.0 + 1e-12),
+                "hybrid {} > floor {}", r.hybrid.edp, r.best_pure_edp());
+        assert_eq!(r.placement.len(), net.layers.len());
+        assert_eq!(r.layers.len(), net.layers.len());
+        assert!(r.evals >= 1 << net.layers.len());
+    }
+
+    #[test]
+    fn vgg16_strictly_beats_both_extremes() {
+        // the calibration anchor: VGG-16's conv1_1 (K = 27) is cheaper
+        // on the NPU while the deep dense stack stays on PIM
+        let net = workloads::vgg16();
+        let r = optimize(&net, &AcceleratorConfig::neural_pim(),
+                         &default_npu_config(), Strategy::Auto, 42);
+        assert!(r.hybrid.edp < r.best_pure_edp(),
+                "expected a strict hybrid win on VGG-16");
+        assert!(r.npu_layers() >= 1);
+        assert!(r.edp_win() > 0.0);
+        assert_eq!(r.improved, 1);
+    }
+
+    #[test]
+    fn report_costs_are_consistent() {
+        let net = workloads::synthetic_cnn();
+        let r = optimize(&net, &AcceleratorConfig::neural_pim(),
+                         &default_npu_config(), Strategy::Exhaustive, 42);
+        for c in [&r.hybrid, &r.all_pim, &r.all_npu] {
+            assert!(c.energy_j > 0.0 && c.delay_s > 0.0);
+            let edp = c.energy_j * c.delay_s;
+            assert!((c.edp - edp).abs() <= edp * 1e-12);
+            assert!(c.chips >= 1);
+        }
+        assert!(r.npu.tops_peak > 0.0);
+        assert!(r.npu.fill_drain_ns > 0.0);
+    }
+}

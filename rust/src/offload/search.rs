@@ -1,0 +1,516 @@
+//! Deterministic per-layer placement search over a precomputed
+//! [`LayerTable`].
+//!
+//! Three strategies behind one [`run`] entry point:
+//!
+//! - **Exhaustive** — every `2^n` placement of an `n ≤`
+//!   [`EXHAUSTIVE_MAX`]-layer network, fanned over `util::pool` in
+//!   fixed-size mask chunks (the chunk list never depends on the thread
+//!   count, and chunk minima reduce in index order, so the winner is
+//!   bit-identical at any `--threads`). Ties break to the lowest mask.
+//! - **Hill-climb** — index-order strictly-improving single-flip passes
+//!   to a local optimum, from the two pure extremes plus
+//!   [`HILL_RESTARTS`] seeded random starts.
+//! - **Bandit** — [`BANDIT_ARMS`] epsilon-greedy instances treating
+//!   layers as arms (reward: the EDP drop when that layer's side last
+//!   flipped), each seeded from the better pure extreme.
+//!
+//! Every strategy evaluates both pure extremes, so the returned
+//! placement's EDP is `<= min(all-PIM, all-NPU)` by construction. All
+//! randomness derives from `Pcg::fork` under
+//! [`rng::FORK_NS_OFFLOAD`](crate::util::rng::FORK_NS_OFFLOAD) with
+//! restart/arm-local indices, so results are bit-identical at any
+//! thread count and reproducible from the seed alone.
+
+use crate::config::AcceleratorConfig;
+use crate::event;
+use crate::mapping::Placement;
+use crate::model::NetworkCost;
+use crate::util::pool;
+use crate::util::rng::{fork_idx, Pcg, FORK_NS_OFFLOAD};
+use anyhow::{bail, Result};
+
+/// Largest network the exhaustive strategy accepts (2^16 = 65 536
+/// placements; `auto` falls back to hill-climb above this).
+pub const EXHAUSTIVE_MAX: usize = 16;
+
+/// Seeded random restarts the hill-climb adds to the two pure extremes.
+pub const HILL_RESTARTS: u64 = 6;
+
+/// Independent epsilon-greedy instances the bandit strategy runs.
+pub const BANDIT_ARMS: u64 = 4;
+
+/// Exploration rate of the bandit's epsilon-greedy arm selection.
+const BANDIT_EPSILON: f64 = 0.2;
+
+/// Bandit steps per layer (each instance runs `n x` this many flips).
+const BANDIT_STEPS_PER_LAYER: u64 = 48;
+
+/// Masks per exhaustive pool item — fixed, so the work decomposition
+/// (and therefore the reduce order) never depends on `--threads`.
+const MASK_CHUNK: u64 = 4096;
+
+/// Placement-search strategy, as spelled by `--search`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// exhaustive when the network fits, hill-climb otherwise
+    Auto,
+    Exhaustive,
+    HillClimb,
+    Bandit,
+}
+
+/// The `--search` spellings, in help order (`auto` first: the default).
+pub const STRATEGY_CHOICES: [&str; 4] =
+    ["auto", "exhaustive", "hillclimb", "bandit"];
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s {
+            "auto" => Ok(Strategy::Auto),
+            "exhaustive" => Ok(Strategy::Exhaustive),
+            "hillclimb" => Ok(Strategy::HillClimb),
+            "bandit" => Ok(Strategy::Bandit),
+            other => bail!("unknown search strategy '{other}' (expected \
+                            one of: {})", STRATEGY_CHOICES.join(", ")),
+        }
+    }
+
+    /// Resolve `Auto` against the network size.
+    fn resolve(self, n_layers: usize) -> Strategy {
+        match self {
+            Strategy::Auto if n_layers <= EXHAUSTIVE_MAX => {
+                Strategy::Exhaustive
+            }
+            Strategy::Auto => Strategy::HillClimb,
+            s => s,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Strategy::Auto => "auto",
+            Strategy::Exhaustive => "exhaustive",
+            Strategy::HillClimb => "hillclimb",
+            Strategy::Bandit => "bandit",
+        }
+    }
+}
+
+/// The search's working set: per-layer energy and stage time on each
+/// side, read once from the two **pure** memoized cost tables. The
+/// search evaluates thousands of placements against these vectors
+/// without touching the memo cache (whose LRU would thrash on 2^16
+/// distinct hybrid keys); only the final winner goes back through
+/// `model::network_cost_hybrid`.
+#[derive(Debug, Clone)]
+pub struct LayerTable {
+    /// per-layer energy on the PIM side, J (full breakdown total)
+    pub pim_e: Vec<f64>,
+    /// per-layer energy on the NPU side, J
+    pub npu_e: Vec<f64>,
+    /// per-layer pipeline stage time on the PIM side, ps
+    pub pim_ps: Vec<u64>,
+    /// per-layer pipeline stage time on the NPU side, ps
+    pub npu_ps: Vec<u64>,
+}
+
+impl LayerTable {
+    /// Read the table off the two pure cost tables and their service
+    /// profiles (the exact numbers `model::network_cost_hybrid` and
+    /// `event::hybrid_service_profile` assemble per placement).
+    pub fn build(cfg_pim: &AcceleratorConfig, pim: &NetworkCost,
+                 cfg_npu: &AcceleratorConfig, npu: &NetworkCost)
+                 -> LayerTable {
+        assert_eq!(pim.layers.len(), npu.layers.len(),
+                   "both sides must price the same network");
+        let sp_pim = event::service_profile(cfg_pim, pim);
+        let sp_npu = event::service_profile(cfg_npu, npu);
+        LayerTable {
+            pim_e: pim.layers.iter().map(|c| c.energy.total()).collect(),
+            npu_e: npu.layers.iter().map(|c| c.energy.total()).collect(),
+            pim_ps: sp_pim.stage_ps,
+            npu_ps: sp_npu.stage_ps,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pim_e.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pim_e.is_empty()
+    }
+
+    /// Energy (J), steady-state delay (ps, the bottleneck stage, ≥ 1),
+    /// and EDP (J·s) of one placement (`true` = NPU). Fixed
+    /// accumulation order: layer 0 first, so the float sum is
+    /// bit-identical wherever it runs.
+    pub fn eval(&self, pl: &[bool]) -> (f64, u64, f64) {
+        debug_assert_eq!(pl.len(), self.len());
+        let mut e = 0.0;
+        let mut d: u64 = 0;
+        for (i, &npu) in pl.iter().enumerate() {
+            if npu {
+                e += self.npu_e[i];
+                d = d.max(self.npu_ps[i]);
+            } else {
+                e += self.pim_e[i];
+                d = d.max(self.pim_ps[i]);
+            }
+        }
+        let d = d.max(1);
+        (e, d, e * d as f64 * 1e-12)
+    }
+
+    fn eval_mask(&self, mask: u64) -> (f64, u64, f64) {
+        let pl: Vec<bool> =
+            (0..self.len()).map(|i| mask >> i & 1 == 1).collect();
+        self.eval(&pl)
+    }
+}
+
+/// What [`run`] returns: the winning placement with its cost, plus the
+/// search-effort counters the `offload` scenario exports as
+/// `offload.evals` / `offload.improved`.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub placement: Vec<Placement>,
+    pub energy_j: f64,
+    /// bottleneck stage time of the chosen placement, ps
+    pub delay_ps: u64,
+    pub edp: f64,
+    /// placements evaluated across the whole search
+    pub evals: u64,
+    /// accepted strictly-improving moves (hill-climb/bandit), or 1 iff
+    /// the winner strictly beats both pure extremes (exhaustive); 0
+    /// whenever a pure extreme is optimal
+    pub improved: u64,
+    /// the strategy that actually ran (`auto` resolved)
+    pub strategy: &'static str,
+}
+
+fn to_placement(pl: &[bool]) -> Vec<Placement> {
+    pl.iter()
+        .map(|&npu| if npu { Placement::Npu } else { Placement::Pim })
+        .collect()
+}
+
+/// Search the placement space of `table` with `strategy`. Deterministic
+/// per `(table, strategy, seed)`; thread-count-invariant by the pool's
+/// by-index contract plus fixed work decomposition.
+pub fn run(table: &LayerTable, strategy: Strategy, seed: u64)
+           -> SearchOutcome {
+    let resolved = strategy.resolve(table.len());
+    let mut out = match resolved {
+        Strategy::Exhaustive => exhaustive(table),
+        Strategy::HillClimb => hill_climb(table, seed),
+        Strategy::Bandit => bandit(table, seed),
+        Strategy::Auto => unreachable!("resolve() eliminated Auto"),
+    };
+    out.strategy = resolved.name();
+    out
+}
+
+/// One strategy-local best candidate; the reduce key is `(edp, bits)`
+/// with `bits` breaking float ties deterministically (lowest mask /
+/// lexicographically-smallest placement wins).
+struct Best {
+    pl: Vec<bool>,
+    energy_j: f64,
+    delay_ps: u64,
+    edp: f64,
+}
+
+impl Best {
+    fn better_than(&self, other: &Best) -> bool {
+        match self.edp.total_cmp(&other.edp) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => self.pl < other.pl,
+        }
+    }
+}
+
+fn exhaustive(table: &LayerTable) -> SearchOutcome {
+    let n = table.len();
+    assert!(n <= EXHAUSTIVE_MAX,
+            "exhaustive search caps at {EXHAUSTIVE_MAX} layers (got {n}); \
+             use hillclimb or bandit");
+    let total: u64 = 1u64 << n;
+    // fixed chunk list (independent of --threads): each item scans its
+    // mask range sequentially and returns the local minimum
+    let ranges: Vec<(u64, u64)> = (0..total.div_ceil(MASK_CHUNK))
+        .map(|c| (c * MASK_CHUNK, ((c + 1) * MASK_CHUNK).min(total)))
+        .collect();
+    let locals: Vec<Best> = pool::map(&ranges, |&(lo, hi)| {
+        let mut best: Option<(u64, f64, u64, f64)> = None;
+        for mask in lo..hi {
+            let (e, d, edp) = table.eval_mask(mask);
+            let better = match &best {
+                None => true,
+                // lowest mask scans first, so strict-less keeps it
+                Some((_, _, _, b)) => edp.total_cmp(b).is_lt(),
+            };
+            if better {
+                best = Some((mask, e, d, edp));
+            }
+        }
+        let (mask, e, d, edp) = best.expect("non-empty mask range");
+        Best {
+            pl: (0..n).map(|i| mask >> i & 1 == 1).collect(),
+            energy_j: e,
+            delay_ps: d,
+            edp,
+        }
+    });
+    // in-order reduce: ties keep the earlier (lower-mask) chunk
+    let mut winner: Option<Best> = None;
+    for b in locals {
+        if winner.as_ref().map(|w| b.better_than(w)).unwrap_or(true) {
+            winner = Some(b);
+        }
+    }
+    let w = winner.expect("at least one chunk");
+    // strict win over both pure extremes (masks 0 and 2^n - 1)
+    let floor = table
+        .eval_mask(0)
+        .2
+        .min(table.eval_mask(total - 1).2);
+    let improved = u64::from(w.edp.total_cmp(&floor).is_lt());
+    SearchOutcome {
+        placement: to_placement(&w.pl),
+        energy_j: w.energy_j,
+        delay_ps: w.delay_ps,
+        edp: w.edp,
+        evals: total,
+        improved,
+        strategy: Strategy::Exhaustive.name(),
+    }
+}
+
+/// One climb to a local optimum: index-order single-flip passes,
+/// accepting only strict EDP improvements, until a full pass changes
+/// nothing. Returns the optimum plus (evals, accepted flips).
+fn climb_from(table: &LayerTable, mut pl: Vec<bool>) -> (Best, u64, u64) {
+    let n = table.len();
+    let (mut e, mut d, mut edp) = table.eval(&pl);
+    let mut evals = 1u64;
+    let mut improved = 0u64;
+    loop {
+        let mut any = false;
+        for i in 0..n {
+            pl[i] = !pl[i];
+            let (ne, nd, nedp) = table.eval(&pl);
+            evals += 1;
+            if nedp.total_cmp(&edp).is_lt() {
+                (e, d, edp) = (ne, nd, nedp);
+                any = true;
+                improved += 1;
+            } else {
+                pl[i] = !pl[i]; // revert
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    (Best { pl, energy_j: e, delay_ps: d, edp }, evals, improved)
+}
+
+fn hill_climb(table: &LayerTable, seed: u64) -> SearchOutcome {
+    let n = table.len();
+    // starting points built sequentially up front from forked streams,
+    // then climbed in parallel: the start list is thread-count-free
+    let mut starts: Vec<Vec<bool>> =
+        vec![vec![false; n], vec![true; n]];
+    let mut root = Pcg::new(seed);
+    for r in 0..HILL_RESTARTS {
+        let mut rng = root.fork(fork_idx(FORK_NS_OFFLOAD, r));
+        starts.push((0..n).map(|_| rng.below(2) == 1).collect());
+    }
+    let climbs: Vec<(Best, u64, u64)> =
+        pool::map(&starts, |s| climb_from(table, s.clone()));
+    finish(climbs, Strategy::HillClimb)
+}
+
+/// One epsilon-greedy instance: layers are arms, the reward of pulling
+/// arm `j` is the EDP drop from flipping layer `j`'s side (a rejected
+/// flip reverts, so the current placement only ever improves — and it
+/// starts at the better pure extreme, preserving the `<= min(pure)`
+/// guarantee).
+fn bandit_arm(table: &LayerTable, seed: u64, arm: u64) -> (Best, u64, u64) {
+    let n = table.len();
+    let mut rng =
+        Pcg::new(seed).fork(fork_idx(FORK_NS_OFFLOAD, HILL_RESTARTS + arm));
+    let (e_pim, d_pim, edp_pim) = table.eval(&vec![false; n]);
+    let (e_npu, d_npu, edp_npu) = table.eval(&vec![true; n]);
+    let mut evals = 2u64;
+    let mut improved = 0u64;
+    // ties keep all-PIM (the lexicographically-smaller placement)
+    let mut pl;
+    let (mut e, mut d, mut edp);
+    if edp_npu.total_cmp(&edp_pim).is_lt() {
+        pl = vec![true; n];
+        (e, d, edp) = (e_npu, d_npu, edp_npu);
+    } else {
+        pl = vec![false; n];
+        (e, d, edp) = (e_pim, d_pim, edp_pim);
+    }
+    // optimistic initial estimates: every arm gets pulled at least once
+    let mut estimate = vec![f64::INFINITY; n];
+    let mut pulls = vec![0u64; n];
+    for _ in 0..BANDIT_STEPS_PER_LAYER * n as u64 {
+        let j = if rng.uniform() < BANDIT_EPSILON {
+            rng.below(n)
+        } else {
+            // argmax estimate, ties to the lowest index
+            let mut best = 0;
+            for k in 1..n {
+                if estimate[k].total_cmp(&estimate[best]).is_gt() {
+                    best = k;
+                }
+            }
+            best
+        };
+        pl[j] = !pl[j];
+        let (ne, nd, nedp) = table.eval(&pl);
+        evals += 1;
+        let reward = edp - nedp; // positive iff the flip helped
+        pulls[j] += 1;
+        estimate[j] = if pulls[j] == 1 {
+            reward
+        } else {
+            estimate[j] + (reward - estimate[j]) / pulls[j] as f64
+        };
+        if nedp.total_cmp(&edp).is_lt() {
+            (e, d, edp) = (ne, nd, nedp);
+            improved += 1;
+        } else {
+            pl[j] = !pl[j]; // revert
+        }
+    }
+    (Best { pl, energy_j: e, delay_ps: d, edp }, evals, improved)
+}
+
+fn bandit(table: &LayerTable, seed: u64) -> SearchOutcome {
+    let arms: Vec<u64> = (0..BANDIT_ARMS).collect();
+    let results: Vec<(Best, u64, u64)> =
+        pool::map(&arms, |&a| bandit_arm(table, seed, a));
+    finish(results, Strategy::Bandit)
+}
+
+/// Reduce per-instance results in index order: totals sum, the winner
+/// is the `(edp, placement)`-minimal candidate.
+fn finish(results: Vec<(Best, u64, u64)>, strategy: Strategy)
+          -> SearchOutcome {
+    let evals: u64 = results.iter().map(|(_, ev, _)| ev).sum();
+    let improved: u64 = results.iter().map(|(_, _, im)| im).sum();
+    let mut winner: Option<Best> = None;
+    for (b, _, _) in results {
+        if winner.as_ref().map(|w| b.better_than(w)).unwrap_or(true) {
+            winner = Some(b);
+        }
+    }
+    let w = winner.expect("at least one search instance");
+    SearchOutcome {
+        placement: to_placement(&w.pl),
+        energy_j: w.energy_j,
+        delay_ps: w.delay_ps,
+        edp: w.edp,
+        evals,
+        improved,
+        strategy: strategy.name(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built table: layer 1 is cheaper on the NPU, the rest on
+    /// PIM; stage times are equal so EDP ordering follows energy.
+    fn toy() -> LayerTable {
+        LayerTable {
+            pim_e: vec![1.0, 5.0, 2.0],
+            npu_e: vec![2.0, 1.0, 3.0],
+            pim_ps: vec![100, 100, 100],
+            npu_ps: vec![100, 100, 100],
+        }
+    }
+
+    #[test]
+    fn eval_takes_each_side_from_its_vector() {
+        let t = toy();
+        let (e, d, edp) = t.eval(&[false, true, false]);
+        assert_eq!(e, 1.0 + 1.0 + 2.0);
+        assert_eq!(d, 100);
+        assert!((edp - e * 100e-12).abs() < 1e-18);
+        // delay is the max over the *chosen* sides
+        let mut t2 = toy();
+        t2.npu_ps[1] = 900;
+        assert_eq!(t2.eval(&[false, true, false]).1, 900);
+        assert_eq!(t2.eval(&[false, false, false]).1, 100);
+    }
+
+    #[test]
+    fn exhaustive_finds_the_per_layer_optimum() {
+        let t = toy();
+        let out = run(&t, Strategy::Exhaustive, 42);
+        assert_eq!(out.strategy, "exhaustive");
+        assert_eq!(out.evals, 8);
+        assert_eq!(
+            out.placement,
+            vec![Placement::Pim, Placement::Npu, Placement::Pim]
+        );
+        assert_eq!(out.energy_j, 4.0);
+    }
+
+    #[test]
+    fn every_strategy_beats_or_matches_both_extremes() {
+        let t = toy();
+        let (_, _, edp_pim) = t.eval(&[false; 3]);
+        let (_, _, edp_npu) = t.eval(&[true; 3]);
+        let floor = edp_pim.min(edp_npu);
+        for s in [Strategy::Exhaustive, Strategy::HillClimb,
+                  Strategy::Bandit] {
+            let out = run(&t, s, 42);
+            assert!(out.edp <= floor, "{:?}: {} > {floor}", s, out.edp);
+            assert!(out.evals >= 2);
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_network_size() {
+        let small = toy();
+        assert_eq!(run(&small, Strategy::Auto, 1).strategy, "exhaustive");
+        let n = EXHAUSTIVE_MAX + 1;
+        let big = LayerTable {
+            pim_e: vec![1.0; n],
+            npu_e: vec![2.0; n],
+            pim_ps: vec![10; n],
+            npu_ps: vec![10; n],
+        };
+        assert_eq!(run(&big, Strategy::Auto, 1).strategy, "hillclimb");
+    }
+
+    #[test]
+    fn seeded_strategies_are_reproducible() {
+        let t = toy();
+        for s in [Strategy::HillClimb, Strategy::Bandit] {
+            let a = run(&t, s, 7);
+            let b = run(&t, s, 7);
+            assert_eq!(a.placement, b.placement, "{s:?}");
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits(), "{s:?}");
+            assert_eq!(a.evals, b.evals, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_strategies() {
+        assert!(Strategy::parse("auto").is_ok());
+        assert!(Strategy::parse("exhaustive").is_ok());
+        let err = Strategy::parse("anneal").unwrap_err();
+        assert!(err.to_string().contains("auto, exhaustive"), "{err}");
+    }
+}

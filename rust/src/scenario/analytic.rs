@@ -12,7 +12,7 @@ use crate::config::AcceleratorConfig;
 use crate::dataflow;
 use crate::util::num::fnv1a64;
 use crate::workloads::{self, Network};
-use crate::{dse, energy, event, noise, report};
+use crate::{dse, energy, event, noise, offload, report};
 use anyhow::{Context, Result};
 
 /// The `--network` / `--all` / `--network-file` triple shared by the
@@ -466,5 +466,138 @@ impl Scenario for Noise {
         }
         o.table(t);
         Ok(o)
+    }
+}
+
+// ------------------------------------------------------------- offload --
+
+pub struct Offload;
+
+impl Scenario for Offload {
+    fn name(&self) -> &'static str {
+        "offload"
+    }
+
+    fn description(&self) -> &'static str {
+        "PIM + NPU hybrid: deterministic per-layer placement search \
+         minimizing EDP"
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        let mut specs = network_specs();
+        specs.push(ParamSpec::choice(
+            "search",
+            "auto",
+            &offload::STRATEGY_CHOICES,
+            "placement search strategy (auto: exhaustive for small nets, \
+             hillclimb above)",
+        ));
+        specs.push(ParamSpec::u64("seed", 42, "PRNG seed"));
+        specs
+    }
+
+    fn run(&self, p: &Params) -> Result<Outcome> {
+        use crate::util::table::{Cell, Table};
+        let nets = selected_networks(p)?;
+        let strategy = offload::Strategy::parse(p.get_str("search"))?;
+        let seed = p.get_u64("seed");
+        let cfg_pim = AcceleratorConfig::neural_pim();
+        let cfg_npu = offload::default_npu_config();
+        // the searches parallelize internally (mask chunks / restarts /
+        // arms over util::pool); networks run in declaration order so
+        // tables, metrics and the memo cache fill deterministically
+        let reports: Vec<offload::OffloadReport> = nets
+            .iter()
+            .map(|net| offload::optimize(net, &cfg_pim, &cfg_npu, strategy,
+                                         seed))
+            .collect();
+
+        let npu = offload::NpuCost::of(&cfg_npu);
+        let mut t = Table::new(
+            &format!(
+                "offload: per-layer PIM/NPU placement (search {}, seed \
+                 {seed}; NPU {:.1} TOPS peak, {:.2} pJ/MAC)",
+                p.get_str("search"),
+                npu.tops_peak,
+                npu.e_mac * 1e12
+            ),
+            &["network", "layers", "strategy", "NPU layers", "chips",
+              "all-PIM EDP (J*s)", "all-NPU EDP (J*s)", "hybrid EDP (J*s)",
+              "win %"],
+        );
+        let mut wins = 0usize;
+        let mut registry = crate::obs::Registry::new();
+        for r in &reports {
+            let win_pct = r.edp_win() * 100.0;
+            if r.hybrid.edp < r.best_pure_edp() {
+                wins += 1;
+            }
+            t.cells(vec![
+                Cell::s(&r.network),
+                Cell::num(r.placement.len() as f64,
+                          r.placement.len().to_string()),
+                Cell::s(r.strategy),
+                Cell::num(r.npu_layers() as f64, r.npu_layers().to_string()),
+                Cell::num(r.hybrid.chips as f64, r.hybrid.chips.to_string()),
+                Cell::num(r.all_pim.edp, format!("{:.3e}", r.all_pim.edp)),
+                Cell::num(r.all_npu.edp, format!("{:.3e}", r.all_npu.edp)),
+                Cell::num(r.hybrid.edp, format!("{:.3e}", r.hybrid.edp)),
+                Cell::num(win_pct, format!("{win_pct:.2}")),
+            ]);
+            registry.add("offload.evals", r.evals);
+            registry.add("offload.improved", r.improved);
+            registry.add("offload.networks", 1);
+        }
+        let mut o = Outcome::new(self.name(), p.to_json());
+        o.table(t);
+
+        // single-network runs get the full per-layer split
+        if let [r] = reports.as_slice() {
+            let mut lt = Table::new(
+                &format!("{}: per-layer placement ({})", r.network,
+                         r.strategy),
+                &["layer", "PIM (uJ)", "NPU (uJ)", "placed"],
+            );
+            for l in &r.layers {
+                lt.cells(vec![
+                    Cell::s(&l.name),
+                    Cell::num(l.pim_e * 1e6, format!("{:.3}", l.pim_e * 1e6)),
+                    Cell::num(l.npu_e * 1e6, format!("{:.3}", l.npu_e * 1e6)),
+                    Cell::s(if l.placement.is_npu() { "NPU" } else { "PIM" }),
+                ]);
+            }
+            o.table(lt);
+        }
+
+        o.note(format!(
+            "hybrid placement strictly beats the best pure deployment on \
+             {wins} of {} network(s); it is never worse (both extremes are \
+             always evaluated)",
+            reports.len()
+        ));
+        for r in &reports {
+            o.metric(format!("edp/{}", r.network), r.hybrid.edp, "J*s")
+                .metric(format!("edp_all_pim/{}", r.network), r.all_pim.edp,
+                        "J*s")
+                .metric(format!("edp_all_npu/{}", r.network), r.all_npu.edp,
+                        "J*s")
+                .metric(format!("edp_win/{}", r.network), r.edp_win(), "")
+                .metric(format!("npu_layers/{}", r.network),
+                        r.npu_layers() as f64, "");
+        }
+        o.metric("networks_with_strict_win", wins as f64, "")
+            .metric("npu_tops_peak", npu.tops_peak, "TOPS")
+            .metric("npu_e_mac_pj", npu.e_mac * 1e12, "pJ")
+            .metric("npu_fill_drain_ns", npu.fill_drain_ns, "ns");
+        // search-effort counters in registry form, like the other
+        // scenario obs exports — JSON-only surface
+        for (name, v) in registry.counters() {
+            o.metric(format!("obs/{name}"), v as f64, "");
+        }
+        Ok(o)
+    }
+
+    fn fingerprint_extra(&self, p: &Params) -> Result<String> {
+        network_file_extra(p)
     }
 }

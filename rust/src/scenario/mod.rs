@@ -66,31 +66,87 @@ impl ParamValue {
 
 /// Declaration of one scenario parameter: its name (`--name` on the
 /// CLI, `"name"` in a JSON spec), default value (which fixes its type),
-/// and help text.
+/// and help text. String params may additionally declare a closed list
+/// of allowed values ([`ParamSpec::choice`]); both parse paths then
+/// reject anything else with the allowed list (and a did-you-mean) in
+/// the error, replacing the ad-hoc string validation scenarios used to
+/// do after parsing.
 pub struct ParamSpec {
     pub name: &'static str,
     pub default: ParamValue,
     pub help: &'static str,
+    /// closed value list for string params (`None` = free-form)
+    pub allowed: Option<&'static [&'static str]>,
 }
 
 impl ParamSpec {
     pub fn flag(name: &'static str, help: &'static str) -> ParamSpec {
-        ParamSpec { name, default: ParamValue::Bool(false), help }
+        ParamSpec {
+            name,
+            default: ParamValue::Bool(false),
+            help,
+            allowed: None,
+        }
     }
 
     pub fn u64(name: &'static str, default: u64,
                help: &'static str) -> ParamSpec {
-        ParamSpec { name, default: ParamValue::U64(default), help }
+        ParamSpec {
+            name,
+            default: ParamValue::U64(default),
+            help,
+            allowed: None,
+        }
     }
 
     pub fn f64(name: &'static str, default: f64,
                help: &'static str) -> ParamSpec {
-        ParamSpec { name, default: ParamValue::F64(default), help }
+        ParamSpec {
+            name,
+            default: ParamValue::F64(default),
+            help,
+            allowed: None,
+        }
     }
 
     pub fn str(name: &'static str, default: &str,
                help: &'static str) -> ParamSpec {
-        ParamSpec { name, default: ParamValue::Str(default.into()), help }
+        ParamSpec {
+            name,
+            default: ParamValue::Str(default.into()),
+            help,
+            allowed: None,
+        }
+    }
+
+    /// Enum-valued string param: only `allowed` values parse (the
+    /// default must be one of them; accepted aliases belong in the list
+    /// too). Help text renders the list as `one of a|b|c`.
+    pub fn choice(name: &'static str, default: &str,
+                  allowed: &'static [&'static str],
+                  help: &'static str) -> ParamSpec {
+        debug_assert!(allowed.contains(&default),
+                      "choice param '{name}': default '{default}' not in \
+                       its allowed list");
+        ParamSpec {
+            name,
+            default: ParamValue::Str(default.into()),
+            help,
+            allowed: Some(allowed),
+        }
+    }
+
+    /// Enforce the allowed list (no-op for free-form params).
+    fn check_allowed(&self, v: &str) -> Result<()> {
+        let Some(allowed) = self.allowed else { return Ok(()) };
+        if allowed.contains(&v) {
+            return Ok(());
+        }
+        let hint = cli::suggest(v, allowed)
+            .map(|s| format!("; did you mean '{s}'?"))
+            .unwrap_or_default();
+        bail!("--{} must be one of {} (got '{v}'{hint})", self.name,
+              allowed.join("|"))
     }
 }
 
@@ -236,9 +292,11 @@ pub fn params_from_args(specs: &[ParamSpec], args: &Args) -> Result<Params> {
                 }
                 None => *d,
             }),
-            ParamValue::Str(d) => ParamValue::Str(
-                args.get(spec.name).unwrap_or(d).to_string(),
-            ),
+            ParamValue::Str(d) => {
+                let s = args.get(spec.name).unwrap_or(d);
+                spec.check_allowed(s)?;
+                ParamValue::Str(s.to_string())
+            }
         };
         p.set(spec.name, v);
     }
@@ -286,6 +344,7 @@ pub fn params_from_json(specs: &[ParamSpec], j: &Json) -> Result<Params> {
             }
             (Some(Json::Num(n)), ParamValue::F64(_)) => ParamValue::F64(*n),
             (Some(Json::Str(s)), ParamValue::Str(_)) => {
+                spec.check_allowed(s)?;
                 ParamValue::Str(s.clone())
             }
             (Some(other), d) => bail!(
@@ -619,12 +678,15 @@ pub fn scenario_help(sc: &dyn Scenario) -> String {
         out.push_str("parameters:\n");
         let width = specs.iter().map(|s| s.name.len()).max().unwrap_or(0);
         for s in &specs {
-            let default = match &s.default {
-                ParamValue::Bool(_) => "flag".to_string(),
-                ParamValue::U64(v) => format!("default {v}"),
-                ParamValue::F64(v) => format!("default {v}"),
-                ParamValue::Str(v) if v.is_empty() => "optional".into(),
-                ParamValue::Str(v) => format!("default {v}"),
+            let default = match (&s.default, s.allowed) {
+                (ParamValue::Str(v), Some(allowed)) => {
+                    format!("one of {}; default {v}", allowed.join("|"))
+                }
+                (ParamValue::Bool(_), _) => "flag".to_string(),
+                (ParamValue::U64(v), _) => format!("default {v}"),
+                (ParamValue::F64(v), _) => format!("default {v}"),
+                (ParamValue::Str(v), _) if v.is_empty() => "optional".into(),
+                (ParamValue::Str(v), _) => format!("default {v}"),
             };
             out.push_str(&format!(
                 "  --{:width$}  {} ({default})\n",
@@ -701,6 +763,38 @@ mod tests {
                 "{bad}"
             );
         }
+    }
+
+    #[test]
+    fn choice_params_enforce_their_allowed_list_on_both_paths() {
+        let specs = vec![ParamSpec::choice(
+            "search",
+            "auto",
+            &["auto", "exhaustive", "hillclimb", "bandit"],
+            "placement search strategy",
+        )];
+        // valid values (and the default) pass on both parse paths
+        let p = params_from_args(&specs, &argv(&["--search", "bandit"]))
+            .unwrap();
+        assert_eq!(p.get_str("search"), "bandit");
+        let p = params_from_json(&specs, &Json::Null).unwrap();
+        assert_eq!(p.get_str("search"), "auto");
+        // rejections name the allowed list and suggest near-misses
+        let err = params_from_args(&specs, &argv(&["--search", "hillclimD"]))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("one of auto|exhaustive|hillclimb|bandit"),
+                "{msg}");
+        assert!(msg.contains("did you mean 'hillclimb'"), "{msg}");
+        let err = params_from_json(
+            &specs,
+            &Json::parse(r#"{"search":"greedy"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("must be one of"), "{err}");
+        // the help line renders the closed list
+        let spec = &specs[0];
+        assert_eq!(spec.allowed.unwrap().len(), 4);
     }
 
     #[test]

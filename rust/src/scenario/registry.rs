@@ -10,7 +10,7 @@
 use super::{analytic, pjrt, serve, Scenario};
 
 /// Every registered scenario, in help/report order.
-static SCENARIOS: [&dyn Scenario; 15] = [
+static SCENARIOS: [&dyn Scenario; 16] = [
     &analytic::Characterize,
     &analytic::Simulate,
     &analytic::EventSim,
@@ -19,6 +19,7 @@ static SCENARIOS: [&dyn Scenario; 15] = [
     &analytic::Table3,
     &analytic::Budget,
     &analytic::Noise,
+    &analytic::Offload,
     &serve::ServeSim,
     &serve::FleetSim,
     &pjrt::Accuracy,

@@ -501,9 +501,10 @@ impl Scenario for FleetSim {
             ParamSpec::str("network", "SyntheticCNN", "simulated network"),
             ParamSpec::str("fleet", "neural-pim:8,isaac:4,cascade:2,lowres:2",
                            "chip mix as arch:count (model registry names)"),
-            ParamSpec::str("policy", "latency-aware",
-                           "router policy: round-robin | \
-                            join-shortest-queue | latency-aware"),
+            ParamSpec::choice("policy", "latency-aware",
+                              &["round-robin", "rr", "join-shortest-queue",
+                                "jsq", "latency-aware", "ewma"],
+                              "router policy"),
             ParamSpec::u64("arrivals", 1 << 20,
                            "virtual arrivals to stream through the router"),
             ParamSpec::f64("offered", 0.9,
@@ -702,6 +703,31 @@ mod tests {
         assert!(parse_loads("0.5,zoom").is_err());
         assert!(parse_loads("-1").is_err());
         assert!(parse_loads("inf").is_err());
+    }
+
+    #[test]
+    fn fleet_policy_is_a_closed_choice_param() {
+        let sc = scenario::find("fleet-sim").unwrap();
+        // typos die at param parse time now, not inside the router
+        let err = scenario::params_from_json(
+            &sc.param_specs(),
+            &Json::parse(r#"{"policy":"jsqq"}"#).unwrap(),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("must be one of"), "{msg}");
+        assert!(msg.contains("did you mean 'jsq'"), "{msg}");
+        // every allowed spelling still resolves in the router
+        for s in ["round-robin", "rr", "join-shortest-queue", "jsq",
+                  "latency-aware", "ewma"] {
+            let p = scenario::params_from_json(
+                &sc.param_specs(),
+                &Json::parse(&format!(r#"{{"policy":"{s}"}}"#)).unwrap(),
+            )
+            .unwrap();
+            assert!(fleet::RouterPolicy::parse(p.get_str("policy")).is_ok(),
+                    "{s}");
+        }
     }
 
     #[test]

@@ -24,6 +24,8 @@ pub const FORK_NS_LOADGEN: u64 = 1 << FORK_NS_BITS;
 pub const FORK_NS_EVENT: u64 = 2 << FORK_NS_BITS;
 /// `serve::fleet` arrival-process streams (gap / thinning / burst).
 pub const FORK_NS_FLEET: u64 = 3 << FORK_NS_BITS;
+/// `offload` placement-search streams (hill-climb restarts / bandit arms).
+pub const FORK_NS_OFFLOAD: u64 = 4 << FORK_NS_BITS;
 
 /// Compose a namespaced fork index: `ns` is one of the `FORK_NS_*`
 /// constants, `idx` the subsystem-local dense index (must fit below the
@@ -231,7 +233,8 @@ mod tests {
     fn fork_namespaces_are_pairwise_disjoint() {
         // the windows [ns, ns + 2^FORK_NS_BITS) must not overlap for any
         // local index a subsystem can legally use
-        let spans = [FORK_NS_LOADGEN, FORK_NS_EVENT, FORK_NS_FLEET];
+        let spans =
+            [FORK_NS_LOADGEN, FORK_NS_EVENT, FORK_NS_FLEET, FORK_NS_OFFLOAD];
         let width = 1u64 << FORK_NS_BITS;
         for (i, &a) in spans.iter().enumerate() {
             assert_eq!(a % width, 0, "namespace {a:#x} misaligned");

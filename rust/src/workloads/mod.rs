@@ -11,6 +11,7 @@ mod networks;
 
 pub use networks::*;
 
+use crate::util::cli;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::sync::{Arc, OnceLock};
@@ -199,6 +200,7 @@ pub fn by_name(name: &str) -> Option<Network> {
 /// Conv layers accept `kw`/`out_w` overrides (default: square kernels
 /// and outputs); `out`/`out_h` are synonyms; `stride` defaults to 1.
 pub fn from_spec(j: &Json) -> Result<Network> {
+    reject_unknown_fields(j, &["name", "layers"], "network spec")?;
     let name = j.get("name").and_then(Json::as_str).unwrap_or("custom");
     let layers_j = j
         .get("layers")
@@ -216,6 +218,27 @@ pub fn from_spec(j: &Json) -> Result<Network> {
     Ok(Network { name: name.into(), layers })
 }
 
+/// Reject spec keys no known field matches, with a did-you-mean. A typo
+/// like `"strid"` would otherwise be ignored and the field would
+/// silently take its default — a wrong network, not an error.
+fn reject_unknown_fields(j: &Json, known: &[&str], what: &str) -> Result<()> {
+    let Json::Obj(map) = j else {
+        bail!("{what} must be a JSON object (got {j})");
+    };
+    for key in map.keys() {
+        if !known.contains(&key.as_str()) {
+            match cli::suggest(key, known) {
+                Some(s) => bail!(
+                    "{what}: unknown field '{key}' (did you mean '{s}'?)"
+                ),
+                None => bail!("{what}: unknown field '{key}' (known: {})",
+                              known.join(", ")),
+            }
+        }
+    }
+    Ok(())
+}
+
 fn layer_from_spec(j: &Json, index: usize) -> Result<Layer> {
     let num = |key: &str| j.get(key).and_then(Json::as_f64);
     let req = |key: &str| -> Result<u32> {
@@ -228,6 +251,16 @@ fn layer_from_spec(j: &Json, index: usize) -> Result<Layer> {
     let fallback = format!("layer{index}");
     let name = j.get("name").and_then(Json::as_str).unwrap_or(&fallback);
     let kind = j.get("kind").and_then(Json::as_str).unwrap_or("conv");
+    // each kind accepts exactly its own fields: an fc spec carrying
+    // "steps" is as wrong as a misspelled key
+    let known: &[&str] = match kind {
+        "conv" => &["kind", "name", "kh", "kw", "cin", "cout", "out",
+                    "out_h", "out_w", "stride"],
+        "fc" => &["kind", "name", "cin", "cout"],
+        "lstm" => &["kind", "name", "input", "hidden", "steps"],
+        other => bail!("unknown layer kind '{other}' (conv | fc | lstm)"),
+    };
+    reject_unknown_fields(j, known, &format!("{kind} layer"))?;
     match kind {
         "conv" => {
             let kh = req("kh")?;
@@ -378,6 +411,46 @@ mod tests {
         assert_eq!(l.kind, LayerKind::Lstm);
         assert_eq!((l.cin, l.cout, l.out_h), (96, 128, 4));
         assert!(net.total_macs() > 0);
+    }
+
+    #[test]
+    fn from_spec_rejects_unknown_fields_with_a_suggestion() {
+        // a typo'd field would silently take its default otherwise
+        let j = Json::parse(
+            r#"{"layers": [{"kind": "conv", "kh": 3, "cin": 3, "cout": 16,
+                            "out": 12, "strid": 2}]}"#,
+        )
+        .unwrap();
+        let err = from_spec(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("did you mean 'stride'"),
+                "{err:#}");
+        // network-level keys are checked too
+        let j = Json::parse(
+            r#"{"nmae": "x",
+                "layers": [{"kind": "fc", "cin": 4, "cout": 2}]}"#,
+        )
+        .unwrap();
+        let err = from_spec(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("did you mean 'name'"),
+                "{err:#}");
+        // fields belonging to another kind don't leak across kinds
+        let j = Json::parse(
+            r#"{"layers": [{"kind": "fc", "cin": 4, "cout": 2,
+                            "steps": 3}]}"#,
+        )
+        .unwrap();
+        let err = from_spec(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown field 'steps'"),
+                "{err:#}");
+        // far-from-anything keys list the known fields instead
+        let j = Json::parse(
+            r#"{"layers": [{"kind": "fc", "cin": 4, "cout": 2,
+                            "zzzzzz": 3}]}"#,
+        )
+        .unwrap();
+        let err = from_spec(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("known: kind, name, cin, cout"),
+                "{err:#}");
     }
 
     #[test]

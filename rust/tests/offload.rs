@@ -1,0 +1,206 @@
+//! Acceptance gates for the `offload/` subsystem (the PIM + NPU hybrid
+//! placement search):
+//!
+//! 1. **Never-worse property**: on every catalog network the hybrid EDP
+//!    is `<= min(all-PIM, all-NPU)`, with a strict win on at least one
+//!    network (both strategies evaluate the pure extremes).
+//! 2. **Strategy ordering**: exhaustive (the true optimum) lower-bounds
+//!    hill-climb, which lower-bounds the pure floor, on every network
+//!    small enough to enumerate.
+//! 3. **Determinism**: the `offload` scenario's outcome JSON is
+//!    byte-identical at `--threads 1/2/8` and on `--cache` replay, and
+//!    a fixed `(network, seed)` pair reproduces bit-identically.
+
+use neural_pim::config::AcceleratorConfig;
+use neural_pim::model;
+use neural_pim::offload::{self, LayerTable, Strategy};
+use neural_pim::scenario::{self, ExecOptions, Params, Scenario};
+use neural_pim::util::json::Json;
+use neural_pim::util::pool;
+use neural_pim::workloads;
+
+fn offload_params(json: &str) -> (&'static dyn Scenario, Params) {
+    let sc = scenario::find("offload").expect("offload is registered");
+    let p = scenario::params_from_json(&sc.param_specs(),
+                                       &Json::parse(json).unwrap())
+        .unwrap();
+    (sc, p)
+}
+
+fn run_offload(json: &str) -> scenario::Outcome {
+    let (sc, p) = offload_params(json);
+    sc.run(&p).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// the never-worse property, over the whole catalog
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hybrid_never_loses_on_any_catalog_network() {
+    let cfg_pim = AcceleratorConfig::neural_pim();
+    let cfg_npu = offload::default_npu_config();
+    let mut strict = Vec::new();
+    for net in workloads::all_benchmarks() {
+        let r = offload::optimize(&net, &cfg_pim, &cfg_npu, Strategy::Auto,
+                                  42);
+        assert!(
+            r.hybrid.edp <= r.best_pure_edp(),
+            "{}: hybrid {} > pure floor {}",
+            net.name, r.hybrid.edp, r.best_pure_edp()
+        );
+        assert_eq!(r.placement.len(), net.layers.len(), "{}", net.name);
+        if r.hybrid.edp < r.best_pure_edp() {
+            strict.push(net.name.to_string());
+        }
+    }
+    assert!(!strict.is_empty(),
+            "the hybrid must strictly beat both pure extremes somewhere");
+}
+
+// ---------------------------------------------------------------------------
+// strategy ordering on exhaustively-enumerable networks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exhaustive_bounds_hillclimb_which_bounds_the_pure_floor() {
+    let cfg_pim = AcceleratorConfig::neural_pim();
+    let cfg_npu = offload::default_npu_config();
+    for name in ["AlexNet", "VGG-16", "NeuralTalk", "SyntheticCNN"] {
+        let net = workloads::by_name(name).unwrap();
+        assert!(net.layers.len() <= offload::search::EXHAUSTIVE_MAX,
+                "{name} grew past the exhaustive cap");
+        let pim = model::network_cost(&net, &cfg_pim);
+        let npu = model::network_cost(&net, &cfg_npu);
+        let table = LayerTable::build(&cfg_pim, &pim, &cfg_npu, &npu);
+        let n = table.len();
+        let floor = table.eval(&vec![false; n]).2
+            .min(table.eval(&vec![true; n]).2);
+        let ex = offload::search::run(&table, Strategy::Exhaustive, 42);
+        let hc = offload::search::run(&table, Strategy::HillClimb, 42);
+        let bd = offload::search::run(&table, Strategy::Bandit, 42);
+        // the true optimum lower-bounds every heuristic, and every
+        // strategy includes both pure extremes
+        assert!(ex.edp.total_cmp(&hc.edp).is_le(),
+                "{name}: exhaustive {} > hillclimb {}", ex.edp, hc.edp);
+        assert!(ex.edp.total_cmp(&bd.edp).is_le(),
+                "{name}: exhaustive {} > bandit {}", ex.edp, bd.edp);
+        assert!(hc.edp.total_cmp(&floor).is_le(),
+                "{name}: hillclimb {} > pure floor {floor}", hc.edp);
+        assert!(bd.edp.total_cmp(&floor).is_le(),
+                "{name}: bandit {} > pure floor {floor}", bd.edp);
+        assert_eq!(ex.evals, 1u64 << n, "{name}");
+    }
+}
+
+#[test]
+fn vgg16_hybrid_strictly_beats_both_extremes() {
+    // the calibration anchor: short-K conv1_1 moves to the NPU while
+    // the dense stack stays on PIM
+    let net = workloads::by_name("VGG-16").unwrap();
+    let r = offload::optimize(&net, &AcceleratorConfig::neural_pim(),
+                              &offload::default_npu_config(),
+                              Strategy::Exhaustive, 42);
+    assert!(r.hybrid.edp < r.best_pure_edp());
+    assert!(r.npu_layers() >= 1);
+    assert!(r.edp_win() > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// determinism: seed pin, thread invariance, cache replay
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_alexnet_seed_pair_reproduces_bit_identically() {
+    // desk-validated pin: at the shipped NPU constants AlexNet is
+    // all-PIM optimal (its conv layers are long-K and dense), so the
+    // exhaustive winner is the all-PIM mask with zero strict wins
+    let net = workloads::by_name("AlexNet").unwrap();
+    let cfg_pim = AcceleratorConfig::neural_pim();
+    let cfg_npu = offload::default_npu_config();
+    let r = offload::optimize(&net, &cfg_pim, &cfg_npu,
+                              Strategy::Exhaustive, 42);
+    assert!(r.placement.iter().all(|p| !p.is_npu()),
+            "AlexNet should stay all-PIM: {:?}", r.placement);
+    assert_eq!(r.improved, 0);
+    assert_eq!(r.hybrid.edp.to_bits(), r.all_pim.edp.to_bits(),
+               "the all-PIM winner must price identically to the pure \
+                extreme (same eval path)");
+    // and the pair (network, seed) reproduces bit-for-bit
+    let r2 = offload::optimize(&net, &cfg_pim, &cfg_npu,
+                               Strategy::Exhaustive, 42);
+    assert_eq!(r.placement, r2.placement);
+    assert_eq!(r.hybrid.edp.to_bits(), r2.hybrid.edp.to_bits());
+    assert_eq!(r.evals, r2.evals);
+}
+
+#[test]
+fn outcome_json_is_thread_count_invariant() {
+    // hillclimb and bandit both derive randomness from forked streams
+    // laid out before the parallel fan-out; exhaustive reduces fixed
+    // mask chunks in index order — all must be byte-identical at any
+    // thread count
+    for params in [
+        r#"{"network": "SyntheticCNN", "search": "exhaustive"}"#,
+        r#"{"network": "MobileNet-V2", "search": "hillclimb", "seed": 7}"#,
+        r#"{"network": "MobileNet-V2", "search": "bandit", "seed": 7}"#,
+    ] {
+        let mut renders = Vec::new();
+        for t in [1usize, 2, 8] {
+            pool::set_threads(t);
+            renders.push(run_offload(params).to_json().to_string());
+        }
+        pool::set_threads(0);
+        assert_eq!(renders[0], renders[1], "{params}: threads 1 vs 2");
+        assert_eq!(renders[0], renders[2], "{params}: threads 1 vs 8");
+    }
+}
+
+#[test]
+fn cached_offload_replays_byte_identically() {
+    let root = std::env::temp_dir()
+        .join(format!("np-offload-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let (sc, p) = offload_params(r#"{"network": "AlexNet"}"#);
+    let opts = ExecOptions {
+        cache: true,
+        results_dir: root.to_string_lossy().into_owned(),
+    };
+    let first = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(!first.cached);
+    let second = scenario::execute(sc, &p, &opts).unwrap();
+    assert!(second.cached, "second run must replay from the store");
+    assert_eq!(first.outcome.to_json(), second.outcome.to_json());
+    assert_eq!(first.outcome.render_text(), second.outcome.render_text());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// scenario surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scenario_reports_split_metrics_and_search_counters() {
+    let o = run_offload(r#"{"network": "VGG-16"}"#);
+    // summary table + per-layer split table (single-network run)
+    assert_eq!(o.tables.len(), 2);
+    let win = o.get_metric("edp_win/VGG-16").expect("win metric");
+    assert!(win > 0.0, "VGG-16 must report a strict hybrid win");
+    assert!(o.get_metric("npu_layers/VGG-16").unwrap() >= 1.0);
+    let edp = o.get_metric("edp/VGG-16").unwrap();
+    let pim = o.get_metric("edp_all_pim/VGG-16").unwrap();
+    let npu = o.get_metric("edp_all_npu/VGG-16").unwrap();
+    assert!(edp <= pim.min(npu));
+    assert!(o.get_metric("obs/offload.evals").unwrap() >= (1 << 16) as f64);
+    assert!(o.get_metric("npu_tops_peak").unwrap() > 0.0);
+    // the strategy param is a closed choice: typos die at parse time
+    let sc = scenario::find("offload").unwrap();
+    let err = scenario::params_from_json(
+        &sc.param_specs(),
+        &Json::parse(r#"{"search": "exhaustiv"}"#).unwrap(),
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("did you mean 'exhaustive'"),
+            "{err:#}");
+}

@@ -99,6 +99,7 @@ fn cheap_params(name: &str) -> &'static str {
         "serve-sim" => r#"{"requests": 128, "loads": "0.6,1.1"}"#,
         "fleet-sim" => r#"{"arrivals": 8192, "sweep-arrivals": 2048,
                            "fleet": "neural-pim:2,isaac:1"}"#,
+        "offload" => r#"{"network": "AlexNet"}"#,
         _ => "{}",
     }
 }

@@ -87,6 +87,20 @@ if grep -rn --include='*.rs' -E \
   exit 1
 fi
 
+# Offload open-closed gate: per-placement dispatch lives in the offload
+# subsystem and the NPU cost model only. A `Placement::X =>` match arm
+# anywhere else means a caller is special-casing the hybrid split
+# instead of using Placement::is_npu / the offload search — the same
+# scattered fan-out the Architecture gate prevents.
+if grep -rn --include='*.rs' -E \
+    'Placement::[A-Za-z_]+[[:space:]]*=>' \
+    rust/src rust/tests rust/benches examples \
+    | grep -vE '^rust/src/(offload/|model/archs\.rs)'; then
+  echo "FAIL: placement match arm outside rust/src/offload/ and" \
+       "rust/src/model/archs.rs — use Placement::is_npu" >&2
+  exit 1
+fi
+
 # Diagnostics gate: stderr chatter goes through the leveled obs::diag!
 # macro (gated by --verbose / NEURAL_PIM_LOG), never raw eprintln!.
 # Only the macro's own expansion site (obs/) and the CLI's final error
